@@ -1,0 +1,88 @@
+//! Cluster-scale simulation: regenerate the paper's headline comparison
+//! (Fig. 8 MFU + Fig. 9 TPT) on the modelled 2560-H100 cluster, plus a
+//! compact version of every ablation (Fig. 10–13) at 128 GPUs.
+//!
+//! Run: `cargo run --release --example cluster_sim
+//!       [-- --gpus 2560 --steps 3 --full]`
+
+use orchmllm::model::config::MllmConfig;
+use orchmllm::sim::engine::{simulate_run, SystemKind};
+use orchmllm::sim::report;
+use orchmllm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let gpus = args.usize("gpus", 2560);
+    let steps = args.usize("steps", 3);
+    let seed = args.u64("seed", 42);
+
+    // ---- Fig. 8 + 9 ------------------------------------------------------
+    let mb_orch = [80, 60, 30];
+    let mb_none = [65, 40, 15];
+    let mut rows = Vec::new();
+    for system in
+        [SystemKind::OrchMllm, SystemKind::Megatron, SystemKind::NoBalance]
+    {
+        let mut row = Vec::new();
+        for (mi, model) in MllmConfig::all().iter().enumerate() {
+            let mb = if system == SystemKind::NoBalance {
+                mb_none[mi]
+            } else {
+                mb_orch[mi]
+            };
+            row.push(simulate_run(system, model, gpus, mb, steps, seed));
+        }
+        rows.push(row);
+    }
+    println!("== Fig. 8/9: overall MFU + TPT ({gpus} GPUs) ==\n");
+    print!("{}", report::render_overall(&rows));
+    let speedup =
+        rows[0][2].tpt / rows[1][2].tpt.max(1e-9);
+    println!(
+        "\nOrchMLLM vs Megatron-LM TPT at MLLM-84B: {speedup:.1}x \
+         (paper: up to 3.1x)\n"
+    );
+
+    // ---- Fig. 10–13 ablations at 128 GPUs --------------------------------
+    let abl_gpus = 128;
+    let mb_abl = [75, 50, 25];
+    let ablations: &[(&str, SystemKind)] = &[
+        ("Fig.10 LLM-only balance", SystemKind::LlmOnly),
+        ("Fig.11 all pad", SystemKind::AllPad),
+        ("Fig.11 all rmpad", SystemKind::AllRmpad),
+        ("Fig.12 All-Gather comm", SystemKind::AllGatherComm),
+        ("Fig.13 w/o node-wise", SystemKind::NoNodewise),
+    ];
+    println!("== Fig. 10–13 ablations ({abl_gpus} GPUs, mb 75/50/25) ==\n");
+    let mut abl_rows = vec![Vec::new()];
+    for (mi, model) in MllmConfig::all().iter().enumerate() {
+        abl_rows[0].push(simulate_run(
+            SystemKind::OrchMllm, model, abl_gpus, mb_abl[mi], steps, seed,
+        ));
+    }
+    for (label, system) in ablations {
+        let mut row = Vec::new();
+        for (mi, model) in MllmConfig::all().iter().enumerate() {
+            row.push(simulate_run(
+                *system, model, abl_gpus, mb_abl[mi], steps, seed,
+            ));
+        }
+        println!("-- {label}");
+        abl_rows.push(row);
+    }
+    print!("{}", report::render_mfu_memory(&abl_rows));
+
+    // Fig. 13 metric: inter-node communication volume per modality.
+    let with = &abl_rows[0][0];
+    let without = abl_rows.last().unwrap()[0].clone();
+    println!(
+        "\nFig.13 inter-node MB/iter (MLLM-10B): vision {:.0} vs {:.0}, \
+         audio {:.0} vs {:.0}, text {:.0} vs {:.0} (node-wise vs w/o)",
+        with.inter_node_mb[0],
+        without.inter_node_mb[0],
+        with.inter_node_mb[1],
+        without.inter_node_mb[1],
+        with.inter_node_mb[2],
+        without.inter_node_mb[2],
+    );
+}

@@ -1,0 +1,53 @@
+//! Fig. 3 regeneration: Modality Composition Incoherence in the
+//! synthetic task-mixture dataset.
+//!
+//! Prints, per modality, the distribution of the modality's share of
+//! each example's interleaved LLM sequence (histogram sparkline, mean,
+//! std, absent fraction), and per-task breakdowns that show *why* the
+//! mixture is incoherent (ASR's audio/text correlation vs spoken-QA's
+//! decorrelation, caption's missing audio, ...).
+//!
+//! Run: `cargo run --release --example incoherence_report [-- --n 100000]`
+
+use orchmllm::data::incoherence::IncoherenceReport;
+use orchmllm::data::synth::{DatasetConfig, Generator, Task};
+use orchmllm::util::cli::Args;
+use orchmllm::util::stats::Summary;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize("n", 100_000);
+    let seed = args.u64("seed", 7);
+
+    let examples = Generator::new(DatasetConfig::default(), seed).batch(n);
+    let report = IncoherenceReport::from_examples(&examples, 24);
+    println!("{}\n", report.render());
+    assert!(report.is_incoherent(), "generator lost its incoherence!");
+
+    println!("per-task composition (mean ratios / lengths):");
+    println!(
+        "{:<12} {:>6} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "task", "count", "vis%", "aud%", "vis_len", "aud_len", "text_len"
+    );
+    for task in Task::ALL {
+        let sub: Vec<_> =
+            examples.iter().filter(|e| e.task == task).collect();
+        let mean = |xs: Vec<f64>| Summary::from_slice(&xs).mean();
+        println!(
+            "{:<12} {:>6} {:>8.1}% {:>8.1}% {:>9.0} {:>9.0} {:>9.0}",
+            task.name(),
+            sub.len(),
+            100.0 * mean(sub.iter().map(|e| e.vis_ratio()).collect()),
+            100.0 * mean(sub.iter().map(|e| e.aud_ratio()).collect()),
+            mean(sub.iter().map(|e| e.vis_len as f64).collect()),
+            mean(sub.iter().map(|e| e.aud_len as f64).collect()),
+            mean(sub.iter().map(|e| e.text_len as f64).collect()),
+        );
+    }
+
+    println!(
+        "\nconclusion: per-modality shares range 0%..90%+ across tasks — \
+         no example-level pre-balancing can equalize every phase at once \
+         (paper §3.1)."
+    );
+}

@@ -1,0 +1,88 @@
+//! End-to-end validation driver: real DP training of the tiny MLLM.
+//!
+//! Proves all three layers compose: Pallas kernels (L1) inside the JAX
+//! model (L2) AOT-lowered to HLO, executed from the rust coordinator
+//! (L3) across DP worker threads with post-balancing dispatch, composed
+//! All-to-All rearrangements, gradient all-reduce, and SGD — and that
+//! the loss descends on a learnable synthetic multimodal corpus.
+//!
+//! Also validates the paper's consequence-invariance claim (§3.3): from
+//! the same sampled global batches, training WITH post-balancing
+//! produces the same loss trajectory as training WITHOUT it (the
+//! rearrangement only moves examples between instances).
+//!
+//! Run: `make artifacts && cargo run --release --example train_tiny_mllm
+//!       [-- --steps 300 --workers 4 --mini-batch 6 --lr 4
+//!           --artifacts artifacts/test]`
+
+use orchmllm::config::TrainRunConfig;
+use orchmllm::trainer;
+use orchmllm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = TrainRunConfig {
+        artifacts: args.get_or("artifacts", "artifacts/test").to_string(),
+        workers: args.usize("workers", 4),
+        mini_batch: args.usize("mini-batch", 6),
+        steps: args.usize("steps", 300),
+        lr: args.f64("lr", 4.0),
+        seed: args.u64("seed", 0),
+        balance: true,
+    };
+    let invariance_steps = args.usize("invariance-steps", 5);
+
+    println!(
+        "== end-to-end tiny-MLLM training: {} workers, mb {}, {} steps, \
+         lr {} ==",
+        cfg.workers, cfg.mini_batch, cfg.steps, cfg.lr
+    );
+    let t0 = std::time::Instant::now();
+    let report = trainer::run_collect(&cfg).expect("training failed");
+    println!("{}", report.render());
+    println!("wallclock: {:.1}s", t0.elapsed().as_secs_f64());
+
+    let first = report.losses.first().copied().unwrap_or(f64::NAN);
+    let last10: f64 = report.losses.iter().rev().take(10).sum::<f64>()
+        / 10f64.min(report.losses.len() as f64);
+    assert!(
+        last10 < first - 0.05,
+        "loss did not descend: {first:.4} -> {last10:.4}"
+    );
+    println!(
+        "loss descended: {first:.4} -> {last10:.4} (last-10 mean) ✓"
+    );
+
+    // ---- consequence-invariance check (§3.3) ---------------------------
+    println!(
+        "\n== consequence-invariance: balanced vs unbalanced, \
+         {invariance_steps} steps from the same sampled batches =="
+    );
+    let short = TrainRunConfig {
+        steps: invariance_steps,
+        balance: true,
+        ..cfg.clone()
+    };
+    let balanced = trainer::run_collect(&short).expect("balanced run");
+    let unbalanced = trainer::run_collect(&TrainRunConfig {
+        balance: false,
+        ..short
+    })
+    .expect("unbalanced run");
+    for (i, (a, b)) in balanced
+        .losses
+        .iter()
+        .zip(&unbalanced.losses)
+        .enumerate()
+    {
+        let rel = (a - b).abs() / a.abs().max(1e-9);
+        println!(
+            "  step {i}: balanced {a:.6}  unbalanced {b:.6}  (rel {rel:.2e})"
+        );
+        assert!(
+            rel < 1e-3,
+            "rearrangement changed the training result at step {i}!"
+        );
+    }
+    println!("rearrangement is consequence-invariant ✓");
+}

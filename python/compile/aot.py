@@ -1,0 +1,342 @@
+"""AOT compile path: lower every phase function to HLO *text* artifacts.
+
+Python runs exactly once (``make artifacts``); afterwards the rust
+coordinator is self-contained. The interchange format is HLO text — NOT
+a serialized ``HloModuleProto`` — because jax >= 0.5 emits protos with
+64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Per model config this emits, under ``artifacts/<config>/``:
+
+  vision_fwd_{B}x{L}.hlo.txt     (vis_params, patches, mask) -> vis_tokens
+  vision_bwd_{B}x{L}.hlo.txt     (vis_params, patches, mask, d_out) -> grads
+  audio_fwd_{B}x{L}.hlo.txt      (aud_params, frames, mask) -> aud_tokens
+  audio_bwd_{B}x{L}.hlo.txt      (aud_params, frames, mask, d_out) -> grads
+  llm_step_{B}x{L}x{Tv}x{Ta}.hlo.txt
+      (llm_params, token_ids, vis_tokens, vis_pos, aud_tokens, aud_pos,
+       targets, loss_mask)
+      -> (loss_sum, token_count, d_vis_tokens, d_aud_tokens, *llm_grads)
+  sgd_{vision,audio,llm}.hlo.txt (step_scale, *params, *grads) -> *params'
+  params/{sub}/{iii}.bin         initial parameters, raw f32 LE
+  manifest.json                  shapes/dtypes/ordering contract for rust
+
+Buckets: XLA AOT requires static shapes, so each phase is lowered at a
+small set of (batch, seq) buckets; the rust trainer packs rearranged
+mini-batches into the smallest fitting bucket (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_like(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[np.dtype(dt).name]
+
+
+def _tensor_entry(role: str, arr) -> Dict:
+    return {
+        "role": role,
+        "shape": [int(s) for s in arr.shape],
+        "dtype": _dtype_name(arr.dtype),
+    }
+
+
+def _param_entries(sub: str, names: List[str], leaves) -> List[Dict]:
+    out = []
+    for i, (n, leaf) in enumerate(zip(names, leaves)):
+        out.append(
+            {
+                "name": n,
+                "shape": [int(s) for s in leaf.shape],
+                "dtype": _dtype_name(leaf.dtype),
+                "file": f"params/{sub}/{i:03d}.bin",
+            }
+        )
+    return out
+
+
+def _write_params(out_dir: str, sub: str, leaves) -> None:
+    d = os.path.join(out_dir, "params", sub)
+    os.makedirs(d, exist_ok=True)
+    for i, leaf in enumerate(leaves):
+        np.asarray(leaf, dtype=np.float32).tofile(
+            os.path.join(d, f"{i:03d}.bin")
+        )
+
+
+def _lower(fn, *args) -> str:
+    # keep_unused=True: the rust side feeds every manifest slot, so the
+    # compiled signature must keep arguments even when a gradient graph
+    # does not read them (e.g. biases whose VJP ignores the primal).
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+
+
+def parse_buckets(spec: str) -> List[Tuple[int, ...]]:
+    """Parse '4x16,8x32' into [(4, 16), (8, 32)]."""
+    out = []
+    for part in spec.split(","):
+        out.append(tuple(int(x) for x in part.strip().split("x")))
+    return out
+
+
+DEFAULT_BUCKETS = {
+    # phase -> bucket list; llm buckets are (B, L, Tv, Ta).
+    "test": {
+        "vision": [(4, 16)],
+        "audio": [(4, 16)],
+        "llm": [(4, 48, 8, 8)],
+    },
+    "e2e-small": {
+        "vision": [(4, 32), (8, 64)],
+        "audio": [(4, 32), (8, 64)],
+        "llm": [(4, 128, 24, 24), (8, 160, 32, 32)],
+    },
+    "e2e-100m": {
+        "vision": [(4, 64)],
+        "audio": [(4, 64)],
+        "llm": [(4, 160, 32, 32)],
+    },
+}
+
+
+def build(config_name: str, out_root: str, seed: int,
+          buckets: Dict[str, List[Tuple[int, ...]]] | None = None) -> str:
+    cfg = M.CONFIGS[config_name]
+    buckets = buckets or DEFAULT_BUCKETS[config_name]
+    out_dir = os.path.join(out_root, config_name)
+    os.makedirs(out_dir, exist_ok=True)
+
+    params = M.init_all_params(seed, cfg)
+    manifest: Dict = {
+        "config": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "d_llm": cfg.d_llm,
+            "llm_layers": cfg.llm_layers,
+            "llm_heads": cfg.llm_heads,
+            "llm_ffn": cfg.llm_ffn,
+            "max_seq": cfg.max_seq,
+            "patch_dim": cfg.patch_dim,
+            "d_vis": cfg.d_vis,
+            "vis_layers": cfg.vis_layers,
+            "vis_group": cfg.vis_group,
+            "max_vis": cfg.max_vis,
+            "mel_dim": cfg.mel_dim,
+            "d_aud": cfg.d_aud,
+            "aud_layers": cfg.aud_layers,
+            "aud_stride": cfg.aud_stride,
+            "max_aud": cfg.max_aud,
+            "param_count": int(M.param_count(params)),
+            "seed": seed,
+        },
+        "params": {},
+        "artifacts": [],
+    }
+
+    for sub in ("vision", "audio", "llm"):
+        leaves, names, _ = M.flatten_params(params[sub])
+        manifest["params"][sub] = _param_entries(sub, names, leaves)
+        _write_params(out_dir, sub, leaves)
+
+    def emit(name: str, text: str, inputs: List[Dict], outputs: List[Dict],
+             bucket: List[int]) -> None:
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "bucket": bucket,
+                "inputs": inputs,
+                "outputs": outputs,
+            }
+        )
+        print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB)")
+
+    vp_spec = spec_like(params["vision"])
+    ap_spec = spec_like(params["audio"])
+    lp_spec = spec_like(params["llm"])
+
+    # ---- vision phase -----------------------------------------------------
+    for (b, lp) in buckets["vision"]:
+        patches = jax.ShapeDtypeStruct((b, lp, cfg.patch_dim), jnp.float32)
+        mask = jax.ShapeDtypeStruct((b, lp), jnp.int32)
+        tv = lp // cfg.vis_group
+        d_out = jax.ShapeDtypeStruct((b, tv, cfg.d_llm), jnp.float32)
+
+        fwd = lambda p, x, m: (M.vision_encode(p, x, m, cfg),)
+        emit(
+            f"vision_fwd_{b}x{lp}",
+            _lower(fwd, vp_spec, patches, mask),
+            [{"kind": "params", "sub": "vision"},
+             _tensor_entry("patches", patches),
+             _tensor_entry("mask", mask)],
+            [{"role": "vis_tokens", "shape": [b, tv, cfg.d_llm],
+              "dtype": "f32"}],
+            [b, lp],
+        )
+        bwd_fn = M.make_vision_bwd(cfg)
+        bwd = lambda p, x, m, d: (bwd_fn(p, x, m, d),)
+        emit(
+            f"vision_bwd_{b}x{lp}",
+            _lower(bwd, vp_spec, patches, mask, d_out),
+            [{"kind": "params", "sub": "vision"},
+             _tensor_entry("patches", patches),
+             _tensor_entry("mask", mask),
+             _tensor_entry("d_out", d_out)],
+            [{"kind": "grads", "sub": "vision"}],
+            [b, lp],
+        )
+
+    # ---- audio phase ------------------------------------------------------
+    for (b, lf) in buckets["audio"]:
+        frames = jax.ShapeDtypeStruct((b, lf, cfg.mel_dim), jnp.float32)
+        mask = jax.ShapeDtypeStruct((b, lf), jnp.int32)
+        ta = lf // cfg.aud_stride
+        d_out = jax.ShapeDtypeStruct((b, ta, cfg.d_llm), jnp.float32)
+
+        fwd = lambda p, x, m: (M.audio_encode(p, x, m, cfg),)
+        emit(
+            f"audio_fwd_{b}x{lf}",
+            _lower(fwd, ap_spec, frames, mask),
+            [{"kind": "params", "sub": "audio"},
+             _tensor_entry("frames", frames),
+             _tensor_entry("mask", mask)],
+            [{"role": "aud_tokens", "shape": [b, ta, cfg.d_llm],
+              "dtype": "f32"}],
+            [b, lf],
+        )
+        bwd_fn = M.make_audio_bwd(cfg)
+        bwd = lambda p, x, m, d: (bwd_fn(p, x, m, d),)
+        emit(
+            f"audio_bwd_{b}x{lf}",
+            _lower(bwd, ap_spec, frames, mask, d_out),
+            [{"kind": "params", "sub": "audio"},
+             _tensor_entry("frames", frames),
+             _tensor_entry("mask", mask),
+             _tensor_entry("d_out", d_out)],
+            [{"kind": "grads", "sub": "audio"}],
+            [b, lf],
+        )
+
+    # ---- LLM phase ----------------------------------------------------------
+    step_fn = M.make_llm_step(cfg)
+    for (b, l, tv, ta) in buckets["llm"]:
+        token_ids = jax.ShapeDtypeStruct((b, l), jnp.int32)
+        vis_tokens = jax.ShapeDtypeStruct((b, tv, cfg.d_llm), jnp.float32)
+        vis_pos = jax.ShapeDtypeStruct((b, tv), jnp.int32)
+        aud_tokens = jax.ShapeDtypeStruct((b, ta, cfg.d_llm), jnp.float32)
+        aud_pos = jax.ShapeDtypeStruct((b, ta), jnp.int32)
+        targets = jax.ShapeDtypeStruct((b, l), jnp.int32)
+        loss_mask = jax.ShapeDtypeStruct((b, l), jnp.int32)
+
+        def llm_flat(p, tok, vt, vp, at, ap, tgt, lm):
+            loss, cnt, d_vis, d_aud, grads = step_fn(
+                p, tok, vt, vp, at, ap, tgt, lm
+            )
+            return (loss, cnt, d_vis, d_aud, grads)
+
+        emit(
+            f"llm_step_{b}x{l}x{tv}x{ta}",
+            _lower(llm_flat, lp_spec, token_ids, vis_tokens, vis_pos,
+                   aud_tokens, aud_pos, targets, loss_mask),
+            [{"kind": "params", "sub": "llm"},
+             _tensor_entry("token_ids", token_ids),
+             _tensor_entry("vis_tokens", vis_tokens),
+             _tensor_entry("vis_pos", vis_pos),
+             _tensor_entry("aud_tokens", aud_tokens),
+             _tensor_entry("aud_pos", aud_pos),
+             _tensor_entry("targets", targets),
+             _tensor_entry("loss_mask", loss_mask)],
+            [{"role": "loss_sum", "shape": [], "dtype": "f32"},
+             {"role": "token_count", "shape": [], "dtype": "f32"},
+             {"role": "d_vis_tokens", "shape": [b, tv, cfg.d_llm],
+              "dtype": "f32"},
+             {"role": "d_aud_tokens", "shape": [b, ta, cfg.d_llm],
+              "dtype": "f32"},
+             {"kind": "grads", "sub": "llm"}],
+            [b, l, tv, ta],
+        )
+
+    # ---- optimizer ----------------------------------------------------------
+    sgd = M.make_sgd()
+    for sub in ("vision", "audio", "llm"):
+        p_spec = spec_like(params[sub])
+        scale = jax.ShapeDtypeStruct((), jnp.float32)
+
+        def sgd_flat(s, p, g):
+            return (sgd(s, p, g),)
+
+        emit(
+            f"sgd_{sub}",
+            _lower(sgd_flat, scale, p_spec, p_spec),
+            [_tensor_entry("step_scale", scale),
+             {"kind": "params", "sub": sub},
+             {"kind": "grads", "sub": sub}],
+            [{"kind": "params", "sub": sub}],
+            [],
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+    return out_dir
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact root directory")
+    ap.add_argument("--config", default="test",
+                    choices=sorted(M.CONFIGS.keys()))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--vision-buckets", default=None,
+                    help="e.g. '4x16,8x32' (BxL)")
+    ap.add_argument("--audio-buckets", default=None)
+    ap.add_argument("--llm-buckets", default=None,
+                    help="e.g. '4x48x8x8' (BxLxTvxTa)")
+    args = ap.parse_args()
+
+    buckets = dict(DEFAULT_BUCKETS[args.config])
+    if args.vision_buckets:
+        buckets["vision"] = parse_buckets(args.vision_buckets)
+    if args.audio_buckets:
+        buckets["audio"] = parse_buckets(args.audio_buckets)
+    if args.llm_buckets:
+        buckets["llm"] = parse_buckets(args.llm_buckets)
+
+    print(f"AOT build: config={args.config} -> {args.out}/{args.config}")
+    build(args.config, args.out, args.seed, buckets)
+
+
+if __name__ == "__main__":
+    main()

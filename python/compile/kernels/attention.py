@@ -1,0 +1,341 @@
+"""L1 Pallas kernels: flash-style fused attention and fused LayerNorm.
+
+The compute hot-spot of every OrchMLLM phase (vision encoder, audio
+encoder, LLM backbone) is transformer attention. The paper's clusters run
+it as a CUDA flash-attention kernel; here it is re-thought for TPU as a
+Pallas kernel (see DESIGN.md §Hardware-Adaptation):
+
+  * the CUDA threadblock tiling over queries becomes the Pallas grid over
+    (batch*heads, query blocks) with a BlockSpec that stages one query
+    block in VMEM;
+  * the shared-memory K/V staging becomes an in-kernel ``fori_loop`` over
+    key blocks (``pl.ds`` slices), i.e. the HBM->VMEM stream that Mosaic
+    double-buffers on a real TPU;
+  * warp-level online softmax becomes f32 (m, l, acc) carries;
+  * WMMA tiles become MXU-shaped block matmuls (block x head_dim).
+
+Kernels are lowered with ``interpret=True`` so the resulting HLO runs on
+the CPU PJRT plugin (real-TPU lowering emits a Mosaic custom-call the CPU
+client cannot execute). Correctness vs. ``ref.py`` is enforced by
+``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _flash_attention_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    mask_ref,
+    o_ref,
+    *,
+    scale: float,
+    block_k: int,
+    seq_len_k: int,
+    block_q: int,
+    causal: bool,
+):
+    """One grid step: one query block vs. all key blocks (online softmax).
+
+    Ref shapes (leading grid-mapped axis already sliced away by BlockSpec):
+      q_ref:    [1, block_q, d]
+      k_ref:    [1, Lk, d]      (streamed block-wise below)
+      v_ref:    [1, Lk, d]
+      mask_ref: [1, Lk]         int32 key-validity (1 = valid)
+      o_ref:    [1, block_q, d]
+    """
+    q = q_ref[0].astype(jnp.float32) * scale  # [bq, d]
+    d = q.shape[-1]
+    num_k_blocks = seq_len_k // block_k
+    q_block_idx = pl.program_id(1)
+    row_ids = q_block_idx * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_blk = k_ref[0, pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q,
+            k_blk,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [bq, bk]
+        valid = mask_ref[0, pl.ds(i * block_k, block_k)] > 0  # [bk]
+        s = jnp.where(valid[None, :], s, _NEG_INF)
+        if causal:
+            col_ids = i * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(col_ids <= row_ids, s, _NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_cur = acc_prev * alpha[:, None] + jax.lax.dot_general(
+            p,
+            v_blk,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_cur, l_cur, acc_cur
+
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, num_k_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / (l[:, None] + 1e-30)).astype(o_ref.dtype)
+
+
+def _pad_to(x, axis, multiple, value=0.0):
+    size = x.shape[axis]
+    target = ((size + multiple - 1) // multiple) * multiple
+    if target == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - size)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _attention_bwd_math(q, k, v, mask, do, *, causal: bool, scale: float):
+    """Closed-form attention backward (the flash-attention bwd recurrence
+    collapsed to full matrices — exact at these model scales).
+
+    Runs in f32 and lowers into the same HLO module as the Pallas forward,
+    so the rust runtime never sees a custom-call.
+    """
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    dof = do.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    lq, lk = s.shape[-2], s.shape[-1]
+    if mask is not None:
+        s = jnp.where(mask[:, None, None, :] > 0, s, _NEG_INF)
+    if causal:
+        causal_m = jnp.tril(jnp.ones((lq, lk), jnp.bool_), k=lk - lq)
+        s = jnp.where(causal_m[None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vf)
+    delta = jnp.sum(dp * p, axis=-1, keepdims=True)
+    ds = p * (dp - delta) * scale
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, kf).astype(q.dtype)
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, qf).astype(k.dtype)
+    return dq, dk, dv.astype(v.dtype)
+
+
+def _flash_forward_impl(q, k, v, mask, causal, scale, block_q, block_k,
+                        interpret):
+    """Pallas forward pass over already-validated [B, H, L, D] tensors."""
+    b, h, lq, d = q.shape
+    lk = k.shape[2]
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+
+    # Pad sequence axes to block multiples; padded keys are masked out and
+    # padded query rows are sliced off below.
+    qp = _pad_to(q, 2, block_q)
+    kp = _pad_to(k, 2, block_k)
+    vp = _pad_to(v, 2, block_k)
+    maskp = _pad_to(mask, 1, block_k, value=0)
+    lq_p, lk_p = qp.shape[2], kp.shape[2]
+
+    # Collapse (B, H) into one grid-mapped axis.
+    qf = qp.reshape(b * h, lq_p, d)
+    kf = kp.reshape(b * h, lk_p, d)
+    vf = vp.reshape(b * h, lk_p, d)
+
+    grid = (b * h, lq_p // block_q)
+    kernel = functools.partial(
+        _flash_attention_kernel,
+        scale=scale,
+        block_k=block_k,
+        seq_len_k=lk_p,
+        block_q=block_q,
+        causal=causal,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, iq: (bh, iq, 0)),
+            pl.BlockSpec((1, lk_p, d), lambda bh, iq: (bh, 0, 0)),
+            pl.BlockSpec((1, lk_p, d), lambda bh, iq: (bh, 0, 0)),
+            pl.BlockSpec((1, lk_p), lambda bh, iq: (bh // h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, iq: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, lq_p, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf, mask)
+    return out.reshape(b, h, lq_p, d)[:, :, :lq, :]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _flash_attention_vjp(q, k, v, mask, causal, scale, block_q, block_k,
+                         interpret):
+    return _flash_forward_impl(q, k, v, mask, causal, scale, block_q,
+                               block_k, interpret)
+
+
+def _flash_vjp_fwd(q, k, v, mask, causal, scale, block_q, block_k,
+                   interpret):
+    out = _flash_forward_impl(q, k, v, mask, causal, scale, block_q,
+                              block_k, interpret)
+    return out, (q, k, v, mask)
+
+
+def _flash_vjp_bwd(causal, scale, block_q, block_k, interpret, res, do):
+    import numpy as np
+
+    q, k, v, mask = res
+    dq, dk, dv = _attention_bwd_math(q, k, v, mask, do, causal=causal,
+                                     scale=scale)
+    dmask = np.zeros(mask.shape, dtype=jax.dtypes.float0)
+    return dq, dk, dv, dmask
+
+
+_flash_attention_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    mask=None,
+    causal: bool = False,
+    scale=None,
+    block_q: int = 64,
+    block_k: int = 64,
+    interpret: bool = True,
+):
+    """Flash-style fused attention via Pallas (differentiable).
+
+    Args:
+      q, k, v: [B, H, L, D] (Lq == Lk required when ``causal``).
+      mask: optional [B, Lk] int key-validity mask (1 = valid). Padding
+        keys contribute no attention weight.
+      causal: apply a causal (lower-triangular) mask.
+      scale: softmax scale, default 1/sqrt(D).
+      block_q, block_k: VMEM tile sizes (clamped to the sequence length).
+      interpret: must stay True for CPU-PJRT execution (see module doc).
+
+    Returns:
+      [B, H, Lq, D] attention output in q's dtype. Reverse-mode autodiff
+      is provided by a custom VJP (``_attention_bwd_math``).
+    """
+    b, h, lq, d = q.shape
+    lk = k.shape[2]
+    if causal and lq != lk:
+        raise ValueError("causal flash_attention requires Lq == Lk")
+    if scale is None:
+        scale = float(1.0 / (d**0.5))
+    if mask is None:
+        mask = jnp.ones((b, lk), jnp.int32)
+    mask = mask.astype(jnp.int32)
+    return _flash_attention_vjp(q, k, v, mask, bool(causal), float(scale),
+                                int(block_q), int(block_k), bool(interpret))
+
+
+def _layernorm_kernel(x_ref, gamma_ref, beta_ref, o_ref, *, eps: float):
+    """Fused LayerNorm over the last axis for one row block."""
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    g = gamma_ref[...].astype(jnp.float32)
+    bta = beta_ref[...].astype(jnp.float32)
+    o_ref[...] = (y * g[None, :] + bta[None, :]).astype(o_ref.dtype)
+
+
+def _layernorm_forward_impl(x, gamma, beta, eps, block_rows, interpret):
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    xf = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    xp = _pad_to(xf, 0, block_rows)
+    rows_p = xp.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(rows_p // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, d), x.dtype),
+        interpret=interpret,
+    )(xp, gamma, beta)
+    return out[:rows].reshape(orig_shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _layernorm_vjp(x, gamma, beta, eps, block_rows, interpret):
+    return _layernorm_forward_impl(x, gamma, beta, eps, block_rows,
+                                   interpret)
+
+
+def _layernorm_vjp_fwd(x, gamma, beta, eps, block_rows, interpret):
+    out = _layernorm_forward_impl(x, gamma, beta, eps, block_rows, interpret)
+    return out, (x, gamma)
+
+
+def _layernorm_vjp_bwd(eps, block_rows, interpret, res, do):
+    x, gamma = res
+    xf = x.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (xf - mu) * rstd
+    g = gamma.astype(jnp.float32)
+    sum_axes = tuple(range(x.ndim - 1))
+    dgamma = jnp.sum(dof * xhat, axis=sum_axes).astype(gamma.dtype)
+    dbeta = jnp.sum(dof, axis=sum_axes).astype(gamma.dtype)
+    dy = dof * g
+    dx = rstd * (
+        dy
+        - jnp.mean(dy, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dy * xhat, axis=-1, keepdims=True)
+    )
+    return dx.astype(x.dtype), dgamma, dbeta
+
+
+_layernorm_vjp.defvjp(_layernorm_vjp_fwd, _layernorm_vjp_bwd)
+
+
+def fused_layernorm(x, gamma, beta, eps: float = 1e-5, block_rows: int = 128,
+                    interpret: bool = True):
+    """Fused LayerNorm via Pallas: x is [..., D]; gamma/beta are [D].
+
+    Differentiable via a custom VJP (closed-form LayerNorm backward).
+    """
+    return _layernorm_vjp(x, gamma, beta, float(eps), int(block_rows),
+                          bool(interpret))
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, d: int,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM bytes per grid step of the flash kernel.
+
+    q block + one K block + one V block + score tile + (m, l, acc)
+    carries. Used by DESIGN.md / EXPERIMENTS.md to pick block sizes that
+    fit the ~16 MiB/core VMEM budget with double buffering.
+    """
+    q_blk = block_q * d
+    kv_blk = 2 * block_k * d
+    scores = block_q * block_k
+    carries = block_q * (d + 2)
+    return (q_blk + kv_blk + scores + carries) * dtype_bytes

@@ -1,0 +1,65 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness layer).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only. ``python/tests/test_kernel.py``
+sweeps shapes and dtypes with hypothesis and asserts the kernel output
+matches these oracles to tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, mask=None, scale=None):
+    """Reference scaled dot-product attention.
+
+    Args:
+      q: [B, H, Lq, D] queries.
+      k: [B, H, Lk, D] keys.
+      v: [B, H, Lk, D] values.
+      mask: optional [B, Lk] validity mask (1 = valid, 0 = padding) or
+        [B, Lq, Lk] full mask. Padding keys receive -inf scores.
+      scale: softmax scale; defaults to 1/sqrt(D).
+
+    Returns:
+      [B, H, Lq, D] attention output, same dtype as q.
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if mask is not None:
+        if mask.ndim == 2:  # [B, Lk] key-validity mask
+            m = mask[:, None, None, :]
+        elif mask.ndim == 3:  # [B, Lq, Lk]
+            m = mask[:, None, :, :]
+        else:
+            m = mask
+        scores = jnp.where(m > 0, scores, jnp.float32(-1e30))
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / (jnp.sum(probs, axis=-1, keepdims=True) + 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def causal_attention_ref(q, k, v, scale=None):
+    """Reference causal (decoder) attention: query i attends to keys <= i."""
+    lq, lk = q.shape[-2], k.shape[-2]
+    causal = jnp.tril(jnp.ones((lq, lk), dtype=jnp.int32), k=lk - lq)
+    mask = jnp.broadcast_to(causal[None, :, :], (q.shape[0], lq, lk))
+    return attention_ref(q, k, v, mask=mask, scale=scale)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """Reference LayerNorm over the last axis."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) / jnp.sqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(
+        x.dtype
+    )

@@ -1,0 +1,424 @@
+"""L2: the tiny-MLLM compute graph in JAX (build-time only).
+
+Mirrors the paper's MLLM structure (§2.1): a vision encoder, an audio
+encoder (conv front-end + transformer, the "ConvTransformer" of App. A),
+MLP connectors into the LLM embedding space, and a causal LLM backbone.
+Every submodule's attention runs through the L1 Pallas flash-attention
+kernel so the whole stack lowers into one HLO dialect.
+
+The model is *phase-split* exactly the way the rust orchestrator needs it:
+
+  vision_fwd   (vis_params, patches, mask)            -> vis_tokens
+  audio_fwd    (aud_params, frames, mask)             -> aud_tokens
+  llm_step     (llm_params, token_ids, vis_tokens, vis_pos,
+                aud_tokens, aud_pos, targets, loss_mask)
+               -> (loss_sum, token_count, d_vis_tokens, d_aud_tokens,
+                   *llm_grads)
+  vision_bwd   (vis_params, patches, mask, d_out)     -> *vis_grads
+  audio_bwd    (aud_params, frames, mask, d_out)      -> *aud_grads
+  sgd_<sub>    (step_scale, *params, *grads)          -> *new_params
+
+Subsequence assembly (§6 of the paper) is expressed as a scatter: the
+rust coordinator ships encoder-output buffers between DP instances with
+its All-to-All engine and hands the LLM phase per-example *position
+tables* (vis_pos/aud_pos, -1 = inactive slot); the scatter into the
+embedding sequence — and its transposed gather in the backward pass —
+live in HLO. Losses and gradients are SUMS over valid tokens, so a later
+all-reduce + global 1/token_count rescale makes training bit-for-bit
+invariant under any cross-instance rearrangement Π (§3.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention, fused_layernorm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters for one tiny-MLLM variant."""
+
+    name: str = "test"
+    # LLM backbone
+    vocab: int = 256
+    d_llm: int = 64
+    llm_layers: int = 2
+    llm_heads: int = 2
+    llm_ffn: int = 128
+    max_seq: int = 128
+    # Vision encoder (patch transformer, no-padding batching in the paper)
+    patch_dim: int = 48
+    d_vis: int = 32
+    vis_layers: int = 1
+    vis_heads: int = 2
+    vis_ffn: int = 64
+    vis_group: int = 2  # downsample: group r patches -> 1 LLM token
+    max_vis: int = 64
+    # Audio encoder (conv front-end + transformer, padded batching)
+    mel_dim: int = 40
+    d_aud: int = 32
+    aud_layers: int = 1
+    aud_heads: int = 2
+    aud_ffn: int = 64
+    aud_stride: int = 2  # conv downsample: r frames -> 1 LLM token
+    max_aud: int = 64
+
+
+CONFIGS: Dict[str, ModelConfig] = {
+    # Fast config for pytest and rust integration tests.
+    "test": ModelConfig(),
+    # ~25M params: default for the end-to-end training example on CPU.
+    "e2e-small": ModelConfig(
+        name="e2e-small",
+        vocab=4096,
+        d_llm=384,
+        llm_layers=6,
+        llm_heads=6,
+        llm_ffn=1536,
+        max_seq=256,
+        patch_dim=96,
+        d_vis=128,
+        vis_layers=2,
+        vis_heads=4,
+        vis_ffn=512,
+        max_vis=128,
+        mel_dim=80,
+        d_aud=128,
+        aud_layers=2,
+        aud_heads=4,
+        aud_ffn=512,
+        max_aud=128,
+    ),
+    # ~95M params: the "~100M transformer" end-to-end validation target.
+    "e2e-100m": ModelConfig(
+        name="e2e-100m",
+        vocab=8192,
+        d_llm=768,
+        llm_layers=10,
+        llm_heads=12,
+        llm_ffn=3072,
+        max_seq=256,
+        patch_dim=96,
+        d_vis=256,
+        vis_layers=4,
+        vis_heads=8,
+        vis_ffn=1024,
+        max_vis=128,
+        mel_dim=80,
+        d_aud=256,
+        aud_layers=4,
+        aud_heads=8,
+        aud_ffn=1024,
+        max_aud=128,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, scale=0.02):
+    return (scale * jax.random.normal(key, shape)).astype(jnp.float32)
+
+
+def _init_block_stack(key, n_layers, d, ffn):
+    """Stacked (scan-ready) transformer block params: leading axis = layer."""
+    ks = jax.random.split(key, 8)
+
+    def stack(k, shape):
+        return _dense_init(k, (n_layers,) + shape)
+
+    return {
+        "ln1_g": jnp.ones((n_layers, d), jnp.float32),
+        "ln1_b": jnp.zeros((n_layers, d), jnp.float32),
+        "wqkv": stack(ks[0], (d, 3 * d)),
+        "wo": stack(ks[1], (d, d)),
+        "ln2_g": jnp.ones((n_layers, d), jnp.float32),
+        "ln2_b": jnp.zeros((n_layers, d), jnp.float32),
+        "w1": stack(ks[2], (d, ffn)),
+        "b1": jnp.zeros((n_layers, ffn), jnp.float32),
+        "w2": stack(ks[3], (ffn, d)),
+        "b2": jnp.zeros((n_layers, d), jnp.float32),
+    }
+
+
+def init_vision_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    return {
+        "proj": _dense_init(ks[0], (cfg.patch_dim, cfg.d_vis)),
+        "pos": _dense_init(ks[1], (cfg.max_vis, cfg.d_vis)),
+        "blocks": _init_block_stack(ks[2], cfg.vis_layers, cfg.d_vis, cfg.vis_ffn),
+        "lnf_g": jnp.ones((cfg.d_vis,), jnp.float32),
+        "lnf_b": jnp.zeros((cfg.d_vis,), jnp.float32),
+        # connector: grouped patches -> LLM embedding space (2-layer MLP)
+        "c_w1": _dense_init(ks[3], (cfg.vis_group * cfg.d_vis, cfg.d_llm)),
+        "c_b1": jnp.zeros((cfg.d_llm,), jnp.float32),
+        "c_w2": _dense_init(ks[4], (cfg.d_llm, cfg.d_llm)),
+        "c_b2": jnp.zeros((cfg.d_llm,), jnp.float32),
+    }
+
+
+def init_audio_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    return {
+        # conv front-end: width-3 stride-r conv over mel frames
+        "conv_w": _dense_init(ks[0], (3, cfg.mel_dim, cfg.d_aud)),
+        "conv_b": jnp.zeros((cfg.d_aud,), jnp.float32),
+        "pos": _dense_init(ks[1], (cfg.max_aud, cfg.d_aud)),
+        "blocks": _init_block_stack(ks[2], cfg.aud_layers, cfg.d_aud, cfg.aud_ffn),
+        "lnf_g": jnp.ones((cfg.d_aud,), jnp.float32),
+        "lnf_b": jnp.zeros((cfg.d_aud,), jnp.float32),
+        "c_w1": _dense_init(ks[3], (cfg.d_aud, cfg.d_llm)),
+        "c_b1": jnp.zeros((cfg.d_llm,), jnp.float32),
+        "c_w2": _dense_init(ks[4], (cfg.d_llm, cfg.d_llm)),
+        "c_b2": jnp.zeros((cfg.d_llm,), jnp.float32),
+    }
+
+
+def init_llm_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": _dense_init(ks[0], (cfg.vocab, cfg.d_llm)),
+        "pos": _dense_init(ks[1], (cfg.max_seq, cfg.d_llm)),
+        "blocks": _init_block_stack(ks[2], cfg.llm_layers, cfg.d_llm, cfg.llm_ffn),
+        "lnf_g": jnp.ones((cfg.d_llm,), jnp.float32),
+        "lnf_b": jnp.zeros((cfg.d_llm,), jnp.float32),
+        "head": _dense_init(ks[3], (cfg.d_llm, cfg.vocab)),
+    }
+
+
+def init_all_params(seed: int, cfg: ModelConfig):
+    key = jax.random.PRNGKey(seed)
+    kv, ka, kl = jax.random.split(key, 3)
+    return {
+        "vision": init_vision_params(kv, cfg),
+        "audio": init_audio_params(ka, cfg),
+        "llm": init_llm_params(kl, cfg),
+    }
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Transformer trunk (shared by all submodules; scan over stacked layers)
+# ---------------------------------------------------------------------------
+
+
+def _transformer_trunk(blocks, x, mask, n_heads: int, causal: bool):
+    """Pre-LN transformer over stacked layer params via lax.scan.
+
+    x: [B, L, D]; mask: [B, L] key-validity; returns [B, L, D].
+    """
+    b, l, d = x.shape
+    hd = d // n_heads
+
+    def layer(h, lp):
+        y = fused_layernorm(h, lp["ln1_g"], lp["ln1_b"])
+        qkv = y @ lp["wqkv"]  # [B, L, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(b, l, n_heads, hd).transpose(0, 2, 1, 3)
+
+        attn = flash_attention(
+            heads(q), heads(k), heads(v), mask=mask, causal=causal
+        )
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, l, d)
+        h = h + attn @ lp["wo"]
+        y = fused_layernorm(h, lp["ln2_g"], lp["ln2_b"])
+        y = jax.nn.gelu(y @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"]
+        return h + y, None
+
+    out, _ = jax.lax.scan(layer, x, blocks)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Phase functions
+# ---------------------------------------------------------------------------
+
+
+def vision_encode(params, patches, mask, cfg: ModelConfig):
+    """Vision phase: [B, Lp, patch_dim] patches -> [B, Lp/r, d_llm] tokens."""
+    b, lp, _ = patches.shape
+    x = patches @ params["proj"] + params["pos"][:lp][None]
+    x = _transformer_trunk(
+        params["blocks"], x, mask, cfg.vis_heads, causal=False
+    )
+    x = fused_layernorm(x, params["lnf_g"], params["lnf_b"])
+    r = cfg.vis_group
+    g = x.reshape(b, lp // r, r * cfg.d_vis)
+    h = jax.nn.gelu(g @ params["c_w1"] + params["c_b1"])
+    return h @ params["c_w2"] + params["c_b2"]
+
+
+def audio_encode(params, frames, mask, cfg: ModelConfig):
+    """Audio phase: [B, Lf, mel] frames -> [B, Lf/r, d_llm] tokens.
+
+    Conv front-end forces padded batching for this phase (paper §8
+    "Input preprocessing"), which is why its dispatcher uses the padded
+    post-balancing algorithm.
+    """
+    b, lf, _ = frames.shape
+    r = cfg.aud_stride
+    x = jax.lax.conv_general_dilated(
+        frames,
+        params["conv_w"],
+        window_strides=(r,),
+        padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    ) + params["conv_b"]
+    lt = lf // r
+    dmask = mask[:, ::r]
+    x = x + params["pos"][:lt][None]
+    x = _transformer_trunk(
+        params["blocks"], x, dmask, cfg.aud_heads, causal=False
+    )
+    x = fused_layernorm(x, params["lnf_g"], params["lnf_b"])
+    h = jax.nn.gelu(x @ params["c_w1"] + params["c_b1"])
+    return h @ params["c_w2"] + params["c_b2"]
+
+
+def _scatter_tokens(base, tokens, pos):
+    """Scatter encoder tokens into the embedding sequence.
+
+    base:   [B, L, D] text-token embeddings.
+    tokens: [B, T, D] encoder output tokens.
+    pos:    [B, T] destination index in [0, L), or -1 for inactive slots.
+
+    Inactive slots scatter to a dump row (index L) that is sliced off, so
+    the op stays static-shaped, and its VJP is the matching gather.
+    """
+    b, l, d = base.shape
+    padded = jnp.concatenate([base, jnp.zeros((b, 1, d), base.dtype)], axis=1)
+    safe_pos = jnp.where(pos >= 0, pos, l)
+    upd = jax.vmap(
+        lambda buf, tok, idx: buf.at[idx].set(tok)
+    )(padded, tokens, safe_pos)
+    return upd[:, :l, :]
+
+
+def llm_forward(
+    params,
+    token_ids,
+    vis_tokens,
+    vis_pos,
+    aud_tokens,
+    aud_pos,
+    targets,
+    loss_mask,
+    cfg: ModelConfig,
+):
+    """LLM phase: assemble interleaved sequence, run backbone, sum CE loss.
+
+    Returns (loss_sum, token_count); loss is a SUM over valid target
+    positions so that the downstream DP all-reduce is rearrangement-
+    invariant (the paper's consequence-invariance, §3.3).
+    """
+    b, l = token_ids.shape
+    base = params["embed"][token_ids]  # [B, L, D]
+    base = _scatter_tokens(base, vis_tokens, vis_pos)
+    base = _scatter_tokens(base, aud_tokens, aud_pos)
+    x = base + params["pos"][:l][None]
+    seq_mask = (loss_mask > -1).astype(jnp.int32)  # all slots valid unless
+    # the caller marks a slot as hard padding with loss_mask == -1.
+    x = _transformer_trunk(
+        params["blocks"], x, seq_mask, cfg.llm_heads, causal=True
+    )
+    x = fused_layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["head"]  # [B, L, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jnp.clip(targets, 0, cfg.vocab - 1)
+    picked = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    lmask = (loss_mask > 0).astype(jnp.float32)
+    loss_sum = -jnp.sum(picked * lmask)
+    token_count = jnp.sum(lmask)
+    return loss_sum, token_count
+
+
+def make_llm_step(cfg: ModelConfig):
+    """llm_step: loss + grads wrt (params, vis_tokens, aud_tokens)."""
+
+    def step_fixed(params, token_ids, vis_tokens, vis_pos, aud_tokens,
+                   aud_pos, targets, loss_mask):
+        def loss_fn(p, vt, at):
+            ls, tc = llm_forward(
+                p, token_ids, vt, vis_pos, at, aud_pos, targets, loss_mask,
+                cfg,
+            )
+            return ls, tc
+
+        (loss_sum, token_count), (pgrads, d_vis, d_aud) = (
+            jax.value_and_grad(loss_fn, argnums=(0, 1, 2), has_aux=True)(
+                params, vis_tokens, aud_tokens
+            )
+        )
+        return loss_sum, token_count, d_vis, d_aud, pgrads
+
+    return step_fixed
+
+
+def make_vision_bwd(cfg: ModelConfig):
+    def bwd(params, patches, mask, d_out):
+        _, vjp = jax.vjp(
+            lambda p: vision_encode(p, patches, mask, cfg), params
+        )
+        return vjp(d_out)[0]
+
+    return bwd
+
+
+def make_audio_bwd(cfg: ModelConfig):
+    def bwd(params, frames, mask, d_out):
+        _, vjp = jax.vjp(
+            lambda p: audio_encode(p, frames, mask, cfg), params
+        )
+        return vjp(d_out)[0]
+
+    return bwd
+
+
+def make_sgd():
+    """SGD: p <- p - step_scale * g, step_scale = lr / global_token_count."""
+
+    def sgd(step_scale, params, grads):
+        return jax.tree_util.tree_map(
+            lambda p, g: p - step_scale * g, params, grads
+        )
+
+    return sgd
+
+
+# ---------------------------------------------------------------------------
+# Flattening helpers (deterministic parameter ordering for the rust side)
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(params) -> Tuple[List[Any], List[str], Any]:
+    """Flatten a param pytree into (leaves, dotted-path names, treedef)."""
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(params)
+    names = []
+    leaves = []
+    for path, leaf in leaves_with_path:
+        parts = []
+        for entry in path:
+            if hasattr(entry, "key"):
+                parts.append(str(entry.key))
+            else:
+                parts.append(str(entry))
+        names.append(".".join(parts))
+        leaves.append(leaf)
+    return leaves, names, treedef
+
+
+def unflatten_params(treedef, leaves):
+    return jax.tree_util.tree_unflatten(treedef, leaves)

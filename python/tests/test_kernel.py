@@ -1,0 +1,249 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, dtypes, block sizes, and mask patterns; every
+case asserts allclose against ``kernels/ref.py``. This is the core
+correctness signal for the kernel layer — the AOT'd model is only as
+right as these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (
+    flash_attention,
+    fused_layernorm,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import (
+    attention_ref,
+    causal_attention_ref,
+    layernorm_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**_SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    l=st.integers(1, 70),
+    d=st.sampled_from([8, 16, 32]),
+    block=st.sampled_from([8, 16, 64]),
+)
+def test_attention_unmasked_matches_ref(b, h, l, d, block):
+    q = _rand(1, (b, h, l, d), jnp.float32)
+    k = _rand(2, (b, h, l, d), jnp.float32)
+    v = _rand(3, (b, h, l, d), jnp.float32)
+    out = flash_attention(q, k, v, block_q=block, block_k=block)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@settings(**_SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    l=st.integers(2, 48),
+    d=st.sampled_from([8, 16]),
+    data=st.data(),
+)
+def test_attention_padded_keys_match_ref(b, h, l, d, data):
+    """Key-validity masks (padded batching) must match the oracle."""
+    valid = data.draw(
+        st.lists(st.integers(1, l), min_size=b, max_size=b), label="valid"
+    )
+    mask = (jnp.arange(l)[None, :] < jnp.array(valid)[:, None]).astype(
+        jnp.int32
+    )
+    q = _rand(4, (b, h, l, d), jnp.float32)
+    k = _rand(5, (b, h, l, d), jnp.float32)
+    v = _rand(6, (b, h, l, d), jnp.float32)
+    out = flash_attention(q, k, v, mask=mask, block_q=16, block_k=16)
+    ref = attention_ref(q, k, v, mask=mask)
+    # Compare only valid query rows; padding rows are downstream-masked.
+    for i, n in enumerate(valid):
+        np.testing.assert_allclose(
+            out[i, :, :n], ref[i, :, :n], atol=2e-5, rtol=2e-5
+        )
+
+
+@settings(**_SETTINGS)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 3),
+    l=st.integers(1, 65),
+    d=st.sampled_from([8, 32]),
+)
+def test_attention_causal_matches_ref(b, h, l, d):
+    q = _rand(7, (b, h, l, d), jnp.float32)
+    k = _rand(8, (b, h, l, d), jnp.float32)
+    v = _rand(9, (b, h, l, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    ref = causal_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@settings(**_SETTINGS)
+@given(dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_attention_dtypes(dtype):
+    b, h, l, d = 2, 2, 32, 16
+    q = _rand(10, (b, h, l, d), dtype)
+    k = _rand(11, (b, h, l, d), dtype)
+    v = _rand(12, (b, h, l, d), dtype)
+    out = flash_attention(q, k, v, block_q=16, block_k=16)
+    ref = attention_ref(q, k, v)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        out.astype(jnp.float32),
+        ref.astype(jnp.float32),
+        atol=_tol(dtype),
+        rtol=_tol(dtype),
+    )
+
+
+def test_attention_custom_scale():
+    b, h, l, d = 1, 2, 24, 8
+    q, k, v = (_rand(i, (b, h, l, d), jnp.float32) for i in (13, 14, 15))
+    out = flash_attention(q, k, v, scale=0.5, block_q=8, block_k=8)
+    ref = attention_ref(q, k, v, scale=0.5)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_grads_match_ref():
+    """Custom VJP vs. autodiff through the reference implementation."""
+    b, h, l, d = 1, 2, 20, 8
+    q, k, v = (_rand(i, (b, h, l, d), jnp.float32) for i in (16, 17, 18))
+    mask = (jnp.arange(l)[None, :] < 15).astype(jnp.int32)
+
+    def f_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, mask=mask, block_q=8,
+                                       block_k=8) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(attention_ref(q, k, v, mask=mask) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, atol=3e-5, rtol=3e-5)
+
+
+def test_attention_causal_grads_match_ref():
+    b, h, l, d = 1, 1, 16, 8
+    q, k, v = (_rand(i, (b, h, l, d), jnp.float32) for i in (19, 20, 21))
+    causal_m = jnp.tril(jnp.ones((l, l), jnp.int32))[None]
+
+    def f_kernel(q):
+        return jnp.sum(flash_attention(q, k, v, causal=True, block_q=8,
+                                       block_k=8) ** 2)
+
+    def f_ref(q):
+        return jnp.sum(attention_ref(q, k, v, mask=causal_m) ** 2)
+
+    np.testing.assert_allclose(
+        jax.grad(f_kernel)(q), jax.grad(f_ref)(q), atol=3e-5, rtol=3e-5
+    )
+
+
+def test_attention_rejects_causal_cross():
+    q = jnp.zeros((1, 1, 8, 8))
+    k = jnp.zeros((1, 1, 16, 8))
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v=k, causal=True)
+
+
+def test_attention_fully_masked_rows_are_finite():
+    """Fully-padded examples must not produce NaN/Inf (they are sliced or
+    loss-masked downstream, but must stay numerically inert)."""
+    b, h, l, d = 2, 1, 16, 8
+    q, k, v = (_rand(i, (b, h, l, d), jnp.float32) for i in (22, 23, 24))
+    mask = jnp.zeros((b, l), jnp.int32).at[0].set(1)
+    out = flash_attention(q, k, v, mask=mask, block_q=8, block_k=8)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# fused_layernorm
+# ---------------------------------------------------------------------------
+
+
+@settings(**_SETTINGS)
+@given(
+    rows=st.integers(1, 100),
+    d=st.sampled_from([8, 32, 64]),
+    block=st.sampled_from([8, 128]),
+)
+def test_layernorm_matches_ref(rows, d, block):
+    x = _rand(30, (rows, d), jnp.float32)
+    g = 1.0 + 0.1 * _rand(31, (d,), jnp.float32)
+    b = 0.1 * _rand(32, (d,), jnp.float32)
+    out = fused_layernorm(x, g, b, block_rows=block)
+    ref = layernorm_ref(x, g, b)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_layernorm_3d_and_grads():
+    x = _rand(33, (3, 17, 32), jnp.float32)
+    g = jnp.ones(32)
+    b = jnp.zeros(32)
+
+    def f_kernel(x, g, b):
+        return jnp.sum(fused_layernorm(x, g, b) ** 2)
+
+    def f_ref(x, g, b):
+        return jnp.sum(layernorm_ref(x, g, b) ** 2)
+
+    out = fused_layernorm(x, g, b)
+    np.testing.assert_allclose(out, layernorm_ref(x, g, b), atol=2e-5,
+                               rtol=2e-5)
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, g, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, g, b)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, atol=5e-4, rtol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# VMEM estimator (the real-TPU sizing contract from DESIGN.md)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprint_monotone_and_fits_budget():
+    small = vmem_footprint_bytes(64, 64, 64)
+    big = vmem_footprint_bytes(128, 128, 128)
+    assert small < big
+    # The default production tile (128, 128, d=128) must fit a 16 MiB VMEM
+    # with double buffering (x2).
+    assert 2 * vmem_footprint_bytes(128, 128, 128) < 16 * 1024 * 1024
+
+
+def test_attention_inside_jit():
+    """The kernel must lower inside jit (the AOT path depends on it)."""
+    b, h, l, d = 1, 2, 16, 8
+    q, k, v = (_rand(i, (b, h, l, d), jnp.float32) for i in (40, 41, 42))
+
+    @jax.jit
+    def f(q, k, v):
+        return flash_attention(q, k, v, block_q=8, block_k=8)
+
+    np.testing.assert_allclose(f(q, k, v), attention_ref(q, k, v),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,208 @@
+"""L2 correctness: model shapes, gradients, and the invariance contracts
+the rust orchestrator depends on.
+
+The key contract (paper §3.3): loss and gradients are SUMS over valid
+tokens, so any rearrangement of examples across mini-batches leaves the
+all-reduced totals unchanged. These tests pin that down *inside* one
+process before the rust layer distributes it.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.CONFIGS["test"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_all_params(0, CFG)
+
+
+def _example_inputs(key=0, b=4, lp=16, lf=16, l=48):
+    ks = jax.random.split(jax.random.PRNGKey(key), 6)
+    patches = jax.random.normal(ks[0], (b, lp, CFG.patch_dim))
+    pmask = (jnp.arange(lp)[None, :] < jnp.array([lp, lp // 2, lp, 4])[:b, None]).astype(jnp.int32)
+    frames = jax.random.normal(ks[1], (b, lf, CFG.mel_dim))
+    fmask = (jnp.arange(lf)[None, :] < jnp.array([lf, lf, 8, lf])[:b, None]).astype(jnp.int32)
+    tok = jax.random.randint(ks[2], (b, l), 0, CFG.vocab)
+    tgt = jax.random.randint(ks[3], (b, l), 0, CFG.vocab)
+    lm = (jax.random.uniform(ks[4], (b, l)) < 0.8).astype(jnp.int32)
+    tv = lp // CFG.vis_group
+    ta = lf // CFG.aud_stride
+    vpos = jnp.tile(jnp.arange(tv)[None], (b, 1))
+    apos = jnp.tile(jnp.arange(ta)[None] + tv, (b, 1))
+    return patches, pmask, frames, fmask, tok, tgt, lm, vpos, apos
+
+
+def test_param_counts_are_sane(params):
+    counts = {k: M.param_count(v) for k, v in params.items()}
+    assert counts["llm"] > counts["vision"]
+    assert all(c > 0 for c in counts.values())
+    # e2e-100m must actually be ~100M.
+    big = M.init_all_params(0, M.CONFIGS["e2e-100m"])
+    total = M.param_count(big)
+    assert 70e6 < total < 130e6, total
+
+
+def test_vision_encode_shapes(params):
+    patches, pmask, *_ = _example_inputs()
+    out = M.vision_encode(params["vision"], patches, pmask, CFG)
+    assert out.shape == (4, 16 // CFG.vis_group, CFG.d_llm)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_audio_encode_shapes(params):
+    _, _, frames, fmask, *_ = _example_inputs()
+    out = M.audio_encode(params["audio"], frames, fmask, CFG)
+    assert out.shape == (4, 16 // CFG.aud_stride, CFG.d_llm)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_llm_step_outputs(params):
+    patches, pmask, frames, fmask, tok, tgt, lm, vpos, apos = _example_inputs()
+    vt = M.vision_encode(params["vision"], patches, pmask, CFG)
+    at = M.audio_encode(params["audio"], frames, fmask, CFG)
+    step = M.make_llm_step(CFG)
+    loss, cnt, d_vis, d_aud, grads = step(
+        params["llm"], tok, vt, vpos, at, apos, tgt, lm
+    )
+    assert loss.shape == () and cnt.shape == ()
+    assert float(cnt) == float(jnp.sum(lm))
+    assert d_vis.shape == vt.shape and d_aud.shape == at.shape
+    assert float(loss) > 0
+    n_leaves = len(jax.tree_util.tree_leaves(grads))
+    assert n_leaves == len(jax.tree_util.tree_leaves(params["llm"]))
+
+
+def test_loss_sum_additive_over_batch_split(params):
+    """loss_sum(batch) == loss_sum(first half) + loss_sum(second half).
+
+    This additivity is exactly what makes post-balancing rearrangements
+    consequence-invariant after the DP all-reduce.
+    """
+    patches, pmask, frames, fmask, tok, tgt, lm, vpos, apos = _example_inputs()
+    vt = M.vision_encode(params["vision"], patches, pmask, CFG)
+    at = M.audio_encode(params["audio"], frames, fmask, CFG)
+    step = M.make_llm_step(CFG)
+
+    def run(sl):
+        return step(params["llm"], tok[sl], vt[sl], vpos[sl], at[sl],
+                    apos[sl], tgt[sl], lm[sl])
+
+    full = run(slice(None))
+    lo = run(slice(0, 2))
+    hi = run(slice(2, 4))
+    np.testing.assert_allclose(
+        float(full[0]), float(lo[0]) + float(hi[0]), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        float(full[1]), float(lo[1]) + float(hi[1]), rtol=1e-6
+    )
+    # Parameter-gradient sums must also be additive.
+    g_full = jax.tree_util.tree_leaves(full[4])
+    g_sum = [
+        a + b
+        for a, b in zip(jax.tree_util.tree_leaves(lo[4]),
+                        jax.tree_util.tree_leaves(hi[4]))
+    ]
+    for a, b in zip(g_full, g_sum):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+def test_llm_step_permutation_invariant_sum(params):
+    """Permuting examples inside the batch leaves loss_sum unchanged."""
+    patches, pmask, frames, fmask, tok, tgt, lm, vpos, apos = _example_inputs()
+    vt = M.vision_encode(params["vision"], patches, pmask, CFG)
+    at = M.audio_encode(params["audio"], frames, fmask, CFG)
+    step = M.make_llm_step(CFG)
+    perm = jnp.array([2, 0, 3, 1])
+    a = step(params["llm"], tok, vt, vpos, at, apos, tgt, lm)
+    b = step(params["llm"], tok[perm], vt[perm], vpos[perm], at[perm],
+             apos[perm], tgt[perm], lm[perm])
+    np.testing.assert_allclose(float(a[0]), float(b[0]), rtol=1e-5)
+
+
+def test_encoder_bwd_matches_autodiff(params):
+    patches, pmask, frames, fmask, *_ = _example_inputs()
+    d_out = jax.random.normal(
+        jax.random.PRNGKey(9), (4, 16 // CFG.vis_group, CFG.d_llm)
+    )
+    bwd = M.make_vision_bwd(CFG)
+    got = bwd(params["vision"], patches, pmask, d_out)
+
+    def scalar_fn(p):
+        return jnp.sum(M.vision_encode(p, patches, pmask, CFG) * d_out)
+
+    want = jax.grad(scalar_fn)(params["vision"])
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-4)
+
+
+def test_scatter_respects_positions(params):
+    """Injected encoder tokens must land exactly at vis_pos/aud_pos."""
+    b, l, tv = 2, 16, 4
+    base = jnp.zeros((b, l, CFG.d_llm))
+    tokens = jnp.ones((b, tv, CFG.d_llm))
+    pos = jnp.array([[1, 3, 5, -1], [0, -1, -1, -1]])
+    out = M._scatter_tokens(base, tokens, pos)
+    assert float(out[0, 1, 0]) == 1.0
+    assert float(out[0, 3, 0]) == 1.0
+    assert float(out[0, 5, 0]) == 1.0
+    assert float(out[0, 0, 0]) == 0.0
+    assert float(out[1, 0, 0]) == 1.0
+    assert float(jnp.sum(out[0])) == 3.0 * CFG.d_llm
+    assert float(jnp.sum(out[1])) == 1.0 * CFG.d_llm
+
+
+def test_sgd_step_moves_params(params):
+    sgd = M.make_sgd()
+    grads = jax.tree_util.tree_map(jnp.ones_like, params["llm"])
+    new = sgd(jnp.float32(0.1), params["llm"], grads)
+    for a, b in zip(jax.tree_util.tree_leaves(new),
+                    jax.tree_util.tree_leaves(params["llm"])):
+        np.testing.assert_allclose(a, b - 0.1, atol=1e-6)
+
+
+def test_flatten_roundtrip(params):
+    leaves, names, treedef = M.flatten_params(params["llm"])
+    assert len(leaves) == len(names) == len(set(names))
+    rebuilt = M.unflatten_params(treedef, leaves)
+    for a, b in zip(jax.tree_util.tree_leaves(rebuilt),
+                    jax.tree_util.tree_leaves(params["llm"])):
+        assert a is b
+
+
+def test_training_reduces_loss(params):
+    """A few SGD steps on a fixed batch must reduce the loss (sanity that
+    the phase-split gradients actually descend)."""
+    patches, pmask, frames, fmask, tok, tgt, lm, vpos, apos = _example_inputs()
+    step = M.make_llm_step(CFG)
+    sgd = M.make_sgd()
+    vbwd = M.make_vision_bwd(CFG)
+    abwd = M.make_audio_bwd(CFG)
+    p = {k: v for k, v in params.items()}
+    losses = []
+    lr = 0.05
+    for _ in range(5):
+        vt = M.vision_encode(p["vision"], patches, pmask, CFG)
+        at = M.audio_encode(p["audio"], frames, fmask, CFG)
+        loss, cnt, d_vis, d_aud, lg = step(
+            p["llm"], tok, vt, vpos, at, apos, tgt, lm
+        )
+        vg = vbwd(p["vision"], patches, pmask, d_vis)
+        ag = abwd(p["audio"], frames, fmask, d_aud)
+        scale = jnp.float32(lr / float(cnt))
+        p = {
+            "llm": sgd(scale, p["llm"], lg),
+            "vision": sgd(scale, p["vision"], vg),
+            "audio": sgd(scale, p["audio"], ag),
+        }
+        losses.append(float(loss) / float(cnt))
+    assert losses[-1] < losses[0], losses

@@ -1,0 +1,76 @@
+//! Micro-latency of the Batch Post-Balancing algorithms and the
+//! node-wise rearrangement solvers — the "computation" share of the
+//! Table-2 overhead (which the orchestrator overlaps with the forward
+//! pass, §6). Sizes go up to the paper's production scale: d = 2560
+//! instances × mb 80 ≈ 200k sequences.
+//!
+//! Run: `cargo bench --bench balance_algorithms`
+
+use orchmllm::balance::{self, types::Policy};
+use orchmllm::comm::topology::Topology;
+use orchmllm::nodewise;
+use orchmllm::util::bench::Bencher;
+use orchmllm::util::rng::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::new(1);
+
+    let mut b = Bencher::new("post-balancing algorithms");
+    for (d, mb) in [(64usize, 60usize), (320, 60), (2560, 80)] {
+        let n = d * mb;
+        let lens = balance::synth_lengths(&mut rng, n, 5.5, 1.0);
+        b.iter(&format!("alg1 greedy        d={d} n={n}"), || {
+            balance::balance(Policy::GreedyUnpadded, &lens, d)
+        });
+        b.iter(&format!("alg2 padded        d={d} n={n}"), || {
+            balance::balance(Policy::BinaryPadded, &lens, d)
+        });
+        if d <= 320 {
+            b.iter(&format!("alg3 quadratic     d={d} n={n}"), || {
+                balance::balance(
+                    Policy::QuadraticUnpadded { lambda: 0.01, tolerance: 32.0 },
+                    &lens,
+                    d,
+                )
+            });
+        }
+        b.iter(&format!("alg4 convpad       d={d} n={n}"), || {
+            balance::balance(Policy::ConvPadded { lambda: 0.001 }, &lens, d)
+        });
+    }
+    b.report();
+
+    let mut b2 = Bencher::new("node-wise rearrangement");
+    for d in [16usize, 64, 128, 320] {
+        let topo = Topology::h100(d);
+        let mut v = orchmllm::comm::volume::VolumeMatrix::zeros(d);
+        for i in 0..d {
+            for j in 0..d {
+                if rng.f64() > 0.6 {
+                    v.add(i, j, rng.f64() * 1e6);
+                }
+            }
+        }
+        b2.iter(&format!("local search       d={d}"), || {
+            nodewise::greedy::solve_local(&topo, &v)
+        });
+        if d <= 16 {
+            b2.iter(&format!("exact B&B          d={d}"), || {
+                nodewise::ilp::solve_exact(&topo, &v)
+            });
+        }
+    }
+    b2.report();
+
+    // The paper's claim: dispatcher computation is tens of ms at 2560
+    // GPUs and fully overlappable. Assert the algorithms stay in budget.
+    let lens = balance::synth_lengths(&mut rng, 2560 * 80, 5.5, 1.0);
+    let t0 = std::time::Instant::now();
+    let _ = balance::balance(Policy::GreedyUnpadded, &lens, 2560);
+    let alg1 = t0.elapsed();
+    println!(
+        "\nalg1 at paper scale (2560x80): {:.1} ms (budget: tens of ms)",
+        alg1.as_secs_f64() * 1e3
+    );
+    assert!(alg1.as_millis() < 500, "alg1 too slow: {alg1:?}");
+}

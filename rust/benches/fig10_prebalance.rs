@@ -1,0 +1,76 @@
+//! Fig. 10: ablation of encoder balancing — full OrchMLLM vs balancing
+//! only the LLM phase (the pre-balancing stand-in, cf. DistTrain) — on
+//! 128 GPUs, mb 75/50/25.
+//!
+//! Expected shape (paper): OrchMLLM wins MFU and memory on every size;
+//! the gap grows with model size; LLM-only OOMs at MLLM-84B (it only
+//! fits at mb 18 with 24.16% MFU).
+//!
+//! Run: `cargo bench --bench fig10_prebalance`
+
+use orchmllm::model::config::MllmConfig;
+use orchmllm::sim::engine::{simulate_run, SystemKind};
+use orchmllm::sim::report;
+use orchmllm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let gpus = args.usize("gpus", 128);
+    let steps = args.usize("steps", 3);
+    let seed = args.u64("seed", 42);
+    let mbs = [75usize, 50, 25];
+
+    let mut rows = Vec::new();
+    for system in [SystemKind::OrchMllm, SystemKind::LlmOnly] {
+        let mut row = Vec::new();
+        for (mi, model) in MllmConfig::all().iter().enumerate() {
+            row.push(simulate_run(
+                system, model, gpus, mbs[mi], steps, seed,
+            ));
+        }
+        rows.push(row);
+    }
+    println!(
+        "Fig. 10 — encoder-balancing ablation ({gpus} GPUs, mb 75/50/25):\n"
+    );
+    print!("{}", report::render_mfu_memory(&rows));
+
+    // If LLM-only OOMs at 84B, re-run at the paper's fallback mb 18.
+    if rows[1][2].oom {
+        let fallback = simulate_run(
+            SystemKind::LlmOnly,
+            &MllmConfig::mllm_84b(),
+            gpus,
+            18,
+            steps,
+            seed,
+        );
+        println!(
+            "\nLLM-only at MLLM-84B OOMs at mb 25; at mb 18: \
+             MFU {:.1}% mem {:.1} GB (paper: 24.16%, 62.7 GB)",
+            fallback.mfu * 100.0,
+            fallback.peak_mem_gb
+        );
+    }
+
+    // Shape checks: full balance wins everywhere, gap grows with size.
+    let mut prev_gap = 0.0;
+    for mi in 0..3 {
+        let orch = &rows[0][mi];
+        let llm = &rows[1][mi];
+        if llm.oom {
+            println!("{}: LLM-only OOM (paper shape ✓)", orch.model_name);
+            continue;
+        }
+        let gap = orch.mfu / llm.mfu.max(1e-9);
+        println!(
+            "{}: OrchMLLM {:.1}% vs LLM-only {:.1}% ({gap:.2}x)",
+            orch.model_name,
+            orch.mfu * 100.0,
+            llm.mfu * 100.0
+        );
+        assert!(gap > 1.0, "encoder balancing gained nothing");
+        assert!(gap >= prev_gap * 0.9, "gap should grow with size");
+        prev_gap = gap;
+    }
+}

@@ -1,0 +1,79 @@
+//! Fig. 12: communicator comparison — the paper's Node-wise All-to-All
+//! vs the All-Gather strawman (§5.2.1) — on 128 GPUs, MFU + memory.
+//!
+//! Expected shape (paper): All-to-All wins both metrics on every size;
+//! All-Gather OOMs at MLLM-84B (fits only at mb 20: 25.51%, 61.8 GB).
+//!
+//! Run: `cargo bench --bench fig12_allgather`
+
+use orchmllm::model::config::MllmConfig;
+use orchmllm::sim::engine::{simulate_run, SystemKind};
+use orchmllm::sim::report;
+use orchmllm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let gpus = args.usize("gpus", 128);
+    let steps = args.usize("steps", 3);
+    let seed = args.u64("seed", 42);
+    let mbs = [75usize, 50, 25];
+
+    let mut rows = Vec::new();
+    for system in [SystemKind::OrchMllm, SystemKind::AllGatherComm] {
+        let mut row = Vec::new();
+        for (mi, model) in MllmConfig::all().iter().enumerate() {
+            row.push(simulate_run(
+                system, model, gpus, mbs[mi], steps, seed,
+            ));
+        }
+        rows.push(row);
+    }
+    println!("Fig. 12 — All-to-All vs All-Gather ({gpus} GPUs):\n");
+    print!("{}", report::render_mfu_memory(&rows));
+
+    if rows[1][2].oom {
+        let fallback = simulate_run(
+            SystemKind::AllGatherComm,
+            &MllmConfig::mllm_84b(),
+            gpus,
+            20,
+            steps,
+            seed,
+        );
+        println!(
+            "\nAll-Gather at MLLM-84B OOMs at mb 25; at mb 20: \
+             MFU {:.1}% mem {:.1} GB (paper: 25.51%, 61.8 GB)",
+            fallback.mfu * 100.0,
+            fallback.peak_mem_gb
+        );
+    }
+
+    for mi in 0..3 {
+        let a2a = &rows[0][mi];
+        let ag = &rows[1][mi];
+        assert!(
+            ag.peak_mem_gb > a2a.peak_mem_gb,
+            "{}: All-Gather must stage more memory",
+            a2a.model_name
+        );
+        if !ag.oom {
+            assert!(
+                a2a.mfu >= ag.mfu,
+                "{}: All-to-All must not lose MFU",
+                a2a.model_name
+            );
+        }
+        println!(
+            "{}: A2A {:.1}% / {:.1} GB   AG {} / {:.1} GB",
+            a2a.model_name,
+            a2a.mfu * 100.0,
+            a2a.peak_mem_gb,
+            if ag.oom {
+                "OOM".to_string()
+            } else {
+                format!("{:.1}%", ag.mfu * 100.0)
+            },
+            ag.peak_mem_gb
+        );
+    }
+}

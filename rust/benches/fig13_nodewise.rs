@@ -1,0 +1,68 @@
+//! Fig. 13: Node-wise Rearrangement Algorithm ablation — average
+//! inter-node communication volume of the dispatchers, per modality,
+//! with and without the node-wise step — on 128 GPUs.
+//!
+//! Expected shape (paper): node-wise reduces inter-node volume to
+//! 0.436–0.722 of the baseline, with per-modality variation (it's
+//! effective for every tailored algorithm).
+//!
+//! Run: `cargo bench --bench fig13_nodewise`
+
+use orchmllm::model::config::MllmConfig;
+use orchmllm::sim::engine::{simulate_run, SystemKind};
+use orchmllm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let gpus = args.usize("gpus", 128);
+    let steps = args.usize("steps", 5);
+    let seed = args.u64("seed", 42);
+    let mbs = [75usize, 50, 25];
+
+    println!(
+        "Fig. 13 — inter-node comm volume per dispatcher, MB/iter \
+         ({gpus} GPUs):\n"
+    );
+    println!(
+        "{:<10} {:>14} {:>14} {:>14} {:>8}",
+        "model", "vision", "audio", "text", "ratio"
+    );
+    for (mi, model) in MllmConfig::all().iter().enumerate() {
+        let with = simulate_run(
+            SystemKind::OrchMllm, model, gpus, mbs[mi], steps, seed,
+        );
+        let without = simulate_run(
+            SystemKind::NoNodewise, model, gpus, mbs[mi], steps, seed,
+        );
+        let total_with: f64 = with.inter_node_mb.iter().sum();
+        let total_without: f64 = without.inter_node_mb.iter().sum();
+        let ratio = total_with / total_without.max(1e-9);
+        println!(
+            "{:<10} {:>6.0} /{:>6.0} {:>6.0} /{:>6.0} {:>6.0} /{:>6.0} {:>8.3}",
+            model.name,
+            with.inter_node_mb[0],
+            without.inter_node_mb[0],
+            with.inter_node_mb[1],
+            without.inter_node_mb[1],
+            with.inter_node_mb[2],
+            without.inter_node_mb[2],
+            ratio,
+        );
+        assert!(
+            ratio < 0.95,
+            "{}: node-wise rearrangement saved nothing ({ratio:.3})",
+            model.name
+        );
+        // Paper band is 0.436..0.722; allow generous margins for the
+        // synthetic data but require the same order of magnitude.
+        assert!(
+            ratio > 0.2,
+            "{}: ratio {ratio:.3} implausibly low",
+            model.name
+        );
+    }
+    println!(
+        "\n(paper: per-modality reduction ratios in 0.436–0.722; cells \
+         are with/without node-wise)"
+    );
+}

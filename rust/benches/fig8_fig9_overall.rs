@@ -1,0 +1,74 @@
+//! Fig. 8 + Fig. 9: overall MFU and training throughput of OrchMLLM vs
+//! Megatron-LM vs OrchMLLM-without-balance, for MLLM-10B/18B/84B on the
+//! modelled 2560-H100 cluster (paper §8.1 settings: mb 80/60/30
+//! balanced, 65/40/15 unbalanced; Megatron PP 2/4/10, TP 8, same GPUs).
+//!
+//! Expected shape (paper): OrchMLLM ≈ 41.6% MFU at 84B; 3.1–4.1x
+//! Megatron's MFU; 1.5–2.0x the no-balance MFU, ratio growing with
+//! model size.
+//!
+//! Run: `cargo bench --bench fig8_fig9_overall`
+
+use orchmllm::model::config::MllmConfig;
+use orchmllm::sim::engine::{simulate_run, SystemKind};
+use orchmllm::sim::report;
+use orchmllm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let gpus = args.usize("gpus", 2560);
+    let steps = args.usize("steps", 3);
+    let seed = args.u64("seed", 42);
+    let mb_orch = [80, 60, 30];
+    let mb_none = [65, 40, 15];
+
+    let mut rows = Vec::new();
+    for system in
+        [SystemKind::OrchMllm, SystemKind::Megatron, SystemKind::NoBalance]
+    {
+        let mut row = Vec::new();
+        for (mi, model) in MllmConfig::all().iter().enumerate() {
+            let mb = if system == SystemKind::NoBalance {
+                mb_none[mi]
+            } else {
+                mb_orch[mi]
+            };
+            let t0 = std::time::Instant::now();
+            let r = simulate_run(system, model, gpus, mb, steps, seed);
+            eprintln!(
+                "  simulated {} / {} in {:.1}s",
+                system.name(),
+                model.name,
+                t0.elapsed().as_secs_f64()
+            );
+            row.push(r);
+        }
+        rows.push(row);
+    }
+
+    println!("Fig. 8/9 — overall results ({gpus} GPUs, {steps} steps):\n");
+    print!("{}", report::render_overall(&rows));
+
+    // Shape checks (who wins, by roughly what factor).
+    for mi in 0..3 {
+        let orch = &rows[0][mi];
+        let mega = &rows[1][mi];
+        let none = &rows[2][mi];
+        let vs_mega = orch.mfu / mega.mfu.max(1e-9);
+        let vs_none = orch.mfu / none.mfu.max(1e-9);
+        println!(
+            "{}: vs Megatron {vs_mega:.1}x (paper 3.1-4.1x), \
+             vs no-balance {vs_none:.2}x (paper 1.5-2.0x)",
+            orch.model_name
+        );
+        assert!(vs_mega > 2.0, "Megatron gap collapsed at {}", orch.model_name);
+        assert!(vs_none > 1.2, "balance gain collapsed at {}", orch.model_name);
+    }
+    // The advantage over no-balance must grow with model size.
+    let g10 = rows[0][0].mfu / rows[2][0].mfu;
+    let g84 = rows[0][2].mfu / rows[2][2].mfu;
+    assert!(
+        g84 > g10,
+        "balance advantage should grow with size: {g10:.2} vs {g84:.2}"
+    );
+}

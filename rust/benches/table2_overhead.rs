@@ -1,0 +1,64 @@
+//! Table 2: dispatcher overhead (ms) and forward duration (s) as the
+//! cluster scales 64 → 2560 GPUs (MLLM-10B, mb 60).
+//!
+//! Expected shape (paper): overhead stays tens of ms (16.7 → 53.9 ms),
+//! <2% of the forward duration, because the All-to-All cost is
+//! scale-free (Eq. 4) and the solver computation overlaps with the
+//! forward pass.
+//!
+//! Run: `cargo bench --bench table2_overhead`
+
+use orchmllm::model::config::MllmConfig;
+use orchmllm::sim::engine::{simulate_run, SystemKind};
+use orchmllm::sim::report;
+use orchmllm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let steps = args.usize("steps", 3);
+    let seed = args.u64("seed", 42);
+    let model = MllmConfig::mllm_10b();
+
+    let sizes = [64usize, 128, 256, 512, 1024, 2560];
+    let cells: Vec<_> = sizes
+        .iter()
+        .map(|&g| {
+            let t0 = std::time::Instant::now();
+            let r = simulate_run(
+                SystemKind::OrchMllm, &model, g, 60, steps, seed,
+            );
+            eprintln!(
+                "  simulated {g} GPUs in {:.1}s",
+                t0.elapsed().as_secs_f64()
+            );
+            r
+        })
+        .collect();
+
+    println!(
+        "Table 2 — OrchMLLM overhead vs cluster size (MLLM-10B, mb 60):\n"
+    );
+    print!("{}", report::render_overhead(&cells));
+
+    // Shape checks: overhead grows sublinearly and stays a small
+    // fraction of the step.
+    let first = &cells[0];
+    let last = cells.last().unwrap();
+    let scale = last.gpus as f64 / first.gpus as f64; // 40x
+    let growth =
+        last.dispatcher_overhead_ms / first.dispatcher_overhead_ms.max(1e-9);
+    println!(
+        "\noverhead growth {growth:.1}x over a {scale:.0}x scale-up \
+         (paper: 3.2x over 40x)"
+    );
+    assert!(growth < scale / 2.0, "overhead scales too fast: {growth}x");
+    for c in &cells {
+        let frac = c.dispatcher_overhead_ms / 1e3 / c.step_secs;
+        assert!(
+            frac < 0.05,
+            "overhead {:.1}% of step at {} GPUs",
+            frac * 100.0,
+            c.gpus
+        );
+    }
+}

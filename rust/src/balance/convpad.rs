@@ -1,0 +1,170 @@
+//! Appendix Algorithm "4th": padded balancing for ConvTransformer
+//! encoders.
+//!
+//! Conv front-ends force padded attention (no flash-attention packing),
+//! so the objective is `min max_i L'_i + λ b_i max_j(l'_{i,j})²`
+//! (Appendix A). The paper's algorithm seeds batches with the longest
+//! sequences under the Algorithm-1 makespan bound (so each expensive
+//! long sequence anchors its own batch where possible), then distributes
+//! the remainder with the sum-ordered priority queue. Complexity
+//! O(n log n).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::greedy::balance_lpt;
+use super::types::{batch_length, Assignment, BatchingMode, ExampleRef};
+
+/// Appendix Alg "4th".
+///
+/// Returns the best of (a) the paper's seeded first-fit + greedy spill,
+/// (b) [`super::padded::balance_padded`], and (c) the identity dealing —
+/// evaluated under the ConvTransformer objective with the given λ. The
+/// dispatcher keeping a cheaper arrangement when the heuristic regresses
+/// is exactly the "adaptive to different scenarios" behaviour §5.1
+/// requires.
+pub fn balance_convpad(lens: &[usize], d: usize, lambda: f64) -> Assignment {
+    let seeded = convpad_seeded(lens, d);
+    let cm = crate::balance::cost::CostModel::ConvPadded {
+        alpha: 1.0,
+        lambda,
+    };
+    let mut best = seeded;
+    let mut best_cost = cm.makespan(&best);
+    for cand in [
+        super::padded::balance_padded(lens, d),
+        super::types::identity_with_lens(lens, d),
+    ] {
+        let c = cm.makespan(&cand);
+        if c < best_cost {
+            best_cost = c;
+            best = cand;
+        }
+    }
+    best
+}
+
+/// The paper's pseudocode: seed under the Alg-1 bound, spill by sum.
+fn convpad_seeded(lens: &[usize], d: usize) -> Assignment {
+    assert!(d > 0, "need at least one DP instance");
+    let n = lens.len();
+    if n == 0 {
+        return vec![Vec::new(); d];
+    }
+    // Step 1: the Algorithm-1 objective value bounds per-batch token sums.
+    let bound = balance_lpt(lens, d)
+        .iter()
+        .map(|b| batch_length(b, BatchingMode::Unpadded))
+        .max()
+        .unwrap_or(0)
+        .max(1);
+
+    let mut sorted: Vec<ExampleRef> = lens
+        .iter()
+        .enumerate()
+        .map(|(id, &len)| ExampleRef { id, len })
+        .collect();
+    sorted.sort_unstable_by(|a, b| b.len.cmp(&a.len).then(a.id.cmp(&b.id)));
+
+    // Step 2: seed up to d batches first-fit under the padded bound —
+    // descending order means a batch's first element fixes its padded
+    // length, so `(count+1) * first_len > bound` opens a new batch.
+    let mut batches: Assignment = vec![Vec::new()];
+    let mut spill = Vec::new();
+    let mut iter = sorted.into_iter();
+    for e in iter.by_ref() {
+        let cur = batches.last_mut().unwrap();
+        let pad_len = cur.first().map(|f| f.len).unwrap_or(e.len);
+        if !cur.is_empty() && (cur.len() + 1) * pad_len > bound {
+            if batches.len() == d {
+                spill.push(e);
+                break;
+            }
+            batches.push(vec![e]);
+        } else {
+            cur.push(e);
+        }
+    }
+    spill.extend(iter);
+    while batches.len() < d {
+        batches.push(Vec::new());
+    }
+
+    // Step 3: distribute the remainder to the lightest batch by sum.
+    let mut heap: BinaryHeap<Reverse<(usize, usize)>> = batches
+        .iter()
+        .enumerate()
+        .map(|(i, b)| Reverse((batch_length(b, BatchingMode::Unpadded), i)))
+        .collect();
+    for e in spill {
+        let Reverse((sum, i)) = heap.pop().unwrap();
+        batches[i].push(e);
+        heap.push(Reverse((sum + e.len, i)));
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::cost::CostModel;
+    use crate::balance::types::{
+        assert_valid_assignment, identity_with_lens,
+    };
+    use crate::util::prop::check;
+
+    #[test]
+    fn isolates_long_sequences() {
+        // One giant sequence among many tiny ones: the giant should not
+        // drag a large batch to its padded length.
+        let mut lens = vec![100];
+        lens.extend(std::iter::repeat(2).take(40));
+        let a = balance_convpad(&lens, 4, 0.01);
+        assert_valid_assignment(&a, 41, 4);
+        let giant_batch = a
+            .iter()
+            .find(|b| b.iter().any(|e| e.len == 100))
+            .unwrap();
+        assert!(
+            giant_batch.len() <= 3,
+            "giant shares a batch with {} others",
+            giant_batch.len() - 1
+        );
+    }
+
+    #[test]
+    fn empty_and_small_inputs() {
+        assert_eq!(balance_convpad(&[], 3, 0.01).len(), 3);
+        let a = balance_convpad(&[5], 3, 0.01);
+        assert_valid_assignment(&a, 1, 3);
+    }
+
+    #[test]
+    fn prop_valid() {
+        check("convpad valid", 150, |g| {
+            let d = g.usize(1, 10);
+            let n = g.usize(0, 120);
+            let lens = g.seq_lengths(n, 2.8, 1.2);
+            let a = balance_convpad(&lens, d, 0.01);
+            assert_valid_assignment(&a, n, d);
+        });
+    }
+
+    #[test]
+    fn prop_beats_identity_on_conv_objective() {
+        check("convpad <= identity", 150, |g| {
+            let d = g.usize(2, 8);
+            let n = g.usize(d * 4, d * 16);
+            let lens = g.seq_lengths(n, 3.0, 1.2);
+            let cm = CostModel::ConvPadded { alpha: 1.0, lambda: 0.005 };
+            let a = balance_convpad(&lens, d, 0.005);
+            let i = identity_with_lens(&lens, d);
+            assert!(
+                cm.makespan(&a) <= cm.makespan(&i) * 1.001 + 1e-9,
+                "convpad worse than identity: {} vs {}",
+                cm.makespan(&a),
+                cm.makespan(&i)
+            );
+        });
+    }
+}

@@ -1,0 +1,158 @@
+//! The per-phase computational-cost functions of paper Eq. (2).
+//!
+//! `f(S_i)` estimates the compute (and, proportionally, activation
+//! memory) a mini-batch costs on one DP instance. The α term is the
+//! token-linear work (MLPs, projections); the β term the attention
+//! quadratic. The balancing algorithms minimize `max_i f(S'_i)`; the
+//! cluster simulator prices phases with the same functions, which is
+//! what keeps the benchmarked logic identical to the shipped logic.
+
+use super::types::{batch_length, BatchingMode, ExampleRef};
+
+/// The cost regime of a phase (Eq. 2 and Appendix A variants).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CostModel {
+    /// β ≪ α: cost ≈ α·L (both batching modes).
+    Linear { alpha: f64 },
+    /// No padding, full Eq. 2: α·L + β·Σ l².
+    TransformerUnpadded { alpha: f64, beta: f64 },
+    /// Padded, full Eq. 2: α·L + (β/b)·L², with L = b·max(l).
+    TransformerPadded { alpha: f64, beta: f64 },
+    /// ConvTransformer (App. A): α·L + λ·b·max(l)² — attention must pad.
+    ConvPadded { alpha: f64, lambda: f64 },
+}
+
+impl CostModel {
+    /// Evaluate `f(S)` for one mini-batch.
+    pub fn eval(&self, batch: &[ExampleRef]) -> f64 {
+        if batch.is_empty() {
+            return 0.0;
+        }
+        let b = batch.len() as f64;
+        let max_l = batch.iter().map(|e| e.len).max().unwrap_or(0) as f64;
+        match *self {
+            CostModel::Linear { alpha } => {
+                let l = batch_length(batch, self.mode()) as f64;
+                alpha * l
+            }
+            CostModel::TransformerUnpadded { alpha, beta } => {
+                let l = batch_length(batch, BatchingMode::Unpadded) as f64;
+                let sq: f64 =
+                    batch.iter().map(|e| (e.len * e.len) as f64).sum();
+                alpha * l + beta * sq
+            }
+            CostModel::TransformerPadded { alpha, beta } => {
+                let l = b * max_l;
+                alpha * l + beta * l * l / b
+            }
+            CostModel::ConvPadded { alpha, lambda } => {
+                let l = b * max_l;
+                alpha * l + lambda * b * max_l * max_l
+            }
+        }
+    }
+
+    /// The batching mode this regime implies.
+    pub fn mode(&self) -> BatchingMode {
+        match self {
+            CostModel::Linear { .. } | CostModel::TransformerUnpadded { .. } => {
+                BatchingMode::Unpadded
+            }
+            CostModel::TransformerPadded { .. }
+            | CostModel::ConvPadded { .. } => BatchingMode::Padded,
+        }
+    }
+
+    /// Minimax objective over an assignment.
+    pub fn makespan(&self, assignment: &[Vec<ExampleRef>]) -> f64 {
+        assignment
+            .iter()
+            .map(|b| self.eval(b))
+            .fold(0.0, f64::max)
+    }
+
+    /// Balance ratio: max cost / mean cost (1.0 = perfectly balanced).
+    pub fn imbalance(&self, assignment: &[Vec<ExampleRef>]) -> f64 {
+        let costs: Vec<f64> =
+            assignment.iter().map(|b| self.eval(b)).collect();
+        let max = costs.iter().copied().fold(0.0, f64::max);
+        let mean = costs.iter().sum::<f64>() / costs.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// A phase's full cost description: the Eq.-2 regime plus the per-token
+/// FLOP weight used by the simulator to convert cost into seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseCost {
+    pub model: CostModel,
+    /// FLOPs per unit of `CostModel::eval` output.
+    pub flops_per_unit: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::types::make_refs;
+
+    #[test]
+    fn linear_cost_is_alpha_times_length() {
+        let b = make_refs(&[3, 5]);
+        let m = CostModel::Linear { alpha: 2.0 };
+        assert_eq!(m.eval(&b), 16.0); // unpadded: 2 * (3+5)
+    }
+
+    #[test]
+    fn unpadded_quadratic_adds_sq_term() {
+        let b = make_refs(&[3, 5]);
+        let m = CostModel::TransformerUnpadded { alpha: 1.0, beta: 0.1 };
+        let want = 8.0 + 0.1 * (9.0 + 25.0);
+        assert!((m.eval(&b) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn padded_quadratic_uses_max_len() {
+        let b = make_refs(&[3, 5]);
+        let m = CostModel::TransformerPadded { alpha: 1.0, beta: 0.1 };
+        // L = 2*5 = 10; f = 10 + 0.1*100/2 = 15
+        assert!((m.eval(&b) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conv_padded_matches_appendix_form() {
+        let b = make_refs(&[3, 5]);
+        let m = CostModel::ConvPadded { alpha: 1.0, lambda: 0.01 };
+        // L = 10; + 0.01 * 2 * 25 = 0.5
+        assert!((m.eval(&b) - 10.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_batch_costs_zero() {
+        for m in [
+            CostModel::Linear { alpha: 1.0 },
+            CostModel::TransformerUnpadded { alpha: 1.0, beta: 1.0 },
+            CostModel::TransformerPadded { alpha: 1.0, beta: 1.0 },
+            CostModel::ConvPadded { alpha: 1.0, lambda: 1.0 },
+        ] {
+            assert_eq!(m.eval(&[]), 0.0);
+        }
+    }
+
+    #[test]
+    fn imbalance_of_equal_batches_is_one() {
+        let a = vec![make_refs(&[4, 4]), make_refs(&[4, 4])];
+        let m = CostModel::Linear { alpha: 1.0 };
+        assert!((m.imbalance(&a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_grows_with_skew() {
+        let skewed = vec![make_refs(&[16]), make_refs(&[1])];
+        let m = CostModel::Linear { alpha: 1.0 };
+        assert!(m.imbalance(&skewed) > 1.5);
+    }
+}

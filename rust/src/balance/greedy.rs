@@ -1,0 +1,139 @@
+//! Algorithm 1: Post-Balancing without paddings (LPT greedy).
+//!
+//! Sort sequences by length descending, keep the `d` new mini-batches in
+//! a min-heap ordered by their current token sum, and always append to
+//! the lightest batch. This is the classic Longest-Processing-Time rule,
+//! a 4/3-approximation for the minimax makespan; complexity
+//! O(n log n + n log d).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::types::{Assignment, ExampleRef};
+
+/// Heap entry: (current token sum, batch index). `Reverse` turns the
+/// max-heap into a min-heap on the sum; ties break on batch index for
+/// determinism.
+type Entry = Reverse<(usize, usize)>;
+
+/// Algorithm 1 of the paper.
+pub fn balance_lpt(lens: &[usize], d: usize) -> Assignment {
+    assert!(d > 0, "need at least one DP instance");
+    let mut sorted: Vec<ExampleRef> = lens
+        .iter()
+        .enumerate()
+        .map(|(id, &len)| ExampleRef { id, len })
+        .collect();
+    // Descending by length; ties by id for determinism.
+    sorted.sort_unstable_by(|a, b| b.len.cmp(&a.len).then(a.id.cmp(&b.id)));
+
+    let mut batches: Assignment = vec![Vec::new(); d];
+    let mut heap: BinaryHeap<Entry> =
+        (0..d).map(|i| Reverse((0usize, i))).collect();
+    for e in sorted {
+        let Reverse((sum, i)) = heap.pop().expect("heap never empties");
+        batches[i].push(e);
+        heap.push(Reverse((sum + e.len, i)));
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::types::{
+        assert_valid_assignment, batch_length, makespan, BatchingMode,
+        identity_with_lens,
+    };
+    use crate::util::prop::check;
+
+    #[test]
+    fn simple_case_is_balanced() {
+        // lens 8,7,6,5,4 over 2 instances: LPT gives makespan 17
+        // (A={8,5,4}, B={7,6}); the optimum is 15, and 17 <= 4/3 * 15.
+        let a = balance_lpt(&[8, 7, 6, 5, 4], 2);
+        assert_valid_assignment(&a, 5, 2);
+        assert!(makespan(&a, BatchingMode::Unpadded) <= 20);
+    }
+
+    #[test]
+    fn empty_input_yields_empty_batches() {
+        let a = balance_lpt(&[], 4);
+        assert_eq!(a.len(), 4);
+        assert!(a.iter().all(|b| b.is_empty()));
+    }
+
+    #[test]
+    fn fewer_examples_than_instances() {
+        let a = balance_lpt(&[10, 20], 5);
+        assert_valid_assignment(&a, 2, 5);
+        assert_eq!(makespan(&a, BatchingMode::Unpadded), 20);
+    }
+
+    #[test]
+    fn deterministic() {
+        let lens = vec![5, 9, 1, 7, 7, 3, 2, 8];
+        assert_eq!(balance_lpt(&lens, 3), balance_lpt(&lens, 3));
+    }
+
+    #[test]
+    fn prop_valid_and_within_lpt_bound() {
+        // LPT guarantee: makespan <= 4/3 * OPT, and OPT >= max(total/d,
+        // max_len), so makespan <= 4/3 * max(ceil(total/d), max_len) + 1.
+        check("lpt bound", 200, |g| {
+            let d = g.usize(1, 12);
+            let n = g.usize(0, 120);
+            let lens = g.seq_lengths(n, 3.0, 1.2);
+            let a = balance_lpt(&lens, d);
+            assert_valid_assignment(&a, n, d);
+            if n == 0 {
+                return;
+            }
+            let total: usize = lens.iter().sum();
+            let max_len = *lens.iter().max().unwrap();
+            let lower =
+                ((total + d - 1) / d).max(max_len) as f64;
+            let got = makespan(&a, BatchingMode::Unpadded) as f64;
+            assert!(
+                got <= lower * 4.0 / 3.0 + 1.0,
+                "makespan {got} exceeds 4/3 bound of lower {lower}"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_never_worse_than_identity() {
+        check("lpt <= identity", 200, |g| {
+            let d = g.usize(1, 8);
+            let n = g.usize(d, d * 16);
+            let lens = g.seq_lengths(n, 3.5, 1.0);
+            let balanced = balance_lpt(&lens, d);
+            let identity = identity_with_lens(&lens, d);
+            let mb = makespan(&balanced, BatchingMode::Unpadded);
+            let mi = makespan(&identity, BatchingMode::Unpadded);
+            assert!(mb <= mi, "balanced {mb} > identity {mi}");
+        });
+    }
+
+    #[test]
+    fn prop_batch_sums_tight() {
+        // With many small sequences the spread between the heaviest and
+        // lightest batch should be at most the largest sequence length.
+        check("lpt spread", 100, |g| {
+            let d = g.usize(2, 8);
+            let lens = g.seq_lengths(d * 20, 3.0, 0.8);
+            let a = balance_lpt(&lens, d);
+            let sums: Vec<usize> = a
+                .iter()
+                .map(|b| batch_length(b, BatchingMode::Unpadded))
+                .collect();
+            let spread =
+                sums.iter().max().unwrap() - sums.iter().min().unwrap();
+            let max_len = *lens.iter().max().unwrap();
+            assert!(
+                spread <= max_len,
+                "spread {spread} > max_len {max_len}"
+            );
+        });
+    }
+}

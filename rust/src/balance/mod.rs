@@ -1,0 +1,80 @@
+//! Batch Post-Balancing algorithms (paper §5.1 + Appendix A).
+//!
+//! Given the sequence lengths of every example currently spread across
+//! `d` DP instances, produce `d` new mini-batches minimizing the minimax
+//! objective `min_Π max_i f(S'_i(Π))` of the paper, where `f` is the
+//! phase's computational-cost function (Eq. 2). Because all-reduce is
+//! commutative/associative, any such rearrangement is consequence-
+//! invariant (§3.3) — these algorithms only ever permute examples.
+//!
+//! | algorithm                | batching    | cost regime        | paper |
+//! |--------------------------|-------------|--------------------|-------|
+//! | [`greedy::balance_lpt`]  | no padding  | β ≪ α (linear)     | Alg 1 |
+//! | [`padded::balance_padded`]| padding    | β ≪ α (linear)     | Alg 2 |
+//! | [`quadratic::balance_quadratic`] | no padding | β ≈ α        | Alg 4 (3rd) |
+//! | [`convpad::balance_convpad`] | padding | conv-attention     | Alg 5 (4th) |
+//!
+//! [`prebalance`] holds the Pre-Balancing baselines the paper compares
+//! against (§3.2), and [`cost`] the Eq.-2 cost functions used both by the
+//! quadratic algorithms and by the cluster simulator.
+
+pub mod convpad;
+pub mod cost;
+pub mod greedy;
+pub mod padded;
+pub mod prebalance;
+pub mod quadratic;
+pub mod types;
+
+pub use cost::{CostModel, PhaseCost};
+pub use types::{Assignment, BatchingMode, ExampleRef, Policy};
+
+use crate::util::rng::Pcg64;
+
+/// Dispatch to the right post-balancing algorithm for a policy.
+///
+/// `lens[g]` is the sequence length of global example `g`; `d` is the DP
+/// world size. Returns the new assignment of examples to instances.
+pub fn balance(policy: Policy, lens: &[usize], d: usize) -> Assignment {
+    match policy {
+        Policy::NoBalance => types::identity_assignment(lens.len(), d),
+        Policy::GreedyUnpadded => greedy::balance_lpt(lens, d),
+        Policy::BinaryPadded => padded::balance_padded(lens, d),
+        Policy::QuadraticUnpadded { lambda, tolerance } => {
+            quadratic::balance_quadratic(lens, d, lambda, tolerance)
+        }
+        Policy::ConvPadded { lambda } => {
+            convpad::balance_convpad(lens, d, lambda)
+        }
+    }
+}
+
+/// Generate heavy-tailed sequence lengths for tests/benches (log-normal,
+/// the shape §2.3 describes for production datasets: 10 .. 40k tokens).
+pub fn synth_lengths(rng: &mut Pcg64, n: usize, mu: f64, sigma: f64)
+    -> Vec<usize> {
+    (0..n)
+        .map(|_| (rng.lognormal(mu, sigma).round() as usize).clamp(1, 65_536))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balance_dispatches_all_policies() {
+        let mut rng = Pcg64::new(1);
+        let lens = synth_lengths(&mut rng, 64, 4.0, 1.0);
+        for policy in [
+            Policy::NoBalance,
+            Policy::GreedyUnpadded,
+            Policy::BinaryPadded,
+            Policy::QuadraticUnpadded { lambda: 0.01, tolerance: 8.0 },
+            Policy::ConvPadded { lambda: 0.001 },
+        ] {
+            let a = balance(policy, &lens, 8);
+            types::assert_valid_assignment(&a, lens.len(), 8);
+        }
+    }
+}

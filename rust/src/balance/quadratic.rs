@@ -1,0 +1,158 @@
+//! Appendix Algorithm "3rd": unpadded balancing when β ≈ α.
+//!
+//! When the attention quadratic is not negligible, the objective becomes
+//! `min max_i  L'_i + λ Σ_j (l'_{i,j})²` (Appendix A). The paper keeps
+//! the LPT skeleton but orders the batch priority queue with a two-level
+//! comparator: batches whose token sums differ by less than a tolerance
+//! interval `v` are compared on their squared sums instead — trading off
+//! the linear and quadratic terms. Complexity O(n log n).
+
+use super::types::{Assignment, ExampleRef};
+
+#[derive(Clone, Copy, Debug)]
+struct BatchState {
+    sum: usize,
+    sq_sum: u128,
+    idx: usize,
+}
+
+/// The CMP function of Algorithm 4 (Appendix A): pick the batch that is
+/// "smallest" — by squared sum when sums are within tolerance, else by
+/// sum.
+fn lighter(a: &BatchState, b: &BatchState, tol: f64) -> bool {
+    let diff = a.sum.abs_diff(b.sum) as f64;
+    if diff < tol {
+        (a.sq_sum, a.idx) < (b.sq_sum, b.idx)
+    } else {
+        (a.sum, a.idx) < (b.sum, b.idx)
+    }
+}
+
+/// Appendix Alg "3rd": LPT with quadratic-aware tie-breaking.
+///
+/// `lambda` = β/α (recorded in the assignment's objective via
+/// [`crate::balance::cost::CostModel::TransformerUnpadded`]); `tolerance`
+/// is the interval `v` within which the quadratic term decides.
+pub fn balance_quadratic(
+    lens: &[usize],
+    d: usize,
+    _lambda: f64,
+    tolerance: f64,
+) -> Assignment {
+    assert!(d > 0, "need at least one DP instance");
+    let mut sorted: Vec<ExampleRef> = lens
+        .iter()
+        .enumerate()
+        .map(|(id, &len)| ExampleRef { id, len })
+        .collect();
+    sorted.sort_unstable_by(|a, b| b.len.cmp(&a.len).then(a.id.cmp(&b.id)));
+
+    let mut batches: Assignment = vec![Vec::new(); d];
+    // The comparator is tolerance-dependent and non-transitive in
+    // general, so a linear scan (O(d) per insert) replaces the heap; at
+    // the paper's scales (d ≤ 320) this stays well under a millisecond.
+    let mut states: Vec<BatchState> = (0..d)
+        .map(|idx| BatchState { sum: 0, sq_sum: 0, idx })
+        .collect();
+    for e in sorted {
+        let mut best = 0;
+        for i in 1..d {
+            if lighter(&states[i], &states[best], tolerance) {
+                best = i;
+            }
+        }
+        batches[best].push(e);
+        states[best].sum += e.len;
+        states[best].sq_sum += (e.len as u128) * (e.len as u128);
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::cost::CostModel;
+    use crate::balance::greedy::balance_lpt;
+    use crate::balance::types::{
+        assert_valid_assignment, identity_with_lens,
+    };
+    use crate::util::prop::check;
+
+    #[test]
+    fn zero_tolerance_matches_lpt() {
+        let lens = vec![9, 8, 7, 3, 3, 2, 1, 1];
+        let a = balance_quadratic(&lens, 3, 0.1, 0.0);
+        let b = balance_lpt(&lens, 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn quadratic_tiebreak_prefers_low_sq_sum() {
+        // Two batches with equal sums but different compositions: the
+        // next long sequence should land in the one with lower Σl².
+        // Batch A gets {10}, batch B gets {6, 4} (sum 10, sq 52 < 100).
+        let lens = vec![10, 6, 4, 8];
+        let a = balance_quadratic(&lens, 2, 1.0, 2.0);
+        assert_valid_assignment(&a, 4, 2);
+        // The 8 must join the {6,4} batch under quadratic tie-break.
+        let with8: Vec<usize> = a
+            .iter()
+            .find(|b| b.iter().any(|e| e.len == 8))
+            .unwrap()
+            .iter()
+            .map(|e| e.len)
+            .collect();
+        assert!(with8.contains(&6) || with8.contains(&4), "{a:?}");
+    }
+
+    #[test]
+    fn prop_valid_assignment() {
+        check("quadratic valid", 150, |g| {
+            let d = g.usize(1, 10);
+            let n = g.usize(0, 100);
+            let lens = g.seq_lengths(n, 3.0, 1.2);
+            let tol = g.f64(0.0, 50.0);
+            let a = balance_quadratic(&lens, d, 0.05, tol);
+            assert_valid_assignment(&a, n, d);
+        });
+    }
+
+    #[test]
+    fn prop_beats_identity_on_quadratic_objective() {
+        check("quadratic <= identity", 150, |g| {
+            let d = g.usize(2, 8);
+            let n = g.usize(d * 4, d * 16);
+            let lens = g.seq_lengths(n, 3.2, 1.1);
+            let lambda = 0.02;
+            let cm = CostModel::TransformerUnpadded {
+                alpha: 1.0,
+                beta: lambda,
+            };
+            let a = balance_quadratic(&lens, d, lambda, 16.0);
+            let i = identity_with_lens(&lens, d);
+            assert!(
+                cm.makespan(&a) <= cm.makespan(&i) + 1e-9,
+                "quadratic balance worse than identity"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_tolerance_never_catastrophic() {
+        // Even with a large tolerance the result must stay within 2x of
+        // plain LPT on the combined objective (it only reorders
+        // near-ties).
+        check("quadratic sane", 100, |g| {
+            let d = g.usize(2, 6);
+            let lens = g.seq_lengths(d * 10, 3.0, 1.0);
+            let lambda = 0.02;
+            let cm = CostModel::TransformerUnpadded {
+                alpha: 1.0,
+                beta: lambda,
+            };
+            let q = balance_quadratic(&lens, d, lambda, 1e9);
+            let l = balance_lpt(&lens, d);
+            assert!(cm.makespan(&q) <= 2.0 * cm.makespan(&l));
+        });
+    }
+}

@@ -1,0 +1,168 @@
+//! Core types for batch post-balancing.
+
+/// A reference to one example's sequence in one phase: its global index
+/// (stable across rearrangements) and its sequence length in this phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExampleRef {
+    /// Global example id: enumeration order of (source instance, slot).
+    pub id: usize,
+    /// Sequence length of this example in the current phase.
+    pub len: usize,
+}
+
+/// How a phase batches its sequences (paper Eq. 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchingMode {
+    /// Sequences padded to the max length: `L = b * max(l)`.
+    Padded,
+    /// Packed without padding: `L = sum(l)`.
+    Unpadded,
+}
+
+/// Which post-balancing algorithm a dispatcher runs (paper §5.1, App. A).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Policy {
+    /// Identity: keep the sampled mini-batches (the "w/o balance"
+    /// baseline of §8.1).
+    NoBalance,
+    /// Algorithm 1: LPT greedy, no padding, linear cost.
+    GreedyUnpadded,
+    /// Algorithm 2: binary search + first-fit, padded batching.
+    BinaryPadded,
+    /// Appendix Alg "3rd": greedy with quadratic tie-break within a
+    /// tolerance interval (β ≈ α regime).
+    QuadraticUnpadded { lambda: f64, tolerance: f64 },
+    /// Appendix Alg "4th": padded conv-attention objective.
+    ConvPadded { lambda: f64 },
+}
+
+/// The output of a balancing algorithm: `assignment[i]` is the new
+/// mini-batch for DP instance `i`.
+pub type Assignment = Vec<Vec<ExampleRef>>;
+
+/// Batch length per Eq. (1).
+pub fn batch_length(batch: &[ExampleRef], mode: BatchingMode) -> usize {
+    match mode {
+        BatchingMode::Padded => {
+            let max = batch.iter().map(|e| e.len).max().unwrap_or(0);
+            batch.len() * max
+        }
+        BatchingMode::Unpadded => batch.iter().map(|e| e.len).sum(),
+    }
+}
+
+/// The minimax objective value of an assignment under Eq. (1) lengths.
+pub fn makespan(assignment: &Assignment, mode: BatchingMode) -> usize {
+    assignment
+        .iter()
+        .map(|b| batch_length(b, mode))
+        .max()
+        .unwrap_or(0)
+}
+
+/// The identity assignment: examples dealt to instances in their sampled
+/// order (round-robin over equally-sized source mini-batches).
+pub fn identity_assignment(n: usize, d: usize) -> Assignment {
+    let mut a: Assignment = vec![Vec::new(); d];
+    // Examples are enumerated source-major: instance i contributed the
+    // contiguous block [i*n/d, (i+1)*n/d) when batches are equal-sized;
+    // for the general case deal contiguous chunks as evenly as possible.
+    let base = n / d;
+    let extra = n % d;
+    let mut g = 0;
+    for (i, batch) in a.iter_mut().enumerate() {
+        let b = base + usize::from(i < extra);
+        for _ in 0..b {
+            batch.push(ExampleRef { id: g, len: 0 });
+            g += 1;
+        }
+    }
+    a
+}
+
+/// Wrap raw lengths into `ExampleRef`s with ids 0..n.
+pub fn make_refs(lens: &[usize]) -> Vec<ExampleRef> {
+    lens.iter()
+        .enumerate()
+        .map(|(id, &len)| ExampleRef { id, len })
+        .collect()
+}
+
+/// Identity assignment that carries real lengths.
+pub fn identity_with_lens(lens: &[usize], d: usize) -> Assignment {
+    let mut a = identity_assignment(lens.len(), d);
+    for batch in &mut a {
+        for e in batch.iter_mut() {
+            e.len = lens[e.id];
+        }
+    }
+    a
+}
+
+/// Test/bench helper: every example must appear exactly once across the
+/// `d` new mini-batches.
+pub fn assert_valid_assignment(a: &Assignment, n: usize, d: usize) {
+    assert_eq!(a.len(), d, "assignment must have d mini-batches");
+    let mut seen = vec![false; n];
+    for batch in a {
+        for e in batch {
+            assert!(e.id < n, "example id {} out of range {n}", e.id);
+            assert!(!seen[e.id], "example {} assigned twice", e.id);
+            seen[e.id] = true;
+        }
+    }
+    let missing = seen.iter().filter(|&&s| !s).count();
+    assert_eq!(missing, 0, "{missing} examples unassigned");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_length_matches_eq1() {
+        let b = vec![
+            ExampleRef { id: 0, len: 10 },
+            ExampleRef { id: 1, len: 4 },
+            ExampleRef { id: 2, len: 7 },
+        ];
+        assert_eq!(batch_length(&b, BatchingMode::Unpadded), 21);
+        assert_eq!(batch_length(&b, BatchingMode::Padded), 30);
+        assert_eq!(batch_length(&[], BatchingMode::Padded), 0);
+    }
+
+    #[test]
+    fn identity_assignment_is_valid_and_even() {
+        let a = identity_assignment(10, 4);
+        assert_valid_assignment(&a, 10, 4);
+        let sizes: Vec<usize> = a.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn identity_with_lens_carries_lengths() {
+        let lens = vec![5, 6, 7, 8];
+        let a = identity_with_lens(&lens, 2);
+        assert_eq!(a[0][0].len, 5);
+        assert_eq!(a[1][1].len, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "assigned twice")]
+    fn validator_catches_duplicates() {
+        let a = vec![
+            vec![ExampleRef { id: 0, len: 1 }],
+            vec![ExampleRef { id: 0, len: 1 }],
+        ];
+        assert_valid_assignment(&a, 1, 2);
+    }
+
+    #[test]
+    fn makespan_is_max_over_batches() {
+        let a = vec![
+            vec![ExampleRef { id: 0, len: 10 }],
+            vec![ExampleRef { id: 1, len: 3 }, ExampleRef { id: 2, len: 4 }],
+        ];
+        assert_eq!(makespan(&a, BatchingMode::Unpadded), 10);
+    }
+}

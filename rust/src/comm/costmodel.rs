@@ -1,0 +1,184 @@
+//! Analytic collective cost models — paper Eq. (3), (4), (5) and
+//! Appendix B.
+//!
+//! These price the two communicator designs the paper compares:
+//!
+//! * **All-Gather of payloads** (the strawman, §5.2.1): every instance
+//!   receives every mini-batch — `O ∝ (d-1)·max_i(L_i)` with ring
+//!   scheduling, and each instance must hold the whole global batch.
+//! * **All-to-All of payloads** (the paper's communicator): lengths-only
+//!   All-Gather (negligible) + point-to-point moves of exactly the
+//!   examples that change instance — bounded by `max_i(L_i) / B_min`
+//!   regardless of d (Eq. 4), and refined by Eq. (5) to the max
+//!   *inter-node* send volume under hierarchical bandwidth.
+
+use super::topology::Topology;
+use super::volume::VolumeMatrix;
+
+/// A priced collective operation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CollectiveCost {
+    /// Wall-clock seconds.
+    pub seconds: f64,
+    /// Peak extra bytes a single instance must buffer.
+    pub peak_bytes: f64,
+}
+
+/// Ring All-Gather of per-instance payloads `bytes[i]` (Eq. 3 / App. B).
+///
+/// Each of the (d-1) ring steps forwards a chunk whose size is bounded by
+/// the largest payload, over the slowest link in the ring (inter-node
+/// when the ring spans nodes). Every instance ends up buffering the sum
+/// of all payloads.
+pub fn allgather_cost(topo: &Topology, bytes: &[usize]) -> CollectiveCost {
+    let d = bytes.len();
+    if d <= 1 {
+        return CollectiveCost { seconds: 0.0, peak_bytes: 0.0 };
+    }
+    let max_bytes = *bytes.iter().max().unwrap() as f64;
+    let bw = topo.min_bw();
+    let seconds =
+        topo.base_latency + (d as f64 - 1.0) * max_bytes / bw;
+    let peak_bytes: f64 = bytes.iter().map(|&b| b as f64).sum();
+    CollectiveCost { seconds, peak_bytes }
+}
+
+/// All-to-All realizing a rearrangement with send-volume matrix `v`
+/// (bytes), under destination batch order `perm` (Eq. 5 / App. B).
+///
+/// Intra-node and inter-node traffic proceed in parallel; each class is
+/// dominated by the busiest sender in that class. Peak extra memory is
+/// the largest receive volume (staging buffers for incoming examples).
+pub fn alltoall_cost(
+    topo: &Topology,
+    v: &VolumeMatrix,
+    perm: &[usize],
+) -> CollectiveCost {
+    let d = v.d;
+    let mut max_inter_send = 0.0f64;
+    let mut max_intra_send = 0.0f64;
+    let mut recv = vec![0.0f64; d];
+    for i in 0..d {
+        let mut inter = 0.0;
+        let mut intra = 0.0;
+        for j in 0..d {
+            let dst = perm[j];
+            let vol = v.get(i, j);
+            if dst == i {
+                continue; // stays local
+            }
+            if topo.same_node(i, dst) {
+                intra += vol;
+            } else {
+                inter += vol;
+            }
+            recv[dst] += vol;
+        }
+        max_inter_send = max_inter_send.max(inter);
+        max_intra_send = max_intra_send.max(intra);
+    }
+    let seconds = topo.base_latency
+        + (max_inter_send / topo.inter_bw)
+            .max(max_intra_send / topo.intra_bw);
+    let peak_bytes = recv.iter().copied().fold(0.0, f64::max);
+    CollectiveCost { seconds, peak_bytes }
+}
+
+/// Ring All-Reduce of `bytes` gradient bytes across `d` instances
+/// (2(d-1)/d · bytes over the slowest link) — used by the simulator to
+/// price the DP gradient synchronization.
+pub fn allreduce_cost(topo: &Topology, bytes: f64) -> CollectiveCost {
+    let d = topo.instances as f64;
+    if d <= 1.0 {
+        return CollectiveCost { seconds: 0.0, peak_bytes: 0.0 };
+    }
+    let bw = topo.min_bw();
+    let seconds = topo.base_latency + 2.0 * (d - 1.0) / d * bytes / bw;
+    CollectiveCost { seconds, peak_bytes: bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo(d: usize) -> Topology {
+        Topology::h100(d)
+    }
+
+    #[test]
+    fn allgather_scales_with_d() {
+        let b16 = vec![1_000_000usize; 16];
+        let b64 = vec![1_000_000usize; 64];
+        let c16 = allgather_cost(&topo(16), &b16);
+        let c64 = allgather_cost(&topo(64), &b64);
+        // (d-1) scaling: 63/15 ≈ 4.2x.
+        assert!(c64.seconds / c16.seconds > 3.5);
+        assert!(c64.peak_bytes > c16.peak_bytes);
+    }
+
+    #[test]
+    fn alltoall_beats_allgather_at_scale() {
+        // The §5.2.1 comparison: All-to-All must not scale with d.
+        let d = 64;
+        let t = topo(d);
+        let payload = 1_000_000usize;
+        let ag = allgather_cost(&t, &vec![payload; d]);
+        // Worst-case rearrangement: everyone ships its whole batch to
+        // one other instance.
+        let mut v = VolumeMatrix::zeros(d);
+        for i in 0..d {
+            v.add(i, (i + 1) % d, payload as f64);
+        }
+        let a2a = alltoall_cost(&t, &v, &VolumeMatrix::identity_perm(d));
+        assert!(
+            a2a.seconds < ag.seconds / 10.0,
+            "a2a {} vs ag {}",
+            a2a.seconds,
+            ag.seconds
+        );
+        assert!(a2a.peak_bytes < ag.peak_bytes / 10.0);
+    }
+
+    #[test]
+    fn alltoall_intra_node_is_cheap() {
+        let t = topo(16);
+        let mut v = VolumeMatrix::zeros(16);
+        // 0 -> 1 (same node) vs 0 -> 8 (cross node), same volume.
+        v.add(0, 1, 1e9);
+        let intra =
+            alltoall_cost(&t, &v, &VolumeMatrix::identity_perm(16));
+        let mut v2 = VolumeMatrix::zeros(16);
+        v2.add(0, 8, 1e9);
+        let inter =
+            alltoall_cost(&t, &v2, &VolumeMatrix::identity_perm(16));
+        assert!(inter.seconds > 5.0 * intra.seconds);
+    }
+
+    #[test]
+    fn local_traffic_is_free() {
+        let t = topo(8);
+        let mut v = VolumeMatrix::zeros(8);
+        for i in 0..8 {
+            v.add(i, i, 1e12);
+        }
+        let c = alltoall_cost(&t, &v, &VolumeMatrix::identity_perm(8));
+        assert!(c.seconds <= t.base_latency + 1e-12);
+        assert_eq!(c.peak_bytes, 0.0);
+    }
+
+    #[test]
+    fn allreduce_asymptote() {
+        let t = topo(256);
+        let c = allreduce_cost(&t, 1e9);
+        // ~2 * bytes / bw for large d.
+        let expect = 2.0 * 1e9 / t.inter_bw;
+        assert!((c.seconds - expect).abs() / expect < 0.05);
+    }
+
+    #[test]
+    fn degenerate_single_instance() {
+        let t = topo(1);
+        assert_eq!(allgather_cost(&t, &[123]).seconds, 0.0);
+        assert_eq!(allreduce_cost(&t, 1e9).seconds, 0.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Communication layer: cluster topology, collective cost models
+//! (paper Eq. 3/4/5 and Appendix B), communication-volume accounting,
+//! and a real in-process collective engine used by the [`crate::trainer`].
+//!
+//! Two consumers share this module:
+//! * the **simulator** prices All-Gather / All-to-All operations with the
+//!   analytic models in [`costmodel`];
+//! * the **trainer** actually moves bytes between DP worker threads with
+//!   the engine in [`engine`] — the same dispatch plans drive both.
+
+pub mod costmodel;
+pub mod engine;
+pub mod topology;
+pub mod volume;
+
+pub use costmodel::{allgather_cost, alltoall_cost, CollectiveCost};
+pub use topology::Topology;
+pub use volume::VolumeMatrix;

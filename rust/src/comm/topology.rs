@@ -1,0 +1,99 @@
+//! Hierarchical cluster topology (paper Fig. 6).
+//!
+//! DP instances are grouped onto nodes; instances on one node talk over
+//! NVLink-class bandwidth, instances on different nodes share the node's
+//! NIC allocation (InfiniBand/Ethernet-class). The disparity between the
+//! two is what the Node-wise Rearrangement Algorithm (§5.2.2) exploits.
+
+/// Cluster shape and link bandwidths.
+#[derive(Clone, Copy, Debug)]
+pub struct Topology {
+    /// Total DP instances (d).
+    pub instances: usize,
+    /// Instances per node (c).
+    pub per_node: usize,
+    /// Intra-node point-to-point bandwidth, bytes/s (NVLink class).
+    pub intra_bw: f64,
+    /// Inter-node bandwidth allocated per instance, bytes/s (IB class).
+    pub inter_bw: f64,
+    /// Per-collective launch latency in seconds (NCCL-ish overhead).
+    pub base_latency: f64,
+}
+
+impl Topology {
+    /// The paper's testbed: H100 nodes, 900 GB/s bidirectional NVLink,
+    /// 8×400 Gbps IB per node (≈50 GB/s per instance).
+    pub fn h100(instances: usize) -> Topology {
+        Topology {
+            instances,
+            per_node: 8,
+            intra_bw: 450.0e9, // unidirectional NVLink
+            inter_bw: 50.0e9,  // 400 Gbps per GPU
+            base_latency: 20e-6,
+        }
+    }
+
+    /// Node index of an instance.
+    pub fn node_of(&self, instance: usize) -> usize {
+        instance / self.per_node
+    }
+
+    /// Whether two instances share a node.
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    pub fn nodes(&self) -> usize {
+        (self.instances + self.per_node - 1) / self.per_node
+    }
+
+    /// Point-to-point bandwidth between two instances.
+    pub fn p2p_bw(&self, a: usize, b: usize) -> f64 {
+        if self.same_node(a, b) {
+            self.intra_bw
+        } else {
+            self.inter_bw
+        }
+    }
+
+    /// The minimum p2p bandwidth in the system (the Eq.-4 bound's B_min):
+    /// inter-node unless the whole cluster is one node.
+    pub fn min_bw(&self) -> f64 {
+        if self.nodes() > 1 {
+            self.inter_bw
+        } else {
+            self.intra_bw
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_grouping() {
+        let t = Topology::h100(32);
+        assert_eq!(t.nodes(), 4);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.node_of(8), 1);
+        assert!(t.same_node(0, 7));
+        assert!(!t.same_node(7, 8));
+    }
+
+    #[test]
+    fn bandwidth_hierarchy() {
+        let t = Topology::h100(16);
+        assert!(t.p2p_bw(0, 1) > t.p2p_bw(0, 8));
+        assert_eq!(t.min_bw(), t.inter_bw);
+        let single = Topology::h100(8);
+        assert_eq!(single.min_bw(), single.intra_bw);
+    }
+
+    #[test]
+    fn partial_last_node_counts() {
+        let t = Topology::h100(20);
+        assert_eq!(t.nodes(), 3);
+    }
+}

@@ -1,0 +1,149 @@
+//! Communication-volume accounting for rearrangements.
+//!
+//! `V[i][j]` = bytes (or tokens) instance `i` must send to instance `j`
+//! to realize a rearrangement Π (paper §5.2.2). The Node-wise
+//! Rearrangement Algorithm permutes *columns* of V (destination batch
+//! order) to push volume intra-node.
+
+use super::topology::Topology;
+
+/// Dense d×d send-volume matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VolumeMatrix {
+    pub d: usize,
+    /// Row-major: `v[i * d + j]` = volume from instance i to instance j.
+    v: Vec<f64>,
+}
+
+impl VolumeMatrix {
+    pub fn zeros(d: usize) -> VolumeMatrix {
+        VolumeMatrix { d, v: vec![0.0; d * d] }
+    }
+
+    #[inline]
+    pub fn get(&self, from: usize, to: usize) -> f64 {
+        self.v[from * self.d + to]
+    }
+
+    #[inline]
+    pub fn add(&mut self, from: usize, to: usize, vol: f64) {
+        self.v[from * self.d + to] += vol;
+    }
+
+    /// Total volume an instance sends off-node under a given destination
+    /// column order (`perm[j]` = which physical instance hosts logical
+    /// destination batch j). Diagonal (self) traffic is free.
+    pub fn inter_node_send(
+        &self,
+        topo: &Topology,
+        perm: &[usize],
+        from: usize,
+    ) -> f64 {
+        let mut total = 0.0;
+        for j in 0..self.d {
+            let dst = perm[j];
+            if !topo.same_node(from, dst) {
+                total += self.get(from, j);
+            }
+        }
+        total
+    }
+
+    /// Max over instances of inter-node send volume — the Eq. (5)
+    /// quantity that dominates All-to-All latency.
+    pub fn max_inter_node(&self, topo: &Topology, perm: &[usize]) -> f64 {
+        (0..self.d)
+            .map(|i| self.inter_node_send(topo, perm, i))
+            .fold(0.0, f64::max)
+    }
+
+    /// Total (sum) inter-node volume — the Fig. 13 metric.
+    pub fn total_inter_node(&self, topo: &Topology, perm: &[usize]) -> f64 {
+        (0..self.d)
+            .map(|i| self.inter_node_send(topo, perm, i))
+            .sum()
+    }
+
+    /// Max single send volume of any instance (diagonal excluded): the
+    /// Eq. (4) ceiling `max_i L_i` when built from batch lengths.
+    pub fn max_send(&self) -> f64 {
+        (0..self.d)
+            .map(|i| {
+                (0..self.d)
+                    .filter(|&j| j != i)
+                    .map(|j| self.get(i, j))
+                    .sum::<f64>()
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Identity column order.
+    pub fn identity_perm(d: usize) -> Vec<usize> {
+        (0..d).collect()
+    }
+}
+
+/// Build the volume matrix of a rearrangement: `placements[g]` gives
+/// (source instance, dest batch) per example and `lens[g]` its payload.
+pub fn volume_of_rearrangement(
+    d: usize,
+    moves: impl Iterator<Item = (usize, usize, f64)>,
+) -> VolumeMatrix {
+    let mut v = VolumeMatrix::zeros(d);
+    for (from, to_batch, vol) in moves {
+        v.add(from, to_batch, vol);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_query() {
+        let mut v = VolumeMatrix::zeros(4);
+        v.add(0, 1, 10.0);
+        v.add(0, 1, 5.0);
+        v.add(2, 3, 7.0);
+        assert_eq!(v.get(0, 1), 15.0);
+        assert_eq!(v.get(1, 0), 0.0);
+        assert_eq!(v.max_send(), 15.0);
+    }
+
+    #[test]
+    fn inter_node_respects_permutation() {
+        // 4 instances, 2 per node. Volume only from 0 to logical batch 1.
+        let topo = Topology {
+            instances: 4,
+            per_node: 2,
+            intra_bw: 100.0,
+            inter_bw: 10.0,
+            base_latency: 0.0,
+        };
+        let mut v = VolumeMatrix::zeros(4);
+        v.add(0, 1, 42.0);
+        // Identity: batch 1 lives on instance 1 (same node as 0) => 0.
+        let id = VolumeMatrix::identity_perm(4);
+        assert_eq!(v.max_inter_node(&topo, &id), 0.0);
+        // Swap batches 1 and 2: batch 1 now on instance 2 (other node).
+        let perm = vec![0, 2, 1, 3];
+        assert_eq!(v.max_inter_node(&topo, &perm), 42.0);
+        assert_eq!(v.total_inter_node(&topo, &perm), 42.0);
+    }
+
+    #[test]
+    fn self_traffic_is_free() {
+        let topo = Topology {
+            instances: 2,
+            per_node: 1,
+            intra_bw: 1.0,
+            inter_bw: 1.0,
+            base_latency: 0.0,
+        };
+        let mut v = VolumeMatrix::zeros(2);
+        v.add(0, 0, 99.0);
+        let id = VolumeMatrix::identity_perm(2);
+        assert_eq!(v.max_inter_node(&topo, &id), 0.0);
+    }
+}

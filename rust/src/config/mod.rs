@@ -1,0 +1,194 @@
+//! Run configuration: JSON-loadable descriptions of simulator and
+//! trainer runs (the crate's "config system").
+//!
+//! Example (see `examples/cluster_sim.rs` and the `orchmllm` CLI):
+//!
+//! ```json
+//! {
+//!   "kind": "sim",
+//!   "system": "orchmllm",
+//!   "model": "mllm-10b",
+//!   "gpus": 128,
+//!   "mini_batch": 60,
+//!   "steps": 5,
+//!   "seed": 42
+//! }
+//! ```
+
+use crate::sim::engine::SystemKind;
+use crate::util::json::Json;
+
+/// A simulator run description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimRunConfig {
+    pub system: SystemKind,
+    pub model: String,
+    pub gpus: usize,
+    pub mini_batch: usize,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Default for SimRunConfig {
+    fn default() -> Self {
+        SimRunConfig {
+            system: SystemKind::OrchMllm,
+            model: "mllm-10b".into(),
+            gpus: 128,
+            mini_batch: 60,
+            steps: 5,
+            seed: 42,
+        }
+    }
+}
+
+impl SimRunConfig {
+    pub fn from_json(j: &Json) -> anyhow::Result<SimRunConfig> {
+        let d = SimRunConfig::default();
+        let system = match j.get("system").as_str() {
+            Some(s) => SystemKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown system '{s}'"))?,
+            None => d.system,
+        };
+        Ok(SimRunConfig {
+            system,
+            model: j
+                .get("model")
+                .as_str()
+                .unwrap_or(&d.model)
+                .to_string(),
+            gpus: j.get("gpus").as_usize().unwrap_or(d.gpus),
+            mini_batch: j
+                .get("mini_batch")
+                .as_usize()
+                .unwrap_or(d.mini_batch),
+            steps: j.get("steps").as_usize().unwrap_or(d.steps),
+            seed: j.get("seed").as_i64().unwrap_or(d.seed as i64) as u64,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("sim")),
+            ("system", Json::str(match self.system {
+                SystemKind::OrchMllm => "orchmllm",
+                SystemKind::NoBalance => "no-balance",
+                SystemKind::LlmOnly => "llm-only",
+                SystemKind::AllGatherComm => "allgather",
+                SystemKind::AllPad => "all-pad",
+                SystemKind::AllRmpad => "all-rmpad",
+                SystemKind::NoNodewise => "no-nodewise",
+                SystemKind::NoComposition => "no-composition",
+                SystemKind::Megatron => "megatron",
+            })),
+            ("model", Json::str(&self.model)),
+            ("gpus", Json::num(self.gpus as f64)),
+            ("mini_batch", Json::num(self.mini_batch as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<SimRunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+/// A real-trainer run description (consumed by `trainer::TrainConfig`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainRunConfig {
+    /// Artifact directory (e.g. `artifacts/test`).
+    pub artifacts: String,
+    pub workers: usize,
+    pub mini_batch: usize,
+    pub steps: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub balance: bool,
+}
+
+impl Default for TrainRunConfig {
+    fn default() -> Self {
+        TrainRunConfig {
+            artifacts: "artifacts/test".into(),
+            workers: 4,
+            mini_batch: 4,
+            steps: 20,
+            lr: 0.05,
+            seed: 0,
+            balance: true,
+        }
+    }
+}
+
+impl TrainRunConfig {
+    pub fn from_json(j: &Json) -> TrainRunConfig {
+        let d = TrainRunConfig::default();
+        TrainRunConfig {
+            artifacts: j
+                .get("artifacts")
+                .as_str()
+                .unwrap_or(&d.artifacts)
+                .to_string(),
+            workers: j.get("workers").as_usize().unwrap_or(d.workers),
+            mini_batch: j
+                .get("mini_batch")
+                .as_usize()
+                .unwrap_or(d.mini_batch),
+            steps: j.get("steps").as_usize().unwrap_or(d.steps),
+            lr: j.get("lr").as_f64().unwrap_or(d.lr),
+            seed: j.get("seed").as_i64().unwrap_or(0) as u64,
+            balance: j.get("balance").as_bool().unwrap_or(d.balance),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_config_roundtrips() {
+        let c = SimRunConfig {
+            system: SystemKind::Megatron,
+            model: "mllm-84b".into(),
+            gpus: 2560,
+            mini_batch: 30,
+            steps: 10,
+            seed: 7,
+        };
+        let j = c.to_json();
+        let back = SimRunConfig::from_json(&j).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let j = Json::parse(r#"{"gpus": 64}"#).unwrap();
+        let c = SimRunConfig::from_json(&j).unwrap();
+        assert_eq!(c.gpus, 64);
+        assert_eq!(c.model, "mllm-10b");
+        assert_eq!(c.system, SystemKind::OrchMllm);
+    }
+
+    #[test]
+    fn bad_system_errors() {
+        let j = Json::parse(r#"{"system": "zzz"}"#).unwrap();
+        assert!(SimRunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn train_config_parses() {
+        let j = Json::parse(
+            r#"{"workers": 2, "balance": false, "lr": 0.1}"#,
+        )
+        .unwrap();
+        let c = TrainRunConfig::from_json(&j);
+        assert_eq!(c.workers, 2);
+        assert!(!c.balance);
+        assert_eq!(c.lr, 0.1);
+    }
+}

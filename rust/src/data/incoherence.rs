@@ -1,0 +1,119 @@
+//! Modality Composition Incoherence statistics (paper §3.1, Fig. 3).
+//!
+//! Quantifies, over a sample of the dataset, the distribution of each
+//! modality's share of the interleaved LLM sequence. The Fig.-3 claim is
+//! that these ratios "bear substantial variance" — which is what makes
+//! pre-balancing a multi-objective problem.
+
+use super::synth::Example;
+use crate::util::stats::{sparkline, Summary};
+
+/// Ratio distributions for one modality.
+#[derive(Clone, Debug)]
+pub struct RatioStats {
+    pub modality: &'static str,
+    pub summary: Summary,
+    /// Fraction of examples where the modality is absent entirely.
+    pub absent_frac: f64,
+    /// Normalized histogram over [0, 1] (Fig.-3 panel).
+    pub histogram: Vec<f64>,
+}
+
+impl RatioStats {
+    fn build(modality: &'static str, ratios: &[f64], bins: usize)
+        -> RatioStats {
+        let absent =
+            ratios.iter().filter(|&&r| r == 0.0).count() as f64
+                / ratios.len().max(1) as f64;
+        let s = Summary::from_slice(ratios);
+        let histogram = s.histogram(0.0, 1.0, bins);
+        RatioStats { modality, summary: s, absent_frac: absent, histogram }
+    }
+
+    /// Terminal rendering of one Fig.-3 panel.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<8} mean={:.3} std={:.3} absent={:.1}%  {}",
+            self.modality,
+            self.summary.mean(),
+            self.summary.std(),
+            self.absent_frac * 100.0,
+            sparkline(&self.histogram)
+        )
+    }
+}
+
+/// The full Fig.-3 analysis over a dataset sample.
+#[derive(Clone, Debug)]
+pub struct IncoherenceReport {
+    pub vision: RatioStats,
+    pub audio: RatioStats,
+    pub n: usize,
+}
+
+impl IncoherenceReport {
+    pub fn from_examples(examples: &[Example], bins: usize)
+        -> IncoherenceReport {
+        let vis: Vec<f64> = examples.iter().map(|e| e.vis_ratio()).collect();
+        let aud: Vec<f64> = examples.iter().map(|e| e.aud_ratio()).collect();
+        IncoherenceReport {
+            vision: RatioStats::build("vision", &vis, bins),
+            audio: RatioStats::build("audio", &aud, bins),
+            n: examples.len(),
+        }
+    }
+
+    /// The paper's qualitative claim, as a predicate: both modalities'
+    /// ratio distributions have wide spread.
+    pub fn is_incoherent(&self) -> bool {
+        self.vision.summary.std() > 0.2 && self.audio.summary.std() > 0.2
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "Modality Composition Incoherence (n={}):\n  {}\n  {}",
+            self.n,
+            self.vision.render(),
+            self.audio.render()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{DatasetConfig, Generator};
+
+    #[test]
+    fn report_flags_mixture_as_incoherent() {
+        let ex = Generator::new(DatasetConfig::default(), 3).batch(10_000);
+        let rep = IncoherenceReport::from_examples(&ex, 20);
+        assert!(rep.is_incoherent());
+        assert_eq!(rep.n, 10_000);
+        assert!((rep.vision.histogram.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_task_dataset_is_coherent() {
+        // ASR-only data: vision ratio constant 0; audio ratio narrow.
+        let mut cfg = DatasetConfig::default();
+        cfg.mix.asr = 1.0;
+        cfg.mix.spoken_qa = 0.0;
+        cfg.mix.caption = 0.0;
+        cfg.mix.vqa = 0.0;
+        cfg.mix.text_only = 0.0;
+        cfg.mix.av_dialogue = 0.0;
+        let ex = Generator::new(cfg, 4).batch(5000);
+        let rep = IncoherenceReport::from_examples(&ex, 20);
+        assert!(!rep.is_incoherent(), "{}", rep.render());
+        assert_eq!(rep.vision.absent_frac, 1.0);
+    }
+
+    #[test]
+    fn render_contains_both_modalities() {
+        let ex = Generator::new(DatasetConfig::default(), 5).batch(500);
+        let rep = IncoherenceReport::from_examples(&ex, 10);
+        let s = rep.render();
+        assert!(s.contains("vision") && s.contains("audio"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Multimodal training data: the synthetic task-mixture generator that
+//! reproduces Modality Composition Incoherence (paper §3.1 / Fig. 3),
+//! the incoherence statistics, and the prefetching dataloader whose
+//! prefetch slot hosts the dispatchers' computation (paper §6,
+//! "Computation overhead overlapping").
+
+pub mod incoherence;
+pub mod loader;
+pub mod synth;
+
+pub use synth::{DatasetConfig, Example, Task, TaskMix};

@@ -1,0 +1,380 @@
+//! Synthetic multimodal task-mixture generator.
+//!
+//! The paper's production datasets are proprietary; what matters to
+//! every experiment is their *distributional* structure (§3.1):
+//!
+//! * **ASR** — paired audio+text, lengths strongly positively
+//!   correlated (long speech → long transcript);
+//! * **Spoken QA** — audio-heavy, text length decorrelated (a long
+//!   question may get a "yes");
+//! * **Caption** — image-only input, short text, no audio;
+//! * **VQA** — image + medium text, no audio;
+//! * **Text-only** — instruction data with no metadata at all;
+//! * **AV dialogue** — both modalities present (omni-model data).
+//!
+//! Mixing these tasks yields per-modality sequence-ratio distributions
+//! with the heavy spread of Fig. 3 — the generator's acceptance test.
+
+use crate::util::rng::Pcg64;
+
+/// Task types in the instruction-tuning mixture.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    Asr,
+    SpokenQa,
+    Caption,
+    Vqa,
+    TextOnly,
+    AvDialogue,
+}
+
+impl Task {
+    pub const ALL: [Task; 6] = [
+        Task::Asr,
+        Task::SpokenQa,
+        Task::Caption,
+        Task::Vqa,
+        Task::TextOnly,
+        Task::AvDialogue,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Asr => "asr",
+            Task::SpokenQa => "spoken-qa",
+            Task::Caption => "caption",
+            Task::Vqa => "vqa",
+            Task::TextOnly => "text-only",
+            Task::AvDialogue => "av-dialogue",
+        }
+    }
+}
+
+/// One training example's per-modality metadata lengths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Example {
+    pub id: usize,
+    pub task: Task,
+    /// Vision metadata length (image patches; 0 when absent).
+    pub vis_len: usize,
+    /// Audio metadata length (mel frames; 0 when absent).
+    pub aud_len: usize,
+    /// Text token count.
+    pub text_len: usize,
+    /// Encoder-output subsequence lengths after downsampling.
+    pub vis_tokens: usize,
+    pub aud_tokens: usize,
+}
+
+impl Example {
+    /// Interleaved LLM-phase sequence length (text + subsequences).
+    pub fn llm_len(&self) -> usize {
+        self.text_len + self.vis_tokens + self.aud_tokens
+    }
+
+    /// Proportion of the LLM sequence contributed by vision (Fig. 3 x).
+    pub fn vis_ratio(&self) -> f64 {
+        self.vis_tokens as f64 / self.llm_len().max(1) as f64
+    }
+
+    pub fn aud_ratio(&self) -> f64 {
+        self.aud_tokens as f64 / self.llm_len().max(1) as f64
+    }
+}
+
+/// Task mixture weights (normalized on use).
+#[derive(Clone, Copy, Debug)]
+pub struct TaskMix {
+    pub asr: f64,
+    pub spoken_qa: f64,
+    pub caption: f64,
+    pub vqa: f64,
+    pub text_only: f64,
+    pub av_dialogue: f64,
+}
+
+impl Default for TaskMix {
+    /// A plausible omni instruction-tuning mixture.
+    fn default() -> Self {
+        TaskMix {
+            asr: 0.2,
+            spoken_qa: 0.15,
+            caption: 0.2,
+            vqa: 0.2,
+            text_only: 0.15,
+            av_dialogue: 0.1,
+        }
+    }
+}
+
+impl TaskMix {
+    fn weights(&self) -> [f64; 6] {
+        [
+            self.asr,
+            self.spoken_qa,
+            self.caption,
+            self.vqa,
+            self.text_only,
+            self.av_dialogue,
+        ]
+    }
+}
+
+/// Length-scale parameters for the generator.
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetConfig {
+    pub mix: TaskMix,
+    /// Vision downsample rate (metadata patches per LLM token).
+    pub vis_downsample: usize,
+    /// Audio downsample rate.
+    pub aud_downsample: usize,
+    /// Hard caps (paper: images above the resolution cap are resized;
+    /// sequences range "10 .. 40k" in production).
+    pub max_vis: usize,
+    pub max_aud: usize,
+    pub max_text: usize,
+    /// Global length scale multiplier (1.0 = production-like; tests use
+    /// smaller for speed).
+    pub scale: f64,
+}
+
+impl Default for DatasetConfig {
+    fn default() -> Self {
+        DatasetConfig {
+            mix: TaskMix::default(),
+            vis_downsample: 4,
+            aud_downsample: 2,
+            max_vis: 4096,
+            max_aud: 3000,
+            max_text: 4096,
+            scale: 1.0,
+        }
+    }
+}
+
+impl DatasetConfig {
+    /// A tiny-range config matched to the `test`/`e2e-small` AOT buckets
+    /// (per-example lengths stay below the compiled buffer shapes).
+    pub fn tiny(vis_downsample: usize, aud_downsample: usize)
+        -> DatasetConfig {
+        DatasetConfig {
+            mix: TaskMix::default(),
+            vis_downsample,
+            aud_downsample,
+            max_vis: 16,
+            max_aud: 16,
+            max_text: 24,
+            scale: 0.02,
+        }
+    }
+}
+
+/// Deterministic streaming generator.
+pub struct Generator {
+    cfg: DatasetConfig,
+    rng: Pcg64,
+    next_id: usize,
+}
+
+impl Generator {
+    pub fn new(cfg: DatasetConfig, seed: u64) -> Generator {
+        Generator { cfg, rng: Pcg64::new(seed), next_id: 0 }
+    }
+
+    fn lognorm(&mut self, median: f64, sigma: f64) -> f64 {
+        self.rng.lognormal((median * self.cfg.scale).max(1.0).ln(), sigma)
+    }
+
+    /// Round a metadata length up so it divides the downsample rate
+    /// (mirrors L2's grouping connector).
+    fn round_up(len: usize, r: usize) -> usize {
+        len.div_ceil(r) * r
+    }
+
+    pub fn sample(&mut self) -> Example {
+        let cfg = self.cfg;
+        let task = Task::ALL[self.rng.weighted(&cfg.mix.weights())];
+        let (vis, aud, text) = match task {
+            Task::Asr => {
+                // Audio length drives text length (strong correlation):
+                // ~ 16k samples/s, ~2.5 tokens/s of speech.
+                let a = self.lognorm(800.0, 0.7);
+                let t = (a * 0.25 * (0.8 + 0.4 * self.rng.f64())).max(2.0);
+                (0.0, a, t)
+            }
+            Task::SpokenQa => {
+                // Long question, decorrelated (often tiny) answer.
+                let a = self.lognorm(1200.0, 0.6);
+                let t = self.lognorm(30.0, 1.2);
+                (0.0, a, t)
+            }
+            Task::Caption => {
+                let v = self.lognorm(1024.0, 0.5);
+                let t = self.lognorm(40.0, 0.6);
+                (v, 0.0, t)
+            }
+            Task::Vqa => {
+                let v = self.lognorm(1024.0, 0.5);
+                let t = self.lognorm(120.0, 0.8);
+                (v, 0.0, t)
+            }
+            Task::TextOnly => {
+                let t = self.lognorm(400.0, 1.0);
+                (0.0, 0.0, t)
+            }
+            Task::AvDialogue => {
+                let v = self.lognorm(768.0, 0.5);
+                let a = self.lognorm(600.0, 0.6);
+                let t = self.lognorm(150.0, 0.7);
+                (v, a, t)
+            }
+        };
+        let vis_len = if vis > 0.0 {
+            Self::round_up(
+                (vis.round() as usize).clamp(1, cfg.max_vis),
+                cfg.vis_downsample,
+            )
+        } else {
+            0
+        };
+        let aud_len = if aud > 0.0 {
+            Self::round_up(
+                (aud.round() as usize).clamp(1, cfg.max_aud),
+                cfg.aud_downsample,
+            )
+        } else {
+            0
+        };
+        let text_len = (text.round() as usize).clamp(1, cfg.max_text);
+        let e = Example {
+            id: self.next_id,
+            task,
+            vis_len,
+            aud_len,
+            text_len,
+            vis_tokens: vis_len / cfg.vis_downsample,
+            aud_tokens: aud_len / cfg.aud_downsample,
+        };
+        self.next_id += 1;
+        e
+    }
+
+    /// Sample a batch of examples.
+    pub fn batch(&mut self, n: usize) -> Vec<Example> {
+        (0..n).map(|_| self.sample()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    fn gen(n: usize) -> Vec<Example> {
+        Generator::new(DatasetConfig::default(), 7).batch(n)
+    }
+
+    #[test]
+    fn all_tasks_appear() {
+        let ex = gen(5000);
+        for t in Task::ALL {
+            assert!(
+                ex.iter().filter(|e| e.task == t).count() > 100,
+                "task {t:?} undersampled"
+            );
+        }
+    }
+
+    #[test]
+    fn task_structure_holds() {
+        for e in gen(3000) {
+            match e.task {
+                Task::Asr | Task::SpokenQa => {
+                    assert_eq!(e.vis_len, 0);
+                    assert!(e.aud_len > 0);
+                }
+                Task::Caption | Task::Vqa => {
+                    assert!(e.vis_len > 0);
+                    assert_eq!(e.aud_len, 0);
+                }
+                Task::TextOnly => {
+                    assert_eq!(e.vis_len + e.aud_len, 0);
+                }
+                Task::AvDialogue => {
+                    assert!(e.vis_len > 0 && e.aud_len > 0);
+                }
+            }
+            assert!(e.text_len > 0);
+            assert_eq!(e.vis_len % 4, 0);
+            assert_eq!(e.aud_len % 2, 0);
+            assert_eq!(e.llm_len(), e.text_len + e.vis_tokens + e.aud_tokens);
+        }
+    }
+
+    #[test]
+    fn asr_lengths_are_correlated() {
+        let ex: Vec<Example> =
+            gen(20_000).into_iter().filter(|e| e.task == Task::Asr).collect();
+        let xs: Vec<f64> = ex.iter().map(|e| e.aud_len as f64).collect();
+        let ys: Vec<f64> = ex.iter().map(|e| e.text_len as f64).collect();
+        assert!(pearson(&xs, &ys) > 0.7, "r = {}", pearson(&xs, &ys));
+    }
+
+    #[test]
+    fn spoken_qa_lengths_are_not() {
+        let ex: Vec<Example> = gen(20_000)
+            .into_iter()
+            .filter(|e| e.task == Task::SpokenQa)
+            .collect();
+        let xs: Vec<f64> = ex.iter().map(|e| e.aud_len as f64).collect();
+        let ys: Vec<f64> = ex.iter().map(|e| e.text_len as f64).collect();
+        assert!(pearson(&xs, &ys).abs() < 0.2, "r = {}", pearson(&xs, &ys));
+    }
+
+    #[test]
+    fn modality_ratios_have_fig3_spread() {
+        // The defining property: per-modality composition ratios bear
+        // "substantial variance" — mass at 0, mass near 1, wide middle.
+        let ex = gen(20_000);
+        let vis = Summary::from_slice(
+            &ex.iter().map(|e| e.vis_ratio()).collect::<Vec<_>>(),
+        );
+        let aud = Summary::from_slice(
+            &ex.iter().map(|e| e.aud_ratio()).collect::<Vec<_>>(),
+        );
+        assert!(vis.std() > 0.25, "vis ratio std {}", vis.std());
+        assert!(aud.std() > 0.25, "aud ratio std {}", aud.std());
+        // Both extremes populated.
+        assert!(ex.iter().any(|e| e.vis_ratio() == 0.0));
+        assert!(ex.iter().any(|e| e.vis_ratio() > 0.8));
+        assert!(ex.iter().any(|e| e.aud_ratio() == 0.0));
+        assert!(ex.iter().any(|e| e.aud_ratio() > 0.8));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Generator::new(DatasetConfig::default(), 42).batch(50);
+        let b = Generator::new(DatasetConfig::default(), 42).batch(50);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tiny_config_respects_caps() {
+        let cfg = DatasetConfig::tiny(2, 2);
+        let ex = Generator::new(cfg, 1).batch(2000);
+        for e in &ex {
+            assert!(e.vis_len <= 16 && e.aud_len <= 16 && e.text_len <= 24);
+        }
+    }
+
+    fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+        let n = xs.len() as f64;
+        let mx = xs.iter().sum::<f64>() / n;
+        let my = ys.iter().sum::<f64>() / n;
+        let cov: f64 =
+            xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+        let sx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum::<f64>();
+        let sy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum::<f64>();
+        cov / (sx * sy).sqrt()
+    }
+}

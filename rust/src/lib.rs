@@ -1,0 +1,42 @@
+//! # OrchMLLM — batch post-balancing orchestration for MLLM training
+//!
+//! A production-shaped reproduction of *OrchMLLM: Orchestrate Multimodal
+//! Data with Batch Post-Balancing to Accelerate Multimodal Large Language
+//! Model Training* (CS.DC 2025) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's system contribution: the
+//!   [`balance`] post-balancing algorithms, the [`comm`] node-wise
+//!   all-to-all communicator, the [`nodewise`] rearrangement ILP, and the
+//!   [`orchestrator`] that wires them into the multimodal training
+//!   workflow. The [`sim`] discrete-event cluster simulator regenerates
+//!   every table and figure of the paper's evaluation; the [`trainer`]
+//!   runs a real tiny-MLLM end to end over the [`runtime`] PJRT client.
+//! * **Layer 2** — `python/compile/model.py`: the multimodal model
+//!   (vision encoder, audio encoder, LLM backbone) in JAX, AOT-lowered to
+//!   HLO text artifacts once at build time.
+//! * **Layer 1** — `python/compile/kernels/`: Pallas flash-attention and
+//!   fused-layernorm kernels called by every submodule.
+//!
+//! Python never runs on the training path: after `make artifacts` the
+//! rust binary is self-contained.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping each paper table/figure to a bench target.
+
+pub mod balance;
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod nodewise;
+pub mod orchestrator;
+pub mod sim;
+pub mod trainer;
+pub mod util;
+
+pub mod runtime;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,151 @@
+//! `orchmllm` — the leader CLI.
+//!
+//! Subcommands:
+//!   sim          price one system/model/cluster configuration
+//!   overall      regenerate the Fig. 8/9 overall comparison
+//!   overhead     regenerate the Table-2 overhead scaling
+//!   incoherence  regenerate the Fig. 3 dataset analysis
+//!   train        run the real tiny-MLLM DP trainer over PJRT artifacts
+//!
+//! Options accept `--key value` or `--key=value`; run with no arguments
+//! for usage.
+
+use orchmllm::config::{SimRunConfig, TrainRunConfig};
+use orchmllm::data::incoherence::IncoherenceReport;
+use orchmllm::data::synth::{DatasetConfig, Generator};
+use orchmllm::model::config::MllmConfig;
+use orchmllm::sim::engine::{simulate_run, SystemKind};
+use orchmllm::sim::report;
+use orchmllm::trainer;
+use orchmllm::util::cli::Args;
+
+const USAGE: &str = "\
+orchmllm — OrchMLLM reproduction CLI
+
+USAGE:
+  orchmllm sim         [--system orchmllm] [--model mllm-10b] [--gpus 128]
+                       [--mini-batch 60] [--steps 5] [--seed 42]
+                       [--config file.json]
+  orchmllm overall     [--gpus 2560] [--steps 3]       # Fig. 8 + 9
+  orchmllm overhead    [--steps 3]                     # Table 2
+  orchmllm incoherence [--n 100000] [--seed 7]         # Fig. 3
+  orchmllm train       [--artifacts artifacts/test] [--workers 4]
+                       [--mini-batch 4] [--steps 20] [--lr 0.05]
+                       [--no-balance]
+  orchmllm help
+";
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("sim") => cmd_sim(&args),
+        Some("overall") => cmd_overall(&args),
+        Some("overhead") => cmd_overhead(&args),
+        Some("incoherence") => cmd_incoherence(&args),
+        Some("train") => cmd_train(&args),
+        _ => print!("{USAGE}"),
+    }
+}
+
+fn cmd_sim(args: &Args) {
+    let cfg = if let Some(path) = args.get("config") {
+        SimRunConfig::load(path).expect("config file")
+    } else {
+        SimRunConfig {
+            system: SystemKind::parse(args.get_or("system", "orchmllm"))
+                .expect("unknown --system"),
+            model: args.get_or("model", "mllm-10b").to_string(),
+            gpus: args.usize("gpus", 128),
+            mini_batch: args.usize("mini-batch", 60),
+            steps: args.usize("steps", 5),
+            seed: args.u64("seed", 42),
+        }
+    };
+    let model = MllmConfig::by_name(&cfg.model).expect("unknown model");
+    let r = simulate_run(
+        cfg.system, &model, cfg.gpus, cfg.mini_batch, cfg.steps, cfg.seed,
+    );
+    println!(
+        "{} | {} | {} GPUs | mb {}\n  MFU  {:.1}%\n  TPT  {:.0} tok/s/GPU\n  \
+         step {:.3}s (comm {:.1}ms)\n  mem  {:.1} GB{}\n  dispatcher {:.2}ms",
+        r.system.name(),
+        r.model_name,
+        r.gpus,
+        r.mini_batch,
+        r.mfu * 100.0,
+        r.tpt,
+        r.step_secs,
+        r.comm_secs * 1e3,
+        r.peak_mem_gb,
+        if r.oom { " (OOM!)" } else { "" },
+        r.dispatcher_overhead_ms,
+    );
+}
+
+fn cmd_overall(args: &Args) {
+    let gpus = args.usize("gpus", 2560);
+    let steps = args.usize("steps", 3);
+    let seed = args.u64("seed", 42);
+    // Paper §8.1 mini-batch sizes: 80/60/30 balanced, 65/40/15 w/o.
+    let mb_orch = [80, 60, 30];
+    let mb_none = [65, 40, 15];
+    let mut rows = Vec::new();
+    for system in
+        [SystemKind::OrchMllm, SystemKind::Megatron, SystemKind::NoBalance]
+    {
+        let mut row = Vec::new();
+        for (mi, model) in MllmConfig::all().iter().enumerate() {
+            let mb = match system {
+                SystemKind::NoBalance => mb_none[mi],
+                _ => mb_orch[mi],
+            };
+            row.push(simulate_run(system, model, gpus, mb, steps, seed));
+        }
+        rows.push(row);
+    }
+    println!("Fig. 8/9 — overall MFU and TPT ({gpus} GPUs):\n");
+    print!("{}", report::render_overall(&rows));
+}
+
+fn cmd_overhead(args: &Args) {
+    let steps = args.usize("steps", 3);
+    let seed = args.u64("seed", 42);
+    let model = MllmConfig::mllm_10b();
+    let cells: Vec<_> = [64usize, 128, 256, 512, 1024, 2560]
+        .iter()
+        .map(|&g| {
+            simulate_run(SystemKind::OrchMllm, &model, g, 60, steps, seed)
+        })
+        .collect();
+    println!(
+        "Table 2 — dispatcher overhead vs cluster size (MLLM-10B, mb 60):\n"
+    );
+    print!("{}", report::render_overhead(&cells));
+}
+
+fn cmd_incoherence(args: &Args) {
+    let n = args.usize("n", 100_000);
+    let seed = args.u64("seed", 7);
+    let ex = Generator::new(DatasetConfig::default(), seed).batch(n);
+    let rep = IncoherenceReport::from_examples(&ex, 20);
+    println!("{}", rep.render());
+}
+
+fn cmd_train(args: &Args) {
+    let cfg = TrainRunConfig {
+        artifacts: args.get_or("artifacts", "artifacts/test").to_string(),
+        workers: args.usize("workers", 4),
+        mini_batch: args.usize("mini-batch", 4),
+        steps: args.usize("steps", 20),
+        lr: args.f64("lr", 0.05),
+        seed: args.u64("seed", 0),
+        balance: !args.flag("no-balance"),
+    };
+    match trainer::run(&cfg) {
+        Ok(summary) => println!("{summary}"),
+        Err(e) => {
+            eprintln!("train failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Lightweight metrics: named timers, counters, and rolling step logs
+//! used by the trainer and the bench harnesses.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// A registry of named duration samples and counters.
+#[derive(Default)]
+pub struct Metrics {
+    timers: BTreeMap<String, Summary>,
+    counters: BTreeMap<String, f64>,
+}
+
+/// RAII timer guard: records on drop.
+pub struct TimerGuard<'a> {
+    metrics: &'a mut Metrics,
+    name: String,
+    start: Instant,
+}
+
+impl Drop for TimerGuard<'_> {
+    fn drop(&mut self) {
+        let secs = self.start.elapsed().as_secs_f64();
+        self.metrics
+            .timers
+            .entry(std::mem::take(&mut self.name))
+            .or_default()
+            .push(secs);
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Record an externally measured duration (seconds).
+    pub fn record(&mut self, name: &str, secs: f64) {
+        self.timers.entry(name.to_string()).or_default().push(secs);
+    }
+
+    /// Time a closure.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn count(&mut self, name: &str, by: f64) {
+        *self.counters.entry(name.to_string()).or_insert(0.0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> f64 {
+        self.counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn timer(&self, name: &str) -> Option<&Summary> {
+        self.timers.get(name)
+    }
+
+    /// Human-readable dump, sorted by name.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, s) in &self.timers {
+            out.push_str(&format!(
+                "{name:<32} n={:<6} mean={:>10.3}ms p99={:>10.3}ms\n",
+                s.len(),
+                s.mean() * 1e3,
+                s.percentile(99.0) * 1e3,
+            ));
+        }
+        for (name, v) in &self.counters {
+            out.push_str(&format!("{name:<32} total={v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = Metrics::new();
+        m.record("step", 0.010);
+        m.record("step", 0.020);
+        m.count("tokens", 128.0);
+        m.count("tokens", 64.0);
+        assert_eq!(m.timer("step").unwrap().len(), 2);
+        assert!((m.timer("step").unwrap().mean() - 0.015).abs() < 1e-12);
+        assert_eq!(m.counter("tokens"), 192.0);
+    }
+
+    #[test]
+    fn time_wraps_closures() {
+        let mut m = Metrics::new();
+        let v = m.time("work", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(m.timer("work").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn render_contains_names() {
+        let mut m = Metrics::new();
+        m.record("abc", 1.0);
+        m.count("xyz", 2.0);
+        let s = m.render();
+        assert!(s.contains("abc") && s.contains("xyz"));
+    }
+}

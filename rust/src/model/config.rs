@@ -1,0 +1,155 @@
+//! Table-1 model configurations.
+//!
+//! Each MLLM = LLM backbone + vision encoder (ViT) + audio encoder
+//! (Whisper-style ConvTransformer), with MLP connectors and per-modality
+//! downsample rates (paper §8, "Models" / "Input preprocessing").
+
+/// Which transformer flavour a submodule uses (affects parameter and
+/// FLOP accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockStyle {
+    /// Qwen2-style LLM trunk: GQA attention (~3.4 h² with the Table-1
+    /// head configs) + SwiGLU MLP (3 h·ffn).
+    Gqa,
+    /// ViT/Whisper-style encoder: MHA (4 h²) + 2-matmul MLP (2 h·ffn).
+    Encoder,
+}
+
+/// One submodule's transformer shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SubmoduleConfig {
+    pub layers: usize,
+    pub hidden: usize,
+    pub ffn_hidden: usize,
+    pub style: BlockStyle,
+}
+
+impl SubmoduleConfig {
+    /// Approximate parameter count per the block style (embeddings and
+    /// connectors excluded — small at Table-1 scales and identical
+    /// across the systems under comparison).
+    pub fn params(&self) -> f64 {
+        let h = self.hidden as f64;
+        let f = self.ffn_hidden as f64;
+        let (attn, mlp) = match self.style {
+            BlockStyle::Gqa => (3.4 * h * h, 3.0 * h * f),
+            BlockStyle::Encoder => (4.0 * h * h, 2.0 * h * f),
+        };
+        self.layers as f64 * (attn + mlp)
+    }
+}
+
+/// A full MLLM (Table 1 row) plus preprocessing parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MllmConfig {
+    pub name: &'static str,
+    pub llm: SubmoduleConfig,
+    pub vision: SubmoduleConfig,
+    pub audio: SubmoduleConfig,
+    /// Encoder-output downsample before the connector (paper: 1/4/4 for
+    /// vision, 2/2/4 for audio across the three sizes).
+    pub vis_downsample: usize,
+    pub aud_downsample: usize,
+    /// Upper bound on image resolution (patch grid side comes from this
+    /// and patch size 14).
+    pub max_image_res: usize,
+}
+
+impl MllmConfig {
+    pub fn mllm_10b() -> MllmConfig {
+        MllmConfig {
+            name: "MLLM-10B",
+            llm: SubmoduleConfig { layers: 28, hidden: 3584, ffn_hidden: 18944, style: BlockStyle::Gqa },
+            vision: SubmoduleConfig { layers: 36, hidden: 2048, ffn_hidden: 8192, style: BlockStyle::Encoder },
+            audio: SubmoduleConfig { layers: 32, hidden: 1280, ffn_hidden: 5120, style: BlockStyle::Encoder },
+            vis_downsample: 1,
+            aud_downsample: 2,
+            max_image_res: 448,
+        }
+    }
+
+    pub fn mllm_18b() -> MllmConfig {
+        MllmConfig {
+            name: "MLLM-18B",
+            llm: SubmoduleConfig { layers: 48, hidden: 5120, ffn_hidden: 13824, style: BlockStyle::Gqa },
+            vision: SubmoduleConfig { layers: 40, hidden: 2400, ffn_hidden: 9600, style: BlockStyle::Encoder },
+            audio: SubmoduleConfig { layers: 32, hidden: 1280, ffn_hidden: 5120, style: BlockStyle::Encoder },
+            vis_downsample: 4,
+            aud_downsample: 2,
+            max_image_res: 672,
+        }
+    }
+
+    pub fn mllm_84b() -> MllmConfig {
+        MllmConfig {
+            name: "MLLM-84B",
+            llm: SubmoduleConfig { layers: 80, hidden: 8192, ffn_hidden: 29568, style: BlockStyle::Gqa },
+            vision: SubmoduleConfig { layers: 45, hidden: 3200, ffn_hidden: 12800, style: BlockStyle::Encoder },
+            audio: SubmoduleConfig { layers: 48, hidden: 3072, ffn_hidden: 12288, style: BlockStyle::Encoder },
+            vis_downsample: 4,
+            aud_downsample: 4,
+            max_image_res: 896,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<MllmConfig> {
+        match name.to_ascii_lowercase().as_str() {
+            "mllm-10b" | "10b" => Some(Self::mllm_10b()),
+            "mllm-18b" | "18b" => Some(Self::mllm_18b()),
+            "mllm-84b" | "84b" => Some(Self::mllm_84b()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [MllmConfig; 3] {
+        [Self::mllm_10b(), Self::mllm_18b(), Self::mllm_84b()]
+    }
+
+    pub fn total_params(&self) -> f64 {
+        self.llm.params() + self.vision.params() + self.audio.params()
+    }
+
+    /// Max vision patches per image: (res/14)² at the configured cap.
+    pub fn max_patches(&self) -> usize {
+        let side = self.max_image_res / 14;
+        side * side
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_param_counts_are_close() {
+        // Paper designations: 7B/2B/0.6B, 14B/3B/0.6B, 72B/6B/6B.
+        let m10 = MllmConfig::mllm_10b();
+        assert!((m10.llm.params() / 1e9 - 7.0).abs() < 1.5, "{}", m10.llm.params() / 1e9);
+        assert!((m10.vision.params() / 1e9 - 2.0).abs() < 0.7);
+        assert!((m10.audio.params() / 1e9 - 0.6).abs() < 0.3);
+
+        let m84 = MllmConfig::mllm_84b();
+        assert!((m84.llm.params() / 1e9 - 72.0).abs() < 10.0);
+        assert!((m84.total_params() / 1e9 - 84.0).abs() < 12.0);
+    }
+
+    #[test]
+    fn sizes_are_ordered() {
+        let [a, b, c] = MllmConfig::all();
+        assert!(a.total_params() < b.total_params());
+        assert!(b.total_params() < c.total_params());
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        assert_eq!(MllmConfig::by_name("mllm-18b").unwrap().name, "MLLM-18B");
+        assert_eq!(MllmConfig::by_name("84B").unwrap().name, "MLLM-84B");
+        assert!(MllmConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn max_patches_scale_with_resolution() {
+        assert_eq!(MllmConfig::mllm_10b().max_patches(), 32 * 32);
+        assert_eq!(MllmConfig::mllm_84b().max_patches(), 64 * 64);
+    }
+}

@@ -1,0 +1,12 @@
+//! MLLM architecture descriptions and analytic FLOPs/memory models.
+//!
+//! [`config`] carries the paper's Table-1 submodule configurations
+//! (MLLM-10B / 18B / 84B); [`flops`] converts them into the Eq.-2 cost
+//! coefficients (α, β per phase) and absolute FLOPs/bytes that the
+//! cluster simulator prices steps with.
+
+pub mod config;
+pub mod flops;
+
+pub use config::{MllmConfig, SubmoduleConfig};
+pub use flops::{PhaseKind, SubmoduleCost};

@@ -1,0 +1,285 @@
+//! Exact node-wise rearrangement by branch-and-bound.
+//!
+//! Formulation (equivalent to the paper's ILP): assign each logical
+//! destination batch `j` to a node `m` (capacity c batches per node).
+//! Instance `i`'s inter-node send volume is
+//!
+//! ```text
+//! cost_i = T_i − Σ_{j → node(i)} V[i][j]
+//! ```
+//!
+//! where `T_i = Σ_j V[i][j]` minus the traffic V[i][j] for batches
+//! placed on i's own node (intra-node traffic is free under Eq. 5).
+//! Minimize `max_i cost_i`. Batches are branched in decreasing total
+//! volume; the bound below is admissible so the first complete solution
+//! found under best-first cannot be improved once the open set's bound
+//! exceeds the incumbent.
+
+use crate::comm::topology::Topology;
+use crate::comm::volume::VolumeMatrix;
+
+use super::NodewisePlan;
+
+struct Search<'a> {
+    topo: &'a Topology,
+    v: &'a VolumeMatrix,
+    d: usize,
+    nodes: usize,
+    /// batch order for branching (indices into 0..d).
+    order: Vec<usize>,
+    /// total send volume per instance.
+    totals: Vec<f64>,
+    best_obj: f64,
+    best_assign: Vec<usize>, // batch -> node
+}
+
+impl<'a> Search<'a> {
+    /// Objective if every *remaining* batch could be placed optimally
+    /// for each instance independently (admissible lower bound): each
+    /// instance keeps its current savings plus the max possible savings
+    /// from remaining batches, capped by node capacity.
+    fn lower_bound(
+        &self,
+        savings: &[f64],
+        node_left: &[usize],
+        placed: usize,
+    ) -> f64 {
+        // cost_i >= T_i - savings_i - (best-case future savings for i).
+        // Future savings for instance i are at most the sum of the
+        // largest (capacity left on i's node) volumes among unplaced
+        // batches.
+        let mut bound = 0.0f64;
+        for i in 0..self.d {
+            let m = self.topo.node_of(i);
+            let cap_left = node_left[m];
+            if cap_left == 0 {
+                bound = bound.max(self.totals[i] - savings[i]);
+                continue;
+            }
+            let mut vols: Vec<f64> = self.order[placed..]
+                .iter()
+                .map(|&j| self.v.get(i, j))
+                .collect();
+            vols.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+            let future: f64 = vols.iter().take(cap_left).sum();
+            bound = bound.max(self.totals[i] - savings[i] - future);
+        }
+        bound.max(0.0)
+    }
+
+    fn dfs(
+        &mut self,
+        placed: usize,
+        assign: &mut Vec<usize>,
+        savings: &mut Vec<f64>,
+        node_left: &mut Vec<usize>,
+    ) {
+        if placed == self.d {
+            // Objective: max over instances of totals - savings.
+            let obj = (0..self.d)
+                .map(|i| self.totals[i] - savings[i])
+                .fold(0.0f64, f64::max);
+            if obj < self.best_obj {
+                self.best_obj = obj;
+                self.best_assign = assign.clone();
+            }
+            return;
+        }
+        if self.lower_bound(savings, node_left, placed) >= self.best_obj {
+            return; // prune
+        }
+        let j = self.order[placed];
+        // Try nodes in descending savings for this batch (good-first).
+        let mut cand: Vec<usize> =
+            (0..self.nodes).filter(|&m| node_left[m] > 0).collect();
+        let node_saving = |m: usize| -> f64 {
+            (0..self.d)
+                .filter(|&i| self.topo.node_of(i) == m)
+                .map(|i| self.v.get(i, j))
+                .sum()
+        };
+        cand.sort_unstable_by(|&a, &b| {
+            node_saving(b).partial_cmp(&node_saving(a)).unwrap()
+        });
+        for m in cand {
+            node_left[m] -= 1;
+            assign[j] = m;
+            let members: Vec<usize> = (0..self.d)
+                .filter(|&i| self.topo.node_of(i) == m)
+                .collect();
+            for &i in &members {
+                savings[i] += self.v.get(i, j);
+            }
+            self.dfs(placed + 1, assign, savings, node_left);
+            for &i in &members {
+                savings[i] -= self.v.get(i, j);
+            }
+            node_left[m] += 1;
+        }
+    }
+}
+
+/// Exact branch-and-bound solve. Exponential worst case — intended for
+/// d ≤ 16 (≤ 2 nodes of 8, or 4 nodes of 4) and as the oracle for the
+/// local-search solver's tests.
+pub fn solve_exact(topo: &Topology, v: &VolumeMatrix) -> NodewisePlan {
+    let d = v.d;
+    let nodes = topo.nodes();
+    let cap = topo.per_node;
+    let totals: Vec<f64> =
+        (0..d).map(|i| (0..d).map(|j| v.get(i, j)).sum()).collect();
+
+    // Branch on batches in decreasing total volume (most constrained
+    // first).
+    let mut order: Vec<usize> = (0..d).collect();
+    let batch_vol = |j: usize| -> f64 {
+        (0..d).map(|i| v.get(i, j)).sum()
+    };
+    order.sort_unstable_by(|&a, &b| {
+        batch_vol(b).partial_cmp(&batch_vol(a)).unwrap()
+    });
+
+    // Seed the incumbent with the identity assignment so pruning has a
+    // finite bound immediately.
+    let identity = NodewisePlan::identity(d, topo, v);
+    let mut search = Search {
+        topo,
+        v,
+        d,
+        nodes,
+        order,
+        totals,
+        best_obj: identity.max_inter + 1e-9,
+        best_assign: (0..d).map(|j| topo.node_of(j)).collect(),
+    };
+    let mut assign = search.best_assign.clone();
+    let mut savings = vec![0.0; d];
+    let mut node_left = vec![cap; nodes];
+    // Last node may be partial.
+    if d % cap != 0 {
+        node_left[nodes - 1] = d % cap;
+    }
+    search.dfs(0, &mut assign, &mut savings, &mut node_left);
+
+    // Materialize batch->instance permutation from batch->node
+    // assignment: fill each node's slots in batch-index order.
+    let mut next_slot: Vec<usize> = (0..nodes).map(|m| m * cap).collect();
+    let mut perm = vec![0usize; d];
+    for j in 0..d {
+        let m = search.best_assign[j];
+        perm[j] = next_slot[m];
+        next_slot[m] += 1;
+    }
+    NodewisePlan {
+        max_inter: v.max_inter_node(topo, &perm),
+        total_inter: v.total_inter_node(topo, &perm),
+        perm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn topo(d: usize, c: usize) -> Topology {
+        Topology {
+            instances: d,
+            per_node: c,
+            intra_bw: 450e9,
+            inter_bw: 50e9,
+            base_latency: 0.0,
+        }
+    }
+
+    #[test]
+    fn trivially_local_when_traffic_is_diagonal_blocks() {
+        // All traffic targets batches whose index is on the sender's own
+        // node under identity — optimum is zero inter-node.
+        let t = topo(8, 4);
+        let mut v = VolumeMatrix::zeros(8);
+        for i in 0..8 {
+            let j = (i + 1) % 4 + (i / 4) * 4; // same node block
+            v.add(i, j, 100.0);
+        }
+        let plan = solve_exact(&t, &v);
+        assert_eq!(plan.max_inter, 0.0);
+    }
+
+    #[test]
+    fn finds_the_obvious_swap() {
+        // Instance block {0,1} sends everything to batches {2,3} and
+        // vice versa: swapping node blocks zeroes inter-node traffic.
+        let t = topo(4, 2);
+        let mut v = VolumeMatrix::zeros(4);
+        v.add(0, 2, 50.0);
+        v.add(1, 3, 50.0);
+        v.add(2, 0, 50.0);
+        v.add(3, 1, 50.0);
+        let plan = solve_exact(&t, &v);
+        assert_eq!(plan.max_inter, 0.0, "perm={:?}", plan.perm);
+    }
+
+    #[test]
+    fn exhaustive_verification_small() {
+        // Compare B&B optimum against brute-force over all batch->node
+        // assignments for d=6, c=2 (90 partitions).
+        use crate::nodewise::tests::random_volume;
+        use crate::util::rng::Pcg64;
+        let t = topo(6, 2);
+        let mut rng = Pcg64::new(11);
+        for _ in 0..10 {
+            let v = random_volume(6, &mut rng, 0.4);
+            let plan = solve_exact(&t, &v);
+            let brute = brute_force(&t, &v);
+            assert!(
+                (plan.max_inter - brute).abs() < 1e-6,
+                "B&B {} != brute {}",
+                plan.max_inter,
+                brute
+            );
+        }
+    }
+
+    fn brute_force(t: &Topology, v: &VolumeMatrix) -> f64 {
+        let d = v.d;
+        let mut perm: Vec<usize> = (0..d).collect();
+        let mut best = f64::INFINITY;
+        permute(&mut perm, 0, &mut |p: &[usize]| {
+            best = best.min(v.max_inter_node(t, p));
+        });
+        best
+    }
+
+    fn permute<F: FnMut(&[usize])>(
+        xs: &mut Vec<usize>,
+        k: usize,
+        f: &mut F,
+    ) {
+        if k == xs.len() {
+            f(xs);
+            return;
+        }
+        for i in k..xs.len() {
+            xs.swap(k, i);
+            permute(xs, k + 1, f);
+            xs.swap(k, i);
+        }
+    }
+
+    #[test]
+    fn prop_never_worse_than_identity() {
+        use crate::nodewise::tests::random_volume;
+        check("exact <= identity", 40, |g| {
+            let c = *g.choose(&[2usize, 4]);
+            let nodes = g.usize(2, 4);
+            let d = c * nodes;
+            let t = topo(d, c);
+            let mut rng = crate::util::rng::Pcg64::new(g.seed);
+            let v = random_volume(d, &mut rng, g.f64(0.0, 0.8));
+            let plan = solve_exact(&t, &v);
+            let id = NodewisePlan::identity(d, &t, &v);
+            assert!(plan.max_inter <= id.max_inter + 1e-9);
+        });
+    }
+}

@@ -1,0 +1,326 @@
+//! Batch Post-Balancing Dispatcher (paper §5).
+//!
+//! One dispatcher serves one phase. Per training step it:
+//!
+//! 1. All-Gathers the sequence *lengths* only (negligible volume — the
+//!    §5.2.1 insight);
+//! 2. runs the configured Post-Balancing algorithm on every instance
+//!    (deterministic, so all instances agree without extra traffic);
+//! 3. runs the Node-wise Rearrangement Algorithm to permute the
+//!    destination batch order for the hierarchical topology (§5.2.2);
+//! 4. prices (simulator) / executes (trainer) the payload rearrangement
+//!    on the chosen communicator: the paper's All-to-All or the
+//!    All-Gather strawman it is compared against (Fig. 12).
+//!
+//! Steps 1–3 are "computation" in the paper's taxonomy and run inside
+//! the prefetch overlap; step 4 is the only on-critical-path work.
+
+use std::time::Instant;
+
+use crate::balance::types::{Assignment, ExampleRef, Policy};
+use crate::balance::{self};
+use crate::comm::costmodel::{allgather_cost, alltoall_cost, CollectiveCost};
+use crate::comm::topology::Topology;
+use crate::comm::volume::VolumeMatrix;
+use crate::nodewise;
+
+use super::rearrangement::Rearrangement;
+
+/// Which payload communicator realizes the rearrangement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Communicator {
+    /// The paper's Node-wise All-to-All (node-wise step optional).
+    AllToAll { nodewise: bool },
+    /// Strawman: All-Gather everything everywhere (§5.2.1).
+    AllGather,
+}
+
+/// A dispatcher for one phase.
+#[derive(Clone, Copy, Debug)]
+pub struct Dispatcher {
+    pub policy: Policy,
+    pub communicator: Communicator,
+}
+
+/// The dispatcher's output for one step of one phase.
+#[derive(Clone, Debug)]
+pub struct DispatchPlan {
+    /// New mini-batches: `assignment[i]` = examples instance i computes.
+    /// Examples with zero length in this phase are omitted.
+    pub assignment: Assignment,
+    /// Physical routing for the phase *inputs* (after the node-wise
+    /// permutation).
+    pub route: Rearrangement,
+    /// Node-wise permutation applied (identity when disabled).
+    pub nodewise_perm: Vec<usize>,
+    /// Priced communication of the input rearrangement.
+    pub comm: CollectiveCost,
+    /// Peak staging bytes on any instance (AllGather inflates this).
+    pub peak_bytes: f64,
+    /// Dispatcher *computation* time (overlappable, §6).
+    pub compute_nanos: u128,
+}
+
+impl DispatchPlan {
+    /// Per-instance destination for every participating example id.
+    pub fn destination_of(&self, n: usize) -> Vec<Option<usize>> {
+        let mut dst = vec![None; n];
+        for (i, batch) in self.assignment.iter().enumerate() {
+            for e in batch {
+                dst[e.id] = Some(i);
+            }
+        }
+        dst
+    }
+}
+
+impl Dispatcher {
+    /// Plan this phase's rearrangement.
+    ///
+    /// * `placement[g]` — instance currently holding example g.
+    /// * `lens[g]` — example g's sequence length in this phase (0 =
+    ///   does not participate, stays put).
+    /// * `payload[g]` — bytes that must move if g changes instance.
+    pub fn dispatch(
+        &self,
+        topo: &Topology,
+        placement: &[usize],
+        lens: &[usize],
+        payload: &[f64],
+    ) -> DispatchPlan {
+        let t0 = Instant::now();
+        let d = topo.instances;
+        let n = lens.len();
+        assert_eq!(placement.len(), n);
+        assert_eq!(payload.len(), n);
+
+        // Participating examples only.
+        let active: Vec<usize> =
+            (0..n).filter(|&g| lens[g] > 0).collect();
+        let active_lens: Vec<usize> =
+            active.iter().map(|&g| lens[g]).collect();
+
+        // Step 2: post-balancing over the active set. NoBalance keeps
+        // the sampled placement (the "OrchMLLM w/o balance" baseline).
+        let assignment: Assignment = if self.policy == Policy::NoBalance {
+            let mut a: Assignment = vec![Vec::new(); d];
+            for &g in &active {
+                a[placement[g]].push(ExampleRef { id: g, len: lens[g] });
+            }
+            a
+        } else {
+            let local = balance::balance(self.policy, &active_lens, d);
+            // Map algorithm-local ids back to global example ids.
+            local
+                .into_iter()
+                .map(|batch| {
+                    batch
+                        .into_iter()
+                        .map(|e| ExampleRef {
+                            id: active[e.id],
+                            len: e.len,
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+
+        // Logical destination per active example.
+        let mut logical_to = vec![usize::MAX; n];
+        for (i, batch) in assignment.iter().enumerate() {
+            for e in batch {
+                logical_to[e.id] = i;
+            }
+        }
+
+        // Step 3: node-wise permutation of destination batches.
+        let mut volume = VolumeMatrix::zeros(d);
+        for &g in &active {
+            volume.add(placement[g], logical_to[g], payload[g]);
+        }
+        let nodewise_perm = match self.communicator {
+            Communicator::AllToAll { nodewise: true } => {
+                nodewise::rearrange(topo, &volume).perm
+            }
+            _ => VolumeMatrix::identity_perm(d),
+        };
+
+        // Physical route (inactive examples stay put).
+        let from: Vec<usize> = placement.to_vec();
+        let to: Vec<usize> = (0..n)
+            .map(|g| {
+                if logical_to[g] == usize::MAX {
+                    placement[g]
+                } else {
+                    nodewise_perm[logical_to[g]]
+                }
+            })
+            .collect();
+        let route = Rearrangement::new(from, to);
+
+        // Remap the assignment to physical instances.
+        let mut physical: Assignment = vec![Vec::new(); d];
+        for (logical, batch) in assignment.into_iter().enumerate() {
+            physical[nodewise_perm[logical]] = batch;
+        }
+
+        // Step 4 pricing.
+        let (comm, peak_bytes) = match self.communicator {
+            Communicator::AllToAll { .. } => {
+                let v = route.volume(d, payload);
+                let c =
+                    alltoall_cost(topo, &v, &VolumeMatrix::identity_perm(d));
+                (c, c.peak_bytes)
+            }
+            Communicator::AllGather => {
+                // Everyone receives every instance's whole payload.
+                let per_instance: Vec<usize> = (0..d)
+                    .map(|i| {
+                        (0..n)
+                            .filter(|&g| placement[g] == i)
+                            .map(|g| payload[g] as usize)
+                            .sum()
+                    })
+                    .collect();
+                let c = allgather_cost(topo, &per_instance);
+                (c, c.peak_bytes)
+            }
+        };
+
+        DispatchPlan {
+            assignment: physical,
+            route,
+            nodewise_perm,
+            comm,
+            peak_bytes,
+            compute_nanos: t0.elapsed().as_nanos(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::cost::CostModel;
+    use crate::util::rng::Pcg64;
+
+    fn setup(d: usize, n_per: usize, seed: u64)
+        -> (Topology, Vec<usize>, Vec<usize>, Vec<f64>) {
+        let topo = Topology::h100(d);
+        let mut rng = Pcg64::new(seed);
+        let n = d * n_per;
+        let placement: Vec<usize> = (0..n).map(|g| g / n_per).collect();
+        let lens: Vec<usize> =
+            (0..n).map(|_| rng.range(1, 2048)).collect();
+        let payload: Vec<f64> =
+            lens.iter().map(|&l| (l * 4) as f64).collect();
+        (topo, placement, lens, payload)
+    }
+
+    #[test]
+    fn balanced_dispatch_reduces_imbalance() {
+        let (topo, placement, lens, payload) = setup(8, 16, 1);
+        let disp = Dispatcher {
+            policy: Policy::GreedyUnpadded,
+            communicator: Communicator::AllToAll { nodewise: true },
+        };
+        let plan = disp.dispatch(&topo, &placement, &lens, &payload);
+        let cm = CostModel::Linear { alpha: 1.0 };
+        // Identity (no balance) batches.
+        let none = Dispatcher {
+            policy: Policy::NoBalance,
+            communicator: Communicator::AllToAll { nodewise: false },
+        };
+        let base = none.dispatch(&topo, &placement, &lens, &payload);
+        assert!(
+            cm.imbalance(&plan.assignment) < cm.imbalance(&base.assignment),
+            "{} !< {}",
+            cm.imbalance(&plan.assignment),
+            cm.imbalance(&base.assignment)
+        );
+        assert!(cm.imbalance(&plan.assignment) < 1.05);
+    }
+
+    #[test]
+    fn no_balance_plan_never_moves() {
+        let (topo, placement, lens, payload) = setup(4, 8, 2);
+        let disp = Dispatcher {
+            policy: Policy::NoBalance,
+            communicator: Communicator::AllToAll { nodewise: false },
+        };
+        let plan = disp.dispatch(&topo, &placement, &lens, &payload);
+        assert_eq!(plan.route.moved(), 0);
+        assert!(plan.comm.seconds <= topo.base_latency + 1e-12);
+    }
+
+    #[test]
+    fn zero_length_examples_stay_home() {
+        let topo = Topology::h100(2);
+        let placement = vec![0, 0, 1, 1];
+        let lens = vec![10, 0, 7, 0];
+        let payload = vec![40.0, 0.0, 28.0, 0.0];
+        let disp = Dispatcher {
+            policy: Policy::GreedyUnpadded,
+            communicator: Communicator::AllToAll { nodewise: false },
+        };
+        let plan = disp.dispatch(&topo, &placement, &lens, &payload);
+        assert_eq!(plan.route.to[1], 0);
+        assert_eq!(plan.route.to[3], 1);
+        let assigned: usize =
+            plan.assignment.iter().map(|b| b.len()).sum();
+        assert_eq!(assigned, 2); // only the active examples
+    }
+
+    #[test]
+    fn allgather_costs_more_than_alltoall() {
+        let (topo, placement, lens, payload) = setup(16, 8, 3);
+        let a2a = Dispatcher {
+            policy: Policy::GreedyUnpadded,
+            communicator: Communicator::AllToAll { nodewise: true },
+        }
+        .dispatch(&topo, &placement, &lens, &payload);
+        let ag = Dispatcher {
+            policy: Policy::GreedyUnpadded,
+            communicator: Communicator::AllGather,
+        }
+        .dispatch(&topo, &placement, &lens, &payload);
+        assert!(ag.comm.seconds > a2a.comm.seconds);
+        assert!(ag.peak_bytes > a2a.peak_bytes);
+    }
+
+    #[test]
+    fn nodewise_reduces_inter_node_traffic() {
+        let (topo, placement, lens, payload) = setup(32, 8, 4);
+        let with = Dispatcher {
+            policy: Policy::GreedyUnpadded,
+            communicator: Communicator::AllToAll { nodewise: true },
+        }
+        .dispatch(&topo, &placement, &lens, &payload);
+        let without = Dispatcher {
+            policy: Policy::GreedyUnpadded,
+            communicator: Communicator::AllToAll { nodewise: false },
+        }
+        .dispatch(&topo, &placement, &lens, &payload);
+        let inter_with = with.route.inter_node_bytes(&topo, &payload);
+        let inter_without =
+            without.route.inter_node_bytes(&topo, &payload);
+        assert!(
+            inter_with <= inter_without,
+            "{inter_with} > {inter_without}"
+        );
+    }
+
+    #[test]
+    fn destinations_cover_active_examples() {
+        let (topo, placement, lens, payload) = setup(4, 4, 5);
+        let plan = Dispatcher {
+            policy: Policy::BinaryPadded,
+            communicator: Communicator::AllToAll { nodewise: false },
+        }
+        .dispatch(&topo, &placement, &lens, &payload);
+        let dst = plan.destination_of(lens.len());
+        for (g, d) in dst.iter().enumerate() {
+            assert_eq!(d.is_some(), lens[g] > 0);
+        }
+    }
+}

@@ -1,0 +1,390 @@
+//! MLLM Global Orchestrator (paper §6).
+//!
+//! Coordinates the per-phase dispatchers across one training step:
+//!
+//! * **Subsequences assembly** — the LLM dispatcher balances on the
+//!   *interleaved* sequence length (text + all encoder subsequences),
+//!   not the text length;
+//! * **Rearrangement composition** — encoder outputs route directly
+//!   from their encoder-phase instance to their LLM-phase instance
+//!   (`Π_M ∘ Π_Eₖ⁻¹`), one All-to-All per encoder instead of two;
+//! * **Computation overhead overlapping** — `plan_step` is pure
+//!   computation over sequence lengths, designed to run inside the
+//!   dataloader prefetch (see [`crate::data::loader`]); only the
+//!   All-to-All operations land on the critical path.
+//!
+//! The resulting [`StepPlan`] is consumed by both the discrete-event
+//! simulator (pricing) and the real trainer (execution) — the same plan
+//! object, so benchmarks measure the logic that ships.
+
+use crate::balance::types::Policy;
+use crate::comm::costmodel::{alltoall_cost, CollectiveCost};
+use crate::comm::topology::Topology;
+use crate::comm::volume::VolumeMatrix;
+use crate::data::synth::Example;
+use crate::model::flops::PhaseKind;
+
+use super::dispatcher::{Communicator, DispatchPlan, Dispatcher};
+use super::rearrangement::Rearrangement;
+
+/// Orchestrator configuration: which phases balance, with what
+/// algorithm, over which communicator.
+#[derive(Clone, Copy, Debug)]
+pub struct OrchestratorConfig {
+    pub vision_policy: Policy,
+    pub audio_policy: Policy,
+    pub llm_policy: Policy,
+    pub communicator: Communicator,
+    /// Rearrangement Composition on (off = reset-to-origin two-hop).
+    pub composition: bool,
+    /// Bytes per element of encoder-output embeddings (LLM hidden ·
+    /// dtype size) — the payload of the composed routes.
+    pub embed_bytes_per_token: f64,
+    /// Bytes per metadata unit for each encoder input.
+    pub vis_bytes_per_unit: f64,
+    pub aud_bytes_per_unit: f64,
+    /// Bytes per text token moved in the LLM-phase rearrangement (ids +
+    /// targets + masks).
+    pub text_bytes_per_token: f64,
+}
+
+impl OrchestratorConfig {
+    /// The paper's full system: tailored algorithms per phase
+    /// (no-padding for vision patches, padded for the conv audio
+    /// encoder, no-padding for the LLM — §8 "Input preprocessing"),
+    /// node-wise All-to-All, composition on.
+    pub fn orchmllm(embed_bytes: f64) -> OrchestratorConfig {
+        OrchestratorConfig {
+            vision_policy: Policy::GreedyUnpadded,
+            audio_policy: Policy::BinaryPadded,
+            llm_policy: Policy::GreedyUnpadded,
+            communicator: Communicator::AllToAll { nodewise: true },
+            composition: true,
+            embed_bytes_per_token: embed_bytes,
+            vis_bytes_per_unit: 588.0 * 2.0, // 14x14x3 patch, bf16
+            aud_bytes_per_unit: 128.0 * 2.0, // mel frame, bf16
+            text_bytes_per_token: 16.0,      // id + target + masks
+        }
+    }
+
+    /// Baseline: no balancing anywhere ("OrchMLLM w/o balance").
+    pub fn no_balance(embed_bytes: f64) -> OrchestratorConfig {
+        OrchestratorConfig {
+            vision_policy: Policy::NoBalance,
+            audio_policy: Policy::NoBalance,
+            llm_policy: Policy::NoBalance,
+            ..Self::orchmllm(embed_bytes)
+        }
+    }
+
+    /// Pre-balancing stand-in (Fig. 10): balance only the LLM phase.
+    pub fn llm_only(embed_bytes: f64) -> OrchestratorConfig {
+        OrchestratorConfig {
+            vision_policy: Policy::NoBalance,
+            audio_policy: Policy::NoBalance,
+            ..Self::orchmllm(embed_bytes)
+        }
+    }
+}
+
+/// One phase's plan plus the composed output route (encoders only).
+#[derive(Clone, Debug)]
+pub struct EncoderPlan {
+    pub plan: DispatchPlan,
+    /// Encoder outputs: encoder-phase instance → LLM-phase instance
+    /// (composed), or the two-hop pair when composition is off.
+    pub out_route: Rearrangement,
+    /// Priced communication of the output rearrangement (composed: one
+    /// All-to-All; uncomposed: two).
+    pub out_comm: CollectiveCost,
+    /// Inter-node bytes of the output route (Fig.-13 metric).
+    pub out_inter_node_bytes: f64,
+}
+
+/// The full step plan the simulator prices and the trainer executes.
+#[derive(Clone, Debug)]
+pub struct StepPlan {
+    pub d: usize,
+    pub examples: Vec<Example>,
+    /// Where each example was sampled (home instance).
+    pub home: Vec<usize>,
+    pub vision: EncoderPlan,
+    pub audio: EncoderPlan,
+    pub llm: DispatchPlan,
+    /// Total dispatcher computation time (overlappable).
+    pub compute_nanos: u128,
+}
+
+impl StepPlan {
+    /// Sum of on-critical-path communication seconds.
+    pub fn comm_seconds(&self) -> f64 {
+        self.vision.plan.comm.seconds
+            + self.audio.plan.comm.seconds
+            + self.vision.out_comm.seconds
+            + self.audio.out_comm.seconds
+            + self.llm.comm.seconds
+    }
+
+    /// Phase mini-batches for a given phase kind.
+    pub fn assignment(&self, phase: PhaseKind)
+        -> &crate::balance::types::Assignment {
+        match phase {
+            PhaseKind::Vision => &self.vision.plan.assignment,
+            PhaseKind::Audio => &self.audio.plan.assignment,
+            PhaseKind::Llm => &self.llm.assignment,
+        }
+    }
+}
+
+/// The MLLM Global Orchestrator.
+#[derive(Clone, Copy, Debug)]
+pub struct Orchestrator {
+    pub cfg: OrchestratorConfig,
+}
+
+impl Orchestrator {
+    pub fn new(cfg: OrchestratorConfig) -> Orchestrator {
+        Orchestrator { cfg }
+    }
+
+    /// Plan one training step from the sampled per-instance
+    /// mini-batches. Pure computation — no communication happens here.
+    pub fn plan_step(
+        &self,
+        topo: &Topology,
+        minibatches: &[Vec<Example>],
+    ) -> StepPlan {
+        let t0 = std::time::Instant::now();
+        let d = topo.instances;
+        assert_eq!(minibatches.len(), d, "one mini-batch per instance");
+
+        // Flatten to the global example list with home placement.
+        let mut examples = Vec::new();
+        let mut home = Vec::new();
+        for (i, mb) in minibatches.iter().enumerate() {
+            for &e in mb {
+                examples.push(e);
+                home.push(i);
+            }
+        }
+        let cfg = &self.cfg;
+
+        // ---- encoder phases (independent dispatchers, §6) -------------
+        let vis_lens: Vec<usize> =
+            examples.iter().map(|e| e.vis_len).collect();
+        let vis_payload: Vec<f64> = examples
+            .iter()
+            .map(|e| e.vis_len as f64 * cfg.vis_bytes_per_unit)
+            .collect();
+        let vision_plan = Dispatcher {
+            policy: cfg.vision_policy,
+            communicator: cfg.communicator,
+        }
+        .dispatch(topo, &home, &vis_lens, &vis_payload);
+
+        let aud_lens: Vec<usize> =
+            examples.iter().map(|e| e.aud_len).collect();
+        let aud_payload: Vec<f64> = examples
+            .iter()
+            .map(|e| e.aud_len as f64 * cfg.aud_bytes_per_unit)
+            .collect();
+        let audio_plan = Dispatcher {
+            policy: cfg.audio_policy,
+            communicator: cfg.communicator,
+        }
+        .dispatch(topo, &home, &aud_lens, &aud_payload);
+
+        // ---- LLM phase: subsequences assembly --------------------------
+        // Balance on the full interleaved length (§6).
+        let llm_lens: Vec<usize> =
+            examples.iter().map(|e| e.llm_len()).collect();
+        let llm_payload: Vec<f64> = examples
+            .iter()
+            .map(|e| e.text_len as f64 * cfg.text_bytes_per_token)
+            .collect();
+        let llm_plan = Dispatcher {
+            policy: cfg.llm_policy,
+            communicator: cfg.communicator,
+        }
+        .dispatch(topo, &home, &llm_lens, &llm_payload);
+
+        // ---- rearrangement composition ---------------------------------
+        let vision = self.encoder_out(
+            topo, &vision_plan, &llm_plan, &examples, &home,
+            |e| e.vis_tokens,
+        );
+        let audio = self.encoder_out(
+            topo, &audio_plan, &llm_plan, &examples, &home,
+            |e| e.aud_tokens,
+        );
+
+        StepPlan {
+            d,
+            examples,
+            home,
+            vision: EncoderPlan { plan: vision_plan, ..vision },
+            audio: EncoderPlan { plan: audio_plan, ..audio },
+            llm: llm_plan,
+            compute_nanos: t0.elapsed().as_nanos(),
+        }
+    }
+
+    /// Build the encoder-output route `Π_M ∘ Π_Eₖ⁻¹` (or its two-hop
+    /// expansion when composition is disabled) and price it.
+    fn encoder_out(
+        &self,
+        topo: &Topology,
+        enc: &DispatchPlan,
+        llm: &DispatchPlan,
+        examples: &[Example],
+        home: &[usize],
+        tokens: impl Fn(&Example) -> usize,
+    ) -> EncoderPlan {
+        let d = topo.instances;
+        let payload: Vec<f64> = examples
+            .iter()
+            .map(|e| tokens(e) as f64 * self.cfg.embed_bytes_per_token)
+            .collect();
+
+        // Encoder outputs currently live at enc.route.to; the LLM phase
+        // needs them at llm.route.to.
+        let enc_inv = Rearrangement::new(
+            enc.route.to.clone(),
+            home.to_vec(),
+        );
+        let to_llm =
+            Rearrangement::new(home.to_vec(), llm.route.to.clone());
+        let composed = enc_inv.compose(&to_llm);
+
+        let identity = VolumeMatrix::identity_perm(d);
+        let (out_comm, out_route) = if self.cfg.composition {
+            let v = composed.volume(d, &payload);
+            (alltoall_cost(topo, &v, &identity), composed.clone())
+        } else {
+            // Two hops: reset to origin, then re-dispatch (what §6 calls
+            // the trivial approach).
+            let c1 =
+                alltoall_cost(topo, &enc_inv.volume(d, &payload), &identity);
+            let c2 =
+                alltoall_cost(topo, &to_llm.volume(d, &payload), &identity);
+            (
+                CollectiveCost {
+                    seconds: c1.seconds + c2.seconds,
+                    peak_bytes: c1.peak_bytes.max(c2.peak_bytes),
+                },
+                composed.clone(),
+            )
+        };
+        EncoderPlan {
+            plan: enc.clone(), // replaced by struct-update at call site
+            out_inter_node_bytes: composed
+                .inter_node_bytes(topo, &payload),
+            out_route,
+            out_comm,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::cost::CostModel;
+    use crate::data::synth::{DatasetConfig, Generator};
+
+    fn sample(d: usize, b: usize, seed: u64) -> Vec<Vec<Example>> {
+        let mut g = Generator::new(DatasetConfig::default(), seed);
+        (0..d).map(|_| g.batch(b)).collect()
+    }
+
+    fn orch(cfg: OrchestratorConfig) -> Orchestrator {
+        Orchestrator::new(cfg)
+    }
+
+    #[test]
+    fn full_plan_balances_every_phase() {
+        let topo = Topology::h100(16);
+        let mbs = sample(16, 30, 1);
+        let plan = orch(OrchestratorConfig::orchmllm(3584.0 * 2.0))
+            .plan_step(&topo, &mbs);
+        let lin = CostModel::Linear { alpha: 1.0 };
+        for phase in PhaseKind::ALL {
+            let imb = lin.imbalance(plan.assignment(phase));
+            assert!(imb < 1.25, "{}: imbalance {imb}", phase.name());
+        }
+    }
+
+    #[test]
+    fn no_balance_keeps_everything_home() {
+        let topo = Topology::h100(8);
+        let mbs = sample(8, 20, 2);
+        let plan = orch(OrchestratorConfig::no_balance(7168.0))
+            .plan_step(&topo, &mbs);
+        assert_eq!(plan.llm.route.moved(), 0);
+        assert_eq!(plan.vision.plan.route.moved(), 0);
+        // Encoder outputs also stay home: composed route must be empty.
+        assert_eq!(plan.vision.out_route.moved(), 0);
+        assert_eq!(plan.audio.out_route.moved(), 0);
+    }
+
+    #[test]
+    fn llm_only_balances_llm_but_not_encoders() {
+        let topo = Topology::h100(16);
+        let mbs = sample(16, 30, 3);
+        let plan = orch(OrchestratorConfig::llm_only(7168.0))
+            .plan_step(&topo, &mbs);
+        let lin = CostModel::Linear { alpha: 1.0 };
+        let llm_imb = lin.imbalance(plan.assignment(PhaseKind::Llm));
+        let vis_imb = lin.imbalance(plan.assignment(PhaseKind::Vision));
+        assert!(llm_imb < 1.1, "llm {llm_imb}");
+        // Modality Composition Incoherence: encoder stays imbalanced.
+        assert!(vis_imb > llm_imb + 0.1, "vis {vis_imb} llm {llm_imb}");
+    }
+
+    #[test]
+    fn composition_halves_encoder_output_comm() {
+        let topo = Topology::h100(16);
+        let mbs = sample(16, 30, 4);
+        let with = orch(OrchestratorConfig::orchmllm(7168.0))
+            .plan_step(&topo, &mbs);
+        let mut cfg = OrchestratorConfig::orchmllm(7168.0);
+        cfg.composition = false;
+        let without = orch(cfg).plan_step(&topo, &mbs);
+        assert!(
+            with.vision.out_comm.seconds
+                < without.vision.out_comm.seconds,
+            "{} !< {}",
+            with.vision.out_comm.seconds,
+            without.vision.out_comm.seconds
+        );
+        // Routes themselves are identical — only hop count differs.
+        assert_eq!(with.vision.out_route, without.vision.out_route);
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let topo = Topology::h100(8);
+        let mbs = sample(8, 16, 5);
+        let o = orch(OrchestratorConfig::orchmllm(7168.0));
+        let a = o.plan_step(&topo, &mbs);
+        let b = o.plan_step(&topo, &mbs);
+        assert_eq!(a.llm.route, b.llm.route);
+        assert_eq!(a.vision.out_route, b.vision.out_route);
+    }
+
+    #[test]
+    fn every_example_reaches_exactly_one_llm_batch() {
+        let topo = Topology::h100(8);
+        let mbs = sample(8, 12, 6);
+        let plan = orch(OrchestratorConfig::orchmllm(7168.0))
+            .plan_step(&topo, &mbs);
+        let n = plan.examples.len();
+        let mut seen = vec![false; n];
+        for batch in plan.assignment(PhaseKind::Llm) {
+            for e in batch {
+                assert!(!seen[e.id]);
+                seen[e.id] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some example lost");
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's system layer: Batch Post-Balancing Dispatcher (§5) and
+//! MLLM Global Orchestrator (§6).
+//!
+//! * [`rearrangement`] — the rearrangement Π as explicit data, with
+//!   inverse and composition (the algebra behind Rearrangement
+//!   Composition);
+//! * [`dispatcher`] — one phase's dispatcher: post-balancing algorithm +
+//!   node-wise rearrangement + communicator choice;
+//! * [`global`] — the MLLM Global Orchestrator: per-phase dispatchers,
+//!   subsequence assembly bookkeeping, rearrangement composition, and
+//!   the full [`global::StepPlan`] shared by the simulator and trainer.
+
+pub mod dispatcher;
+pub mod global;
+pub mod rearrangement;
+
+pub use dispatcher::{Communicator, Dispatcher, DispatchPlan};
+pub use global::{Orchestrator, OrchestratorConfig, StepPlan};
+pub use rearrangement::Rearrangement;

@@ -1,0 +1,194 @@
+//! The rearrangement Π as explicit, composable data.
+//!
+//! A `Rearrangement` records, per global example id, which DP instance
+//! holds the example before and after the All-to-All. Because the maps
+//! are stored explicitly, the inverse `Π⁻¹` and the composition
+//! `Π_M ∘ Π_Eₖ⁻¹` of paper §6 are cheap array operations — and the
+//! composed map is exactly one All-to-All instead of two, which is the
+//! communication-halving claim of Rearrangement Composition.
+
+use crate::comm::topology::Topology;
+use crate::comm::volume::VolumeMatrix;
+
+/// An example-level relocation plan between two placements.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Rearrangement {
+    /// `from[g]` = instance currently holding example g.
+    pub from: Vec<usize>,
+    /// `to[g]` = instance that must hold example g afterwards.
+    pub to: Vec<usize>,
+}
+
+impl Rearrangement {
+    pub fn new(from: Vec<usize>, to: Vec<usize>) -> Rearrangement {
+        assert_eq!(from.len(), to.len());
+        Rearrangement { from, to }
+    }
+
+    pub fn len(&self) -> usize {
+        self.from.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.from.is_empty()
+    }
+
+    /// The identity rearrangement over a placement.
+    pub fn identity(placement: Vec<usize>) -> Rearrangement {
+        Rearrangement { from: placement.clone(), to: placement }
+    }
+
+    /// Π⁻¹: route every example back where it came from.
+    pub fn inverse(&self) -> Rearrangement {
+        Rearrangement { from: self.to.clone(), to: self.from.clone() }
+    }
+
+    /// Composition `other ∘ self⁻¹`-style chaining as used in §6:
+    /// `self` placed examples at `self.to`; `next` expects them at
+    /// `next.from` and delivers to `next.to`. Composing skips the
+    /// intermediate hop: route directly `self.to → next.to`.
+    ///
+    /// Panics if the two plans disagree about the intermediate
+    /// placement (`self.to` vs `next.from`) — that would be a logic bug
+    /// in the orchestrator.
+    pub fn compose(&self, next: &Rearrangement) -> Rearrangement {
+        assert_eq!(self.len(), next.len(), "composition arity mismatch");
+        assert_eq!(
+            self.to, next.from,
+            "intermediate placements disagree"
+        );
+        Rearrangement { from: self.from.clone(), to: next.to.clone() }
+    }
+
+    /// Number of examples that actually move.
+    pub fn moved(&self) -> usize {
+        self.from
+            .iter()
+            .zip(&self.to)
+            .filter(|(f, t)| f != t)
+            .count()
+    }
+
+    /// Send-volume matrix given per-example payload sizes.
+    pub fn volume(&self, d: usize, payload: &[f64]) -> VolumeMatrix {
+        assert_eq!(payload.len(), self.len());
+        let mut v = VolumeMatrix::zeros(d);
+        for g in 0..self.len() {
+            v.add(self.from[g], self.to[g], payload[g]);
+        }
+        v
+    }
+
+    /// Total bytes crossing node boundaries (Fig.-13 metric) under the
+    /// *physical* placement (no logical-batch indirection here: `to`
+    /// already names physical instances).
+    pub fn inter_node_bytes(&self, topo: &Topology, payload: &[f64]) -> f64 {
+        let mut total = 0.0;
+        for g in 0..self.len() {
+            if !topo.same_node(self.from[g], self.to[g]) {
+                total += payload[g];
+            }
+        }
+        total
+    }
+
+    /// Max over instances of bytes sent off-node — the Eq.-5 quantity
+    /// that dominates All-to-All latency and the Fig.-13 metric.
+    pub fn max_inter_node_bytes(&self, topo: &Topology, payload: &[f64])
+        -> f64 {
+        let mut per_inst = vec![0.0f64; topo.instances];
+        for g in 0..self.len() {
+            if !topo.same_node(self.from[g], self.to[g]) {
+                per_inst[self.from[g]] += payload[g];
+            }
+        }
+        per_inst.into_iter().fold(0.0, f64::max)
+    }
+
+    /// Remap destinations through a node-wise permutation
+    /// (`perm[logical_batch]` = physical instance).
+    pub fn permuted(&self, perm: &[usize]) -> Rearrangement {
+        Rearrangement {
+            from: self.from.clone(),
+            to: self.to.iter().map(|&b| perm[b]).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn inverse_roundtrips() {
+        let r = Rearrangement::new(vec![0, 0, 1, 2], vec![1, 2, 0, 2]);
+        let inv = r.inverse();
+        assert_eq!(inv.from, r.to);
+        assert_eq!(inv.to, r.from);
+        assert_eq!(r.inverse().inverse(), r);
+    }
+
+    #[test]
+    fn compose_skips_intermediate_hop() {
+        // Encoder dispatch: examples at [0,0,1] balanced to [1,0,0];
+        // LLM dispatch expects them back at origin then sends to [0,1,1].
+        let enc = Rearrangement::new(vec![0, 0, 1], vec![1, 0, 0]);
+        let back = enc.inverse();
+        let llm = Rearrangement::new(vec![0, 0, 1], vec![0, 1, 1]);
+        let naive_hops = back.moved() + llm.moved();
+        let composed = back.compose(&llm);
+        assert_eq!(composed.from, vec![1, 0, 0]);
+        assert_eq!(composed.to, vec![0, 1, 1]);
+        assert!(composed.moved() <= naive_hops);
+    }
+
+    #[test]
+    #[should_panic(expected = "intermediate placements disagree")]
+    fn compose_checks_placements() {
+        let a = Rearrangement::new(vec![0], vec![1]);
+        let b = Rearrangement::new(vec![0], vec![1]);
+        let _ = a.compose(&b);
+    }
+
+    #[test]
+    fn volume_accumulates_payloads() {
+        let r = Rearrangement::new(vec![0, 0, 1], vec![1, 1, 1]);
+        let v = r.volume(2, &[10.0, 5.0, 3.0]);
+        assert_eq!(v.get(0, 1), 15.0);
+        assert_eq!(v.get(1, 1), 3.0);
+    }
+
+    #[test]
+    fn prop_compose_is_associative_on_placements() {
+        check("compose associativity", 100, |g| {
+            let d = g.usize(2, 6);
+            let n = g.usize(1, 30);
+            let p0: Vec<usize> = (0..n).map(|_| g.usize(0, d)).collect();
+            let p1: Vec<usize> = (0..n).map(|_| g.usize(0, d)).collect();
+            let p2: Vec<usize> = (0..n).map(|_| g.usize(0, d)).collect();
+            let p3: Vec<usize> = (0..n).map(|_| g.usize(0, d)).collect();
+            let a = Rearrangement::new(p0.clone(), p1.clone());
+            let b = Rearrangement::new(p1, p2.clone());
+            let c = Rearrangement::new(p2, p3);
+            let left = a.compose(&b).compose(&c);
+            let right = a.compose(&b.compose(&c));
+            assert_eq!(left, right);
+        });
+    }
+
+    #[test]
+    fn prop_inverse_cancels_moves() {
+        check("inverse cancels", 100, |g| {
+            let d = g.usize(2, 5);
+            let n = g.usize(1, 20);
+            let p0: Vec<usize> = (0..n).map(|_| g.usize(0, d)).collect();
+            let p1: Vec<usize> = (0..n).map(|_| g.usize(0, d)).collect();
+            let r = Rearrangement::new(p0.clone(), p1);
+            let round = r.compose(&r.inverse());
+            assert_eq!(round.from, p0);
+            assert_eq!(round.to, p0);
+            assert_eq!(round.moved(), 0);
+        });
+    }
+}

@@ -1,0 +1,153 @@
+//! Per-worker PJRT runtime: compile HLO-text artifacts once, execute
+//! many times.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest, Slot};
+use super::tensor::{DType, HostTensor};
+
+/// A loaded runtime: PJRT CPU client + compiled executables. One per
+/// worker thread (the client is not `Send`).
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load the manifest and compile the named artifacts (all when
+    /// `names` is empty).
+    pub fn load(dir: &Path, names: &[&str]) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for spec in &manifest.artifacts {
+            if !names.is_empty() && !names.contains(&spec.name.as_str()) {
+                continue;
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| {
+                anyhow!("parsing {}: {e:?}", spec.file.display())
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
+            exes.insert(spec.name.clone(), exe);
+        }
+        Ok(Runtime { manifest, client, exes })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute an artifact. Inputs are given as host tensors in the
+    /// manifest's slot order, with parameter lists already flattened by
+    /// the caller. Outputs come back as host tensors in slot order
+    /// (parameter/gradient lists flattened likewise).
+    pub fn execute(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        self.execute_literals(spec, &literals.iter().collect::<Vec<_>>())
+    }
+
+    /// Execute with pre-built literals (hot path: the trainer caches
+    /// parameter literals across bucket chunks and refreshes them only
+    /// after the optimizer step — see EXPERIMENTS.md §Perf).
+    pub fn execute_literals(
+        &self,
+        spec: &ArtifactSpec,
+        literals: &[&xla::Literal],
+    ) -> Result<Vec<HostTensor>> {
+        let exe = self
+            .exes
+            .get(&spec.name)
+            .ok_or_else(|| anyhow!("artifact '{}' not compiled", spec.name))?;
+        let result = exe
+            .execute::<&xla::Literal>(literals)
+            .map_err(|e| anyhow!("executing {}: {e:?}", spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", spec.name))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple into
+        // the manifest's output slots.
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", spec.name))?;
+        let expected = self.output_arity(spec);
+        if parts.len() != expected {
+            anyhow::bail!(
+                "{}: expected {expected} outputs, got {}",
+                spec.name,
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        let mut idx = 0;
+        for slot in &spec.outputs {
+            match slot {
+                Slot::Tensor { shape, dtype, .. } => {
+                    out.push(HostTensor::from_literal(
+                        &parts[idx], shape, *dtype,
+                    )?);
+                    idx += 1;
+                }
+                Slot::Params { sub } => {
+                    for p in &self.manifest.params[sub] {
+                        out.push(HostTensor::from_literal(
+                            &parts[idx],
+                            &p.shape,
+                            DType::F32,
+                        )?);
+                        idx += 1;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Number of flattened outputs an artifact produces.
+    pub fn output_arity(&self, spec: &ArtifactSpec) -> usize {
+        spec.outputs
+            .iter()
+            .map(|s| match s {
+                Slot::Tensor { .. } => 1,
+                Slot::Params { sub } => self.manifest.params[sub].len(),
+            })
+            .sum()
+    }
+
+    /// Load a submodule's initial parameters from the AOT blobs.
+    pub fn load_params(&self, sub: &str) -> Result<Vec<HostTensor>> {
+        self.manifest
+            .params
+            .get(sub)
+            .ok_or_else(|| anyhow!("unknown submodule '{sub}'"))?
+            .iter()
+            .map(|p| {
+                HostTensor::read_f32_file(&p.file, &p.shape)
+                    .with_context(|| format!("param {}", p.name))
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,289 @@
+//! The AOT manifest: the shape/ordering contract between
+//! `python/compile/aot.py` and the rust trainer.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::DType;
+
+/// Model hyper-parameters mirrored from `model.py`'s `ModelConfig`.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_llm: usize,
+    pub max_seq: usize,
+    pub patch_dim: usize,
+    pub vis_group: usize,
+    pub max_vis: usize,
+    pub mel_dim: usize,
+    pub aud_stride: usize,
+    pub max_aud: usize,
+    pub param_count: usize,
+    pub seed: u64,
+}
+
+/// One parameter tensor's spec.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub file: PathBuf,
+}
+
+/// One input/output slot of an artifact.
+#[derive(Clone, Debug)]
+pub enum Slot {
+    /// The flattened parameter (or gradient) list of a submodule.
+    Params { sub: String },
+    /// A named tensor with static shape.
+    Tensor { role: String, shape: Vec<usize>, dtype: DType },
+}
+
+/// One compiled artifact's signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    /// Bucket dims (phase-specific meaning; empty for optimizers).
+    pub bucket: Vec<usize>,
+    pub inputs: Vec<Slot>,
+    pub outputs: Vec<Slot>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelInfo,
+    pub params: BTreeMap<String, Vec<ParamSpec>>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn parse_slot(j: &Json) -> Result<Slot> {
+    if let Some(sub) = j.get("sub").as_str() {
+        return Ok(Slot::Params { sub: sub.to_string() });
+    }
+    let role = j
+        .get("role")
+        .as_str()
+        .ok_or_else(|| anyhow!("slot missing role/sub: {j:?}"))?
+        .to_string();
+    let shape = j
+        .get("shape")
+        .as_arr()
+        .ok_or_else(|| anyhow!("slot '{role}' missing shape"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = DType::parse(j.get("dtype").as_str().unwrap_or("f32"))?;
+    Ok(Slot::Tensor { role, shape, dtype })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+        let c = j.get("config");
+        let need = |k: &str| -> Result<usize> {
+            c.get(k)
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest config missing '{k}'"))
+        };
+        let config = ModelInfo {
+            name: c.get("name").as_str().unwrap_or("?").to_string(),
+            vocab: need("vocab")?,
+            d_llm: need("d_llm")?,
+            max_seq: need("max_seq")?,
+            patch_dim: need("patch_dim")?,
+            vis_group: need("vis_group")?,
+            max_vis: need("max_vis")?,
+            mel_dim: need("mel_dim")?,
+            aud_stride: need("aud_stride")?,
+            max_aud: need("max_aud")?,
+            param_count: need("param_count")?,
+            seed: c.get("seed").as_i64().unwrap_or(0) as u64,
+        };
+
+        let mut params = BTreeMap::new();
+        let pobj = j
+            .get("params")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing params"))?;
+        for (sub, list) in pobj {
+            let specs = list
+                .as_arr()
+                .ok_or_else(|| anyhow!("params[{sub}] not a list"))?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p
+                            .get("name")
+                            .as_str()
+                            .unwrap_or("?")
+                            .to_string(),
+                        shape: p
+                            .get("shape")
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("param missing shape"))?
+                            .iter()
+                            .map(|v| {
+                                v.as_usize()
+                                    .ok_or_else(|| anyhow!("bad dim"))
+                            })
+                            .collect::<Result<Vec<_>>>()?,
+                        file: dir.join(
+                            p.get("file")
+                                .as_str()
+                                .ok_or_else(|| anyhow!("param missing file"))?,
+                        ),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            params.insert(sub.clone(), specs);
+        }
+
+        let artifacts = j
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: a
+                        .get("name")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("artifact missing name"))?
+                        .to_string(),
+                    file: dir.join(
+                        a.get("file")
+                            .as_str()
+                            .ok_or_else(|| anyhow!("artifact missing file"))?,
+                    ),
+                    bucket: a
+                        .get("bucket")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|v| v.as_usize())
+                        .collect(),
+                    inputs: a
+                        .get("inputs")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(parse_slot)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: a
+                        .get("outputs")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(parse_slot)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts — rerun `make artifacts`");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), config, params, artifacts })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Find the (unique, for the test config) artifact whose name starts
+    /// with a prefix, e.g. `vision_fwd`.
+    pub fn artifact_with_prefix(&self, prefix: &str)
+        -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name.starts_with(prefix))
+            .ok_or_else(|| anyhow!("no artifact with prefix '{prefix}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a miniature manifest.json in a temp dir.
+    fn write_fixture() -> PathBuf {
+        let dir = std::env::temp_dir().join("orchmllm_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{
+          "config": {"name":"t","vocab":16,"d_llm":8,"max_seq":32,
+                     "patch_dim":4,"vis_group":2,"max_vis":8,
+                     "mel_dim":4,"aud_stride":2,"max_aud":8,
+                     "param_count":100,"seed":0},
+          "params": {"llm": [{"name":"w","shape":[2,2],"file":"params/llm/000.bin"}]},
+          "artifacts": [
+            {"name":"llm_step_1x8x2x2","file":"llm.hlo.txt","bucket":[1,8,2,2],
+             "inputs":[{"kind":"params","sub":"llm"},
+                       {"role":"token_ids","shape":[1,8],"dtype":"i32"}],
+             "outputs":[{"role":"loss_sum","shape":[],"dtype":"f32"},
+                        {"kind":"grads","sub":"llm"}]}
+          ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_fixture() {
+        let m = Manifest::load(&write_fixture()).unwrap();
+        assert_eq!(m.config.vocab, 16);
+        assert_eq!(m.params["llm"].len(), 1);
+        assert_eq!(m.params["llm"][0].shape, vec![2, 2]);
+        let a = m.artifact_with_prefix("llm_step").unwrap();
+        assert_eq!(a.bucket, vec![1, 8, 2, 2]);
+        assert_eq!(a.inputs.len(), 2);
+        match &a.inputs[0] {
+            Slot::Params { sub } => assert_eq!(sub, "llm"),
+            _ => panic!("expected params slot"),
+        }
+        match &a.inputs[1] {
+            Slot::Tensor { role, shape, dtype } => {
+                assert_eq!(role, "token_ids");
+                assert_eq!(shape, &[1, 8]);
+                assert_eq!(*dtype, DType::I32);
+            }
+            _ => panic!("expected tensor slot"),
+        }
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::load(&write_fixture()).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.artifact_with_prefix("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        // Exercised against the checked-out artifacts when present.
+        let dir = Path::new("artifacts/test");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.artifacts.len() >= 8);
+            assert!(m.params.contains_key("vision"));
+            assert!(m.params.contains_key("audio"));
+            assert!(m.params.contains_key("llm"));
+        }
+    }
+}

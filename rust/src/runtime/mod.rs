@@ -1,0 +1,19 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`) and execute them on the CPU PJRT client.
+//!
+//! Python never runs here — the interchange is HLO *text* plus a JSON
+//! manifest describing parameter ordering, artifact signatures, and
+//! bucket shapes (see `/opt/xla-example/README.md` for why text, not
+//! serialized protos).
+//!
+//! `PjRtClient` is thread-local (`Rc` inside the xla crate), so each DP
+//! worker owns a full [`engine::Runtime`] — matching the
+//! process-per-GPU layout of real clusters.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Runtime;
+pub use manifest::Manifest;
+pub use tensor::{DType, HostTensor};

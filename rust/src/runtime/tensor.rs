@@ -1,0 +1,224 @@
+//! Host-side tensors: the currency between the trainer's worker threads
+//! (which exchange raw `Vec<f32>`/`Vec<i32>` over the collective
+//! engine) and PJRT literals.
+
+use anyhow::{bail, Context, Result};
+
+/// Element type (the AOT manifest uses "f32"/"i32").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+/// A dense host tensor in row-major order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn zeros_f32(shape: &[usize]) -> HostTensor {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: TensorData::F32(vec![0.0; shape.iter().product()]),
+        }
+    }
+
+    pub fn zeros_i32(shape: &[usize]) -> HostTensor {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: TensorData::I32(vec![0; shape.iter().product()]),
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    pub fn i32s_mut(&mut self) -> &mut [i32] {
+        match &mut self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    /// Elementwise add (gradient accumulation).
+    pub fn add_assign(&mut self, other: &HostTensor) {
+        assert_eq!(self.shape, other.shape);
+        match (&mut self.data, &other.data) {
+            (TensorData::F32(a), TensorData::F32(b)) => {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += *y;
+                }
+            }
+            _ => panic!("add_assign expects f32 tensors"),
+        }
+    }
+
+    /// Read a raw little-endian f32 blob (an AOT param file).
+    pub fn read_f32_file(path: &std::path::Path, shape: &[usize])
+        -> Result<HostTensor> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let expect: usize = shape.iter().product::<usize>() * 4;
+        if bytes.len() != expect {
+            bail!(
+                "{}: expected {expect} bytes for shape {shape:?}, got {}",
+                path.display(),
+                bytes.len()
+            );
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(HostTensor::from_f32(shape, data))
+    }
+
+    /// Convert to a PJRT literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+            TensorData::I32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Convert back from a PJRT literal.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: DType)
+        -> Result<HostTensor> {
+        Ok(match dtype {
+            DType::F32 => HostTensor::from_f32(shape, lit.to_vec::<f32>()?),
+            DType::I32 => HostTensor::from_i32(shape, lit.to_vec::<i32>()?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = HostTensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.f32s()[4], 5.0);
+    }
+
+    #[test]
+    fn add_assign_accumulates() {
+        let mut a = HostTensor::from_f32(&[3], vec![1., 2., 3.]);
+        let b = HostTensor::from_f32(&[3], vec![10., 20., 30.]);
+        a.add_assign(&b);
+        assert_eq!(a.f32s(), &[11., 22., 33.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::from_f32(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn read_f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("orchmllm_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let vals = [1.5f32, -2.0, 3.25];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let t = HostTensor::read_f32_file(&path, &[3]).unwrap();
+        assert_eq!(t.f32s(), &vals);
+        assert!(HostTensor::read_f32_file(&path, &[4]).is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("i32").unwrap(), DType::I32);
+        assert!(DType::parse("f64").is_err());
+    }
+}

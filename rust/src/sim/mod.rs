@@ -1,0 +1,16 @@
+//! Discrete-event cluster simulator.
+//!
+//! Reprices [`crate::orchestrator::StepPlan`]s on a modelled GPU cluster
+//! (paper testbed: H100 nodes, NVLink + IB) to regenerate the paper's
+//! evaluation — Fig. 8/9 overall MFU/TPT, Table 2 overhead scaling,
+//! and the Fig. 10–13 ablations. The same plan objects drive the real
+//! trainer, so the simulator measures the shipped logic, only the
+//! silicon is analytic.
+
+pub mod engine;
+pub mod gpu;
+pub mod megatron;
+pub mod report;
+
+pub use engine::{simulate_run, simulate_step, RunSummary, StepSim, SystemKind};
+pub use gpu::GpuSpec;

@@ -1,0 +1,115 @@
+//! Table/figure renderers for simulator outputs.
+
+use super::engine::RunSummary;
+
+/// Render a Fig. 8/9-style grouped bar table: rows = systems, columns =
+/// models, cells = (MFU %, TPT tokens/s/GPU).
+pub fn render_overall(rows: &[Vec<RunSummary>]) -> String {
+    let mut out = String::new();
+    if rows.is_empty() || rows[0].is_empty() {
+        return out;
+    }
+    out.push_str(&format!("{:<24}", "system"));
+    for cell in &rows[0] {
+        out.push_str(&format!(
+            "{:>12}{:>4}",
+            cell.model_name, ""
+        ));
+    }
+    out.push_str("\n");
+    out.push_str(&format!("{:<24}", ""));
+    for _ in &rows[0] {
+        out.push_str(&format!("{:>8}{:>8}", "MFU%", "TPT"));
+    }
+    out.push_str("\n");
+    for row in rows {
+        out.push_str(&format!("{:<24}", row[0].system.name()));
+        for cell in row {
+            if cell.oom {
+                out.push_str(&format!("{:>8}{:>8}", "OOM", "-"));
+            } else {
+                out.push_str(&format!(
+                    "{:>8.1}{:>8.0}",
+                    cell.mfu * 100.0,
+                    cell.tpt
+                ));
+            }
+        }
+        out.push_str("\n");
+    }
+    out
+}
+
+/// Render Table-2-style overhead scaling.
+pub fn render_overhead(cells: &[RunSummary]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{:<16}", "GPUs"));
+    for c in cells {
+        out.push_str(&format!("{:>10}", c.gpus));
+    }
+    out.push_str("\n");
+    out.push_str(&format!("{:<16}", "Overhead (ms)"));
+    for c in cells {
+        out.push_str(&format!("{:>10.2}", c.dispatcher_overhead_ms));
+    }
+    out.push_str("\n");
+    out.push_str(&format!("{:<16}", "Duration (s)"));
+    for c in cells {
+        out.push_str(&format!("{:>10.2}", c.step_secs));
+    }
+    out.push_str("\n");
+    out
+}
+
+/// Render an MFU + memory comparison (Fig. 10/12 style).
+pub fn render_mfu_memory(rows: &[Vec<RunSummary>]) -> String {
+    let mut out = String::new();
+    if rows.is_empty() || rows[0].is_empty() {
+        return out;
+    }
+    out.push_str(&format!("{:<24}", "system"));
+    for cell in &rows[0] {
+        out.push_str(&format!("{:>16}", cell.model_name));
+    }
+    out.push_str(&format!("\n{:<24}", ""));
+    for _ in &rows[0] {
+        out.push_str(&format!("{:>8}{:>8}", "MFU%", "mem GB"));
+    }
+    out.push_str("\n");
+    for row in rows {
+        out.push_str(&format!("{:<24}", row[0].system.name()));
+        for cell in row {
+            if cell.oom {
+                out.push_str(&format!("{:>8}{:>8.1}", "OOM", cell.peak_mem_gb));
+            } else {
+                out.push_str(&format!(
+                    "{:>8.1}{:>8.1}",
+                    cell.mfu * 100.0,
+                    cell.peak_mem_gb
+                ));
+            }
+        }
+        out.push_str("\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::{simulate_run, SystemKind};
+    use crate::model::config::MllmConfig;
+
+    #[test]
+    fn renders_tables_without_panic() {
+        let model = MllmConfig::mllm_10b();
+        let a = simulate_run(SystemKind::OrchMllm, &model, 16, 8, 1, 1);
+        let b = simulate_run(SystemKind::NoBalance, &model, 16, 8, 1, 1);
+        let s = render_overall(&[vec![a.clone()], vec![b.clone()]]);
+        assert!(s.contains("OrchMLLM"));
+        let s2 = render_overhead(&[a.clone()]);
+        assert!(s2.contains("Overhead"));
+        let s3 = render_mfu_memory(&[vec![a], vec![b]]);
+        assert!(s3.contains("mem GB"));
+    }
+}

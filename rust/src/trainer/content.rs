@@ -1,0 +1,120 @@
+//! Deterministic synthetic example *content* (the metadata payloads the
+//! dispatchers move): patch grids, mel frames, and text token chains.
+//!
+//! Content is a pure function of (corpus seed, example id), generated at
+//! the example's *home* instance and physically routed by the collective
+//! engine — so the trainer's All-to-All moves real bytes, never
+//! regenerates remotely.
+//!
+//! Text is a learnable affine chain `t_{k+1} = (a·t_k + b) mod V`, so the
+//! end-to-end loss curve demonstrably descends (EXPERIMENTS.md §E2E).
+
+use crate::data::synth::Example;
+use crate::util::rng::Pcg64;
+
+/// Per-example content generator.
+#[derive(Clone, Copy, Debug)]
+pub struct ContentGen {
+    pub seed: u64,
+    pub vocab: usize,
+}
+
+impl ContentGen {
+    fn rng(&self, id: usize, tag: u64) -> Pcg64 {
+        Pcg64::new(
+            self.seed ^ (id as u64).wrapping_mul(0x9E37_79B9) ^ (tag << 56),
+        )
+    }
+
+    /// Vision patches, flattened `[vis_len, patch_dim]`.
+    pub fn patches(&self, e: &Example, patch_dim: usize) -> Vec<f32> {
+        let mut r = self.rng(e.id, 1);
+        (0..e.vis_len * patch_dim)
+            .map(|_| 0.3 * r.normal() as f32)
+            .collect()
+    }
+
+    /// Audio mel frames, flattened `[aud_len, mel_dim]`.
+    pub fn frames(&self, e: &Example, mel_dim: usize) -> Vec<f32> {
+        let mut r = self.rng(e.id, 2);
+        (0..e.aud_len * mel_dim)
+            .map(|_| 0.3 * r.normal() as f32)
+            .collect()
+    }
+
+    /// Text tokens: a learnable affine chain seeded by the example id.
+    /// Tokens live in [1, vocab) — 0 is reserved for injected slots.
+    pub fn text(&self, e: &Example) -> Vec<i32> {
+        let v = (self.vocab - 1) as u64;
+        let mut t = (e.id as u64 * 13 + 5) % v;
+        (0..e.text_len)
+            .map(|_| {
+                t = (t * 31 + 7) % v;
+                (t + 1) as i32
+            })
+            .collect()
+    }
+}
+
+/// One example's routed payload bundle (what actually crosses the
+/// collective engine for the LLM phase).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TextBundle {
+    pub tokens: Vec<i32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Task;
+
+    fn example(id: usize) -> Example {
+        Example {
+            id,
+            task: Task::AvDialogue,
+            vis_len: 8,
+            aud_len: 6,
+            text_len: 10,
+            vis_tokens: 4,
+            aud_tokens: 3,
+        }
+    }
+
+    #[test]
+    fn content_is_deterministic() {
+        let g = ContentGen { seed: 7, vocab: 256 };
+        let e = example(3);
+        assert_eq!(g.patches(&e, 48), g.patches(&e, 48));
+        assert_eq!(g.frames(&e, 40), g.frames(&e, 40));
+        assert_eq!(g.text(&e), g.text(&e));
+    }
+
+    #[test]
+    fn content_differs_by_example() {
+        let g = ContentGen { seed: 7, vocab: 256 };
+        assert_ne!(g.text(&example(1)), g.text(&example(2)));
+        assert_ne!(g.patches(&example(1), 48), g.patches(&example(2), 48));
+    }
+
+    #[test]
+    fn text_chain_is_learnable_and_in_range() {
+        let g = ContentGen { seed: 1, vocab: 256 };
+        let t = g.text(&example(5));
+        assert_eq!(t.len(), 10);
+        assert!(t.iter().all(|&x| (1..256).contains(&x)));
+        // The affine recurrence: next token is a function of current.
+        let v = 255i64;
+        for w in t.windows(2) {
+            let want = ((w[0] as i64 - 1) * 31 + 7).rem_euclid(v) + 1;
+            assert_eq!(w[1] as i64, want);
+        }
+    }
+
+    #[test]
+    fn shapes_match_lengths() {
+        let g = ContentGen { seed: 2, vocab: 128 };
+        let e = example(9);
+        assert_eq!(g.patches(&e, 48).len(), 8 * 48);
+        assert_eq!(g.frames(&e, 40).len(), 6 * 40);
+    }
+}

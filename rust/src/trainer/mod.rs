@@ -1,0 +1,214 @@
+//! Real end-to-end DP training of the tiny MLLM over PJRT artifacts.
+//!
+//! `run` spawns one thread per DP worker. Every worker samples the same
+//! example stream (seeded), plans the step with the same deterministic
+//! [`Orchestrator`] — mirroring the paper's lengths-only All-Gather +
+//! replicated solve — then executes the plan against its own PJRT
+//! runtime, exchanging payloads through the in-process collective
+//! engine. Losses and gradients are *sums*, rescaled by the global token
+//! count after the all-reduce, so any rearrangement is bit-for-bit
+//! consequence-invariant (validated by `rust/tests/trainer_invariance`).
+
+pub mod content;
+pub mod worker;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::comm::topology::Topology;
+use crate::config::TrainRunConfig;
+use crate::data::synth::{DatasetConfig, Example, Generator, TaskMix};
+use crate::orchestrator::global::{Orchestrator, OrchestratorConfig};
+use crate::runtime::manifest::Manifest;
+
+use content::ContentGen;
+use worker::{Comms, StepOutcome, Worker};
+
+/// Aggregated result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<f64>,
+    pub tokens_per_step: f64,
+    pub secs_per_step: f64,
+    pub comm_secs_per_step: f64,
+    pub workers: usize,
+    pub steps: usize,
+}
+
+impl TrainReport {
+    pub fn render(&self) -> String {
+        let first = self.losses.first().copied().unwrap_or(0.0);
+        let last = self.losses.last().copied().unwrap_or(0.0);
+        let mut curve = String::new();
+        for (i, l) in self.losses.iter().enumerate() {
+            if i % (self.losses.len() / 10).max(1) == 0
+                || i + 1 == self.losses.len()
+            {
+                curve.push_str(&format!("  step {i:>4}  loss {l:.4}\n"));
+            }
+        }
+        format!(
+            "train: {} workers, {} steps\n{curve}loss {first:.4} -> {last:.4}\n\
+             {:.0} tokens/step, {:.3}s/step ({:.1}ms comm)",
+            self.workers,
+            self.steps,
+            self.tokens_per_step,
+            self.secs_per_step,
+            self.comm_secs_per_step * 1e3,
+        )
+    }
+}
+
+/// Derive a dataset config whose lengths always fit the compiled
+/// buckets (the trainer packs one example per bucket row).
+pub fn dataset_for_manifest(manifest: &Manifest) -> Result<DatasetConfig> {
+    let c = &manifest.config;
+    let vis = manifest.artifact_with_prefix("vision_fwd")?;
+    let aud = manifest.artifact_with_prefix("audio_fwd")?;
+    let llm = manifest.artifact_with_prefix("llm_step")?;
+    let (l, tv, ta) = (llm.bucket[1], llm.bucket[2], llm.bucket[3]);
+    let max_vis = vis.bucket[1].min(tv * c.vis_group);
+    let max_aud = aud.bucket[1].min(ta * c.aud_stride);
+    let max_text = l
+        .saturating_sub(tv + ta + 2)
+        .min(c.max_seq.saturating_sub(tv + ta + 2));
+    Ok(DatasetConfig {
+        mix: TaskMix::default(),
+        vis_downsample: c.vis_group,
+        aud_downsample: c.aud_stride,
+        max_vis,
+        max_aud,
+        max_text,
+        // Scale medians down so lengths are varied but under the caps.
+        scale: (max_text as f64 / 500.0).min(1.0),
+    })
+}
+
+/// The trainer's worker topology: pretend two workers share a "node" so
+/// the node-wise rearrangement path is exercised end to end.
+pub fn worker_topology(workers: usize) -> Topology {
+    Topology {
+        instances: workers,
+        per_node: 2.min(workers),
+        intra_bw: 10e9,
+        inter_bw: 1e9,
+        base_latency: 0.0,
+    }
+}
+
+/// Run a training job, returning the aggregated report.
+pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
+    let dir = Path::new(&cfg.artifacts);
+    let manifest = Manifest::load(dir).with_context(|| {
+        format!(
+            "loading {} — run `make artifacts` first",
+            dir.join("manifest.json").display()
+        )
+    })?;
+    let data_cfg = dataset_for_manifest(&manifest)?;
+    let topo = worker_topology(cfg.workers);
+    let embed_bytes = manifest.config.d_llm as f64 * 4.0;
+    let orch_cfg = if cfg.balance {
+        OrchestratorConfig::orchmllm(embed_bytes)
+    } else {
+        OrchestratorConfig::no_balance(embed_bytes)
+    };
+    let content =
+        ContentGen { seed: cfg.seed ^ 0xC0FFEE, vocab: manifest.config.vocab };
+    let comms = Arc::new(Comms::new(cfg.workers));
+
+    let mut handles = Vec::new();
+    for rank in 0..cfg.workers {
+        let comms = Arc::clone(&comms);
+        let cfg = cfg.clone();
+        let data_cfg = data_cfg;
+        let dir = dir.to_path_buf();
+        handles.push(std::thread::spawn(move || -> Result<Vec<StepOutcome>> {
+            let mut w = Worker::new(
+                rank,
+                topo,
+                &dir,
+                comms,
+                content,
+                cfg.lr,
+            )?;
+            let orch = Orchestrator::new(orch_cfg);
+            // Identical stream on every rank: the lengths "all-gather".
+            let mut generator = Generator::new(data_cfg, cfg.seed);
+            let mut outcomes = Vec::new();
+            for _ in 0..cfg.steps {
+                let minibatches: Vec<Vec<Example>> = (0..cfg.workers)
+                    .map(|_| generator.batch(cfg.mini_batch))
+                    .collect();
+                let plan = orch.plan_step(&topo, &minibatches);
+                outcomes.push(w.step(&plan)?);
+            }
+            Ok(outcomes)
+        }));
+    }
+
+    let mut per_rank = Vec::new();
+    for h in handles {
+        per_rank.push(h.join().expect("worker panicked")?);
+    }
+    let r0 = &per_rank[0];
+    // Reduced quantities must agree across ranks.
+    for other in &per_rank[1..] {
+        for (a, b) in r0.iter().zip(other) {
+            debug_assert!((a.loss - b.loss).abs() < 1e-5);
+        }
+    }
+    let steps = r0.len();
+    Ok(TrainReport {
+        losses: r0.iter().map(|o| o.loss).collect(),
+        tokens_per_step: r0.iter().map(|o| o.tokens).sum::<f64>()
+            / steps as f64,
+        secs_per_step: r0
+            .iter()
+            .map(|o| o.compute_seconds + o.comm_seconds)
+            .sum::<f64>()
+            / steps as f64,
+        comm_secs_per_step: r0.iter().map(|o| o.comm_seconds).sum::<f64>()
+            / steps as f64,
+        workers: cfg.workers,
+        steps,
+    })
+}
+
+/// CLI entry: run and render.
+pub fn run(cfg: &TrainRunConfig) -> Result<String> {
+    Ok(run_collect(cfg)?.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_caps_respect_buckets() {
+        let dir = Path::new("artifacts/test");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(dir).unwrap();
+        let d = dataset_for_manifest(&m).unwrap();
+        assert!(d.max_vis <= 16);
+        assert!(d.max_aud <= 16);
+        assert!(d.max_text + 16 + 2 <= 48);
+        let ex = Generator::new(d, 1).batch(500);
+        for e in ex {
+            assert!(e.vis_tokens <= 8 && e.aud_tokens <= 8);
+            assert!(e.llm_len() <= 48);
+        }
+    }
+
+    #[test]
+    fn worker_topology_has_nodes() {
+        let t = worker_topology(4);
+        assert_eq!(t.nodes(), 2);
+        assert!(t.same_node(0, 1));
+        assert!(!t.same_node(1, 2));
+    }
+}

@@ -1,0 +1,662 @@
+//! One DP worker: executes the orchestrator's [`StepPlan`] against real
+//! PJRT executables, moving example payloads through the collective
+//! engine exactly as the paper's communicator would over NCCL.
+//!
+//! Per step (SPMD across workers):
+//!   1. vision/audio phase inputs All-to-All (metadata moves home →
+//!      encoder-phase instance);
+//!   2. encoder forward per bucket chunk;
+//!   3. encoder outputs All-to-All along the *composed* route
+//!      `Π_M ∘ Π_E⁻¹` (one hop, §6), text along the LLM route;
+//!   4. LLM phase fwd+bwd; gradients w.r.t. injected encoder tokens
+//!      come back;
+//!   5. d(tokens) All-to-All along the inverse composed route;
+//!   6. encoder backward per chunk;
+//!   7. gradient all-reduce + global-token-count SGD rescale (the sum
+//!      formulation that makes everything rearrangement-invariant).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::engine::Collectives;
+use crate::comm::topology::Topology;
+use crate::data::synth::Example;
+use crate::orchestrator::global::StepPlan;
+use crate::runtime::engine::Runtime;
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::tensor::HostTensor;
+
+use super::content::ContentGen;
+
+/// Payloads that cross worker threads.
+pub type F32Msg = (usize, Vec<f32>);
+pub type I32Msg = (usize, Vec<i32>);
+
+/// Shared collective group bundle.
+pub struct Comms {
+    pub f32s: Arc<Collectives<F32Msg>>,
+    pub i32s: Arc<Collectives<I32Msg>>,
+    pub grads: Arc<Collectives<Vec<f32>>>,
+}
+
+impl Comms {
+    pub fn new(d: usize) -> Comms {
+        Comms {
+            f32s: Collectives::new(d),
+            i32s: Collectives::new(d),
+            grads: Collectives::new(d),
+        }
+    }
+}
+
+/// One worker's state.
+pub struct Worker {
+    pub rank: usize,
+    pub topo: Topology,
+    pub runtime: Runtime,
+    pub comms: Arc<Comms>,
+    pub content: ContentGen,
+    /// Parameters cached as device-ready literals: converted once at
+    /// init and refreshed once per optimizer step, instead of per bucket
+    /// chunk (EXPERIMENTS.md §Perf L3-2).
+    pub params: HashMap<String, Vec<xla::Literal>>,
+    pub lr: f64,
+}
+
+/// Outcome of one step on one worker (identical on all ranks for the
+/// reduced fields).
+#[derive(Clone, Debug)]
+pub struct StepOutcome {
+    pub loss: f64,
+    pub tokens: f64,
+    pub comm_seconds: f64,
+    pub compute_seconds: f64,
+}
+
+struct EncoderState {
+    /// Cached chunk inputs for the backward pass:
+    /// (chunk example ids, input tensor, mask tensor).
+    chunks: Vec<(Vec<usize>, HostTensor, HostTensor)>,
+    /// Encoder output rows per example id: `[tokens, d_llm]` flattened.
+    out_rows: HashMap<usize, Vec<f32>>,
+}
+
+impl Worker {
+    pub fn new(
+        rank: usize,
+        topo: Topology,
+        artifacts: &Path,
+        comms: Arc<Comms>,
+        content: ContentGen,
+        lr: f64,
+    ) -> Result<Worker> {
+        let runtime = Runtime::load(artifacts, &[])?;
+        let mut params = HashMap::new();
+        for sub in ["vision", "audio", "llm"] {
+            let lits = runtime
+                .load_params(sub)?
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<Vec<_>>>()?;
+            params.insert(sub.to_string(), lits);
+        }
+        Ok(Worker { rank, topo, runtime, comms, content, params, lr })
+    }
+
+    fn cfg(&self) -> &crate::runtime::manifest::ModelInfo {
+        &self.runtime.manifest.config
+    }
+
+    /// Execute one planned training step. `plan` is identical on every
+    /// rank (deterministic planning from shared lengths).
+    pub fn step(&mut self, plan: &StepPlan) -> Result<StepOutcome> {
+        let t_all = std::time::Instant::now();
+        let mut comm_s = 0.0f64;
+
+        // ---- 1+2: encoder phases ------------------------------------------
+        let vision = self.encoder_phase(plan, Phase::Vision, &mut comm_s)?;
+        let audio = self.encoder_phase(plan, Phase::Audio, &mut comm_s)?;
+
+        // ---- 3: composed routes to the LLM phase -----------------------
+        let vis_tokens =
+            self.route_tokens(plan, &plan.vision.out_route, &vision, &mut comm_s)?;
+        let aud_tokens =
+            self.route_tokens(plan, &plan.audio.out_route, &audio, &mut comm_s)?;
+        let texts = self.route_text(plan, &mut comm_s)?;
+
+        // ---- 4: LLM phase ----------------------------------------------------
+        let (loss_sum, token_count, d_vis_rows, d_aud_rows, llm_grads) =
+            self.llm_phase(plan, &vis_tokens, &aud_tokens, &texts)?;
+
+        // ---- 5: gradient routes back to encoder instances -----------------
+        let inv_v = plan.vision.out_route.inverse();
+        let inv_a = plan.audio.out_route.inverse();
+        let d_vis =
+            self.route_rows_back(plan, &inv_v, d_vis_rows, &mut comm_s)?;
+        let d_aud =
+            self.route_rows_back(plan, &inv_a, d_aud_rows, &mut comm_s)?;
+
+        // ---- 6: encoder backward ------------------------------------------
+        let vis_grads =
+            self.encoder_bwd(plan, Phase::Vision, &vision, &d_vis)?;
+        let aud_grads =
+            self.encoder_bwd(plan, Phase::Audio, &audio, &d_aud)?;
+
+        // ---- 7: all-reduce + SGD ----------------------------------------------
+        let t0 = std::time::Instant::now();
+        let (loss_g, tokens_g) = self.reduce_and_update(
+            loss_sum,
+            token_count,
+            vis_grads,
+            aud_grads,
+            llm_grads,
+        )?;
+        comm_s += t0.elapsed().as_secs_f64();
+
+        Ok(StepOutcome {
+            loss: loss_g / tokens_g.max(1.0),
+            tokens: tokens_g,
+            comm_seconds: comm_s,
+            compute_seconds: t_all.elapsed().as_secs_f64() - comm_s,
+        })
+    }
+
+    // -- encoder forward -----------------------------------------------------
+
+    fn encoder_phase(
+        &mut self,
+        plan: &StepPlan,
+        phase: Phase,
+        comm_s: &mut f64,
+    ) -> Result<EncoderState> {
+        let route = match phase {
+            Phase::Vision => &plan.vision.plan.route,
+            Phase::Audio => &plan.audio.plan.route,
+        };
+        // Ship my home examples' metadata to their encoder instances.
+        let mut sends: Vec<(usize, F32Msg)> = Vec::new();
+        for (g, e) in plan.examples.iter().enumerate() {
+            if plan.home[g] != self.rank || phase.meta_len(e) == 0 {
+                continue;
+            }
+            let payload = match phase {
+                Phase::Vision => {
+                    self.content.patches(e, self.cfg().patch_dim)
+                }
+                Phase::Audio => self.content.frames(e, self.cfg().mel_dim),
+            };
+            sends.push((route.to[g], (g, payload)));
+        }
+        let t0 = std::time::Instant::now();
+        let received = self.comms.f32s.all_to_all(self.rank, sends);
+        *comm_s += t0.elapsed().as_secs_f64();
+        let mut by_id: HashMap<usize, Vec<f32>> = received
+            .into_iter()
+            .map(|(_src, (g, data))| (g, data))
+            .collect();
+
+        // My encoder mini-batch, chunked into the compiled bucket.
+        let my_batch: Vec<usize> = match phase {
+            Phase::Vision => &plan.vision.plan.assignment[self.rank],
+            Phase::Audio => &plan.audio.plan.assignment[self.rank],
+        }
+        .iter()
+        .map(|e| e.id)
+        .collect();
+
+        let (fwd, b, l) = self.encoder_artifacts(phase, Dir::Fwd)?;
+        let feat = phase.feat_dim(self.cfg());
+        let mut state = EncoderState {
+            chunks: Vec::new(),
+            out_rows: HashMap::new(),
+        };
+        for chunk in my_batch.chunks(b) {
+            let mut input = HostTensor::zeros_f32(&[b, l, feat]);
+            let mut mask = HostTensor::zeros_i32(&[b, l]);
+            for (row, &g) in chunk.iter().enumerate() {
+                let e = &plan.examples[g];
+                let data = by_id
+                    .remove(&g)
+                    .ok_or_else(|| anyhow!("payload for example {g} missing"))?;
+                let n = phase.meta_len(e);
+                if n > l {
+                    bail!("example {g} length {n} exceeds bucket {l}");
+                }
+                input.f32s_mut()[row * l * feat..row * l * feat + n * feat]
+                    .copy_from_slice(&data);
+                for p in 0..n {
+                    mask.i32s_mut()[row * l + p] = 1;
+                }
+            }
+            let in_lits =
+                [input.to_literal()?, mask.to_literal()?];
+            let mut refs: Vec<&xla::Literal> =
+                self.params[phase.sub()].iter().collect();
+            refs.extend(in_lits.iter());
+            let spec = fwd.clone();
+            let out = self.runtime.execute_literals(&spec, &refs)?;
+            // Single output: [b, l/r, d_llm] token buffer.
+            let tokens = &out[0];
+            let tok_l = tokens.shape[1];
+            let d_llm = tokens.shape[2];
+            for (row, &g) in chunk.iter().enumerate() {
+                let e = &plan.examples[g];
+                let nt = phase.token_len(e);
+                let start = row * tok_l * d_llm;
+                state.out_rows.insert(
+                    g,
+                    tokens.f32s()[start..start + nt * d_llm].to_vec(),
+                );
+            }
+            state.chunks.push((chunk.to_vec(), input, mask));
+        }
+        Ok(state)
+    }
+
+    // -- encoder backward ------------------------------------------------------
+
+    fn encoder_bwd(
+        &mut self,
+        plan: &StepPlan,
+        phase: Phase,
+        state: &EncoderState,
+        d_out_rows: &HashMap<usize, Vec<f32>>,
+    ) -> Result<Vec<HostTensor>> {
+        let (bwd, b, l) = self.encoder_artifacts(phase, Dir::Bwd)?;
+        let d_llm = self.cfg().d_llm;
+        let r = phase.downsample(self.cfg());
+        let tok_l = l / r;
+        let mut acc: Option<Vec<HostTensor>> = None;
+        for (chunk, input, mask) in &state.chunks {
+            let mut d_out = HostTensor::zeros_f32(&[b, tok_l, d_llm]);
+            for (row, &g) in chunk.iter().enumerate() {
+                let e = &plan.examples[g];
+                let nt = phase.token_len(e);
+                let rows = d_out_rows.get(&g).ok_or_else(|| {
+                    anyhow!("d_out for example {g} missing")
+                })?;
+                let start = row * tok_l * d_llm;
+                d_out.f32s_mut()[start..start + nt * d_llm]
+                    .copy_from_slice(rows);
+            }
+            let in_lits = [
+                input.to_literal()?,
+                mask.to_literal()?,
+                d_out.to_literal()?,
+            ];
+            let mut refs: Vec<&xla::Literal> =
+                self.params[phase.sub()].iter().collect();
+            refs.extend(in_lits.iter());
+            let spec = bwd.clone();
+            let grads = self.runtime.execute_literals(&spec, &refs)?;
+            match &mut acc {
+                None => acc = Some(grads),
+                Some(acc) => {
+                    for (a, g) in acc.iter_mut().zip(&grads) {
+                        a.add_assign(g);
+                    }
+                }
+            }
+        }
+        Ok(acc.unwrap_or_else(|| {
+            // No chunk on this worker: zero grads of the right shapes.
+            self.runtime.manifest.params[phase.sub()]
+                .iter()
+                .map(|p| HostTensor::zeros_f32(&p.shape))
+                .collect()
+        }))
+    }
+
+    // -- routing helpers -----------------------------------------------------
+
+    /// Route encoder output rows along a rearrangement; returns rows for
+    /// examples this rank hosts in the LLM phase.
+    fn route_tokens(
+        &self,
+        plan: &StepPlan,
+        route: &crate::orchestrator::rearrangement::Rearrangement,
+        state: &EncoderState,
+        comm_s: &mut f64,
+    ) -> Result<HashMap<usize, Vec<f32>>> {
+        let mut sends: Vec<(usize, F32Msg)> = Vec::new();
+        for (&g, rows) in &state.out_rows {
+            debug_assert_eq!(route.from[g], self.rank);
+            sends.push((route.to[g], (g, rows.clone())));
+        }
+        let _ = plan;
+        let t0 = std::time::Instant::now();
+        let received = self.comms.f32s.all_to_all(self.rank, sends);
+        *comm_s += t0.elapsed().as_secs_f64();
+        Ok(received.into_iter().map(|(_s, (g, d))| (g, d)).collect())
+    }
+
+    /// Route gradient rows back along the inverse composed route.
+    fn route_rows_back(
+        &self,
+        _plan: &StepPlan,
+        inv_route: &crate::orchestrator::rearrangement::Rearrangement,
+        rows: HashMap<usize, Vec<f32>>,
+        comm_s: &mut f64,
+    ) -> Result<HashMap<usize, Vec<f32>>> {
+        let mut sends: Vec<(usize, F32Msg)> = Vec::new();
+        for (g, data) in rows {
+            debug_assert_eq!(inv_route.from[g], self.rank);
+            sends.push((inv_route.to[g], (g, data)));
+        }
+        let t0 = std::time::Instant::now();
+        let received = self.comms.f32s.all_to_all(self.rank, sends);
+        *comm_s += t0.elapsed().as_secs_f64();
+        Ok(received.into_iter().map(|(_s, (g, d))| (g, d)).collect())
+    }
+
+    /// Route text tokens home → LLM instance.
+    fn route_text(
+        &self,
+        plan: &StepPlan,
+        comm_s: &mut f64,
+    ) -> Result<HashMap<usize, Vec<i32>>> {
+        let mut sends: Vec<(usize, I32Msg)> = Vec::new();
+        for (g, e) in plan.examples.iter().enumerate() {
+            if plan.home[g] != self.rank {
+                continue;
+            }
+            sends.push((plan.llm.route.to[g], (g, self.content.text(e))));
+        }
+        let t0 = std::time::Instant::now();
+        let received = self.comms.i32s.all_to_all(self.rank, sends);
+        *comm_s += t0.elapsed().as_secs_f64();
+        Ok(received.into_iter().map(|(_s, (g, d))| (g, d)).collect())
+    }
+
+    // -- LLM phase -------------------------------------------------------------
+
+    #[allow(clippy::type_complexity)]
+    fn llm_phase(
+        &mut self,
+        plan: &StepPlan,
+        vis_tokens: &HashMap<usize, Vec<f32>>,
+        aud_tokens: &HashMap<usize, Vec<f32>>,
+        texts: &HashMap<usize, Vec<i32>>,
+    ) -> Result<(
+        f64,
+        f64,
+        HashMap<usize, Vec<f32>>,
+        HashMap<usize, Vec<f32>>,
+        Vec<HostTensor>,
+    )> {
+        let spec = self
+            .runtime
+            .manifest
+            .artifact_with_prefix("llm_step")?
+            .clone();
+        let (b, l, tv, ta) = (
+            spec.bucket[0],
+            spec.bucket[1],
+            spec.bucket[2],
+            spec.bucket[3],
+        );
+        let d_llm = self.cfg().d_llm;
+        let my_batch: Vec<usize> = plan.llm.assignment[self.rank]
+            .iter()
+            .map(|e| e.id)
+            .collect();
+
+        let mut loss_sum = 0.0f64;
+        let mut token_count = 0.0f64;
+        let mut d_vis_rows = HashMap::new();
+        let mut d_aud_rows = HashMap::new();
+        let mut grads_acc: Option<Vec<HostTensor>> = None;
+
+        for chunk in my_batch.chunks(b) {
+            let mut token_ids = HostTensor::zeros_i32(&[b, l]);
+            let mut vis_buf = HostTensor::zeros_f32(&[b, tv, d_llm]);
+            let mut vis_pos = HostTensor::from_i32(&[b, tv], vec![-1; b * tv]);
+            let mut aud_buf = HostTensor::zeros_f32(&[b, ta, d_llm]);
+            let mut aud_pos = HostTensor::from_i32(&[b, ta], vec![-1; b * ta]);
+            let mut targets = HostTensor::zeros_i32(&[b, l]);
+            let mut loss_mask =
+                HostTensor::from_i32(&[b, l], vec![-1; b * l]);
+
+            for (row, &g) in chunk.iter().enumerate() {
+                let e = &plan.examples[g];
+                let (nv, na, nt) =
+                    (e.vis_tokens, e.aud_tokens, e.text_len);
+                let total = nv + na + nt;
+                if total > l || nv > tv || na > ta {
+                    bail!(
+                        "example {g} ({nv}+{na}+{nt}) exceeds bucket \
+                         ({b},{l},{tv},{ta})"
+                    );
+                }
+                // Layout: [vision tokens][audio tokens][text].
+                if nv > 0 {
+                    let rows = vis_tokens.get(&g).ok_or_else(|| {
+                        anyhow!("vis tokens for {g} missing")
+                    })?;
+                    vis_buf.f32s_mut()
+                        [row * tv * d_llm..row * tv * d_llm + nv * d_llm]
+                        .copy_from_slice(rows);
+                    for k in 0..nv {
+                        vis_pos.i32s_mut()[row * tv + k] = k as i32;
+                    }
+                }
+                if na > 0 {
+                    let rows = aud_tokens.get(&g).ok_or_else(|| {
+                        anyhow!("aud tokens for {g} missing")
+                    })?;
+                    aud_buf.f32s_mut()
+                        [row * ta * d_llm..row * ta * d_llm + na * d_llm]
+                        .copy_from_slice(rows);
+                    for k in 0..na {
+                        aud_pos.i32s_mut()[row * ta + k] = (nv + k) as i32;
+                    }
+                }
+                let text = texts
+                    .get(&g)
+                    .ok_or_else(|| anyhow!("text for {g} missing"))?;
+                for (k, &tok) in text.iter().enumerate() {
+                    token_ids.i32s_mut()[row * l + nv + na + k] = tok;
+                }
+                // Valid positions: loss_mask > -1 gates attention; 1
+                // marks positions whose *next* token is a text target.
+                for p in 0..total {
+                    loss_mask.i32s_mut()[row * l + p] = 0;
+                }
+                for p in (nv + na)..(total - 1) {
+                    targets.i32s_mut()[row * l + p] = text[p - nv - na + 1];
+                    loss_mask.i32s_mut()[row * l + p] = 1;
+                }
+            }
+
+            let in_lits = [
+                token_ids.to_literal()?,
+                vis_buf.to_literal()?,
+                vis_pos.to_literal()?,
+                aud_buf.to_literal()?,
+                aud_pos.to_literal()?,
+                targets.to_literal()?,
+                loss_mask.to_literal()?,
+            ];
+            let mut refs: Vec<&xla::Literal> =
+                self.params["llm"].iter().collect();
+            refs.extend(in_lits.iter());
+            let out = self.runtime.execute_literals(&spec, &refs)?;
+            loss_sum += out[0].f32s()[0] as f64;
+            token_count += out[1].f32s()[0] as f64;
+            let d_vis = &out[2];
+            let d_aud = &out[3];
+            for (row, &g) in chunk.iter().enumerate() {
+                let e = &plan.examples[g];
+                if e.vis_tokens > 0 {
+                    let s = row * tv * d_llm;
+                    d_vis_rows.insert(
+                        g,
+                        d_vis.f32s()[s..s + e.vis_tokens * d_llm].to_vec(),
+                    );
+                }
+                if e.aud_tokens > 0 {
+                    let s = row * ta * d_llm;
+                    d_aud_rows.insert(
+                        g,
+                        d_aud.f32s()[s..s + e.aud_tokens * d_llm].to_vec(),
+                    );
+                }
+            }
+            let grads = out[4..].to_vec();
+            match &mut grads_acc {
+                None => grads_acc = Some(grads),
+                Some(acc) => {
+                    for (a, g) in acc.iter_mut().zip(&grads) {
+                        a.add_assign(g);
+                    }
+                }
+            }
+        }
+
+        let llm_grads = grads_acc.unwrap_or_else(|| {
+            self.runtime.manifest.params["llm"]
+                .iter()
+                .map(|p| HostTensor::zeros_f32(&p.shape))
+                .collect()
+        });
+        Ok((loss_sum, token_count, d_vis_rows, d_aud_rows, llm_grads))
+    }
+
+    // -- reduction + update ---------------------------------------------------
+
+    fn reduce_and_update(
+        &mut self,
+        loss_sum: f64,
+        token_count: f64,
+        vis_grads: Vec<HostTensor>,
+        aud_grads: Vec<HostTensor>,
+        llm_grads: Vec<HostTensor>,
+    ) -> Result<(f64, f64)> {
+        // Concatenate everything (+ loss, tokens) into one flat buffer
+        // and sum-all-reduce it.
+        let groups = [
+            ("vision", vis_grads),
+            ("audio", aud_grads),
+            ("llm", llm_grads),
+        ];
+        let mut flat = vec![loss_sum as f32, token_count as f32];
+        for (_, grads) in &groups {
+            for g in grads {
+                flat.extend_from_slice(g.f32s());
+            }
+        }
+        self.comms.grads.all_reduce_sum(self.rank, &mut flat);
+        let loss_g = flat[0] as f64;
+        let tokens_g = flat[1] as f64;
+
+        // SGD per submodule: p <- p - (lr / global_tokens) * g_sum.
+        let step_scale = (self.lr / tokens_g.max(1.0)) as f32;
+        let mut offset = 2;
+        for (sub, grads) in groups {
+            let spec = self
+                .runtime
+                .manifest
+                .artifact(&format!("sgd_{sub}"))?
+                .clone();
+            let scale_lit =
+                HostTensor::scalar_f32(step_scale).to_literal()?;
+            let mut grad_lits = Vec::with_capacity(grads.len());
+            for g in &grads {
+                let n = g.len();
+                grad_lits.push(
+                    HostTensor::from_f32(
+                        &g.shape,
+                        flat[offset..offset + n].to_vec(),
+                    )
+                    .to_literal()?,
+                );
+                offset += n;
+            }
+            let mut refs: Vec<&xla::Literal> = vec![&scale_lit];
+            refs.extend(self.params[sub].iter());
+            refs.extend(grad_lits.iter());
+            let new_params =
+                self.runtime.execute_literals(&spec, &refs)?;
+            // Refresh the literal cache once per step.
+            let new_lits = new_params
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<Vec<_>>>()?;
+            self.params.insert(sub.to_string(), new_lits);
+        }
+        Ok((loss_g, tokens_g))
+    }
+
+    // -- plumbing ---------------------------------------------------------------
+
+    fn encoder_artifacts(&self, phase: Phase, dir: Dir)
+        -> Result<(ArtifactSpec, usize, usize)> {
+        let prefix = match (phase, dir) {
+            (Phase::Vision, Dir::Fwd) => "vision_fwd",
+            (Phase::Vision, Dir::Bwd) => "vision_bwd",
+            (Phase::Audio, Dir::Fwd) => "audio_fwd",
+            (Phase::Audio, Dir::Bwd) => "audio_bwd",
+        };
+        let spec = self
+            .runtime
+            .manifest
+            .artifact_with_prefix(prefix)
+            .with_context(|| format!("{prefix} artifact"))?
+            .clone();
+        let (b, l) = (spec.bucket[0], spec.bucket[1]);
+        Ok((spec, b, l))
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Vision,
+    Audio,
+}
+
+#[derive(Clone, Copy)]
+enum Dir {
+    Fwd,
+    Bwd,
+}
+
+impl Phase {
+    fn sub(&self) -> &'static str {
+        match self {
+            Phase::Vision => "vision",
+            Phase::Audio => "audio",
+        }
+    }
+
+    fn meta_len(&self, e: &Example) -> usize {
+        match self {
+            Phase::Vision => e.vis_len,
+            Phase::Audio => e.aud_len,
+        }
+    }
+
+    fn token_len(&self, e: &Example) -> usize {
+        match self {
+            Phase::Vision => e.vis_tokens,
+            Phase::Audio => e.aud_tokens,
+        }
+    }
+
+    fn feat_dim(&self, cfg: &crate::runtime::manifest::ModelInfo) -> usize {
+        match self {
+            Phase::Vision => cfg.patch_dim,
+            Phase::Audio => cfg.mel_dim,
+        }
+    }
+
+    fn downsample(&self, cfg: &crate::runtime::manifest::ModelInfo)
+        -> usize {
+        match self {
+            Phase::Vision => cfg.vis_group,
+            Phase::Audio => cfg.aud_stride,
+        }
+    }
+}

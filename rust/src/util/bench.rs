@@ -1,0 +1,191 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable in
+//! this offline environment, so the crate ships its own).
+//!
+//! Usage inside a `[[bench]] harness = false` target:
+//!
+//! ```no_run
+//! use orchmllm::util::bench::Bencher;
+//! let mut b = Bencher::new("alg1_greedy");
+//! b.iter("n=1k", || { /* workload */ });
+//! b.report();
+//! ```
+//!
+//! Each case is warmed up, then timed for a fixed wall budget or minimum
+//! iteration count, and reported as mean / p50 / p99 with throughput-
+//! friendly nanosecond resolution.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Per-case timing configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            budget: Duration::from_millis(700),
+        }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl CaseResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+}
+
+/// A named group of benchmark cases.
+pub struct Bencher {
+    group: String,
+    config: BenchConfig,
+    results: Vec<CaseResult>,
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:8.1} ns")
+    } else if ns < 1e6 {
+        format!("{:8.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:8.3} ms", ns / 1e6)
+    } else {
+        format!("{:8.3} s ", ns / 1e9)
+    }
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Self {
+        Bencher {
+            group: group.to_string(),
+            config: BenchConfig::default(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(group: &str, config: BenchConfig) -> Self {
+        Bencher {
+            group: group.to_string(),
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, preventing the compiler from eliding its result.
+    pub fn iter<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F)
+        -> &CaseResult {
+        for _ in 0..self.config.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Summary::new();
+        let start = Instant::now();
+        let mut iters = 0;
+        while iters < self.config.min_iters
+            || (start.elapsed() < self.config.budget
+                && iters < self.config.max_iters)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+            iters += 1;
+        }
+        let res = CaseResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: samples.mean(),
+            p50_ns: samples.percentile(50.0),
+            p99_ns: samples.percentile(99.0),
+            min_ns: samples.min(),
+        };
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+
+    /// Print a criterion-like table for this group.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<38} {:>10} {:>11} {:>11} {:>11}",
+            "case", "iters", "mean", "p50", "p99"
+        );
+        for r in &self.results {
+            println!(
+                "{:<38} {:>10} {} {} {}",
+                r.name,
+                r.iters,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.p50_ns),
+                fmt_ns(r.p99_ns)
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher::with_config(
+            "t",
+            BenchConfig {
+                warmup_iters: 1,
+                min_iters: 5,
+                max_iters: 5,
+                budget: Duration::from_millis(1),
+            },
+        );
+        let r = b.iter("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn collects_multiple_cases() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 2,
+            budget: Duration::from_millis(1),
+        };
+        let mut b = Bencher::with_config("t", cfg);
+        b.iter("a", || 1 + 1);
+        b.iter("b", || 2 + 2);
+        assert_eq!(b.results().len(), 2);
+    }
+}

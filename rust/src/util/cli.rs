@@ -1,0 +1,136 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Subcommand dispatch is handled by the caller (see `main.rs`).
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects a number, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    /// First positional argument (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        // NOTE: `--key value` binds greedily, so boolean flags must come
+        // last or use no trailing positional (documented semantics).
+        let a = parse(&[
+            "train", "extra", "--steps", "100", "--lr=0.5", "--verbose",
+        ]);
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.usize("steps", 0), 100);
+        assert_eq!(a.f64("lr", 0.0), 0.5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["train", "extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["sim"]);
+        assert_eq!(a.usize("gpus", 64), 64);
+        assert_eq!(a.get_or("model", "mllm-10b"), "mllm-10b");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let a = parse(&["x", "--dry-run"]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_integer_panics() {
+        let a = parse(&["--steps", "ten"]);
+        a.usize("steps", 0);
+    }
+}

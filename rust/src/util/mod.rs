@@ -1,0 +1,11 @@
+//! From-scratch substrates the crate needs in a no-network environment:
+//! a seedable PRNG, a JSON parser/writer (configs + artifact manifests),
+//! a tiny CLI argument parser, a criterion-style micro-bench harness, a
+//! property-testing runner, and summary statistics.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

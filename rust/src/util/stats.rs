@@ -1,0 +1,180 @@
+//! Summary statistics for metrics, benchmarks, and the incoherence report.
+
+/// Online and batch summary statistics over f64 samples.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    xs: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        Summary { xs: xs.to_vec() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.xs.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.xs.len() as f64
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.xs.len() - 1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Coefficient of variation (std / mean); 0 when mean is 0.
+    pub fn cv(&self) -> f64 {
+        let m = self.mean();
+        if m == 0.0 {
+            0.0
+        } else {
+            self.std() / m
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile by linear interpolation, `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.xs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            let w = rank - lo as f64;
+            s[lo] * (1.0 - w) + s[hi] * w
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Normalized histogram over `bins` equal-width buckets in [lo, hi].
+    pub fn histogram(&self, lo: f64, hi: f64, bins: usize) -> Vec<f64> {
+        let mut h = vec![0.0; bins];
+        if self.xs.is_empty() || hi <= lo {
+            return h;
+        }
+        for &x in &self.xs {
+            let t = ((x - lo) / (hi - lo)).clamp(0.0, 1.0);
+            let mut b = (t * bins as f64) as usize;
+            if b == bins {
+                b -= 1;
+            }
+            h[b] += 1.0;
+        }
+        let n = self.xs.len() as f64;
+        for v in &mut h {
+            *v /= n;
+        }
+        h
+    }
+}
+
+/// Render a one-line unicode sparkline histogram (for terminal reports).
+pub fn sparkline(values: &[f64]) -> String {
+    const TICKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = values.iter().copied().fold(f64::MIN, f64::max);
+    if max <= 0.0 {
+        return " ".repeat(values.len());
+    }
+    values
+        .iter()
+        .map(|&v| {
+            let idx = ((v / max) * 7.0).round().clamp(0.0, 7.0) as usize;
+            TICKS[idx]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let s = Summary::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean(), 2.5);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.median(), 2.5);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let s = Summary::from_slice(&[0.0, 10.0]);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 5.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_sums_to_one() {
+        let s = Summary::from_slice(&(0..100).map(|i| i as f64).collect::<Vec<_>>());
+        let h = s.histogram(0.0, 100.0, 10);
+        assert!((h.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(h.iter().all(|&v| (v - 0.1).abs() < 0.011));
+    }
+
+    #[test]
+    fn empty_summary_is_safe() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn cv_of_constant_is_zero() {
+        let s = Summary::from_slice(&[5.0; 10]);
+        assert_eq!(s.cv(), 0.0);
+    }
+
+    #[test]
+    fn sparkline_has_expected_len() {
+        assert_eq!(sparkline(&[0.0, 0.5, 1.0]).chars().count(), 3);
+    }
+}

@@ -1,0 +1,174 @@
+//! Integration tests across balance + comm + nodewise + orchestrator:
+//! the properties the paper's design depends on, exercised through the
+//! public API on realistic synthetic workloads.
+
+use orchmllm::balance::cost::CostModel;
+use orchmllm::balance::types::Policy;
+use orchmllm::comm::topology::Topology;
+use orchmllm::data::incoherence::IncoherenceReport;
+use orchmllm::data::synth::{DatasetConfig, Example, Generator};
+use orchmllm::model::flops::PhaseKind;
+use orchmllm::orchestrator::dispatcher::{Communicator, Dispatcher};
+use orchmllm::orchestrator::global::{Orchestrator, OrchestratorConfig};
+
+fn sample(d: usize, b: usize, seed: u64) -> Vec<Vec<Example>> {
+    let mut g = Generator::new(DatasetConfig::default(), seed);
+    (0..d).map(|_| g.batch(b)).collect()
+}
+
+#[test]
+fn incoherent_data_defeats_llm_only_balance_consistently() {
+    // Over many seeds, LLM-only balancing must leave encoder phases
+    // imbalanced — the paper's core motivation (§3.1).
+    let topo = Topology::h100(32);
+    let lin = CostModel::Linear { alpha: 1.0 };
+    let mut worse = 0;
+    for seed in 0..10 {
+        let mbs = sample(32, 40, seed);
+        let plan = Orchestrator::new(OrchestratorConfig::llm_only(7168.0))
+            .plan_step(&topo, &mbs);
+        let enc_imb = lin
+            .imbalance(plan.assignment(PhaseKind::Vision))
+            .max(lin.imbalance(plan.assignment(PhaseKind::Audio)));
+        if enc_imb > 1.15 {
+            worse += 1;
+        }
+    }
+    assert!(worse >= 9, "encoder imbalance vanished in {}/10 seeds", 10 - worse);
+}
+
+#[test]
+fn full_balance_fixes_all_phases_across_seeds() {
+    let topo = Topology::h100(32);
+    let lin = CostModel::Linear { alpha: 1.0 };
+    for seed in 0..10 {
+        let mbs = sample(32, 40, seed);
+        let plan = Orchestrator::new(OrchestratorConfig::orchmllm(7168.0))
+            .plan_step(&topo, &mbs);
+        for phase in PhaseKind::ALL {
+            let imb = lin.imbalance(plan.assignment(phase));
+            assert!(
+                imb < 1.30,
+                "seed {seed} phase {} imbalance {imb}",
+                phase.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn every_example_is_conserved_through_the_full_pipeline() {
+    // No example may be lost or duplicated by any phase's dispatch,
+    // including the composed encoder-output routes.
+    let topo = Topology::h100(16);
+    let mbs = sample(16, 25, 3);
+    let plan = Orchestrator::new(OrchestratorConfig::orchmllm(7168.0))
+        .plan_step(&topo, &mbs);
+    let n = plan.examples.len();
+    assert_eq!(n, 16 * 25);
+
+    for phase in PhaseKind::ALL {
+        let mut seen = vec![false; n];
+        for (i, batch) in plan.assignment(phase).iter().enumerate() {
+            assert!(i < 16);
+            for e in batch {
+                assert!(!seen[e.id], "{}: dup {}", phase.name(), e.id);
+                seen[e.id] = true;
+            }
+        }
+        let expect = |e: &Example| match phase {
+            PhaseKind::Vision => e.vis_len > 0,
+            PhaseKind::Audio => e.aud_len > 0,
+            PhaseKind::Llm => true,
+        };
+        for (g, e) in plan.examples.iter().enumerate() {
+            assert_eq!(
+                seen[g],
+                expect(e),
+                "{}: example {g} participation wrong",
+                phase.name()
+            );
+        }
+    }
+
+    // Composed routes: encoder-output start = encoder placement,
+    // end = LLM placement, for every participating example.
+    for g in 0..n {
+        if plan.examples[g].vis_len > 0 {
+            assert_eq!(
+                plan.vision.out_route.from[g],
+                plan.vision.plan.route.to[g]
+            );
+            assert_eq!(plan.vision.out_route.to[g], plan.llm.route.to[g]);
+        }
+        if plan.examples[g].aud_len > 0 {
+            assert_eq!(
+                plan.audio.out_route.from[g],
+                plan.audio.plan.route.to[g]
+            );
+            assert_eq!(plan.audio.out_route.to[g], plan.llm.route.to[g]);
+        }
+    }
+}
+
+#[test]
+fn nodewise_dispatch_never_increases_max_inter_node_send() {
+    let topo = Topology::h100(32);
+    let mut gen = Generator::new(DatasetConfig::default(), 11);
+    for _ in 0..5 {
+        let examples = gen.batch(32 * 20);
+        let placement: Vec<usize> = (0..examples.len())
+            .map(|g| g / 20)
+            .collect();
+        let lens: Vec<usize> =
+            examples.iter().map(|e| e.vis_len).collect();
+        let payload: Vec<f64> =
+            lens.iter().map(|&l| l as f64 * 1176.0).collect();
+        let mk = |nodewise| Dispatcher {
+            policy: Policy::GreedyUnpadded,
+            communicator: Communicator::AllToAll { nodewise },
+        };
+        let with = mk(true).dispatch(&topo, &placement, &lens, &payload);
+        let without =
+            mk(false).dispatch(&topo, &placement, &lens, &payload);
+        let m_with = with.route.max_inter_node_bytes(&topo, &payload);
+        let m_without =
+            without.route.max_inter_node_bytes(&topo, &payload);
+        assert!(
+            m_with <= m_without + 1e-6,
+            "nodewise regressed: {m_with} > {m_without}"
+        );
+    }
+}
+
+#[test]
+fn generated_corpus_is_incoherent_at_scale() {
+    let ex = Generator::new(DatasetConfig::default(), 99).batch(50_000);
+    let rep = IncoherenceReport::from_examples(&ex, 20);
+    assert!(rep.is_incoherent(), "{}", rep.render());
+}
+
+#[test]
+fn balancing_is_a_pure_permutation_of_lengths() {
+    // The multiset of (id, len) pairs must be identical before and
+    // after — the data-level statement of consequence-invariance.
+    let topo = Topology::h100(8);
+    let mbs = sample(8, 30, 21);
+    let plan = Orchestrator::new(OrchestratorConfig::orchmllm(7168.0))
+        .plan_step(&topo, &mbs);
+    let mut before: Vec<(usize, usize)> = plan
+        .examples
+        .iter()
+        .enumerate()
+        .map(|(g, e)| (g, e.llm_len()))
+        .collect();
+    let mut after: Vec<(usize, usize)> = plan
+        .assignment(PhaseKind::Llm)
+        .iter()
+        .flatten()
+        .map(|e| (e.id, e.len))
+        .collect();
+    before.sort_unstable();
+    after.sort_unstable();
+    assert_eq!(before, after);
+}

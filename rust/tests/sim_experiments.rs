@@ -1,0 +1,112 @@
+//! Fast integration checks that the simulator reproduces each paper
+//! experiment's *shape* at reduced scale — the full-scale versions live
+//! in `rust/benches/`. These guard the conclusions against regressions
+//! in the balancing/orchestration/pricing stack.
+
+use orchmllm::model::config::MllmConfig;
+use orchmllm::sim::engine::{simulate_run, SystemKind};
+
+const GPUS: usize = 64;
+const STEPS: usize = 2;
+const SEED: u64 = 42;
+
+fn run(system: SystemKind, model: &MllmConfig, mb: usize)
+    -> orchmllm::sim::engine::RunSummary {
+    simulate_run(system, model, GPUS, mb, STEPS, SEED)
+}
+
+#[test]
+fn fig8_ordering_holds_at_small_scale() {
+    let model = MllmConfig::mllm_10b();
+    let orch = run(SystemKind::OrchMllm, &model, 40);
+    let mega = run(SystemKind::Megatron, &model, 40);
+    let none = run(SystemKind::NoBalance, &model, 32);
+    assert!(orch.mfu > none.mfu && none.mfu > mega.mfu,
+        "ordering broken: {} {} {}", orch.mfu, none.mfu, mega.mfu);
+    assert!(orch.tpt > none.tpt && none.tpt > mega.tpt);
+}
+
+#[test]
+fn fig8_gain_grows_with_model_size() {
+    let g10 = {
+        let m = MllmConfig::mllm_10b();
+        run(SystemKind::OrchMllm, &m, 40).mfu
+            / run(SystemKind::NoBalance, &m, 32).mfu
+    };
+    let g84 = {
+        let m = MllmConfig::mllm_84b();
+        run(SystemKind::OrchMllm, &m, 20).mfu
+            / run(SystemKind::NoBalance, &m, 10).mfu
+    };
+    assert!(g84 > g10, "gain must grow with size: {g10:.2} vs {g84:.2}");
+}
+
+#[test]
+fn table2_overhead_is_scale_free() {
+    let model = MllmConfig::mllm_10b();
+    let small = simulate_run(SystemKind::OrchMllm, &model, 32, 30, STEPS, SEED);
+    let large = simulate_run(SystemKind::OrchMllm, &model, 256, 30, STEPS, SEED);
+    // All-to-All overhead must not scale with d (Eq. 4).
+    assert!(
+        large.dispatcher_overhead_ms
+            < small.dispatcher_overhead_ms * 3.0,
+        "{} vs {}",
+        large.dispatcher_overhead_ms,
+        small.dispatcher_overhead_ms
+    );
+    // And it stays a small fraction of the step.
+    assert!(large.dispatcher_overhead_ms / 1e3 / large.step_secs < 0.05);
+}
+
+#[test]
+fn fig10_llm_only_loses_and_uses_more_memory() {
+    let model = MllmConfig::mllm_18b();
+    let orch = run(SystemKind::OrchMllm, &model, 30);
+    let llm = run(SystemKind::LlmOnly, &model, 30);
+    assert!(orch.mfu > llm.mfu);
+    assert!(orch.peak_mem_gb < llm.peak_mem_gb);
+}
+
+#[test]
+fn fig11_rigid_algorithms_lose() {
+    let model = MllmConfig::mllm_18b();
+    let orch = run(SystemKind::OrchMllm, &model, 30);
+    let rmpad = run(SystemKind::AllRmpad, &model, 30);
+    let pad = run(SystemKind::AllPad, &model, 30);
+    assert!(orch.mfu >= rmpad.mfu);
+    assert!(orch.mfu >= pad.mfu);
+    assert!(orch.mfu - rmpad.mfu > 0.01, "rmpad gap vanished");
+}
+
+#[test]
+fn fig12_allgather_pays_memory_and_mfu() {
+    let model = MllmConfig::mllm_10b();
+    let a2a = run(SystemKind::OrchMllm, &model, 40);
+    let ag = run(SystemKind::AllGatherComm, &model, 40);
+    assert!(ag.peak_mem_gb > a2a.peak_mem_gb);
+    assert!(a2a.mfu >= ag.mfu);
+}
+
+#[test]
+fn fig13_nodewise_reduces_max_inter_node_volume() {
+    let model = MllmConfig::mllm_10b();
+    let with = run(SystemKind::OrchMllm, &model, 40);
+    let without = run(SystemKind::NoNodewise, &model, 40);
+    let s_with: f64 = with.inter_node_mb.iter().sum();
+    let s_without: f64 = without.inter_node_mb.iter().sum();
+    let ratio = s_with / s_without.max(1e-9);
+    assert!(
+        ratio < 0.95,
+        "node-wise saved nothing: ratio {ratio:.3}"
+    );
+}
+
+#[test]
+fn composition_ablation_only_changes_comm() {
+    let model = MllmConfig::mllm_10b();
+    let with = run(SystemKind::OrchMllm, &model, 40);
+    let without = run(SystemKind::NoComposition, &model, 40);
+    assert!(with.comm_secs < without.comm_secs);
+    // Balance quality itself is unchanged.
+    assert!((with.mfu - without.mfu).abs() / with.mfu < 0.05);
+}
