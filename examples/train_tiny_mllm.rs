@@ -29,6 +29,7 @@ fn main() {
         lr: args.f64("lr", 4.0),
         seed: args.u64("seed", 0),
         balance: true,
+        balancer: args.get("balancer").map(str::to_string),
     };
     let invariance_steps = args.usize("invariance-steps", 5);
 

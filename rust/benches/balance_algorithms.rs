@@ -4,9 +4,14 @@
 //! pass, §6). Sizes go up to the paper's production scale: d = 2560
 //! instances × mb 80 ≈ 200k sequences.
 //!
+//! Every algorithm is driven through the [`Balancer`] registry on a
+//! reused [`PlanScratch`], i.e. exactly the dispatcher's hot path; a
+//! fresh-allocation case is timed alongside so the scratch win is
+//! visible.
+//!
 //! Run: `cargo bench --bench balance_algorithms`
 
-use orchmllm::balance::{self, types::Policy};
+use orchmllm::balance::{self, registry, PlanScratch};
 use orchmllm::comm::topology::Topology;
 use orchmllm::nodewise;
 use orchmllm::util::bench::Bencher;
@@ -15,30 +20,50 @@ use orchmllm::util::rng::Pcg64;
 fn main() {
     let mut rng = Pcg64::new(1);
 
-    let mut b = Bencher::new("post-balancing algorithms");
+    let mut b = Bencher::new("post-balancing algorithms (scratch reuse)");
+    let mut scratch = PlanScratch::new();
     for (d, mb) in [(64usize, 60usize), (320, 60), (2560, 80)] {
         let n = d * mb;
         let lens = balance::synth_lengths(&mut rng, n, 5.5, 1.0);
-        b.iter(&format!("alg1 greedy        d={d} n={n}"), || {
-            balance::balance(Policy::GreedyUnpadded, &lens, d)
-        });
-        b.iter(&format!("alg2 padded        d={d} n={n}"), || {
-            balance::balance(Policy::BinaryPadded, &lens, d)
-        });
-        if d <= 320 {
-            b.iter(&format!("alg3 quadratic     d={d} n={n}"), || {
-                balance::balance(
-                    Policy::QuadraticUnpadded { lambda: 0.01, tolerance: 32.0 },
-                    &lens,
-                    d,
-                )
+        for name in ["greedy", "padded", "quadratic", "convpad", "kk"] {
+            // The O(n·d) comparator stays at paper ablation scale, and
+            // the kk row is only timed where it actually runs LDM
+            // rather than its LPT fallback.
+            if name == "quadratic" && d > 320 {
+                continue;
+            }
+            if name == "kk"
+                && n.saturating_mul(d) > orchmllm::balance::kk::KK_MAX_WORK
+            {
+                continue;
+            }
+            let balancer = registry::must(name);
+            b.iter(&format!("{name:<10} d={d} n={n}"), || {
+                balancer.balance(&lens, d, &mut scratch)
             });
         }
-        b.iter(&format!("alg4 convpad       d={d} n={n}"), || {
-            balance::balance(Policy::ConvPadded { lambda: 0.001 }, &lens, d)
-        });
     }
     b.report();
+
+    // Scratch reuse vs per-call allocation, at ablation scale.
+    let mut b_alloc = Bencher::new("scratch reuse vs fresh allocation");
+    let lens = balance::synth_lengths(&mut rng, 320 * 60, 5.5, 1.0);
+    let greedy = registry::must("greedy");
+    let reused = b_alloc
+        .iter("greedy d=320 reused scratch", || {
+            greedy.balance(&lens, 320, &mut scratch)
+        })
+        .mean_ns;
+    let fresh = b_alloc
+        .iter("greedy d=320 fresh scratch", || {
+            greedy.balance(&lens, 320, &mut PlanScratch::new())
+        })
+        .mean_ns;
+    b_alloc.report();
+    println!(
+        "\nscratch reuse saves {:.1}% on greedy d=320\n",
+        100.0 * (fresh - reused) / fresh
+    );
 
     let mut b2 = Bencher::new("node-wise rearrangement");
     for d in [16usize, 64, 128, 320] {
@@ -65,8 +90,9 @@ fn main() {
     // The paper's claim: dispatcher computation is tens of ms at 2560
     // GPUs and fully overlappable. Assert the algorithms stay in budget.
     let lens = balance::synth_lengths(&mut rng, 2560 * 80, 5.5, 1.0);
+    let greedy = registry::must("greedy");
     let t0 = std::time::Instant::now();
-    let _ = balance::balance(Policy::GreedyUnpadded, &lens, 2560);
+    let _ = greedy.balance(&lens, 2560, &mut scratch);
     let alg1 = t0.elapsed();
     println!(
         "\nalg1 at paper scale (2560x80): {:.1} ms (budget: tens of ms)",

@@ -1,17 +1,29 @@
 //! Table 2: dispatcher overhead (ms) and forward duration (s) as the
-//! cluster scales 64 → 2560 GPUs (MLLM-10B, mb 60).
+//! cluster scales 64 → 2560 GPUs (MLLM-10B, mb 60), plus the serial vs
+//! parallel+scratch planning comparison that the step pipeline's §6
+//! overlap rests on.
 //!
 //! Expected shape (paper): overhead stays tens of ms (16.7 → 53.9 ms),
 //! <2% of the forward duration, because the All-to-All cost is
 //! scale-free (Eq. 4) and the solver computation overlaps with the
 //! forward pass.
 //!
+//! Emits `BENCH_table2_overhead.json` (overhead sweep + before/after
+//! planning wall-times) so the speedup is tracked across PRs.
+//!
 //! Run: `cargo bench --bench table2_overhead`
 
+use orchmllm::comm::topology::Topology;
+use orchmllm::data::synth::{DatasetConfig, Example, Generator};
 use orchmllm::model::config::MllmConfig;
+use orchmllm::orchestrator::global::{
+    Orchestrator, OrchestratorConfig, StepScratch,
+};
 use orchmllm::sim::engine::{simulate_run, SystemKind};
 use orchmllm::sim::report;
+use orchmllm::util::bench::Bencher;
 use orchmllm::util::cli::Args;
+use orchmllm::util::json::Json;
 
 fn main() {
     let args = Args::from_env();
@@ -61,4 +73,92 @@ fn main() {
             c.gpus
         );
     }
+
+    // ---- serial vs parallel+scratch planning ---------------------------
+    // The acceptance workload: 3 phases, d = 32 instances. `serial` is
+    // the pre-refactor path (one phase after another, fresh allocations
+    // each step); `parallel` is the shipped path (phases planned
+    // concurrently on a reused StepScratch).
+    let d = args.usize("plan-gpus", 32);
+    let mb = args.usize("plan-mb", 60);
+    let topo = Topology::h100(d);
+    let orch =
+        Orchestrator::new(OrchestratorConfig::orchmllm(3584.0 * 2.0));
+    let mut generator = Generator::new(DatasetConfig::default(), seed);
+    let minibatches: Vec<Vec<Example>> =
+        (0..d).map(|_| generator.batch(mb)).collect();
+
+    let mut bench = Bencher::new(&format!(
+        "step planning (3 phases, d={d}, n={} per phase)",
+        d * mb
+    ));
+    let (serial_ms, serial_best_ms) = {
+        let r = bench.iter("serial, fresh allocations", || {
+            orch.plan_step_serial(&topo, &minibatches)
+        });
+        (r.mean_ms(), r.min_ns / 1e6)
+    };
+    let mut scratch = StepScratch::default();
+    let (parallel_ms, parallel_best_ms) = {
+        let r = bench.iter("parallel phases + scratch", || {
+            orch.plan_step_with(&topo, &minibatches, &mut scratch)
+        });
+        (r.mean_ms(), r.min_ns / 1e6)
+    };
+    bench.report();
+    let speedup = serial_ms / parallel_ms.max(1e-9);
+    println!(
+        "\nplanning: serial {serial_ms:.3} ms -> parallel+scratch \
+         {parallel_ms:.3} ms ({speedup:.2}x; best-case \
+         {serial_best_ms:.3} -> {parallel_best_ms:.3} ms)"
+    );
+    // Compare best-case times: minima measure the intrinsic cost of
+    // each path, where means on a shared/loaded runner fold scheduler
+    // noise into whichever case ran during a spike. On a single-core
+    // host parallel phase planning cannot win by construction, so the
+    // comparison is reported but not enforced there.
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if cores >= 2 {
+        assert!(
+            parallel_best_ms < serial_best_ms,
+            "parallel+scratch planning ({parallel_best_ms:.3} ms best) \
+             did not beat the serial path ({serial_best_ms:.3} ms best)"
+        );
+    } else {
+        eprintln!("single-core host: speedup assertion skipped");
+    }
+
+    // ---- JSON emission (tracked across PRs) ----------------------------
+    let sweep = Json::arr(cells.iter().map(|c| {
+        Json::obj(vec![
+            ("gpus", Json::num(c.gpus as f64)),
+            ("overhead_ms", Json::num(c.dispatcher_overhead_ms)),
+            ("step_secs", Json::num(c.step_secs)),
+            ("plan_ms", Json::num(c.plan_ms)),
+            ("plan_overlapped_pct", Json::num(c.plan_overlapped_pct)),
+        ])
+    }));
+    let out = Json::obj(vec![
+        ("bench", Json::str("table2_overhead")),
+        ("model", Json::str(model.name)),
+        ("mini_batch", Json::num(60.0)),
+        ("steps", Json::num(steps as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("sweep", sweep),
+        (
+            "planning",
+            Json::obj(vec![
+                ("gpus", Json::num(d as f64)),
+                ("mini_batch", Json::num(mb as f64)),
+                ("serial_ms", Json::num(serial_ms)),
+                ("parallel_scratch_ms", Json::num(parallel_ms)),
+                ("speedup", Json::num(speedup)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_table2_overhead.json";
+    std::fs::write(path, out.pretty()).expect("write bench json");
+    println!("wrote {path}");
 }

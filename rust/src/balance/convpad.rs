@@ -9,13 +9,12 @@
 //! the remainder with the sum-ordered priority queue. Complexity
 //! O(n log n).
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use super::balancer::{Balancer, CostRegime};
+use super::cost::CostModel;
+use super::scratch::{heap_assign, heapify, PlanScratch};
+use super::types::{batch_length, Assignment, BatchingMode};
 
-use super::greedy::balance_lpt;
-use super::types::{batch_length, Assignment, BatchingMode, ExampleRef};
-
-/// Appendix Alg "4th".
+/// Appendix Alg "4th" with a reusable scratch.
 ///
 /// Returns the best of (a) the paper's seeded first-fit + greedy spill,
 /// (b) [`super::padded::balance_padded`], and (c) the identity dealing —
@@ -23,16 +22,18 @@ use super::types::{batch_length, Assignment, BatchingMode, ExampleRef};
 /// dispatcher keeping a cheaper arrangement when the heuristic regresses
 /// is exactly the "adaptive to different scenarios" behaviour §5.1
 /// requires.
-pub fn balance_convpad(lens: &[usize], d: usize, lambda: f64) -> Assignment {
-    let seeded = convpad_seeded(lens, d);
-    let cm = crate::balance::cost::CostModel::ConvPadded {
-        alpha: 1.0,
-        lambda,
-    };
+pub fn balance_convpad_with(
+    lens: &[usize],
+    d: usize,
+    lambda: f64,
+    scratch: &mut PlanScratch,
+) -> Assignment {
+    let seeded = convpad_seeded(lens, d, scratch);
+    let cm = CostModel::ConvPadded { alpha: 1.0, lambda };
     let mut best = seeded;
     let mut best_cost = cm.makespan(&best);
     for cand in [
-        super::padded::balance_padded(lens, d),
+        super::padded::balance_padded_with(lens, d, scratch),
         super::types::identity_with_lens(lens, d),
     ] {
         let c = cm.makespan(&cand);
@@ -44,40 +45,50 @@ pub fn balance_convpad(lens: &[usize], d: usize, lambda: f64) -> Assignment {
     best
 }
 
+/// Appendix Alg "4th" (convenience wrapper over a fresh scratch).
+pub fn balance_convpad(lens: &[usize], d: usize, lambda: f64) -> Assignment {
+    balance_convpad_with(lens, d, lambda, &mut PlanScratch::new())
+}
+
 /// The paper's pseudocode: seed under the Alg-1 bound, spill by sum.
-fn convpad_seeded(lens: &[usize], d: usize) -> Assignment {
+fn convpad_seeded(
+    lens: &[usize],
+    d: usize,
+    scratch: &mut PlanScratch,
+) -> Assignment {
     assert!(d > 0, "need at least one DP instance");
     let n = lens.len();
     if n == 0 {
         return vec![Vec::new(); d];
     }
-    // Step 1: the Algorithm-1 objective value bounds per-batch token sums.
-    let bound = balance_lpt(lens, d)
+    // Step 1: the Algorithm-1 objective value bounds per-batch token
+    // sums. Simulate the LPT heap over load totals only — no batch
+    // materialization needed for the bound.
+    scratch.refs_desc(lens);
+    scratch.heap_zeroed(d);
+    for &e in &scratch.refs {
+        heap_assign(&mut scratch.heap, e.len);
+    }
+    let bound = scratch
+        .heap
         .iter()
-        .map(|b| batch_length(b, BatchingMode::Unpadded))
+        .map(|&(load, _)| load)
         .max()
         .unwrap_or(0)
         .max(1);
-
-    let mut sorted: Vec<ExampleRef> = lens
-        .iter()
-        .enumerate()
-        .map(|(id, &len)| ExampleRef { id, len })
-        .collect();
-    sorted.sort_unstable_by(|a, b| b.len.cmp(&a.len).then(a.id.cmp(&b.id)));
 
     // Step 2: seed up to d batches first-fit under the padded bound —
     // descending order means a batch's first element fixes its padded
     // length, so `(count+1) * first_len > bound` opens a new batch.
     let mut batches: Assignment = vec![Vec::new()];
-    let mut spill = Vec::new();
-    let mut iter = sorted.into_iter();
+    scratch.spill.clear();
+    let mut iter = scratch.refs.iter().copied();
     for e in iter.by_ref() {
         let cur = batches.last_mut().unwrap();
         let pad_len = cur.first().map(|f| f.len).unwrap_or(e.len);
         if !cur.is_empty() && (cur.len() + 1) * pad_len > bound {
             if batches.len() == d {
-                spill.push(e);
+                scratch.spill.push(e);
                 break;
             }
             batches.push(vec![e]);
@@ -85,23 +96,59 @@ fn convpad_seeded(lens: &[usize], d: usize) -> Assignment {
             cur.push(e);
         }
     }
-    spill.extend(iter);
+    scratch.spill.extend(iter);
     while batches.len() < d {
         batches.push(Vec::new());
     }
 
     // Step 3: distribute the remainder to the lightest batch by sum.
-    let mut heap: BinaryHeap<Reverse<(usize, usize)>> = batches
-        .iter()
-        .enumerate()
-        .map(|(i, b)| Reverse((batch_length(b, BatchingMode::Unpadded), i)))
-        .collect();
-    for e in spill {
-        let Reverse((sum, i)) = heap.pop().unwrap();
+    scratch.heap.clear();
+    scratch.heap.extend(
+        batches
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (batch_length(b, BatchingMode::Unpadded), i)),
+    );
+    heapify(&mut scratch.heap);
+    for &e in &scratch.spill {
+        let i = heap_assign(&mut scratch.heap, e.len);
         batches[i].push(e);
-        heap.push(Reverse((sum + e.len, i)));
     }
     batches
+}
+
+/// Registry entry: `convpad` (alias `alg4`).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvPadBalancer {
+    /// λ of the ConvTransformer objective.
+    pub lambda: f64,
+}
+
+impl Balancer for ConvPadBalancer {
+    fn name(&self) -> &'static str {
+        "convpad"
+    }
+
+    fn batching_mode(&self) -> BatchingMode {
+        BatchingMode::Padded
+    }
+
+    fn cost_regime(&self) -> CostRegime {
+        CostRegime::ConvAttention
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::ConvPadded { alpha: 1.0, lambda: self.lambda }
+    }
+
+    fn balance(
+        &self,
+        lens: &[usize],
+        d: usize,
+        scratch: &mut PlanScratch,
+    ) -> Assignment {
+        balance_convpad_with(lens, d, self.lambda, scratch)
+    }
 }
 
 #[cfg(test)]

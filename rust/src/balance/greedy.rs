@@ -6,36 +6,57 @@
 //! a 4/3-approximation for the minimax makespan; complexity
 //! O(n log n + n log d).
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use super::balancer::{Balancer, CostRegime};
+use super::scratch::{heap_assign, PlanScratch};
+use super::types::{Assignment, BatchingMode};
 
-use super::types::{Assignment, ExampleRef};
-
-/// Heap entry: (current token sum, batch index). `Reverse` turns the
-/// max-heap into a min-heap on the sum; ties break on batch index for
-/// determinism.
-type Entry = Reverse<(usize, usize)>;
-
-/// Algorithm 1 of the paper.
-pub fn balance_lpt(lens: &[usize], d: usize) -> Assignment {
+/// Algorithm 1 of the paper, allocation-free given a warm scratch.
+pub fn balance_lpt_with(
+    lens: &[usize],
+    d: usize,
+    scratch: &mut PlanScratch,
+) -> Assignment {
     assert!(d > 0, "need at least one DP instance");
-    let mut sorted: Vec<ExampleRef> = lens
-        .iter()
-        .enumerate()
-        .map(|(id, &len)| ExampleRef { id, len })
-        .collect();
-    // Descending by length; ties by id for determinism.
-    sorted.sort_unstable_by(|a, b| b.len.cmp(&a.len).then(a.id.cmp(&b.id)));
-
+    scratch.refs_desc(lens);
+    scratch.heap_zeroed(d);
     let mut batches: Assignment = vec![Vec::new(); d];
-    let mut heap: BinaryHeap<Entry> =
-        (0..d).map(|i| Reverse((0usize, i))).collect();
-    for e in sorted {
-        let Reverse((sum, i)) = heap.pop().expect("heap never empties");
+    for &e in &scratch.refs {
+        let i = heap_assign(&mut scratch.heap, e.len);
         batches[i].push(e);
-        heap.push(Reverse((sum + e.len, i)));
     }
     batches
+}
+
+/// Algorithm 1 of the paper (convenience wrapper over a fresh scratch).
+pub fn balance_lpt(lens: &[usize], d: usize) -> Assignment {
+    balance_lpt_with(lens, d, &mut PlanScratch::new())
+}
+
+/// Registry entry: `greedy` (aliases `lpt`, `alg1`).
+#[derive(Clone, Copy, Debug)]
+pub struct GreedyLpt;
+
+impl Balancer for GreedyLpt {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn batching_mode(&self) -> BatchingMode {
+        BatchingMode::Unpadded
+    }
+
+    fn cost_regime(&self) -> CostRegime {
+        CostRegime::Linear
+    }
+
+    fn balance(
+        &self,
+        lens: &[usize],
+        d: usize,
+        scratch: &mut PlanScratch,
+    ) -> Assignment {
+        balance_lpt_with(lens, d, scratch)
+    }
 }
 
 #[cfg(test)]
@@ -74,6 +95,20 @@ mod tests {
     fn deterministic() {
         let lens = vec![5, 9, 1, 7, 7, 3, 2, 8];
         assert_eq!(balance_lpt(&lens, 3), balance_lpt(&lens, 3));
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_allocation() {
+        let mut s = PlanScratch::new();
+        let mut g = crate::util::prop::Gen::new(77);
+        for _ in 0..20 {
+            let d = g.usize(1, 9);
+            let lens = g.seq_lengths(g.usize(0, 120), 3.0, 1.1);
+            assert_eq!(
+                balance_lpt_with(&lens, d, &mut s),
+                balance_lpt(&lens, d),
+            );
+        }
     }
 
     #[test]

@@ -7,46 +7,55 @@
 //! commutative/associative, any such rearrangement is consequence-
 //! invariant (§3.3) — these algorithms only ever permute examples.
 //!
-//! | algorithm                | batching    | cost regime        | paper |
-//! |--------------------------|-------------|--------------------|-------|
-//! | [`greedy::balance_lpt`]  | no padding  | β ≪ α (linear)     | Alg 1 |
-//! | [`padded::balance_padded`]| padding    | β ≪ α (linear)     | Alg 2 |
-//! | [`quadratic::balance_quadratic`] | no padding | β ≈ α        | Alg 4 (3rd) |
-//! | [`convpad::balance_convpad`] | padding | conv-attention     | Alg 5 (4th) |
+//! Every algorithm is a [`Balancer`] implementation resolved through
+//! [`balancer::registry`] (the `--balancer` CLI flag uses the same
+//! names):
 //!
-//! [`prebalance`] holds the Pre-Balancing baselines the paper compares
-//! against (§3.2), and [`cost`] the Eq.-2 cost functions used both by the
-//! quadratic algorithms and by the cluster simulator.
+//! | name        | algorithm                        | batching   | cost regime    | paper |
+//! |-------------|----------------------------------|------------|----------------|-------|
+//! | `none`      | identity (the "w/o balance" bar) | unpadded   | —              | §8.1  |
+//! | `greedy`    | [`greedy::balance_lpt`]          | no padding | β ≪ α (linear) | Alg 1 |
+//! | `padded`    | [`padded::balance_padded`]       | padding    | β ≪ α (linear) | Alg 2 |
+//! | `quadratic` | [`quadratic::balance_quadratic`] | no padding | β ≈ α          | Alg 4 (3rd) |
+//! | `convpad`   | [`convpad::balance_convpad`]     | padding    | conv-attention | Alg 5 (4th) |
+//! | `kk`        | [`kk::balance_kk`] (Karmarkar–Karp largest-differencing, LPT fallback) | no padding | β ≪ α | — |
+//! | `prebalance-*` | sampling-time baselines as post-hoc balancers | — | — | §3.2 |
+//!
+//! [`prebalance`] also holds the original sampling-time baseline
+//! functions the paper compares against (§3.2), and [`cost`] the Eq.-2
+//! cost functions used both by the quadratic algorithms and by the
+//! cluster simulator. [`scratch::PlanScratch`] is the reusable
+//! workspace that keeps repeated planning allocation-free (§6: the
+//! dispatcher computation must stay cheap enough to hide inside the
+//! prefetch overlap).
 
+pub mod balancer;
 pub mod convpad;
 pub mod cost;
 pub mod greedy;
+pub mod kk;
 pub mod padded;
 pub mod prebalance;
 pub mod quadratic;
+pub mod scratch;
 pub mod types;
 
+pub use balancer::{registry, Balancer, CostRegime};
 pub use cost::{CostModel, PhaseCost};
-pub use types::{Assignment, BatchingMode, ExampleRef, Policy};
+pub use scratch::PlanScratch;
+pub use types::{Assignment, BatchingMode, ExampleRef};
 
 use crate::util::rng::Pcg64;
 
-/// Dispatch to the right post-balancing algorithm for a policy.
-///
-/// `lens[g]` is the sequence length of global example `g`; `d` is the DP
-/// world size. Returns the new assignment of examples to instances.
-pub fn balance(policy: Policy, lens: &[usize], d: usize) -> Assignment {
-    match policy {
-        Policy::NoBalance => types::identity_assignment(lens.len(), d),
-        Policy::GreedyUnpadded => greedy::balance_lpt(lens, d),
-        Policy::BinaryPadded => padded::balance_padded(lens, d),
-        Policy::QuadraticUnpadded { lambda, tolerance } => {
-            quadratic::balance_quadratic(lens, d, lambda, tolerance)
-        }
-        Policy::ConvPadded { lambda } => {
-            convpad::balance_convpad(lens, d, lambda)
-        }
-    }
+/// Balance with a registered algorithm by name (tests, benches, and the
+/// `--balancer` CLI path all resolve through here).
+pub fn balance_named(
+    name: &str,
+    lens: &[usize],
+    d: usize,
+) -> Option<Assignment> {
+    let b = registry::create(name)?;
+    Some(b.balance(lens, d, &mut PlanScratch::new()))
 }
 
 /// Generate heavy-tailed sequence lengths for tests/benches (log-normal,
@@ -63,18 +72,37 @@ mod tests {
     use super::*;
 
     #[test]
-    fn balance_dispatches_all_policies() {
+    fn every_registered_balancer_is_valid_on_a_shared_batch() {
         let mut rng = Pcg64::new(1);
         let lens = synth_lengths(&mut rng, 64, 4.0, 1.0);
-        for policy in [
-            Policy::NoBalance,
-            Policy::GreedyUnpadded,
-            Policy::BinaryPadded,
-            Policy::QuadraticUnpadded { lambda: 0.01, tolerance: 8.0 },
-            Policy::ConvPadded { lambda: 0.001 },
-        ] {
-            let a = balance(policy, &lens, 8);
+        let mut scratch = PlanScratch::new();
+        for name in registry::NAMES {
+            let b = registry::must(name);
+            let a = b.balance(&lens, 8, &mut scratch);
             types::assert_valid_assignment(&a, lens.len(), 8);
+        }
+    }
+
+    #[test]
+    fn balance_named_resolves_and_rejects() {
+        let lens = vec![5, 9, 2, 7];
+        let a = balance_named("greedy", &lens, 2).unwrap();
+        types::assert_valid_assignment(&a, 4, 2);
+        assert!(balance_named("bogus", &lens, 2).is_none());
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic_across_algorithms() {
+        // Interleaving different algorithms on one scratch must not
+        // leak state between calls.
+        let mut rng = Pcg64::new(3);
+        let lens = synth_lengths(&mut rng, 96, 3.5, 1.1);
+        let mut shared = PlanScratch::new();
+        for name in registry::NAMES {
+            let b = registry::must(name);
+            let with_shared = b.balance(&lens, 6, &mut shared);
+            let with_fresh = b.balance(&lens, 6, &mut PlanScratch::new());
+            assert_eq!(with_shared, with_fresh, "{name} leaked state");
         }
     }
 }

@@ -8,12 +8,28 @@
 //! smallest `C` for which at most `d` batches are needed. Complexity
 //! O(n log(nC)).
 
-use super::types::{Assignment, ExampleRef};
+use super::balancer::{Balancer, CostRegime};
+use super::scratch::PlanScratch;
+use super::types::{Assignment, BatchingMode, ExampleRef};
 
 /// Pack ascending-sorted sequences first-fit under padded bound `c`;
-/// returns batch boundaries (index ranges into `sorted`).
+/// returns batch boundaries (index ranges into `sorted`). Production
+/// paths use the count-only / into-scratch variants below; this
+/// allocating form remains as the test oracle.
+#[cfg(test)]
 fn least_batches(sorted: &[ExampleRef], c: usize) -> Vec<(usize, usize)> {
     let mut ranges = Vec::new();
+    least_batches_into(sorted, c, &mut ranges);
+    ranges
+}
+
+/// Allocation-free variant: write the boundaries into `ranges`.
+fn least_batches_into(
+    sorted: &[ExampleRef],
+    c: usize,
+    ranges: &mut Vec<(usize, usize)>,
+) {
+    ranges.clear();
     let mut start = 0;
     let mut count = 0usize;
     for (i, e) in sorted.iter().enumerate() {
@@ -28,46 +44,94 @@ fn least_batches(sorted: &[ExampleRef], c: usize) -> Vec<(usize, usize)> {
     if count > 0 {
         ranges.push((start, sorted.len()));
     }
-    ranges
 }
 
-/// Algorithm 2 of the paper.
-pub fn balance_padded(lens: &[usize], d: usize) -> Assignment {
+/// Count-only packing for the binary search (no boundary bookkeeping).
+fn batches_needed(sorted: &[ExampleRef], c: usize) -> usize {
+    let mut batches = 0usize;
+    let mut count = 0usize;
+    for e in sorted {
+        if count > 0 && (count + 1) * e.len > c {
+            batches += 1;
+            count = 0;
+        }
+        count += 1;
+    }
+    if count > 0 {
+        batches += 1;
+    }
+    batches
+}
+
+/// Algorithm 2 of the paper, allocation-free given a warm scratch.
+pub fn balance_padded_with(
+    lens: &[usize],
+    d: usize,
+    scratch: &mut PlanScratch,
+) -> Assignment {
     assert!(d > 0, "need at least one DP instance");
     let n = lens.len();
     if n == 0 {
         return vec![Vec::new(); d];
     }
-    let mut sorted: Vec<ExampleRef> = lens
-        .iter()
-        .enumerate()
-        .map(|(id, &len)| ExampleRef { id, len })
-        .collect();
-    sorted.sort_unstable_by(|a, b| a.len.cmp(&b.len).then(a.id.cmp(&b.id)));
+    scratch.refs_asc(lens);
 
-    let max_len = sorted.last().unwrap().len;
+    let max_len = scratch.refs.last().unwrap().len;
     // Feasible range: a batch containing the longest sequence costs at
     // least max_len; (n/d + 1) sequences of max_len is always enough.
     let mut left = max_len;
     let mut right = max_len * (n / d + 1);
     while left < right {
         let mid = (left + right) / 2;
-        if least_batches(&sorted, mid).len() <= d {
+        if batches_needed(&scratch.refs, mid) <= d {
             right = mid;
         } else {
             left = mid + 1;
         }
     }
-    let mut out: Assignment = least_batches(&sorted, left)
-        .into_iter()
-        .map(|(s, e)| sorted[s..e].to_vec())
-        .collect();
+    least_batches_into(&scratch.refs, left, &mut scratch.ranges);
+    let mut out: Assignment = Vec::with_capacity(d);
+    for &(s, e) in &scratch.ranges {
+        out.push(scratch.refs[s..e].to_vec());
+    }
     // Fewer than d batches is legal (idle instances); pad with empties so
     // the assignment always has exactly d mini-batches.
     while out.len() < d {
         out.push(Vec::new());
     }
     out
+}
+
+/// Algorithm 2 of the paper (convenience wrapper over a fresh scratch).
+pub fn balance_padded(lens: &[usize], d: usize) -> Assignment {
+    balance_padded_with(lens, d, &mut PlanScratch::new())
+}
+
+/// Registry entry: `padded` (alias `alg2`).
+#[derive(Clone, Copy, Debug)]
+pub struct BinaryPadded;
+
+impl Balancer for BinaryPadded {
+    fn name(&self) -> &'static str {
+        "padded"
+    }
+
+    fn batching_mode(&self) -> BatchingMode {
+        BatchingMode::Padded
+    }
+
+    fn cost_regime(&self) -> CostRegime {
+        CostRegime::Linear
+    }
+
+    fn balance(
+        &self,
+        lens: &[usize],
+        d: usize,
+        scratch: &mut PlanScratch,
+    ) -> Assignment {
+        balance_padded_with(lens, d, scratch)
+    }
 }
 
 #[cfg(test)]

@@ -150,6 +150,100 @@ pub fn fixed_llm_length(
     batches
 }
 
+/// Registry entry `prebalance-fixed`: the classic-DP sampling baseline
+/// expressed as a post-hoc [`Balancer`] so Fig.-10-style comparisons
+/// run through the same dispatcher path as the real algorithms. Shuffle
+/// deterministically (every replica derives the same permutation from
+/// the input shape — no extra communication), then deal equal-count
+/// mini-batches: batch *sizes* are balanced, token loads are whatever
+/// the draw happens to be.
+///
+/// NOTE: like every registered balancer, the registry wraps these
+/// baselines in `Guarded`, which falls back to the identity dealing on
+/// draws where the shuffle/bucketing regresses past it — the registry
+/// invariant (never worse than `NoBalance`) takes precedence over
+/// baseline fidelity. For faithful §3.2 baseline measurements use the
+/// raw sampling-time functions in this module ([`fixed_batch`],
+/// [`bucketed`], …), which are what the Fig.-10 experiments call.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedBatchPrebalance;
+
+impl crate::balance::balancer::Balancer for FixedBatchPrebalance {
+    fn name(&self) -> &'static str {
+        "prebalance-fixed"
+    }
+
+    fn batching_mode(&self) -> crate::balance::types::BatchingMode {
+        crate::balance::types::BatchingMode::Unpadded
+    }
+
+    fn cost_regime(&self) -> crate::balance::balancer::CostRegime {
+        crate::balance::balancer::CostRegime::Linear
+    }
+
+    fn balance(
+        &self,
+        lens: &[usize],
+        d: usize,
+        _scratch: &mut crate::balance::scratch::PlanScratch,
+    ) -> crate::balance::types::Assignment {
+        use crate::balance::types::ExampleRef;
+        assert!(d > 0, "need at least one DP instance");
+        let mut ids: Vec<usize> = (0..lens.len()).collect();
+        let mut rng = Pcg64::new(0x5A3B_1E5D ^ lens.len() as u64);
+        rng.shuffle(&mut ids);
+        let mut out: crate::balance::types::Assignment =
+            vec![Vec::new(); d];
+        for (k, &id) in ids.iter().enumerate() {
+            out[k % d].push(ExampleRef { id, len: lens[id] });
+        }
+        out
+    }
+}
+
+/// Registry entry `prebalance-bucketed`: the length-bucketing baseline
+/// as a post-hoc [`Balancer`] — sort by length and deal contiguous
+/// runs, so each mini-batch holds similar lengths (minimal padding
+/// waste) at the price of concentrating the long tail on one instance.
+#[derive(Clone, Copy, Debug)]
+pub struct BucketedPrebalance;
+
+impl crate::balance::balancer::Balancer for BucketedPrebalance {
+    fn name(&self) -> &'static str {
+        "prebalance-bucketed"
+    }
+
+    fn batching_mode(&self) -> crate::balance::types::BatchingMode {
+        crate::balance::types::BatchingMode::Padded
+    }
+
+    fn cost_regime(&self) -> crate::balance::balancer::CostRegime {
+        crate::balance::balancer::CostRegime::Linear
+    }
+
+    fn balance(
+        &self,
+        lens: &[usize],
+        d: usize,
+        scratch: &mut crate::balance::scratch::PlanScratch,
+    ) -> crate::balance::types::Assignment {
+        assert!(d > 0, "need at least one DP instance");
+        scratch.refs_asc(lens);
+        let n = lens.len();
+        let base = n / d;
+        let extra = n % d;
+        let mut out: crate::balance::types::Assignment =
+            Vec::with_capacity(d);
+        let mut start = 0;
+        for i in 0..d {
+            let b = base + usize::from(i < extra);
+            out.push(scratch.refs[start..start + b].to_vec());
+            start += b;
+        }
+        out
+    }
+}
+
 /// Per-phase token sums of pre-balanced batches (for imbalance metrics).
 pub fn phase_sums(batches: &[Vec<ExampleLens>]) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
     let llm = batches

@@ -7,25 +7,64 @@
 //! interval `v` are compared on their squared sums instead — trading off
 //! the linear and quadratic terms. Complexity O(n log n).
 
-use super::types::{Assignment, ExampleRef};
-
-#[derive(Clone, Copy, Debug)]
-struct BatchState {
-    sum: usize,
-    sq_sum: u128,
-    idx: usize,
-}
+use super::balancer::{Balancer, CostRegime};
+use super::cost::CostModel;
+use super::scratch::PlanScratch;
+use super::types::{Assignment, BatchingMode};
 
 /// The CMP function of Algorithm 4 (Appendix A): pick the batch that is
 /// "smallest" — by squared sum when sums are within tolerance, else by
-/// sum.
-fn lighter(a: &BatchState, b: &BatchState, tol: f64) -> bool {
-    let diff = a.sum.abs_diff(b.sum) as f64;
+/// sum. Ties break on batch index for determinism.
+fn lighter(
+    a: (usize, u128, usize),
+    b: (usize, u128, usize),
+    tol: f64,
+) -> bool {
+    let (a_sum, a_sq, a_idx) = a;
+    let (b_sum, b_sq, b_idx) = b;
+    let diff = a_sum.abs_diff(b_sum) as f64;
     if diff < tol {
-        (a.sq_sum, a.idx) < (b.sq_sum, b.idx)
+        (a_sq, a_idx) < (b_sq, b_idx)
     } else {
-        (a.sum, a.idx) < (b.sum, b.idx)
+        (a_sum, a_idx) < (b_sum, b_idx)
     }
+}
+
+/// Appendix Alg "3rd" with a reusable scratch.
+pub fn balance_quadratic_with(
+    lens: &[usize],
+    d: usize,
+    _lambda: f64,
+    tolerance: f64,
+    scratch: &mut PlanScratch,
+) -> Assignment {
+    assert!(d > 0, "need at least one DP instance");
+    scratch.refs_desc(lens);
+
+    let mut batches: Assignment = vec![Vec::new(); d];
+    // The comparator is tolerance-dependent and non-transitive in
+    // general, so a linear scan (O(d) per insert) replaces the heap; at
+    // the paper's scales (d ≤ 320) this stays well under a millisecond.
+    scratch.sums.clear();
+    scratch.sums.resize(d, 0);
+    scratch.sq_sums.clear();
+    scratch.sq_sums.resize(d, 0);
+    for &e in &scratch.refs {
+        let mut best = 0;
+        for i in 1..d {
+            if lighter(
+                (scratch.sums[i], scratch.sq_sums[i], i),
+                (scratch.sums[best], scratch.sq_sums[best], best),
+                tolerance,
+            ) {
+                best = i;
+            }
+        }
+        batches[best].push(e);
+        scratch.sums[best] += e.len;
+        scratch.sq_sums[best] += (e.len as u128) * (e.len as u128);
+    }
+    batches
 }
 
 /// Appendix Alg "3rd": LPT with quadratic-aware tie-breaking.
@@ -36,36 +75,46 @@ fn lighter(a: &BatchState, b: &BatchState, tol: f64) -> bool {
 pub fn balance_quadratic(
     lens: &[usize],
     d: usize,
-    _lambda: f64,
+    lambda: f64,
     tolerance: f64,
 ) -> Assignment {
-    assert!(d > 0, "need at least one DP instance");
-    let mut sorted: Vec<ExampleRef> = lens
-        .iter()
-        .enumerate()
-        .map(|(id, &len)| ExampleRef { id, len })
-        .collect();
-    sorted.sort_unstable_by(|a, b| b.len.cmp(&a.len).then(a.id.cmp(&b.id)));
+    balance_quadratic_with(lens, d, lambda, tolerance, &mut PlanScratch::new())
+}
 
-    let mut batches: Assignment = vec![Vec::new(); d];
-    // The comparator is tolerance-dependent and non-transitive in
-    // general, so a linear scan (O(d) per insert) replaces the heap; at
-    // the paper's scales (d ≤ 320) this stays well under a millisecond.
-    let mut states: Vec<BatchState> = (0..d)
-        .map(|idx| BatchState { sum: 0, sq_sum: 0, idx })
-        .collect();
-    for e in sorted {
-        let mut best = 0;
-        for i in 1..d {
-            if lighter(&states[i], &states[best], tolerance) {
-                best = i;
-            }
-        }
-        batches[best].push(e);
-        states[best].sum += e.len;
-        states[best].sq_sum += (e.len as u128) * (e.len as u128);
+/// Registry entry: `quadratic` (alias `alg3`).
+#[derive(Clone, Copy, Debug)]
+pub struct QuadraticLpt {
+    /// β/α of the phase's Eq.-2 cost.
+    pub lambda: f64,
+    /// Tolerance interval `v` within which the quadratic term decides.
+    pub tolerance: f64,
+}
+
+impl Balancer for QuadraticLpt {
+    fn name(&self) -> &'static str {
+        "quadratic"
     }
-    batches
+
+    fn batching_mode(&self) -> BatchingMode {
+        BatchingMode::Unpadded
+    }
+
+    fn cost_regime(&self) -> CostRegime {
+        CostRegime::Quadratic
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::TransformerUnpadded { alpha: 1.0, beta: self.lambda }
+    }
+
+    fn balance(
+        &self,
+        lens: &[usize],
+        d: usize,
+        scratch: &mut PlanScratch,
+    ) -> Assignment {
+        balance_quadratic_with(lens, d, self.lambda, self.tolerance, scratch)
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,192 @@
+//! Reusable planning workspace: the allocation-free inner loops of the
+//! Post-Balancing algorithms and the dispatcher.
+//!
+//! Planning one step touches the same buffer shapes every time — a
+//! sorted copy of the example refs, a d-entry min-heap of batch loads,
+//! per-batch sums, the d×d send-volume matrix. The paper's §6 claim
+//! (dispatcher computation hides inside the prefetch overlap) only
+//! holds if that computation is cheap and steady; re-allocating every
+//! buffer every step both costs time and fragments the allocator under
+//! the multi-phase parallel planner. [`PlanScratch`] owns all of it and
+//! is reused across steps: `clear()` + `extend()` keep capacity, so a
+//! warmed-up planner performs no heap allocation in its hot loops (the
+//! returned [`Assignment`] itself is retained by the step plan and is
+//! the one necessary allocation).
+//!
+//! Balancer implementations own `refs`, `heap`, `sums`, `sq_sums`,
+//! `ranges`, and `spill`; the dispatcher owns `active`, `active_lens`,
+//! `logical_to`, and the two volume matrices. The dispatcher hands the
+//! whole scratch to [`super::balancer::Balancer::balance`] after
+//! `mem::take`-ing the slices it is still reading.
+
+use crate::comm::volume::VolumeMatrix;
+
+use super::types::ExampleRef;
+
+/// The reusable workspace threaded through one dispatcher's planning.
+/// One per phase; the orchestrator holds three (see
+/// [`crate::orchestrator::global::StepScratch`]) so phases can plan in
+/// parallel without sharing.
+#[derive(Clone, Debug)]
+pub struct PlanScratch {
+    /// Balancer-owned: sort buffer for example refs.
+    pub refs: Vec<ExampleRef>,
+    /// Balancer-owned: `(load, batch index)` min-heap storage.
+    pub heap: Vec<(usize, usize)>,
+    /// Balancer-owned: per-batch token sums (quadratic comparator).
+    pub sums: Vec<usize>,
+    /// Balancer-owned: per-batch squared sums (quadratic comparator).
+    pub sq_sums: Vec<u128>,
+    /// Balancer-owned: packed batch boundaries (padded first-fit).
+    pub ranges: Vec<(usize, usize)>,
+    /// Balancer-owned: overflow refs (convpad seeding).
+    pub spill: Vec<ExampleRef>,
+    /// Dispatcher-owned: participating example ids.
+    pub active: Vec<usize>,
+    /// Dispatcher-owned: lengths of the participating examples.
+    pub active_lens: Vec<usize>,
+    /// Dispatcher-owned: logical destination batch per example.
+    pub logical_to: Vec<usize>,
+    /// Dispatcher-owned: send-volume matrix for the node-wise solver.
+    pub volume: VolumeMatrix,
+    /// Dispatcher-owned: send-volume matrix for All-to-All pricing.
+    pub volume2: VolumeMatrix,
+}
+
+impl PlanScratch {
+    pub fn new() -> PlanScratch {
+        PlanScratch {
+            refs: Vec::new(),
+            heap: Vec::new(),
+            sums: Vec::new(),
+            sq_sums: Vec::new(),
+            ranges: Vec::new(),
+            spill: Vec::new(),
+            active: Vec::new(),
+            active_lens: Vec::new(),
+            logical_to: Vec::new(),
+            volume: VolumeMatrix::zeros(0),
+            volume2: VolumeMatrix::zeros(0),
+        }
+    }
+
+    /// Fill `refs` with `(id, len)` pairs sorted descending by length
+    /// (ties by id — the LPT order).
+    pub fn refs_desc(&mut self, lens: &[usize]) {
+        self.refs.clear();
+        self.refs.extend(
+            lens.iter()
+                .enumerate()
+                .map(|(id, &len)| ExampleRef { id, len }),
+        );
+        self.refs
+            .sort_unstable_by(|a, b| b.len.cmp(&a.len).then(a.id.cmp(&b.id)));
+    }
+
+    /// Fill `refs` sorted ascending by length (ties by id — the padded
+    /// first-fit order).
+    pub fn refs_asc(&mut self, lens: &[usize]) {
+        self.refs.clear();
+        self.refs.extend(
+            lens.iter()
+                .enumerate()
+                .map(|(id, &len)| ExampleRef { id, len }),
+        );
+        self.refs
+            .sort_unstable_by(|a, b| a.len.cmp(&b.len).then(a.id.cmp(&b.id)));
+    }
+
+    /// Reset `heap` to d zero-load batches (already a valid min-heap).
+    pub fn heap_zeroed(&mut self, d: usize) {
+        self.heap.clear();
+        self.heap.extend((0..d).map(|i| (0usize, i)));
+    }
+}
+
+impl Default for PlanScratch {
+    fn default() -> PlanScratch {
+        PlanScratch::new()
+    }
+}
+
+/// Restore the min-heap invariant downward from `i`. Entries compare
+/// lexicographically on `(load, batch index)`, so ties always break on
+/// the lower batch index — the same deterministic pop order as the
+/// `BinaryHeap<Reverse<_>>` the algorithms previously allocated.
+pub fn sift_down(heap: &mut [(usize, usize)], mut i: usize) {
+    loop {
+        let l = 2 * i + 1;
+        let r = l + 1;
+        let mut smallest = i;
+        if l < heap.len() && heap[l] < heap[smallest] {
+            smallest = l;
+        }
+        if r < heap.len() && heap[r] < heap[smallest] {
+            smallest = r;
+        }
+        if smallest == i {
+            return;
+        }
+        heap.swap(i, smallest);
+        i = smallest;
+    }
+}
+
+/// Build a min-heap in place from arbitrary entries.
+pub fn heapify(heap: &mut [(usize, usize)]) {
+    for i in (0..heap.len() / 2).rev() {
+        sift_down(heap, i);
+    }
+}
+
+/// Pop the lightest batch, push it back with `add` more load, and
+/// return its index — the LPT inner step, allocation-free.
+pub fn heap_assign(heap: &mut [(usize, usize)], add: usize) -> usize {
+    let (load, i) = heap[0];
+    heap[0] = (load + add, i);
+    sift_down(heap, 0);
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_pops_in_min_order_with_index_ties() {
+        let mut s = PlanScratch::new();
+        s.heap_zeroed(4);
+        // All loads zero: assignment order must be 0,1,2,3.
+        let order: Vec<usize> =
+            (0..4).map(|_| heap_assign(&mut s.heap, 10)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn heapify_handles_arbitrary_loads() {
+        let mut heap = vec![(7, 0), (3, 1), (5, 2), (1, 3)];
+        heapify(&mut heap);
+        assert_eq!(heap_assign(&mut heap, 100), 3); // lightest first
+        assert_eq!(heap_assign(&mut heap, 100), 1);
+    }
+
+    #[test]
+    fn refs_sorting_is_deterministic() {
+        let mut s = PlanScratch::new();
+        s.refs_desc(&[5, 9, 5, 1]);
+        let ids: Vec<usize> = s.refs.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![1, 0, 2, 3]); // 9, then 5(id0) before 5(id2)
+        s.refs_asc(&[5, 9, 5, 1]);
+        let ids: Vec<usize> = s.refs.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![3, 0, 2, 1]);
+    }
+
+    #[test]
+    fn buffers_keep_capacity_across_reuse() {
+        let mut s = PlanScratch::new();
+        s.refs_desc(&vec![3; 1000]);
+        let cap = s.refs.capacity();
+        s.refs_desc(&vec![5; 500]);
+        assert!(s.refs.capacity() >= cap, "capacity was released");
+    }
+}

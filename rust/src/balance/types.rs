@@ -19,23 +19,6 @@ pub enum BatchingMode {
     Unpadded,
 }
 
-/// Which post-balancing algorithm a dispatcher runs (paper §5.1, App. A).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Policy {
-    /// Identity: keep the sampled mini-batches (the "w/o balance"
-    /// baseline of §8.1).
-    NoBalance,
-    /// Algorithm 1: LPT greedy, no padding, linear cost.
-    GreedyUnpadded,
-    /// Algorithm 2: binary search + first-fit, padded batching.
-    BinaryPadded,
-    /// Appendix Alg "3rd": greedy with quadratic tie-break within a
-    /// tolerance interval (β ≈ α regime).
-    QuadraticUnpadded { lambda: f64, tolerance: f64 },
-    /// Appendix Alg "4th": padded conv-attention objective.
-    ConvPadded { lambda: f64 },
-}
-
 /// The output of a balancing algorithm: `assignment[i]` is the new
 /// mini-batch for DP instance `i`.
 pub type Assignment = Vec<Vec<ExampleRef>>;

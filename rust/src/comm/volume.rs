@@ -20,6 +20,15 @@ impl VolumeMatrix {
         VolumeMatrix { d, v: vec![0.0; d * d] }
     }
 
+    /// Re-dimension and zero in place, keeping the allocation — the
+    /// planner's per-step reuse path (see
+    /// [`crate::balance::scratch::PlanScratch`]).
+    pub fn reset(&mut self, d: usize) {
+        self.d = d;
+        self.v.clear();
+        self.v.resize(d * d, 0.0);
+    }
+
     #[inline]
     pub fn get(&self, from: usize, to: usize) -> f64 {
         self.v[from * self.d + to]

@@ -27,6 +27,9 @@ pub struct SimRunConfig {
     pub mini_batch: usize,
     pub steps: usize,
     pub seed: u64,
+    /// Registry balancer name overriding every phase (None = the
+    /// system's tailored per-phase selection).
+    pub balancer: Option<String>,
 }
 
 impl Default for SimRunConfig {
@@ -38,6 +41,7 @@ impl Default for SimRunConfig {
             mini_batch: 60,
             steps: 5,
             seed: 42,
+            balancer: None,
         }
     }
 }
@@ -64,6 +68,7 @@ impl SimRunConfig {
                 .unwrap_or(d.mini_batch),
             steps: j.get("steps").as_usize().unwrap_or(d.steps),
             seed: j.get("seed").as_i64().unwrap_or(d.seed as i64) as u64,
+            balancer: j.get("balancer").as_str().map(str::to_string),
         })
     }
 
@@ -86,6 +91,13 @@ impl SimRunConfig {
             ("mini_batch", Json::num(self.mini_batch as f64)),
             ("steps", Json::num(self.steps as f64)),
             ("seed", Json::num(self.seed as f64)),
+            (
+                "balancer",
+                match &self.balancer {
+                    Some(b) => Json::str(b),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -108,6 +120,9 @@ pub struct TrainRunConfig {
     pub lr: f64,
     pub seed: u64,
     pub balance: bool,
+    /// Registry balancer name overriding every phase (None = the
+    /// default tailored selection; ignored when `balance` is false).
+    pub balancer: Option<String>,
 }
 
 impl Default for TrainRunConfig {
@@ -120,6 +135,7 @@ impl Default for TrainRunConfig {
             lr: 0.05,
             seed: 0,
             balance: true,
+            balancer: None,
         }
     }
 }
@@ -142,6 +158,7 @@ impl TrainRunConfig {
             lr: j.get("lr").as_f64().unwrap_or(d.lr),
             seed: j.get("seed").as_i64().unwrap_or(0) as u64,
             balance: j.get("balance").as_bool().unwrap_or(d.balance),
+            balancer: j.get("balancer").as_str().map(str::to_string),
         }
     }
 }
@@ -159,6 +176,7 @@ mod tests {
             mini_batch: 30,
             steps: 10,
             seed: 7,
+            balancer: Some("kk".into()),
         };
         let j = c.to_json();
         let back = SimRunConfig::from_json(&j).unwrap();

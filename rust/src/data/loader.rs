@@ -30,7 +30,10 @@ pub struct Prefetcher<P: Send + 'static> {
 impl<P: Send + 'static> Prefetcher<P> {
     /// Start prefetching: `d` instances × `batch_size` examples per
     /// step, planner executed in the prefetch thread. `depth` bounds the
-    /// number of planned-but-unconsumed steps.
+    /// number of planned-but-unconsumed steps. The planner is `FnMut`
+    /// so it can own reusable state (e.g. a
+    /// [`crate::orchestrator::StepScratch`]) across steps.
+    #[allow(clippy::too_many_arguments)]
     pub fn new<F>(
         cfg: DatasetConfig,
         seed: u64,
@@ -38,10 +41,10 @@ impl<P: Send + 'static> Prefetcher<P> {
         batch_size: usize,
         steps: usize,
         depth: usize,
-        planner: F,
+        mut planner: F,
     ) -> Prefetcher<P>
     where
-        F: Fn(&[Vec<Example>]) -> P + Send + 'static,
+        F: FnMut(&[Vec<Example>]) -> P + Send + 'static,
     {
         let (tx, rx) = mpsc::sync_channel(depth.max(1));
         let handle = std::thread::spawn(move || {

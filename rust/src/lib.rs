@@ -6,12 +6,16 @@
 //! stack:
 //!
 //! * **Layer 3 (this crate)** — the paper's system contribution: the
-//!   [`balance`] post-balancing algorithms, the [`comm`] node-wise
+//!   [`balance`] post-balancing algorithms behind the pluggable
+//!   [`balance::Balancer`] trait + registry, the [`comm`] node-wise
 //!   all-to-all communicator, the [`nodewise`] rearrangement ILP, and the
 //!   [`orchestrator`] that wires them into the multimodal training
-//!   workflow. The [`sim`] discrete-event cluster simulator regenerates
-//!   every table and figure of the paper's evaluation; the [`trainer`]
-//!   runs a real tiny-MLLM end to end over the [`runtime`] PJRT client.
+//!   workflow — planning phases in parallel on reusable scratch and
+//!   double-buffering steps through the
+//!   [`orchestrator::pipeline::StepPipeline`]. The [`sim`]
+//!   discrete-event cluster simulator regenerates every table and
+//!   figure of the paper's evaluation; the [`trainer`] runs a real
+//!   tiny-MLLM end to end over the [`runtime`] PJRT client.
 //! * **Layer 2** — `python/compile/model.py`: the multimodal model
 //!   (vision encoder, audio encoder, LLM backbone) in JAX, AOT-lowered to
 //!   HLO text artifacts once at build time.

@@ -6,15 +6,17 @@
 //!   overhead     regenerate the Table-2 overhead scaling
 //!   incoherence  regenerate the Fig. 3 dataset analysis
 //!   train        run the real tiny-MLLM DP trainer over PJRT artifacts
+//!   balancers    list the registered post-balancing algorithms
 //!
 //! Options accept `--key value` or `--key=value`; run with no arguments
 //! for usage.
 
+use orchmllm::balance::registry;
 use orchmllm::config::{SimRunConfig, TrainRunConfig};
 use orchmllm::data::incoherence::IncoherenceReport;
 use orchmllm::data::synth::{DatasetConfig, Generator};
 use orchmllm::model::config::MllmConfig;
-use orchmllm::sim::engine::{simulate_run, SystemKind};
+use orchmllm::sim::engine::{simulate_run, simulate_run_named, SystemKind};
 use orchmllm::sim::report;
 use orchmllm::trainer;
 use orchmllm::util::cli::Args;
@@ -25,13 +27,15 @@ orchmllm — OrchMLLM reproduction CLI
 USAGE:
   orchmllm sim         [--system orchmllm] [--model mllm-10b] [--gpus 128]
                        [--mini-batch 60] [--steps 5] [--seed 42]
+                       [--balancer greedy|padded|quadratic|convpad|kk|none]
                        [--config file.json]
   orchmllm overall     [--gpus 2560] [--steps 3]       # Fig. 8 + 9
   orchmllm overhead    [--steps 3]                     # Table 2
   orchmllm incoherence [--n 100000] [--seed 7]         # Fig. 3
   orchmllm train       [--artifacts artifacts/test] [--workers 4]
                        [--mini-batch 4] [--steps 20] [--lr 0.05]
-                       [--no-balance]
+                       [--balancer <name>] [--no-balance]
+  orchmllm balancers                                 # registry listing
   orchmllm help
 ";
 
@@ -43,6 +47,7 @@ fn main() {
         Some("overhead") => cmd_overhead(&args),
         Some("incoherence") => cmd_incoherence(&args),
         Some("train") => cmd_train(&args),
+        Some("balancers") => cmd_balancers(),
         _ => print!("{USAGE}"),
     }
 }
@@ -59,11 +64,27 @@ fn cmd_sim(args: &Args) {
             mini_batch: args.usize("mini-batch", 60),
             steps: args.usize("steps", 5),
             seed: args.u64("seed", 42),
+            balancer: args.get("balancer").map(str::to_string),
         }
     };
+    if let Some(name) = &cfg.balancer {
+        if registry::create(name).is_none() {
+            eprintln!(
+                "unknown --balancer '{name}'; registered: {:?}",
+                registry::NAMES
+            );
+            std::process::exit(2);
+        }
+    }
     let model = MllmConfig::by_name(&cfg.model).expect("unknown model");
-    let r = simulate_run(
-        cfg.system, &model, cfg.gpus, cfg.mini_batch, cfg.steps, cfg.seed,
+    let r = simulate_run_named(
+        cfg.system,
+        &model,
+        cfg.gpus,
+        cfg.mini_batch,
+        cfg.steps,
+        cfg.seed,
+        cfg.balancer.as_deref(),
     );
     println!(
         "{} | {} | {} GPUs | mb {}\n  MFU  {:.1}%\n  TPT  {:.0} tok/s/GPU\n  \
@@ -140,6 +161,7 @@ fn cmd_train(args: &Args) {
         lr: args.f64("lr", 0.05),
         seed: args.u64("seed", 0),
         balance: !args.flag("no-balance"),
+        balancer: args.get("balancer").map(str::to_string),
     };
     match trainer::run(&cfg) {
         Ok(summary) => println!("{summary}"),
@@ -148,4 +170,25 @@ fn cmd_train(args: &Args) {
             std::process::exit(1);
         }
     }
+}
+
+fn cmd_balancers() {
+    println!("registered post-balancing algorithms:\n");
+    println!(
+        "{:<22}{:<12}{:<16}{}",
+        "name", "batching", "cost regime", "identity"
+    );
+    for name in registry::NAMES {
+        let b = registry::must(name);
+        println!(
+            "{:<22}{:<12}{:<16}{}",
+            b.name(),
+            format!("{:?}", b.batching_mode()).to_lowercase(),
+            format!("{:?}", b.cost_regime()).to_lowercase(),
+            if b.is_identity() { "yes" } else { "" }
+        );
+    }
+    println!(
+        "\nselect with `--balancer <name>` on `sim` and `train`."
+    );
 }

@@ -4,7 +4,7 @@
 //!
 //! 1. All-Gathers the sequence *lengths* only (negligible volume — the
 //!    §5.2.1 insight);
-//! 2. runs the configured Post-Balancing algorithm on every instance
+//! 2. runs the configured Post-Balancing [`Balancer`] on every instance
 //!    (deterministic, so all instances agree without extra traffic);
 //! 3. runs the Node-wise Rearrangement Algorithm to permute the
 //!    destination batch order for the hierarchical topology (§5.2.2);
@@ -13,12 +13,17 @@
 //!    All-Gather strawman it is compared against (Fig. 12).
 //!
 //! Steps 1–3 are "computation" in the paper's taxonomy and run inside
-//! the prefetch overlap; step 4 is the only on-critical-path work.
+//! the prefetch overlap; step 4 is the only on-critical-path work. The
+//! hot path is [`Dispatcher::dispatch_with`], which threads a
+//! [`PlanScratch`] so a warmed-up dispatcher performs no allocation in
+//! its sort/heap/volume loops.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::balance::types::{Assignment, ExampleRef, Policy};
-use crate::balance::{self};
+use crate::balance::balancer::{registry, Balancer};
+use crate::balance::scratch::PlanScratch;
+use crate::balance::types::{Assignment, ExampleRef};
 use crate::comm::costmodel::{allgather_cost, alltoall_cost, CollectiveCost};
 use crate::comm::topology::Topology;
 use crate::comm::volume::VolumeMatrix;
@@ -35,11 +40,21 @@ pub enum Communicator {
     AllGather,
 }
 
-/// A dispatcher for one phase.
-#[derive(Clone, Copy, Debug)]
+/// A dispatcher for one phase: a pluggable balancing algorithm plus a
+/// payload communicator.
+#[derive(Clone)]
 pub struct Dispatcher {
-    pub policy: Policy,
+    pub balancer: Arc<dyn Balancer>,
     pub communicator: Communicator,
+}
+
+impl std::fmt::Debug for Dispatcher {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Dispatcher")
+            .field("balancer", &self.balancer.name())
+            .field("communicator", &self.communicator)
+            .finish()
+    }
 }
 
 /// The dispatcher's output for one step of one phase.
@@ -75,7 +90,23 @@ impl DispatchPlan {
 }
 
 impl Dispatcher {
-    /// Plan this phase's rearrangement.
+    pub fn new(
+        balancer: Arc<dyn Balancer>,
+        communicator: Communicator,
+    ) -> Dispatcher {
+        Dispatcher { balancer, communicator }
+    }
+
+    /// Build a dispatcher from a registry name (`None` if unknown).
+    pub fn by_name(
+        name: &str,
+        communicator: Communicator,
+    ) -> Option<Dispatcher> {
+        Some(Dispatcher::new(registry::create(name)?, communicator))
+    }
+
+    /// Plan this phase's rearrangement with a fresh scratch
+    /// (convenience path for tests and one-shot callers).
     ///
     /// * `placement[g]` — instance currently holding example g.
     /// * `lens[g]` — example g's sequence length in this phase (0 =
@@ -88,6 +119,25 @@ impl Dispatcher {
         lens: &[usize],
         payload: &[f64],
     ) -> DispatchPlan {
+        self.dispatch_with(
+            topo,
+            placement,
+            lens,
+            payload,
+            &mut PlanScratch::new(),
+        )
+    }
+
+    /// Plan this phase's rearrangement, reusing `scratch` buffers — the
+    /// allocation-free hot path the step pipeline runs every iteration.
+    pub fn dispatch_with(
+        &self,
+        topo: &Topology,
+        placement: &[usize],
+        lens: &[usize],
+        payload: &[f64],
+        scratch: &mut PlanScratch,
+    ) -> DispatchPlan {
         let t0 = Instant::now();
         let d = topo.instances;
         let n = lens.len();
@@ -95,52 +145,60 @@ impl Dispatcher {
         assert_eq!(payload.len(), n);
 
         // Participating examples only.
-        let active: Vec<usize> =
-            (0..n).filter(|&g| lens[g] > 0).collect();
-        let active_lens: Vec<usize> =
-            active.iter().map(|&g| lens[g]).collect();
+        scratch.active.clear();
+        scratch.active_lens.clear();
+        for (g, &len) in lens.iter().enumerate() {
+            if len > 0 {
+                scratch.active.push(g);
+                scratch.active_lens.push(len);
+            }
+        }
 
-        // Step 2: post-balancing over the active set. NoBalance keeps
-        // the sampled placement (the "OrchMLLM w/o balance" baseline).
-        let assignment: Assignment = if self.policy == Policy::NoBalance {
+        // Step 2: post-balancing over the active set. The identity
+        // balancer keeps the sampled placement (the "OrchMLLM w/o
+        // balance" baseline) rather than re-dealing.
+        let assignment: Assignment = if self.balancer.is_identity() {
             let mut a: Assignment = vec![Vec::new(); d];
-            for &g in &active {
+            for &g in &scratch.active {
                 a[placement[g]].push(ExampleRef { id: g, len: lens[g] });
             }
             a
         } else {
-            let local = balance::balance(self.policy, &active_lens, d);
+            // The balancer receives the whole scratch; temporarily move
+            // the lens slice out so the borrows stay disjoint.
+            let active_lens = std::mem::take(&mut scratch.active_lens);
+            let mut local = self.balancer.balance(&active_lens, d, scratch);
+            scratch.active_lens = active_lens;
             // Map algorithm-local ids back to global example ids.
+            for batch in &mut local {
+                for e in batch.iter_mut() {
+                    e.id = scratch.active[e.id];
+                }
+            }
             local
-                .into_iter()
-                .map(|batch| {
-                    batch
-                        .into_iter()
-                        .map(|e| ExampleRef {
-                            id: active[e.id],
-                            len: e.len,
-                        })
-                        .collect()
-                })
-                .collect()
         };
 
         // Logical destination per active example.
-        let mut logical_to = vec![usize::MAX; n];
+        scratch.logical_to.clear();
+        scratch.logical_to.resize(n, usize::MAX);
         for (i, batch) in assignment.iter().enumerate() {
             for e in batch {
-                logical_to[e.id] = i;
+                scratch.logical_to[e.id] = i;
             }
         }
 
         // Step 3: node-wise permutation of destination batches.
-        let mut volume = VolumeMatrix::zeros(d);
-        for &g in &active {
-            volume.add(placement[g], logical_to[g], payload[g]);
+        scratch.volume.reset(d);
+        for &g in &scratch.active {
+            scratch.volume.add(
+                placement[g],
+                scratch.logical_to[g],
+                payload[g],
+            );
         }
         let nodewise_perm = match self.communicator {
             Communicator::AllToAll { nodewise: true } => {
-                nodewise::rearrange(topo, &volume).perm
+                nodewise::rearrange(topo, &scratch.volume).perm
             }
             _ => VolumeMatrix::identity_perm(d),
         };
@@ -149,10 +207,10 @@ impl Dispatcher {
         let from: Vec<usize> = placement.to_vec();
         let to: Vec<usize> = (0..n)
             .map(|g| {
-                if logical_to[g] == usize::MAX {
+                if scratch.logical_to[g] == usize::MAX {
                     placement[g]
                 } else {
-                    nodewise_perm[logical_to[g]]
+                    nodewise_perm[scratch.logical_to[g]]
                 }
             })
             .collect();
@@ -167,9 +225,12 @@ impl Dispatcher {
         // Step 4 pricing.
         let (comm, peak_bytes) = match self.communicator {
             Communicator::AllToAll { .. } => {
-                let v = route.volume(d, payload);
-                let c =
-                    alltoall_cost(topo, &v, &VolumeMatrix::identity_perm(d));
+                route.volume_into(d, payload, &mut scratch.volume2);
+                let c = alltoall_cost(
+                    topo,
+                    &scratch.volume2,
+                    &VolumeMatrix::identity_perm(d),
+                );
                 (c, c.peak_bytes)
             }
             Communicator::AllGather => {
@@ -217,21 +278,19 @@ mod tests {
         (topo, placement, lens, payload)
     }
 
+    fn disp(name: &str, communicator: Communicator) -> Dispatcher {
+        Dispatcher::by_name(name, communicator).expect("registered name")
+    }
+
     #[test]
     fn balanced_dispatch_reduces_imbalance() {
         let (topo, placement, lens, payload) = setup(8, 16, 1);
-        let disp = Dispatcher {
-            policy: Policy::GreedyUnpadded,
-            communicator: Communicator::AllToAll { nodewise: true },
-        };
-        let plan = disp.dispatch(&topo, &placement, &lens, &payload);
+        let plan = disp("greedy", Communicator::AllToAll { nodewise: true })
+            .dispatch(&topo, &placement, &lens, &payload);
         let cm = CostModel::Linear { alpha: 1.0 };
         // Identity (no balance) batches.
-        let none = Dispatcher {
-            policy: Policy::NoBalance,
-            communicator: Communicator::AllToAll { nodewise: false },
-        };
-        let base = none.dispatch(&topo, &placement, &lens, &payload);
+        let base = disp("none", Communicator::AllToAll { nodewise: false })
+            .dispatch(&topo, &placement, &lens, &payload);
         assert!(
             cm.imbalance(&plan.assignment) < cm.imbalance(&base.assignment),
             "{} !< {}",
@@ -244,11 +303,8 @@ mod tests {
     #[test]
     fn no_balance_plan_never_moves() {
         let (topo, placement, lens, payload) = setup(4, 8, 2);
-        let disp = Dispatcher {
-            policy: Policy::NoBalance,
-            communicator: Communicator::AllToAll { nodewise: false },
-        };
-        let plan = disp.dispatch(&topo, &placement, &lens, &payload);
+        let plan = disp("none", Communicator::AllToAll { nodewise: false })
+            .dispatch(&topo, &placement, &lens, &payload);
         assert_eq!(plan.route.moved(), 0);
         assert!(plan.comm.seconds <= topo.base_latency + 1e-12);
     }
@@ -259,11 +315,8 @@ mod tests {
         let placement = vec![0, 0, 1, 1];
         let lens = vec![10, 0, 7, 0];
         let payload = vec![40.0, 0.0, 28.0, 0.0];
-        let disp = Dispatcher {
-            policy: Policy::GreedyUnpadded,
-            communicator: Communicator::AllToAll { nodewise: false },
-        };
-        let plan = disp.dispatch(&topo, &placement, &lens, &payload);
+        let plan = disp("greedy", Communicator::AllToAll { nodewise: false })
+            .dispatch(&topo, &placement, &lens, &payload);
         assert_eq!(plan.route.to[1], 0);
         assert_eq!(plan.route.to[3], 1);
         let assigned: usize =
@@ -274,16 +327,10 @@ mod tests {
     #[test]
     fn allgather_costs_more_than_alltoall() {
         let (topo, placement, lens, payload) = setup(16, 8, 3);
-        let a2a = Dispatcher {
-            policy: Policy::GreedyUnpadded,
-            communicator: Communicator::AllToAll { nodewise: true },
-        }
-        .dispatch(&topo, &placement, &lens, &payload);
-        let ag = Dispatcher {
-            policy: Policy::GreedyUnpadded,
-            communicator: Communicator::AllGather,
-        }
-        .dispatch(&topo, &placement, &lens, &payload);
+        let a2a = disp("greedy", Communicator::AllToAll { nodewise: true })
+            .dispatch(&topo, &placement, &lens, &payload);
+        let ag = disp("greedy", Communicator::AllGather)
+            .dispatch(&topo, &placement, &lens, &payload);
         assert!(ag.comm.seconds > a2a.comm.seconds);
         assert!(ag.peak_bytes > a2a.peak_bytes);
     }
@@ -291,16 +338,11 @@ mod tests {
     #[test]
     fn nodewise_reduces_inter_node_traffic() {
         let (topo, placement, lens, payload) = setup(32, 8, 4);
-        let with = Dispatcher {
-            policy: Policy::GreedyUnpadded,
-            communicator: Communicator::AllToAll { nodewise: true },
-        }
-        .dispatch(&topo, &placement, &lens, &payload);
-        let without = Dispatcher {
-            policy: Policy::GreedyUnpadded,
-            communicator: Communicator::AllToAll { nodewise: false },
-        }
-        .dispatch(&topo, &placement, &lens, &payload);
+        let with = disp("greedy", Communicator::AllToAll { nodewise: true })
+            .dispatch(&topo, &placement, &lens, &payload);
+        let without =
+            disp("greedy", Communicator::AllToAll { nodewise: false })
+                .dispatch(&topo, &placement, &lens, &payload);
         let inter_with = with.route.inter_node_bytes(&topo, &payload);
         let inter_without =
             without.route.inter_node_bytes(&topo, &payload);
@@ -313,14 +355,42 @@ mod tests {
     #[test]
     fn destinations_cover_active_examples() {
         let (topo, placement, lens, payload) = setup(4, 4, 5);
-        let plan = Dispatcher {
-            policy: Policy::BinaryPadded,
-            communicator: Communicator::AllToAll { nodewise: false },
-        }
-        .dispatch(&topo, &placement, &lens, &payload);
+        let plan = disp("padded", Communicator::AllToAll { nodewise: false })
+            .dispatch(&topo, &placement, &lens, &payload);
         let dst = plan.destination_of(lens.len());
         for (g, d) in dst.iter().enumerate() {
             assert_eq!(d.is_some(), lens[g] > 0);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_dispatch() {
+        let (topo, placement, lens, payload) = setup(8, 12, 6);
+        let dp = disp("kk", Communicator::AllToAll { nodewise: true });
+        let fresh = dp.dispatch(&topo, &placement, &lens, &payload);
+        let mut scratch = PlanScratch::new();
+        for _ in 0..3 {
+            let reused = dp.dispatch_with(
+                &topo, &placement, &lens, &payload, &mut scratch,
+            );
+            assert_eq!(reused.assignment, fresh.assignment);
+            assert_eq!(reused.route, fresh.route);
+            assert_eq!(reused.nodewise_perm, fresh.nodewise_perm);
+        }
+    }
+
+    #[test]
+    fn every_registered_balancer_dispatches_validly() {
+        let (topo, placement, lens, payload) = setup(6, 10, 7);
+        let mut scratch = PlanScratch::new();
+        for name in crate::balance::registry::NAMES {
+            let plan = disp(name, Communicator::AllToAll { nodewise: true })
+                .dispatch_with(
+                    &topo, &placement, &lens, &payload, &mut scratch,
+                );
+            let assigned: usize =
+                plan.assignment.iter().map(|b| b.len()).sum();
+            assert_eq!(assigned, lens.len(), "{name} lost examples");
         }
     }
 }

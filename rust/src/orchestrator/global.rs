@@ -10,14 +10,22 @@
 //!   (`Π_M ∘ Π_Eₖ⁻¹`), one All-to-All per encoder instead of two;
 //! * **Computation overhead overlapping** — `plan_step` is pure
 //!   computation over sequence lengths, designed to run inside the
-//!   dataloader prefetch (see [`crate::data::loader`]); only the
-//!   All-to-All operations land on the critical path.
+//!   dataloader prefetch (see [`super::pipeline::StepPipeline`]); only
+//!   the All-to-All operations land on the critical path. The three
+//!   phase dispatchers are independent (§6), so [`Orchestrator::
+//!   plan_step_with`] plans them concurrently under
+//!   `std::thread::scope`, each phase on its own [`PlanScratch`] — the
+//!   serial path ([`Orchestrator::plan_step_serial`]) exists as the
+//!   before/after baseline for `benches/table2_overhead`.
 //!
 //! The resulting [`StepPlan`] is consumed by both the discrete-event
 //! simulator (pricing) and the real trainer (execution) — the same plan
 //! object, so benchmarks measure the logic that ships.
 
-use crate::balance::types::Policy;
+use std::sync::Arc;
+
+use crate::balance::balancer::{registry, Balancer};
+use crate::balance::scratch::PlanScratch;
 use crate::comm::costmodel::{alltoall_cost, CollectiveCost};
 use crate::comm::topology::Topology;
 use crate::comm::volume::VolumeMatrix;
@@ -28,12 +36,13 @@ use super::dispatcher::{Communicator, DispatchPlan, Dispatcher};
 use super::rearrangement::Rearrangement;
 
 /// Orchestrator configuration: which phases balance, with what
-/// algorithm, over which communicator.
-#[derive(Clone, Copy, Debug)]
+/// algorithm, over which communicator. Balancers resolve through the
+/// [`registry`], so any registered algorithm plugs into any phase.
+#[derive(Clone)]
 pub struct OrchestratorConfig {
-    pub vision_policy: Policy,
-    pub audio_policy: Policy,
-    pub llm_policy: Policy,
+    pub vision_balancer: Arc<dyn Balancer>,
+    pub audio_balancer: Arc<dyn Balancer>,
+    pub llm_balancer: Arc<dyn Balancer>,
     pub communicator: Communicator,
     /// Rearrangement Composition on (off = reset-to-origin two-hop).
     pub composition: bool,
@@ -48,6 +57,18 @@ pub struct OrchestratorConfig {
     pub text_bytes_per_token: f64,
 }
 
+impl std::fmt::Debug for OrchestratorConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OrchestratorConfig")
+            .field("vision_balancer", &self.vision_balancer.name())
+            .field("audio_balancer", &self.audio_balancer.name())
+            .field("llm_balancer", &self.llm_balancer.name())
+            .field("communicator", &self.communicator)
+            .field("composition", &self.composition)
+            .finish_non_exhaustive()
+    }
+}
+
 impl OrchestratorConfig {
     /// The paper's full system: tailored algorithms per phase
     /// (no-padding for vision patches, padded for the conv audio
@@ -55,9 +76,9 @@ impl OrchestratorConfig {
     /// node-wise All-to-All, composition on.
     pub fn orchmllm(embed_bytes: f64) -> OrchestratorConfig {
         OrchestratorConfig {
-            vision_policy: Policy::GreedyUnpadded,
-            audio_policy: Policy::BinaryPadded,
-            llm_policy: Policy::GreedyUnpadded,
+            vision_balancer: registry::must("greedy"),
+            audio_balancer: registry::must("padded"),
+            llm_balancer: registry::must("greedy"),
             communicator: Communicator::AllToAll { nodewise: true },
             composition: true,
             embed_bytes_per_token: embed_bytes,
@@ -70,9 +91,9 @@ impl OrchestratorConfig {
     /// Baseline: no balancing anywhere ("OrchMLLM w/o balance").
     pub fn no_balance(embed_bytes: f64) -> OrchestratorConfig {
         OrchestratorConfig {
-            vision_policy: Policy::NoBalance,
-            audio_policy: Policy::NoBalance,
-            llm_policy: Policy::NoBalance,
+            vision_balancer: registry::must("none"),
+            audio_balancer: registry::must("none"),
+            llm_balancer: registry::must("none"),
             ..Self::orchmllm(embed_bytes)
         }
     }
@@ -80,10 +101,20 @@ impl OrchestratorConfig {
     /// Pre-balancing stand-in (Fig. 10): balance only the LLM phase.
     pub fn llm_only(embed_bytes: f64) -> OrchestratorConfig {
         OrchestratorConfig {
-            vision_policy: Policy::NoBalance,
-            audio_policy: Policy::NoBalance,
+            vision_balancer: registry::must("none"),
+            audio_balancer: registry::must("none"),
             ..Self::orchmllm(embed_bytes)
         }
+    }
+
+    /// Force one registered algorithm onto every phase (the `--balancer`
+    /// CLI override).
+    pub fn with_balancer(mut self, b: Arc<dyn Balancer>)
+        -> OrchestratorConfig {
+        self.vision_balancer = b.clone();
+        self.audio_balancer = b.clone();
+        self.llm_balancer = b;
+        self
     }
 }
 
@@ -111,7 +142,8 @@ pub struct StepPlan {
     pub vision: EncoderPlan,
     pub audio: EncoderPlan,
     pub llm: DispatchPlan,
-    /// Total dispatcher computation time (overlappable).
+    /// Wall-clock planning time (overlappable; with parallel phase
+    /// planning this is the slowest phase, not the sum).
     pub compute_nanos: u128,
 }
 
@@ -136,8 +168,31 @@ impl StepPlan {
     }
 }
 
+/// Per-phase reusable buffers for one planning stream: lens + payload
+/// staging plus the balancer/dispatcher [`PlanScratch`]. One per phase
+/// so the three dispatchers can plan concurrently without sharing.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseScratch {
+    pub lens: Vec<usize>,
+    pub payload: Vec<f64>,
+    pub plan: PlanScratch,
+}
+
+/// The orchestrator's full per-step workspace (all three phases).
+#[derive(Clone, Debug, Default)]
+pub struct StepScratch {
+    pub vision: PhaseScratch,
+    pub audio: PhaseScratch,
+    pub llm: PhaseScratch,
+}
+
+/// Below this many global examples the per-step cost of two scoped
+/// thread spawns exceeds the phase solves being parallelized (tiny
+/// trainer workloads), so planning stays on the calling thread.
+const PARALLEL_MIN_EXAMPLES: usize = 256;
+
 /// The MLLM Global Orchestrator.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct Orchestrator {
     pub cfg: OrchestratorConfig,
 }
@@ -149,10 +204,50 @@ impl Orchestrator {
 
     /// Plan one training step from the sampled per-instance
     /// mini-batches. Pure computation — no communication happens here.
+    /// Convenience wrapper over a fresh scratch; hot callers (the step
+    /// pipeline, the simulator loop) should reuse one via
+    /// [`Orchestrator::plan_step_with`].
     pub fn plan_step(
         &self,
         topo: &Topology,
         minibatches: &[Vec<Example>],
+    ) -> StepPlan {
+        self.plan_step_with(topo, minibatches, &mut StepScratch::default())
+    }
+
+    /// Plan one step with phase dispatchers running concurrently and
+    /// all hot-loop buffers reused from `scratch`.
+    pub fn plan_step_with(
+        &self,
+        topo: &Topology,
+        minibatches: &[Vec<Example>],
+        scratch: &mut StepScratch,
+    ) -> StepPlan {
+        self.plan_inner(topo, minibatches, scratch, true)
+    }
+
+    /// The pre-refactor baseline: one phase after another, fresh
+    /// allocations. Kept so `benches/table2_overhead` can report the
+    /// serial vs parallel+scratch speedup across PRs.
+    pub fn plan_step_serial(
+        &self,
+        topo: &Topology,
+        minibatches: &[Vec<Example>],
+    ) -> StepPlan {
+        self.plan_inner(
+            topo,
+            minibatches,
+            &mut StepScratch::default(),
+            false,
+        )
+    }
+
+    fn plan_inner(
+        &self,
+        topo: &Topology,
+        minibatches: &[Vec<Example>],
+        scratch: &mut StepScratch,
+        parallel: bool,
     ) -> StepPlan {
         let t0 = std::time::Instant::now();
         let d = topo.instances;
@@ -169,44 +264,90 @@ impl Orchestrator {
         }
         let cfg = &self.cfg;
 
-        // ---- encoder phases (independent dispatchers, §6) -------------
-        let vis_lens: Vec<usize> =
-            examples.iter().map(|e| e.vis_len).collect();
-        let vis_payload: Vec<f64> = examples
-            .iter()
-            .map(|e| e.vis_len as f64 * cfg.vis_bytes_per_unit)
-            .collect();
-        let vision_plan = Dispatcher {
-            policy: cfg.vision_policy,
-            communicator: cfg.communicator,
-        }
-        .dispatch(topo, &home, &vis_lens, &vis_payload);
+        // Stage per-phase lengths and payload bytes into the scratch.
+        fill_phase(&mut scratch.vision, &examples, |e| e.vis_len, |e| {
+            e.vis_len as f64 * cfg.vis_bytes_per_unit
+        });
+        fill_phase(&mut scratch.audio, &examples, |e| e.aud_len, |e| {
+            e.aud_len as f64 * cfg.aud_bytes_per_unit
+        });
+        fill_phase(&mut scratch.llm, &examples, |e| e.llm_len(), |e| {
+            e.text_len as f64 * cfg.text_bytes_per_token
+        });
 
-        let aud_lens: Vec<usize> =
-            examples.iter().map(|e| e.aud_len).collect();
-        let aud_payload: Vec<f64> = examples
-            .iter()
-            .map(|e| e.aud_len as f64 * cfg.aud_bytes_per_unit)
-            .collect();
-        let audio_plan = Dispatcher {
-            policy: cfg.audio_policy,
-            communicator: cfg.communicator,
-        }
-        .dispatch(topo, &home, &aud_lens, &aud_payload);
+        let vd = Dispatcher::new(
+            cfg.vision_balancer.clone(),
+            cfg.communicator,
+        );
+        let ad =
+            Dispatcher::new(cfg.audio_balancer.clone(), cfg.communicator);
+        let ld = Dispatcher::new(cfg.llm_balancer.clone(), cfg.communicator);
 
-        // ---- LLM phase: subsequences assembly --------------------------
-        // Balance on the full interleaved length (§6).
-        let llm_lens: Vec<usize> =
-            examples.iter().map(|e| e.llm_len()).collect();
-        let llm_payload: Vec<f64> = examples
-            .iter()
-            .map(|e| e.text_len as f64 * cfg.text_bytes_per_token)
-            .collect();
-        let llm_plan = Dispatcher {
-            policy: cfg.llm_policy,
-            communicator: cfg.communicator,
-        }
-        .dispatch(topo, &home, &llm_lens, &llm_payload);
+        // ---- per-phase dispatchers (independent, §6) -------------------
+        let StepScratch { vision, audio, llm } = scratch;
+        let home_ref = &home;
+        let parallel = parallel && examples.len() >= PARALLEL_MIN_EXAMPLES;
+        let (vision_plan, audio_plan, llm_plan) = if parallel {
+            // The dispatchers share nothing mutable: each phase plans on
+            // its own scratch. The LLM phase (usually the largest) runs
+            // on the calling thread; encoders on scoped threads.
+            std::thread::scope(|s| {
+                let hv = s.spawn(move || {
+                    vd.dispatch_with(
+                        topo,
+                        home_ref,
+                        &vision.lens,
+                        &vision.payload,
+                        &mut vision.plan,
+                    )
+                });
+                let ha = s.spawn(move || {
+                    ad.dispatch_with(
+                        topo,
+                        home_ref,
+                        &audio.lens,
+                        &audio.payload,
+                        &mut audio.plan,
+                    )
+                });
+                let lp = ld.dispatch_with(
+                    topo,
+                    home_ref,
+                    &llm.lens,
+                    &llm.payload,
+                    &mut llm.plan,
+                );
+                (
+                    hv.join().expect("vision planner panicked"),
+                    ha.join().expect("audio planner panicked"),
+                    lp,
+                )
+            })
+        } else {
+            (
+                vd.dispatch_with(
+                    topo,
+                    home_ref,
+                    &vision.lens,
+                    &vision.payload,
+                    &mut vision.plan,
+                ),
+                ad.dispatch_with(
+                    topo,
+                    home_ref,
+                    &audio.lens,
+                    &audio.payload,
+                    &mut audio.plan,
+                ),
+                ld.dispatch_with(
+                    topo,
+                    home_ref,
+                    &llm.lens,
+                    &llm.payload,
+                    &mut llm.plan,
+                ),
+            )
+        };
 
         // ---- rearrangement composition ---------------------------------
         let vision = self.encoder_out(
@@ -283,6 +424,19 @@ impl Orchestrator {
             out_comm,
         }
     }
+}
+
+/// Stage one phase's lengths and payload bytes into its scratch.
+fn fill_phase(
+    ph: &mut PhaseScratch,
+    examples: &[Example],
+    len_of: impl Fn(&Example) -> usize,
+    bytes_of: impl Fn(&Example) -> f64,
+) {
+    ph.lens.clear();
+    ph.lens.extend(examples.iter().map(&len_of));
+    ph.payload.clear();
+    ph.payload.extend(examples.iter().map(&bytes_of));
 }
 
 #[cfg(test)]
@@ -372,6 +526,36 @@ mod tests {
     }
 
     #[test]
+    fn parallel_and_serial_plans_agree() {
+        // The §6 overlap must not change the plan: parallel + scratch
+        // reuse is an execution strategy, not a different algorithm.
+        // 8 × 40 = 320 examples keeps this above PARALLEL_MIN_EXAMPLES
+        // so the scoped-thread path really runs.
+        let topo = Topology::h100(8);
+        let mbs = sample(8, 40, 9);
+        let o = orch(OrchestratorConfig::orchmllm(7168.0));
+        let serial = o.plan_step_serial(&topo, &mbs);
+        let mut scratch = StepScratch::default();
+        for _ in 0..3 {
+            let parallel = o.plan_step_with(&topo, &mbs, &mut scratch);
+            assert_eq!(parallel.llm.route, serial.llm.route);
+            assert_eq!(parallel.llm.assignment, serial.llm.assignment);
+            assert_eq!(
+                parallel.vision.plan.assignment,
+                serial.vision.plan.assignment
+            );
+            assert_eq!(
+                parallel.audio.plan.assignment,
+                serial.audio.plan.assignment
+            );
+            assert_eq!(
+                parallel.vision.out_route,
+                serial.vision.out_route
+            );
+        }
+    }
+
+    #[test]
     fn every_example_reaches_exactly_one_llm_batch() {
         let topo = Topology::h100(8);
         let mbs = sample(8, 12, 6);
@@ -386,5 +570,24 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s), "some example lost");
+    }
+
+    #[test]
+    fn with_balancer_overrides_every_phase() {
+        let cfg = OrchestratorConfig::orchmllm(7168.0)
+            .with_balancer(registry::must("kk"));
+        assert_eq!(cfg.vision_balancer.name(), "kk");
+        assert_eq!(cfg.audio_balancer.name(), "kk");
+        assert_eq!(cfg.llm_balancer.name(), "kk");
+        let topo = Topology::h100(4);
+        let mbs = sample(4, 10, 11);
+        let plan = orch(cfg).plan_step(&topo, &mbs);
+        assert_eq!(
+            plan.assignment(PhaseKind::Llm)
+                .iter()
+                .map(|b| b.len())
+                .sum::<usize>(),
+            plan.examples.len()
+        );
     }
 }

@@ -4,16 +4,23 @@
 //! * [`rearrangement`] — the rearrangement Π as explicit data, with
 //!   inverse and composition (the algebra behind Rearrangement
 //!   Composition);
-//! * [`dispatcher`] — one phase's dispatcher: post-balancing algorithm +
-//!   node-wise rearrangement + communicator choice;
-//! * [`global`] — the MLLM Global Orchestrator: per-phase dispatchers,
-//!   subsequence assembly bookkeeping, rearrangement composition, and
-//!   the full [`global::StepPlan`] shared by the simulator and trainer.
+//! * [`dispatcher`] — one phase's dispatcher: a pluggable
+//!   [`crate::balance::Balancer`] + node-wise rearrangement +
+//!   communicator choice;
+//! * [`global`] — the MLLM Global Orchestrator: per-phase dispatchers
+//!   planned concurrently on reusable scratch, subsequence assembly
+//!   bookkeeping, rearrangement composition, and the full
+//!   [`global::StepPlan`] shared by the simulator and trainer;
+//! * [`pipeline`] — the double-buffered [`pipeline::StepPipeline`] that
+//!   plans step *t+1* while step *t* executes (the §6 overlap on the
+//!   execution path).
 
 pub mod dispatcher;
 pub mod global;
+pub mod pipeline;
 pub mod rearrangement;
 
 pub use dispatcher::{Communicator, Dispatcher, DispatchPlan};
-pub use global::{Orchestrator, OrchestratorConfig, StepPlan};
+pub use global::{Orchestrator, OrchestratorConfig, StepPlan, StepScratch};
+pub use pipeline::{PlannedStep, StepPipeline};
 pub use rearrangement::Rearrangement;

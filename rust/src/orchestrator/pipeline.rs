@@ -1,0 +1,142 @@
+//! Double-buffered step planning: the §6 overlap on the execution path.
+//!
+//! The paper prices dispatcher computation as free because it "overlaps
+//! with the forward pass via prefetch" — this module is where that
+//! actually happens. A [`StepPipeline`] owns a background planning
+//! thread that samples the next step's mini-batches and runs the full
+//! [`Orchestrator`] plan (post-balancing, node-wise rearrangement,
+//! composition) while the caller executes the current step. The channel
+//! is bounded at `depth` planned-but-unconsumed steps (depth 1 =
+//! classic double buffering: plan t+1 while t executes), so planning
+//! can never run unboundedly ahead of the consumer.
+//!
+//! The planning thread reuses one [`StepScratch`] across steps and
+//! plans the three phases concurrently, so the planning latency that
+//! must hide under one step's compute is the slowest single phase, not
+//! the sum — measured per step in [`PlannedStep::plan_nanos`] and
+//! reported by the trainer and the Table-2 bench.
+
+use crate::comm::topology::Topology;
+use crate::data::loader::Prefetcher;
+use crate::data::synth::{DatasetConfig, Example};
+
+use super::global::{Orchestrator, StepPlan, StepScratch};
+
+/// One planned step, handed to the executor.
+pub struct PlannedStep {
+    /// The sampled per-instance mini-batches the plan was built from.
+    pub minibatches: Vec<Vec<Example>>,
+    /// The full step plan (same object the simulator prices).
+    pub plan: StepPlan,
+    /// Planning wall-time — time spent *off* the critical path.
+    pub plan_nanos: u128,
+}
+
+/// Background sampler + planner with bounded lookahead.
+pub struct StepPipeline {
+    inner: Prefetcher<StepPlan>,
+}
+
+impl StepPipeline {
+    /// Start planning: `d` instances × `batch_size` examples per step
+    /// for `steps` steps, at most `depth` planned steps in flight.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        orch: Orchestrator,
+        topo: Topology,
+        data_cfg: DatasetConfig,
+        seed: u64,
+        d: usize,
+        batch_size: usize,
+        steps: usize,
+        depth: usize,
+    ) -> StepPipeline {
+        let mut scratch = StepScratch::default();
+        let inner = Prefetcher::new(
+            data_cfg,
+            seed,
+            d,
+            batch_size,
+            steps,
+            depth.max(1),
+            move |mbs| orch.plan_step_with(&topo, mbs, &mut scratch),
+        );
+        StepPipeline { inner }
+    }
+
+    /// Blocking fetch of the next planned step; `None` when the
+    /// configured number of steps is exhausted.
+    pub fn next(&self) -> Option<PlannedStep> {
+        self.inner.next().map(|s| PlannedStep {
+            minibatches: s.minibatches,
+            plan: s.plan,
+            plan_nanos: s.plan_nanos,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::flops::PhaseKind;
+    use crate::orchestrator::global::OrchestratorConfig;
+
+    fn pipeline(steps: usize, seed: u64) -> StepPipeline {
+        StepPipeline::new(
+            Orchestrator::new(OrchestratorConfig::orchmllm(7168.0)),
+            Topology::h100(4),
+            DatasetConfig::tiny(2, 2),
+            seed,
+            4,
+            6,
+            steps,
+            1,
+        )
+    }
+
+    #[test]
+    fn yields_the_configured_number_of_planned_steps() {
+        let p = pipeline(5, 3);
+        let mut n = 0;
+        while let Some(step) = p.next() {
+            assert_eq!(step.minibatches.len(), 4);
+            assert_eq!(step.plan.d, 4);
+            assert_eq!(step.plan.examples.len(), 4 * 6);
+            n += 1;
+        }
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn pipelined_plans_match_inline_planning() {
+        // Same seed → the pipeline must produce exactly the plans the
+        // trainer would have computed inline (SPMD determinism).
+        let p = pipeline(3, 7);
+        let orch = Orchestrator::new(OrchestratorConfig::orchmllm(7168.0));
+        let topo = Topology::h100(4);
+        while let Some(step) = p.next() {
+            let inline = orch.plan_step(&topo, &step.minibatches);
+            assert_eq!(step.plan.llm.route, inline.llm.route);
+            assert_eq!(
+                step.plan.assignment(PhaseKind::Llm),
+                inline.assignment(PhaseKind::Llm)
+            );
+            assert_eq!(step.plan.vision.out_route, inline.vision.out_route);
+        }
+    }
+
+    #[test]
+    fn early_drop_shuts_down_cleanly() {
+        let p = pipeline(100, 9);
+        let _ = p.next();
+        drop(p); // must join the planning thread without consuming all
+    }
+
+    #[test]
+    fn records_planning_time() {
+        let p = pipeline(1, 11);
+        let step = p.next().unwrap();
+        assert!(step.plan_nanos > 0);
+        assert!(step.plan_nanos >= step.plan.compute_nanos);
+    }
+}

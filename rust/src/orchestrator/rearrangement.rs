@@ -71,12 +71,23 @@ impl Rearrangement {
 
     /// Send-volume matrix given per-example payload sizes.
     pub fn volume(&self, d: usize, payload: &[f64]) -> VolumeMatrix {
-        assert_eq!(payload.len(), self.len());
         let mut v = VolumeMatrix::zeros(d);
+        self.volume_into(d, payload, &mut v);
+        v
+    }
+
+    /// Allocation-free variant: accumulate into a reused matrix.
+    pub fn volume_into(
+        &self,
+        d: usize,
+        payload: &[f64],
+        v: &mut VolumeMatrix,
+    ) {
+        assert_eq!(payload.len(), self.len());
+        v.reset(d);
         for g in 0..self.len() {
             v.add(self.from[g], self.to[g], payload[g]);
         }
-        v
     }
 
     /// Total bytes crossing node boundaries (Fig.-13 metric) under the

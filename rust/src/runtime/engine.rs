@@ -6,6 +6,8 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::runtime::xla_stub as xla;
+
 use super::manifest::{ArtifactSpec, Manifest, Slot};
 use super::tensor::{DType, HostTensor};
 

@@ -13,6 +13,7 @@
 pub mod engine;
 pub mod manifest;
 pub mod tensor;
+pub mod xla_stub;
 
 pub use engine::Runtime;
 pub use manifest::Manifest;

@@ -4,6 +4,8 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::runtime::xla_stub as xla;
+
 /// Element type (the AOT manifest uses "f32"/"i32").
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {

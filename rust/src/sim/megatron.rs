@@ -192,6 +192,8 @@ pub fn simulate_megatron(
         peak_mem_gb: 0.0, // not modelled for the baseline
         oom: false,
         dispatcher_overhead_ms: 0.0,
+        plan_ms: 0.0,
+        plan_overlapped_pct: 100.0,
         inter_node_mb: [0.0; 3],
     }
 }

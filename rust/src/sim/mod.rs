@@ -12,5 +12,8 @@ pub mod gpu;
 pub mod megatron;
 pub mod report;
 
-pub use engine::{simulate_run, simulate_step, RunSummary, StepSim, SystemKind};
+pub use engine::{
+    simulate_run, simulate_run_named, simulate_step, RunSummary, StepSim,
+    SystemKind,
+};
 pub use gpu::GpuSpec;

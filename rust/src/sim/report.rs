@@ -58,6 +58,16 @@ pub fn render_overhead(cells: &[RunSummary]) -> String {
         out.push_str(&format!("{:>10.2}", c.step_secs));
     }
     out.push_str("\n");
+    out.push_str(&format!("{:<16}", "Plan (ms)"));
+    for c in cells {
+        out.push_str(&format!("{:>10.2}", c.plan_ms));
+    }
+    out.push_str("\n");
+    out.push_str(&format!("{:<16}", "Overlapped (%)"));
+    for c in cells {
+        out.push_str(&format!("{:>10.1}", c.plan_overlapped_pct));
+    }
+    out.push_str("\n");
     out
 }
 

@@ -1,12 +1,15 @@
 //! Real end-to-end DP training of the tiny MLLM over PJRT artifacts.
 //!
-//! `run` spawns one thread per DP worker. Every worker samples the same
-//! example stream (seeded), plans the step with the same deterministic
-//! [`Orchestrator`] — mirroring the paper's lengths-only All-Gather +
-//! replicated solve — then executes the plan against its own PJRT
-//! runtime, exchanging payloads through the in-process collective
-//! engine. Losses and gradients are *sums*, rescaled by the global token
-//! count after the all-reduce, so any rearrangement is bit-for-bit
+//! `run` spawns one thread per DP worker. Every worker owns a
+//! [`StepPipeline`]: a background thread that samples the same example
+//! stream (seeded) and plans step *t+1* with the deterministic
+//! [`Orchestrator`] — on reusable scratch, phases in parallel — while
+//! the worker executes step *t*. That is the paper's §6 computation
+//! overhead overlapping realized on the execution path, mirroring the
+//! lengths-only All-Gather + replicated solve: every rank's pipeline
+//! sees the identical stream, so all plans agree without extra traffic.
+//! Losses and gradients are *sums*, rescaled by the global token count
+//! after the all-reduce, so any rearrangement is bit-for-bit
 //! consequence-invariant (validated by `rust/tests/trainer_invariance`).
 
 pub mod content;
@@ -15,12 +18,14 @@ pub mod worker;
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
+use crate::balance::registry;
 use crate::comm::topology::Topology;
 use crate::config::TrainRunConfig;
-use crate::data::synth::{DatasetConfig, Example, Generator, TaskMix};
+use crate::data::synth::{DatasetConfig, TaskMix};
 use crate::orchestrator::global::{Orchestrator, OrchestratorConfig};
+use crate::orchestrator::pipeline::StepPipeline;
 use crate::runtime::manifest::Manifest;
 
 use content::ContentGen;
@@ -33,6 +38,9 @@ pub struct TrainReport {
     pub tokens_per_step: f64,
     pub secs_per_step: f64,
     pub comm_secs_per_step: f64,
+    /// Mean planning wall-time per step — spent on the pipeline thread,
+    /// overlapped with execution (§6), not on the critical path.
+    pub plan_secs_per_step: f64,
     pub workers: usize,
     pub steps: usize,
 }
@@ -51,12 +59,14 @@ impl TrainReport {
         }
         format!(
             "train: {} workers, {} steps\n{curve}loss {first:.4} -> {last:.4}\n\
-             {:.0} tokens/step, {:.3}s/step ({:.1}ms comm)",
+             {:.0} tokens/step, {:.3}s/step ({:.1}ms comm, \
+             {:.2}ms plan overlapped)",
             self.workers,
             self.steps,
             self.tokens_per_step,
             self.secs_per_step,
             self.comm_secs_per_step * 1e3,
+            self.plan_secs_per_step * 1e3,
         )
     }
 }
@@ -98,6 +108,30 @@ pub fn worker_topology(workers: usize) -> Topology {
     }
 }
 
+/// Resolve the orchestrator configuration a training run uses.
+fn orchestrator_config(
+    cfg: &TrainRunConfig,
+    embed_bytes: f64,
+) -> Result<OrchestratorConfig> {
+    let mut orch_cfg = if cfg.balance {
+        OrchestratorConfig::orchmllm(embed_bytes)
+    } else {
+        OrchestratorConfig::no_balance(embed_bytes)
+    };
+    if cfg.balance {
+        if let Some(name) = &cfg.balancer {
+            let b = registry::create(name).ok_or_else(|| {
+                anyhow!(
+                    "unknown balancer '{name}' (registered: {:?})",
+                    registry::NAMES
+                )
+            })?;
+            orch_cfg = orch_cfg.with_balancer(b);
+        }
+    }
+    Ok(orch_cfg)
+}
+
 /// Run a training job, returning the aggregated report.
 pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
     let dir = Path::new(&cfg.artifacts);
@@ -110,11 +144,7 @@ pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
     let data_cfg = dataset_for_manifest(&manifest)?;
     let topo = worker_topology(cfg.workers);
     let embed_bytes = manifest.config.d_llm as f64 * 4.0;
-    let orch_cfg = if cfg.balance {
-        OrchestratorConfig::orchmllm(embed_bytes)
-    } else {
-        OrchestratorConfig::no_balance(embed_bytes)
-    };
+    let orch_cfg = orchestrator_config(cfg, embed_bytes)?;
     let content =
         ContentGen { seed: cfg.seed ^ 0xC0FFEE, vocab: manifest.config.vocab };
     let comms = Arc::new(Comms::new(cfg.workers));
@@ -123,35 +153,51 @@ pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
     for rank in 0..cfg.workers {
         let comms = Arc::clone(&comms);
         let cfg = cfg.clone();
+        let orch_cfg = orch_cfg.clone();
         let data_cfg = data_cfg;
         let dir = dir.to_path_buf();
-        handles.push(std::thread::spawn(move || -> Result<Vec<StepOutcome>> {
-            let mut w = Worker::new(
-                rank,
-                topo,
-                &dir,
-                comms,
-                content,
-                cfg.lr,
-            )?;
-            let orch = Orchestrator::new(orch_cfg);
-            // Identical stream on every rank: the lengths "all-gather".
-            let mut generator = Generator::new(data_cfg, cfg.seed);
-            let mut outcomes = Vec::new();
-            for _ in 0..cfg.steps {
-                let minibatches: Vec<Vec<Example>> = (0..cfg.workers)
-                    .map(|_| generator.batch(cfg.mini_batch))
-                    .collect();
-                let plan = orch.plan_step(&topo, &minibatches);
-                outcomes.push(w.step(&plan)?);
-            }
-            Ok(outcomes)
-        }));
+        handles.push(std::thread::spawn(
+            move || -> Result<(Vec<StepOutcome>, u128)> {
+                let mut w = Worker::new(
+                    rank,
+                    topo,
+                    &dir,
+                    comms,
+                    content,
+                    cfg.lr,
+                )?;
+                // Identical stream + deterministic planner on every
+                // rank: the lengths "all-gather". Depth 1 = plan t+1
+                // while t executes.
+                let pipeline = StepPipeline::new(
+                    Orchestrator::new(orch_cfg),
+                    topo,
+                    data_cfg,
+                    cfg.seed,
+                    cfg.workers,
+                    cfg.mini_batch,
+                    cfg.steps,
+                    1,
+                );
+                let mut outcomes = Vec::new();
+                let mut plan_nanos: u128 = 0;
+                while let Some(step) = pipeline.next() {
+                    plan_nanos += step.plan_nanos;
+                    outcomes.push(w.step(&step.plan)?);
+                }
+                Ok((outcomes, plan_nanos))
+            },
+        ));
     }
 
     let mut per_rank = Vec::new();
-    for h in handles {
-        per_rank.push(h.join().expect("worker panicked")?);
+    let mut plan_nanos_rank0 = 0u128;
+    for (rank, h) in handles.into_iter().enumerate() {
+        let (outcomes, plan_nanos) = h.join().expect("worker panicked")?;
+        if rank == 0 {
+            plan_nanos_rank0 = plan_nanos;
+        }
+        per_rank.push(outcomes);
     }
     let r0 = &per_rank[0];
     // Reduced quantities must agree across ranks.
@@ -172,6 +218,9 @@ pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
             / steps as f64,
         comm_secs_per_step: r0.iter().map(|o| o.comm_seconds).sum::<f64>()
             / steps as f64,
+        plan_secs_per_step: plan_nanos_rank0 as f64
+            / 1e9
+            / steps.max(1) as f64,
         workers: cfg.workers,
         steps,
     })
@@ -185,6 +234,7 @@ pub fn run(cfg: &TrainRunConfig) -> Result<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::synth::Generator;
 
     #[test]
     fn dataset_caps_respect_buckets() {
@@ -210,5 +260,23 @@ mod tests {
         assert_eq!(t.nodes(), 2);
         assert!(t.same_node(0, 1));
         assert!(!t.same_node(1, 2));
+    }
+
+    #[test]
+    fn orchestrator_config_resolves_balancer_names() {
+        let mut cfg = TrainRunConfig {
+            balancer: Some("kk".into()),
+            ..TrainRunConfig::default()
+        };
+        let oc = orchestrator_config(&cfg, 128.0).unwrap();
+        assert_eq!(oc.llm_balancer.name(), "kk");
+
+        cfg.balancer = Some("not-an-algorithm".into());
+        assert!(orchestrator_config(&cfg, 128.0).is_err());
+
+        cfg.balance = false;
+        // --no-balance wins over --balancer.
+        let oc = orchestrator_config(&cfg, 128.0).unwrap();
+        assert!(oc.llm_balancer.is_identity());
     }
 }

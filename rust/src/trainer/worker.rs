@@ -23,6 +23,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::comm::engine::Collectives;
 use crate::comm::topology::Topology;
+use crate::runtime::xla_stub as xla;
 use crate::data::synth::Example;
 use crate::orchestrator::global::StepPlan;
 use crate::runtime::engine::Runtime;

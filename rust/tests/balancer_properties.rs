@@ -1,0 +1,132 @@
+//! Registry-wide property tests: EVERY registered balancer, over
+//! log-normal and adversarial length distributions, must
+//!
+//! 1. produce a valid assignment — every example id exactly once,
+//!    exactly `d` mini-batches;
+//! 2. achieve a makespan (under the balancer's own cost model) no worse
+//!    than `NoBalance` (the identity dealing);
+//! 3. be a deterministic pure function of `(lens, d)` — replicas solve
+//!    independently and must agree (§5.2.1);
+//! 4. behave on edge shapes: empty input, n < d, all-equal lengths.
+//!
+//! These are the invariants that make post-balancing safe to plug into
+//! any phase: consequence-invariance needs (1) and (3); "never slower
+//! than not balancing" needs (2).
+
+use orchmllm::balance::types::{
+    assert_valid_assignment, identity_with_lens,
+};
+use orchmllm::balance::{registry, Balancer, PlanScratch};
+use orchmllm::util::prop::{check, Gen};
+
+fn lognormal_lens(g: &mut Gen) -> Vec<usize> {
+    let n = g.usize(0, 150);
+    g.seq_lengths(n, 3.2, 1.3)
+}
+
+/// Adversarial shape: one giant example among many tiny ones — the
+/// worst case for padded batching and greedy commitment.
+fn one_giant_lens(g: &mut Gen) -> Vec<usize> {
+    let n = g.usize(1, 120);
+    let mut lens = vec![2usize; n];
+    let giant = g.usize(0, n);
+    lens[giant] = 50_000;
+    lens
+}
+
+fn check_balancer_on(
+    b: &dyn Balancer,
+    lens: &[usize],
+    d: usize,
+    scratch: &mut PlanScratch,
+) {
+    let a = b.balance(lens, d, scratch);
+    assert_valid_assignment(&a, lens.len(), d);
+
+    let cm = b.cost_model();
+    let identity = identity_with_lens(lens, d);
+    assert!(
+        cm.makespan(&a) <= cm.makespan(&identity) + 1e-9,
+        "{}: makespan {} worse than NoBalance {}",
+        b.name(),
+        cm.makespan(&a),
+        cm.makespan(&identity)
+    );
+}
+
+#[test]
+fn every_balancer_valid_and_no_worse_than_nobalance_lognormal() {
+    check("registry lognormal", 120, |g| {
+        let d = g.usize(1, 12);
+        let lens = lognormal_lens(g);
+        let mut scratch = PlanScratch::new();
+        for name in registry::NAMES {
+            check_balancer_on(&*registry::must(name), &lens, d, &mut scratch);
+        }
+    });
+}
+
+#[test]
+fn every_balancer_valid_and_no_worse_than_nobalance_adversarial() {
+    check("registry one-giant", 120, |g| {
+        let d = g.usize(1, 10);
+        let lens = one_giant_lens(g);
+        let mut scratch = PlanScratch::new();
+        for name in registry::NAMES {
+            check_balancer_on(&*registry::must(name), &lens, d, &mut scratch);
+        }
+    });
+}
+
+#[test]
+fn every_balancer_is_deterministic() {
+    check("registry determinism", 40, |g| {
+        let d = g.usize(1, 8);
+        let lens = lognormal_lens(g);
+        for name in registry::NAMES {
+            let b = registry::must(name);
+            let a1 = b.balance(&lens, d, &mut PlanScratch::new());
+            let a2 = b.balance(&lens, d, &mut PlanScratch::new());
+            assert_eq!(a1, a2, "{name} is nondeterministic");
+        }
+    });
+}
+
+#[test]
+fn every_balancer_handles_edge_shapes() {
+    let mut scratch = PlanScratch::new();
+    for name in registry::NAMES {
+        let b = registry::must(name);
+        // Empty input.
+        let a = b.balance(&[], 5, &mut scratch);
+        assert_valid_assignment(&a, 0, 5);
+        // Fewer examples than instances.
+        let a = b.balance(&[7, 3], 6, &mut scratch);
+        assert_valid_assignment(&a, 2, 6);
+        // All equal: every instance gets an equal share.
+        let lens = vec![10usize; 24];
+        let a = b.balance(&lens, 4, &mut scratch);
+        assert_valid_assignment(&a, 24, 4);
+        let sizes: Vec<usize> = a.iter().map(|batch| batch.len()).collect();
+        assert!(
+            sizes.iter().all(|&s| s == 6),
+            "{name}: uneven split {sizes:?} on uniform lengths"
+        );
+        // Single instance takes everything.
+        let a = b.balance(&[4, 9, 1], 1, &mut scratch);
+        assert_valid_assignment(&a, 3, 1);
+    }
+}
+
+#[test]
+fn metadata_is_consistent() {
+    for name in registry::NAMES {
+        let b = registry::must(name);
+        // The declared cost model must match the declared batching mode
+        // except for regimes that imply their own (documented) mode.
+        let cm = b.cost_model();
+        let a = b.balance(&[5, 5], 2, &mut PlanScratch::new());
+        // Smoke: the cost model evaluates on this balancer's output.
+        assert!(cm.makespan(&a).is_finite(), "{name}: NaN makespan");
+    }
+}

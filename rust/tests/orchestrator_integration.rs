@@ -3,7 +3,6 @@
 //! public API on realistic synthetic workloads.
 
 use orchmllm::balance::cost::CostModel;
-use orchmllm::balance::types::Policy;
 use orchmllm::comm::topology::Topology;
 use orchmllm::data::incoherence::IncoherenceReport;
 use orchmllm::data::synth::{DatasetConfig, Example, Generator};
@@ -124,9 +123,12 @@ fn nodewise_dispatch_never_increases_max_inter_node_send() {
             examples.iter().map(|e| e.vis_len).collect();
         let payload: Vec<f64> =
             lens.iter().map(|&l| l as f64 * 1176.0).collect();
-        let mk = |nodewise| Dispatcher {
-            policy: Policy::GreedyUnpadded,
-            communicator: Communicator::AllToAll { nodewise },
+        let mk = |nodewise| {
+            Dispatcher::by_name(
+                "greedy",
+                Communicator::AllToAll { nodewise },
+            )
+            .expect("greedy is registered")
         };
         let with = mk(true).dispatch(&topo, &placement, &lens, &payload);
         let without =

@@ -25,6 +25,7 @@ fn base_cfg() -> TrainRunConfig {
         lr: 2.0,
         seed: 7,
         balance: true,
+        balancer: None,
     }
 }
 
