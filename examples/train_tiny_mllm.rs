@@ -13,7 +13,8 @@
 //!
 //! Run: `make artifacts && cargo run --release --example train_tiny_mllm
 //!       [-- --steps 300 --workers 4 --mini-batch 6 --lr 4
-//!           --artifacts artifacts/test]`
+//!           --artifacts artifacts/test
+//!           --pipeline-depth 3 --plan-cache-size 32]`
 
 use orchmllm::config::TrainRunConfig;
 use orchmllm::trainer;
@@ -30,13 +31,24 @@ fn main() {
         seed: args.u64("seed", 0),
         balance: true,
         balancer: args.get("balancer").map(str::to_string),
+        // Deep step pipeline + plan cache: depth 3 keeps planning
+        // spikes off the critical path; the cache replays recurring
+        // batch shapes bit-identically.
+        pipeline_depth: args.usize("pipeline-depth", 3),
+        plan_cache_size: args.usize("plan-cache-size", 32),
     };
+    cfg.validate().expect("invalid pipeline configuration");
     let invariance_steps = args.usize("invariance-steps", 5);
 
     println!(
         "== end-to-end tiny-MLLM training: {} workers, mb {}, {} steps, \
-         lr {} ==",
-        cfg.workers, cfg.mini_batch, cfg.steps, cfg.lr
+         lr {}, pipeline depth {}, plan cache {} ==",
+        cfg.workers,
+        cfg.mini_batch,
+        cfg.steps,
+        cfg.lr,
+        cfg.pipeline_depth,
+        cfg.plan_cache_size
     );
     let t0 = std::time::Instant::now();
     let report = trainer::run_collect(&cfg).expect("training failed");

@@ -1,23 +1,31 @@
 //! Table 2: dispatcher overhead (ms) and forward duration (s) as the
-//! cluster scales 64 → 2560 GPUs (MLLM-10B, mb 60), plus the serial vs
-//! parallel+scratch planning comparison that the step pipeline's §6
-//! overlap rests on.
+//! cluster scales 64 → 2560 GPUs (MLLM-10B, mb 60), plus the planning
+//! comparison the step pipeline's §6 overlap rests on: serial vs
+//! parallel+scratch (PR 1) vs incremental warm-start + plan cache.
 //!
 //! Expected shape (paper): overhead stays tens of ms (16.7 → 53.9 ms),
 //! <2% of the forward duration, because the All-to-All cost is
 //! scale-free (Eq. 4) and the solver computation overlaps with the
 //! forward pass.
 //!
-//! Emits `BENCH_table2_overhead.json` (overhead sweep + before/after
-//! planning wall-times) so the speedup is tracked across PRs.
+//! The incremental case measures the steady-state workload (step
+//! t ≥ 2): a small set of recurring batch shapes, planned once cold,
+//! then replanned through the warm-start path and the sketch-keyed plan
+//! caches. Acceptance: its **median** plan time is ≥ 3× lower than the
+//! from-scratch parallel path, with the cache hit rate and p99 plan
+//! time reported alongside.
 //!
-//! Run: `cargo bench --bench table2_overhead`
+//! Emits `BENCH_table2_overhead.json` (overhead sweep + planning
+//! wall-times) so the speedup is tracked across PRs.
+//!
+//! Run: `cargo bench --bench table2_overhead` (`-- --smoke` runs a tiny
+//! shape for CI bit-rot detection, skipping the timing assertions).
 
 use orchmllm::comm::topology::Topology;
 use orchmllm::data::synth::{DatasetConfig, Example, Generator};
 use orchmllm::model::config::MllmConfig;
 use orchmllm::orchestrator::global::{
-    Orchestrator, OrchestratorConfig, StepScratch,
+    Orchestrator, OrchestratorConfig, StepHistory, StepScratch,
 };
 use orchmllm::sim::engine::{simulate_run, SystemKind};
 use orchmllm::sim::report;
@@ -27,11 +35,16 @@ use orchmllm::util::json::Json;
 
 fn main() {
     let args = Args::from_env();
-    let steps = args.usize("steps", 3);
+    let smoke = args.flag("smoke");
+    let steps = args.usize("steps", if smoke { 2 } else { 3 });
     let seed = args.u64("seed", 42);
     let model = MllmConfig::mllm_10b();
 
-    let sizes = [64usize, 128, 256, 512, 1024, 2560];
+    let sizes: &[usize] = if smoke {
+        &[8, 16]
+    } else {
+        &[64, 128, 256, 512, 1024, 2560]
+    };
     let cells: Vec<_> = sizes
         .iter()
         .map(|&g| {
@@ -53,34 +66,42 @@ fn main() {
     print!("{}", report::render_overhead(&cells));
 
     // Shape checks: overhead grows sublinearly and stays a small
-    // fraction of the step.
-    let first = &cells[0];
-    let last = cells.last().unwrap();
-    let scale = last.gpus as f64 / first.gpus as f64; // 40x
-    let growth =
-        last.dispatcher_overhead_ms / first.dispatcher_overhead_ms.max(1e-9);
-    println!(
-        "\noverhead growth {growth:.1}x over a {scale:.0}x scale-up \
-         (paper: 3.2x over 40x)"
-    );
-    assert!(growth < scale / 2.0, "overhead scales too fast: {growth}x");
-    for c in &cells {
-        let frac = c.dispatcher_overhead_ms / 1e3 / c.step_secs;
-        assert!(
-            frac < 0.05,
-            "overhead {:.1}% of step at {} GPUs",
-            frac * 100.0,
-            c.gpus
+    // fraction of the step (full scale only — a 2-point smoke sweep is
+    // too noisy to gate on).
+    if !smoke {
+        let first = &cells[0];
+        let last = cells.last().unwrap();
+        let scale = last.gpus as f64 / first.gpus as f64; // 40x
+        let growth = last.dispatcher_overhead_ms
+            / first.dispatcher_overhead_ms.max(1e-9);
+        println!(
+            "\noverhead growth {growth:.1}x over a {scale:.0}x scale-up \
+             (paper: 3.2x over 40x)"
         );
+        assert!(
+            growth < scale / 2.0,
+            "overhead scales too fast: {growth}x"
+        );
+        for c in &cells {
+            let frac = c.dispatcher_overhead_ms / 1e3 / c.step_secs;
+            assert!(
+                frac < 0.05,
+                "overhead {:.1}% of step at {} GPUs",
+                frac * 100.0,
+                c.gpus
+            );
+        }
     }
 
-    // ---- serial vs parallel+scratch planning ---------------------------
+    // ---- serial vs parallel vs incremental planning --------------------
     // The acceptance workload: 3 phases, d = 32 instances. `serial` is
-    // the pre-refactor path (one phase after another, fresh allocations
-    // each step); `parallel` is the shipped path (phases planned
-    // concurrently on a reused StepScratch).
-    let d = args.usize("plan-gpus", 32);
-    let mb = args.usize("plan-mb", 60);
+    // the pre-trait path (one phase after another, fresh allocations
+    // each step); `parallel` plans phases concurrently on a reused
+    // StepScratch; `incremental` adds the cross-step history — the
+    // steady-state (t ≥ 2) path the pipeline actually runs.
+    let d = args.usize("plan-gpus", if smoke { 8 } else { 32 });
+    let mb = args.usize("plan-mb", if smoke { 8 } else { 60 });
+    let cache_size = args.usize("plan-cache-size", 32);
     let topo = Topology::h100(d);
     let orch =
         Orchestrator::new(OrchestratorConfig::orchmllm(3584.0 * 2.0));
@@ -99,19 +120,57 @@ fn main() {
         (r.mean_ms(), r.min_ns / 1e6)
     };
     let mut scratch = StepScratch::default();
-    let (parallel_ms, parallel_best_ms) = {
+    let (parallel_ms, parallel_p50_ms, parallel_best_ms) = {
         let r = bench.iter("parallel phases + scratch", || {
             orch.plan_step_with(&topo, &minibatches, &mut scratch)
         });
-        (r.mean_ms(), r.min_ns / 1e6)
+        (r.mean_ms(), r.p50_ns / 1e6, r.min_ns / 1e6)
+    };
+
+    // Steady-state workload: a recurring cycle of distinct batch
+    // shapes. One cold pass populates the history and caches (the
+    // t < 2 steps); the timed loop is then pure steady state.
+    let shapes: Vec<Vec<Vec<Example>>> = (0..4)
+        .map(|_| (0..d).map(|_| generator.batch(mb)).collect())
+        .collect();
+    let mut inc_scratch = StepScratch::default();
+    let mut history = StepHistory::new(cache_size);
+    for s in &shapes {
+        orch.plan_step_incremental(
+            &topo, s, &mut inc_scratch, &mut history,
+        );
+    }
+    let mut idx = 0usize;
+    let (incr_ms, incr_p50_ms, incr_p99_ms) = {
+        let r = bench.iter("incremental (warm + plan cache)", || {
+            let plan = orch.plan_step_incremental(
+                &topo,
+                &shapes[idx % shapes.len()],
+                &mut inc_scratch,
+                &mut history,
+            );
+            idx += 1;
+            plan
+        });
+        (r.mean_ms(), r.p50_ns / 1e6, r.p99_ns / 1e6)
     };
     bench.report();
+
+    let cache_hit_rate = history.cache_hit_rate();
     let speedup = serial_ms / parallel_ms.max(1e-9);
+    let steady_speedup = parallel_p50_ms / incr_p50_ms.max(1e-9);
     println!(
         "\nplanning: serial {serial_ms:.3} ms -> parallel+scratch \
          {parallel_ms:.3} ms ({speedup:.2}x; best-case \
          {serial_best_ms:.3} -> {parallel_best_ms:.3} ms)"
     );
+    println!(
+        "steady state: parallel p50 {parallel_p50_ms:.3} ms -> \
+         incremental p50 {incr_p50_ms:.3} ms ({steady_speedup:.2}x), \
+         p99 {incr_p99_ms:.3} ms, cache hit rate {:.0}%",
+        cache_hit_rate * 100.0
+    );
+
     // Compare best-case times: minima measure the intrinsic cost of
     // each path, where means on a shared/loaded runner fold scheduler
     // noise into whichever case ran during a spike. On a single-core
@@ -120,14 +179,29 @@ fn main() {
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
-    if cores >= 2 {
+    if !smoke {
+        if cores >= 2 {
+            assert!(
+                parallel_best_ms < serial_best_ms,
+                "parallel+scratch planning ({parallel_best_ms:.3} ms \
+                 best) did not beat the serial path \
+                 ({serial_best_ms:.3} ms best)"
+            );
+        } else {
+            eprintln!("single-core host: speedup assertion skipped");
+        }
+        // The headline acceptance: steady-state median plan time must
+        // be >= 3x lower than the from-scratch parallel path.
         assert!(
-            parallel_best_ms < serial_best_ms,
-            "parallel+scratch planning ({parallel_best_ms:.3} ms best) \
-             did not beat the serial path ({serial_best_ms:.3} ms best)"
+            steady_speedup >= 3.0,
+            "incremental planning only {steady_speedup:.2}x faster \
+             (p50 {incr_p50_ms:.3} ms vs parallel {parallel_p50_ms:.3} \
+             ms); acceptance requires >= 3x"
         );
-    } else {
-        eprintln!("single-core host: speedup assertion skipped");
+        assert!(
+            cache_hit_rate > 0.0,
+            "recurring shapes produced no cache hits"
+        );
     }
 
     // ---- JSON emission (tracked across PRs) ----------------------------
@@ -137,6 +211,16 @@ fn main() {
             ("overhead_ms", Json::num(c.dispatcher_overhead_ms)),
             ("step_secs", Json::num(c.step_secs)),
             ("plan_ms", Json::num(c.plan_ms)),
+            ("plan_ms_p50", Json::num(c.plan_stats.p50_ms)),
+            ("plan_ms_p95", Json::num(c.plan_stats.p95_ms)),
+            ("plan_ms_p99", Json::num(c.plan_stats.p99_ms)),
+            ("plan_warm_ms", Json::num(c.plan_stats.warm_ms)),
+            ("plan_cold_ms", Json::num(c.plan_stats.cold_ms)),
+            ("warm_rate", Json::num(c.plan_stats.warm_rate)),
+            (
+                "cache_hit_rate",
+                Json::num(c.plan_stats.cache_hit_rate),
+            ),
             ("plan_overlapped_pct", Json::num(c.plan_overlapped_pct)),
         ])
     }));
@@ -146,6 +230,7 @@ fn main() {
         ("mini_batch", Json::num(60.0)),
         ("steps", Json::num(steps as f64)),
         ("seed", Json::num(seed as f64)),
+        ("smoke", Json::Bool(smoke)),
         ("sweep", sweep),
         (
             "planning",
@@ -154,7 +239,14 @@ fn main() {
                 ("mini_batch", Json::num(mb as f64)),
                 ("serial_ms", Json::num(serial_ms)),
                 ("parallel_scratch_ms", Json::num(parallel_ms)),
+                ("parallel_p50_ms", Json::num(parallel_p50_ms)),
                 ("speedup", Json::num(speedup)),
+                ("incremental_ms", Json::num(incr_ms)),
+                ("incremental_p50_ms", Json::num(incr_p50_ms)),
+                ("incremental_p99_ms", Json::num(incr_p99_ms)),
+                ("steady_state_speedup", Json::num(steady_speedup)),
+                ("cache_hit_rate", Json::num(cache_hit_rate)),
+                ("plan_cache_size", Json::num(cache_size as f64)),
             ]),
         ),
     ]);

@@ -24,6 +24,7 @@ use std::fmt;
 use std::sync::Arc;
 
 use super::cost::CostModel;
+use super::incremental::{self, IncrementalPlan, PlanSource};
 use super::scratch::PlanScratch;
 use super::types::{identity_with_lens, Assignment, BatchingMode};
 
@@ -71,6 +72,59 @@ pub trait Balancer: Send + Sync + fmt::Debug {
     /// example on the instance that sampled it instead of re-dealing.
     fn is_identity(&self) -> bool {
         false
+    }
+
+    /// Plan incrementally from the previous step's assignment
+    /// (ROADMAP's "incremental / cached rebalancing"): warm-start from
+    /// `prev`'s rank→batch structure, run bounded local repair, and
+    /// fall back to the from-scratch [`Balancer::balance`] when the
+    /// batch diverged (different size, empty phase) or repair cannot
+    /// certify the [`incremental::REPAIR_TOLERANCE`] band against a
+    /// sound lower bound.
+    ///
+    /// Contract (pinned by `rust/tests/incremental_properties.rs`):
+    ///
+    /// * the output is a valid assignment of `lens` over `d` batches;
+    /// * `makespan(incremental) <= makespan(from-scratch) ×
+    ///   (1 + REPAIR_TOLERANCE)` under [`Balancer::cost_model`];
+    /// * deterministic pure function of `(lens, d, prev)` (§5.2.1);
+    /// * the warm path is never worse than the identity dealing (the
+    ///   `NoBalance` floor) — diverging plans fall back cold.
+    fn plan_incremental(
+        &self,
+        lens: &[usize],
+        d: usize,
+        prev: &Assignment,
+        scratch: &mut PlanScratch,
+    ) -> IncrementalPlan {
+        if self.is_identity() {
+            return IncrementalPlan {
+                assignment: self.balance(lens, d, scratch),
+                source: PlanSource::Cold,
+                repair_moves: 0,
+            };
+        }
+        let cm = self.cost_model();
+        if let Some((assignment, repair_moves)) =
+            incremental::warm_start(&cm, lens, d, prev, scratch)
+        {
+            // §5.1 floor holds on the warm path too: keep the warm plan
+            // only while it beats (or ties) the identity dealing.
+            if cm.makespan(&assignment)
+                <= incremental::identity_makespan(&cm, lens, d) + 1e-9
+            {
+                return IncrementalPlan {
+                    assignment,
+                    source: PlanSource::Warm,
+                    repair_moves,
+                };
+            }
+        }
+        IncrementalPlan {
+            assignment: self.balance(lens, d, scratch),
+            source: PlanSource::Cold,
+            repair_moves: 0,
+        }
     }
 
     /// The Eq.-2 cost function this balancer's output should be judged
@@ -131,7 +185,8 @@ impl Balancer for NoBalance {
 /// heuristic's makespan (under its own cost model) regresses past the
 /// identity dealing, keep the identity. Guarantees the registry-wide
 /// invariant `makespan(balanced) <= makespan(NoBalance)` that
-/// `rust/tests/balancer_properties.rs` pins.
+/// `rust/tests/balancer_properties.rs` pins — on the from-scratch *and*
+/// the incremental path (`rust/tests/incremental_properties.rs`).
 #[derive(Debug)]
 pub struct Guarded<B: Balancer>(pub B);
 
@@ -166,30 +221,42 @@ impl<B: Balancer> Balancer for Guarded<B> {
         if self.0.is_identity() {
             return candidate;
         }
+        // Score the identity dealing from chunk aggregates; the full
+        // identity assignment is only materialized in the rare case it
+        // actually wins, keeping the guard off the allocation-free hot
+        // path.
         let cm = self.cost_model();
-        // Score the identity dealing chunk-wise through a reused
-        // buffer; the full identity assignment is only materialized in
-        // the rare case it actually wins, keeping the guard off the
-        // allocation-free hot path.
-        let (base, extra) = (lens.len() / d, lens.len() % d);
-        let mut identity_cost = 0.0f64;
-        let mut start = 0;
-        for i in 0..d {
-            let b = base + usize::from(i < extra);
-            scratch.spill.clear();
-            scratch.spill.extend(
-                (start..start + b).map(|id| {
-                    crate::balance::types::ExampleRef { id, len: lens[id] }
-                }),
-            );
-            identity_cost = identity_cost.max(cm.eval(&scratch.spill));
-            start += b;
-        }
-        if identity_cost < cm.makespan(&candidate) {
+        if incremental::identity_makespan(&cm, lens, d)
+            < cm.makespan(&candidate)
+        {
             identity_with_lens(lens, d)
         } else {
             candidate
         }
+    }
+
+    fn plan_incremental(
+        &self,
+        lens: &[usize],
+        d: usize,
+        prev: &Assignment,
+        scratch: &mut PlanScratch,
+    ) -> IncrementalPlan {
+        let mut plan = self.0.plan_incremental(lens, d, prev, scratch);
+        if self.0.is_identity() {
+            return plan;
+        }
+        // Guard the incremental path too: whatever the inner warm/cold
+        // logic produced, it must never lose to `NoBalance`.
+        let cm = self.cost_model();
+        if incremental::identity_makespan(&cm, lens, d)
+            < cm.makespan(&plan.assignment)
+        {
+            plan.assignment = identity_with_lens(lens, d);
+            plan.source = PlanSource::Cold;
+            plan.repair_moves = 0;
+        }
+        plan
     }
 }
 
@@ -314,5 +381,70 @@ mod tests {
         // The guard must fall back to the (balanced) identity dealing.
         assert_eq!(a[0].len(), 2);
         assert_eq!(a[1].len(), 2);
+    }
+
+    #[test]
+    fn guard_clamps_a_bad_incremental_override() {
+        /// From-scratch fine, but the incremental override is terrible:
+        /// everything in batch 0, claimed warm.
+        #[derive(Debug)]
+        struct BadIncremental;
+        impl Balancer for BadIncremental {
+            fn name(&self) -> &'static str {
+                "bad-incremental"
+            }
+            fn batching_mode(&self) -> BatchingMode {
+                BatchingMode::Unpadded
+            }
+            fn cost_regime(&self) -> CostRegime {
+                CostRegime::Linear
+            }
+            fn balance(
+                &self,
+                lens: &[usize],
+                d: usize,
+                _s: &mut PlanScratch,
+            ) -> Assignment {
+                identity_with_lens(lens, d)
+            }
+            fn plan_incremental(
+                &self,
+                lens: &[usize],
+                d: usize,
+                _prev: &Assignment,
+                _s: &mut PlanScratch,
+            ) -> IncrementalPlan {
+                let mut a: Assignment = vec![Vec::new(); d];
+                for (id, &len) in lens.iter().enumerate() {
+                    a[0].push(crate::balance::types::ExampleRef {
+                        id,
+                        len,
+                    });
+                }
+                IncrementalPlan {
+                    assignment: a,
+                    source: PlanSource::Warm,
+                    repair_moves: 0,
+                }
+            }
+        }
+        let guarded = Guarded(BadIncremental);
+        let mut s = PlanScratch::new();
+        let prev = guarded.balance(&[4, 4, 4, 4], 2, &mut s);
+        let plan = guarded.plan_incremental(&[4, 4, 4, 4], 2, &prev, &mut s);
+        // The incremental guard must clamp to the identity dealing.
+        assert_eq!(plan.assignment[0].len(), 2);
+        assert_eq!(plan.assignment[1].len(), 2);
+        assert_eq!(plan.source, PlanSource::Cold);
+    }
+
+    #[test]
+    fn no_balance_incremental_stays_identity() {
+        let b = registry::must("none");
+        let mut s = PlanScratch::new();
+        let prev = b.balance(&[5, 6, 7, 8], 2, &mut s);
+        let plan = b.plan_incremental(&[5, 6, 7, 8], 2, &prev, &mut s);
+        assert_eq!(plan.assignment, prev);
+        assert_eq!(plan.source, PlanSource::Cold);
     }
 }

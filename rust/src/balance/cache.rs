@@ -1,0 +1,270 @@
+//! Sketch-keyed plan cache: recurring batch shapes skip the solve.
+//!
+//! Consecutive training steps draw from the same dataset distribution,
+//! and curriculum/replay pipelines revisit the *same* batch shapes
+//! outright. [`PlanCache`] exploits the second fact: plans are stored
+//! under a quantized length-histogram sketch (log-bucketed counts,
+//! FNV-hashed) and verified against the exact planning input, so a hit
+//! replays an earlier solve **bit-identically** — determinism (§5.2.1:
+//! every DP instance must reach the same plan independently) is
+//! preserved by construction.
+//!
+//! Two-level keying:
+//!
+//! * the **sketch** ([`Sketch`]) is the fast bucket key — a 64-bit FNV
+//!   hash of the log₂-bucketed length histogram plus `n` and `d`. Two
+//!   batches with the same shape land in the same bucket cheaply;
+//! * the **exact key** (a caller-packed `&[u64]` word slice) resolves
+//!   quantization collisions: an entry only hits when its full planning
+//!   input matches word-for-word. Anything less would hand back a plan
+//!   for *different* lengths and silently break the §3.3
+//!   consequence-invariance argument.
+//!
+//! Eviction is least-recently-used over a small fixed capacity, so the
+//! cache holds the working set of recurring shapes and forgets one-off
+//! batches. Capacity 0 disables the cache entirely (every lookup
+//! misses, inserts are dropped).
+
+/// Number of log₂ histogram buckets. Sequence lengths are clamped to
+/// 65 536 by the generator (§2.3 production range), so lengths 1..=2¹⁶
+/// occupy buckets 1..=17; bucket 0 counts zero-length entries and the
+/// last bucket absorbs anything longer.
+pub const SKETCH_BUCKETS: usize = 18;
+
+/// Default capacity for planning caches (per phase and per step).
+pub const DEFAULT_PLAN_CACHE_SIZE: usize = 32;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Word-wise FNV-1a step.
+#[inline]
+fn fnv1a(h: u64, word: u64) -> u64 {
+    (h ^ word).wrapping_mul(FNV_PRIME)
+}
+
+/// The quantized length-histogram sketch: the cache's bucket key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Sketch(pub u64);
+
+impl Sketch {
+    /// Sketch a length slice for a `d`-way planning problem.
+    pub fn of(lens: &[usize], d: usize) -> Sketch {
+        Sketch::of_iter(lens.iter().copied(), d)
+    }
+
+    /// Sketch an arbitrary length stream (used by the step-level cache,
+    /// which sketches derived per-example lengths without staging them).
+    pub fn of_iter(lens: impl Iterator<Item = usize>, d: usize) -> Sketch {
+        let mut hist = [0u32; SKETCH_BUCKETS];
+        let mut n = 0u64;
+        for l in lens {
+            // floor(log2(l)) + 1 for l > 0; bucket 0 for l == 0.
+            let b = (usize::BITS - l.leading_zeros()) as usize;
+            hist[b.min(SKETCH_BUCKETS - 1)] += 1;
+            n += 1;
+        }
+        let mut h = FNV_OFFSET;
+        h = fnv1a(h, d as u64);
+        h = fnv1a(h, n);
+        for &c in &hist {
+            h = fnv1a(h, c as u64);
+        }
+        Sketch(h)
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Entry<V> {
+    sketch: u64,
+    key: Vec<u64>,
+    value: V,
+    /// LRU stamp: monotone access counter.
+    stamp: u64,
+}
+
+/// An LRU plan cache bucketed by [`Sketch`] and verified by an exact
+/// key, generic over the cached plan type (balancer-local assignments
+/// at the phase level, full step plans at the orchestrator level).
+#[derive(Clone, Debug)]
+pub struct PlanCache<V> {
+    entries: Vec<Entry<V>>,
+    capacity: usize,
+    clock: u64,
+    /// Exact hits served.
+    pub hits: u64,
+    /// Lookups that found no exact entry.
+    pub misses: u64,
+}
+
+impl<V: Clone> PlanCache<V> {
+    /// A cache holding at most `capacity` plans (0 = disabled).
+    pub fn new(capacity: usize) -> PlanCache<V> {
+        PlanCache {
+            entries: Vec::with_capacity(capacity.min(64)),
+            capacity,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fraction of lookups served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Exact lookup: sketch bucket first, then word-for-word key
+    /// comparison. A `Some` is a bit-identical replay of the plan an
+    /// earlier identical input produced.
+    pub fn lookup(&mut self, sketch: Sketch, key: &[u64]) -> Option<V> {
+        if self.capacity == 0 {
+            return None;
+        }
+        self.clock += 1;
+        for e in &mut self.entries {
+            if e.sketch == sketch.0 && e.key == key {
+                e.stamp = self.clock;
+                self.hits += 1;
+                return Some(e.value.clone());
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Insert (or refresh) a plan, evicting the least-recently-used
+    /// entry when at capacity.
+    pub fn insert(&mut self, sketch: Sketch, key: &[u64], value: V) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.clock += 1;
+        if let Some(e) = self
+            .entries
+            .iter_mut()
+            .find(|e| e.sketch == sketch.0 && e.key == key)
+        {
+            e.value = value;
+            e.stamp = self.clock;
+            return;
+        }
+        if self.entries.len() >= self.capacity {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(i, _)| i)
+                .expect("non-empty at capacity");
+            self.entries.swap_remove(lru);
+        }
+        self.entries.push(Entry {
+            sketch: sketch.0,
+            key: key.to_vec(),
+            value,
+            stamp: self.clock,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sketch_ignores_order_but_not_shape() {
+        let a = Sketch::of(&[4, 9, 300], 4);
+        let b = Sketch::of(&[300, 4, 9], 4);
+        assert_eq!(a, b, "histogram sketch must be order-invariant");
+        let c = Sketch::of(&[4, 9, 3000], 4);
+        assert_ne!(a, c, "different buckets must change the sketch");
+        let d2 = Sketch::of(&[4, 9, 300], 8);
+        assert_ne!(a, d2, "d is part of the key");
+    }
+
+    #[test]
+    fn sketch_iter_matches_slice() {
+        let lens = vec![1usize, 7, 64, 65_536, 0];
+        assert_eq!(
+            Sketch::of(&lens, 3),
+            Sketch::of_iter(lens.iter().copied(), 3)
+        );
+    }
+
+    #[test]
+    fn hit_requires_exact_key_match() {
+        let mut c: PlanCache<usize> = PlanCache::new(4);
+        let lens_a = [5u64, 6, 7];
+        let lens_b = [5u64, 6, 8]; // same log buckets as a
+        let sk = Sketch::of(&[5, 6, 7], 2);
+        let sk_b = Sketch::of(&[5, 6, 8], 2);
+        assert_eq!(sk, sk_b, "test premise: shapes share a sketch");
+        c.insert(sk, &lens_a, 41);
+        assert_eq!(c.lookup(sk, &lens_a), Some(41));
+        assert_eq!(
+            c.lookup(sk_b, &lens_b),
+            None,
+            "sketch collision must not alias different inputs"
+        );
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_the_stalest_entry() {
+        let mut c: PlanCache<u32> = PlanCache::new(2);
+        let s = |x: u64| Sketch(x);
+        c.insert(s(1), &[1], 10);
+        c.insert(s(2), &[2], 20);
+        assert_eq!(c.lookup(s(1), &[1]), Some(10)); // refresh entry 1
+        c.insert(s(3), &[3], 30); // evicts entry 2
+        assert_eq!(c.lookup(s(2), &[2]), None);
+        assert_eq!(c.lookup(s(1), &[1]), Some(10));
+        assert_eq!(c.lookup(s(3), &[3]), Some(30));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables_the_cache() {
+        let mut c: PlanCache<u32> = PlanCache::new(0);
+        c.insert(Sketch(1), &[1], 1);
+        assert_eq!(c.lookup(Sketch(1), &[1]), None);
+        assert!(c.is_empty());
+        assert_eq!(c.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn reinsert_refreshes_value_in_place() {
+        let mut c: PlanCache<u32> = PlanCache::new(2);
+        c.insert(Sketch(1), &[1], 10);
+        c.insert(Sketch(1), &[1], 11);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.lookup(Sketch(1), &[1]), Some(11));
+    }
+
+    #[test]
+    fn sketch_hash_is_stable_and_input_sensitive() {
+        let a = Sketch::of(&[1, 2, 300], 4);
+        assert_eq!(a, Sketch::of(&[1, 2, 300], 4));
+        assert_ne!(a, Sketch::of(&[1, 2], 4));
+        assert_ne!(a, Sketch::of(&[1, 2, 300, 300], 4));
+    }
+}

@@ -1,0 +1,541 @@
+//! Incremental planning: warm-start from the previous step's
+//! assignment, then bounded local repair.
+//!
+//! Every step currently re-solves the assignment problem from scratch,
+//! yet consecutive mini-batches are drawn from the same length
+//! distribution — the step-to-step locality ROADMAP's top open item
+//! asks the planner to exploit. The warm path transfers the previous
+//! plan's *rank structure*: order both steps' examples by length
+//! (descending, the LPT order), send the current step's rank-r example
+//! to the batch the previous step's rank-r example occupied, then run a
+//! bounded sequence of repair moves (heaviest-to-lightest single-item
+//! migrations, then swaps) until the makespan certifies against a sound
+//! lower bound.
+//!
+//! **Soundness gate.** The warm result is only accepted when its
+//! makespan is within `1 + REPAIR_TOLERANCE` of [`lower_bound`], which
+//! underestimates *every* valid assignment's makespan (and therefore
+//! the from-scratch solve's). Acceptance thus proves
+//!
+//! ```text
+//! makespan(warm) <= (1 + REPAIR_TOLERANCE) * makespan(from-scratch)
+//! ```
+//!
+//! without ever running the from-scratch solve; rejection (or a
+//! diverged batch — different size, empty phase) falls back to the cold
+//! path, where the bound holds trivially. Padded cost regimes have a
+//! loose lower bound (padding waste is invisible to it), so they
+//! certify only on easy batches and otherwise plan cold — the fallback
+//! *is* the correctness story, not a failure mode.
+//!
+//! All of this is deterministic in `(lens, d, prev)`: ranks tie-break
+//! on id, repair scans in index order and accepts only strict
+//! improvements, so every DP instance replays the identical plan
+//! (§5.2.1).
+
+use super::cost::CostModel;
+use super::scratch::PlanScratch;
+use super::types::{Assignment, ExampleRef};
+
+/// Multiplicative makespan tolerance of the warm path: an accepted
+/// warm-started plan is never more than this fraction worse than the
+/// from-scratch solve (documented contract, pinned by
+/// `rust/tests/incremental_properties.rs`).
+pub const REPAIR_TOLERANCE: f64 = 0.05;
+
+/// Maximum repair moves per warm-start before giving up and planning
+/// cold. Bounds the warm path at O(budget · n/d) work past the initial
+/// O(n log n) rank sort.
+pub const REPAIR_MOVE_BUDGET: usize = 64;
+
+/// Relative batch-size change past which the previous assignment is
+/// considered diverged and warm-starting is skipped.
+pub const DIVERGENCE_FRACTION: f64 = 0.25;
+
+/// How a plan was produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanSource {
+    /// From-scratch solve (also the identity/`NoBalance` path).
+    Cold,
+    /// Warm-started from the previous assignment and locally repaired.
+    Warm,
+    /// Replayed bit-identically from a sketch-keyed plan cache.
+    Cached,
+}
+
+/// Result of [`crate::balance::Balancer::plan_incremental`].
+#[derive(Clone, Debug)]
+pub struct IncrementalPlan {
+    pub assignment: Assignment,
+    pub source: PlanSource,
+    /// Repair moves applied (0 on the cold path).
+    pub repair_moves: usize,
+}
+
+/// Aggregate statistics of one mini-batch, sufficient to evaluate every
+/// Eq.-2 cost regime in O(1): `(count, Σl, Σl², max l)`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStat {
+    pub count: usize,
+    pub sum: usize,
+    pub sq: u128,
+    pub max: usize,
+}
+
+impl BatchStat {
+    #[inline]
+    pub fn add(&mut self, len: usize) {
+        self.count += 1;
+        self.sum += len;
+        self.sq += (len as u128) * (len as u128);
+        self.max = self.max.max(len);
+    }
+
+    /// Remove one member of length `len`. `next_max` is the batch's
+    /// maximum after removal *when `len` was the unique maximum* (the
+    /// caller computes it from a top-2 scan); it is ignored otherwise.
+    #[inline]
+    pub fn remove(&mut self, len: usize, next_max: usize) {
+        self.count -= 1;
+        self.sum -= len;
+        self.sq -= (len as u128) * (len as u128);
+        if self.count == 0 {
+            self.max = 0;
+        } else if len >= self.max {
+            self.max = next_max;
+        }
+    }
+
+    /// Evaluate the batch under `cm` — exactly [`CostModel::eval`] on
+    /// the member list, computed from the aggregates.
+    pub fn eval(&self, cm: &CostModel) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let b = self.count as f64;
+        let sum = self.sum as f64;
+        let sq = self.sq as f64;
+        let max = self.max as f64;
+        match *cm {
+            CostModel::Linear { alpha } => alpha * sum,
+            CostModel::TransformerUnpadded { alpha, beta } => {
+                alpha * sum + beta * sq
+            }
+            CostModel::TransformerPadded { alpha, beta } => {
+                alpha * b * max + beta * b * max * max
+            }
+            CostModel::ConvPadded { alpha, lambda } => {
+                alpha * b * max + lambda * b * max * max
+            }
+        }
+    }
+}
+
+/// A lower bound on the makespan of **every** valid assignment of
+/// `lens` over `d` batches under `cm`:
+///
+/// * each of our cost regimes is superadditive over batch members
+///   (`eval(batch) >= Σ eval({member})`), so the total singleton cost
+///   divided by `d` bounds the heaviest batch from below;
+/// * eval is monotone under adding members, so the costliest singleton
+///   bounds whichever batch contains it.
+pub fn lower_bound(cm: &CostModel, lens: &[usize], d: usize) -> f64 {
+    let mut singleton_sum = 0.0f64;
+    let mut singleton_max = 0.0f64;
+    for &l in lens {
+        let mut s = BatchStat::default();
+        s.add(l);
+        let c = s.eval(cm);
+        singleton_sum += c;
+        singleton_max = singleton_max.max(c);
+    }
+    singleton_max.max(singleton_sum / d.max(1) as f64)
+}
+
+/// Makespan of the identity (`NoBalance`) dealing — contiguous chunks,
+/// as [`super::types::identity_with_lens`] produces — without
+/// materializing it.
+pub fn identity_makespan(cm: &CostModel, lens: &[usize], d: usize) -> f64 {
+    if d == 0 {
+        return 0.0;
+    }
+    let n = lens.len();
+    let (base, extra) = (n / d, n % d);
+    let mut worst = 0.0f64;
+    let mut start = 0;
+    for i in 0..d {
+        let b = base + usize::from(i < extra);
+        let mut s = BatchStat::default();
+        for &l in &lens[start..start + b] {
+            s.add(l);
+        }
+        worst = worst.max(s.eval(cm));
+        start += b;
+    }
+    worst
+}
+
+/// `(max, multiplicity of max, second distinct value)` of a batch.
+fn top2(batch: &[ExampleRef]) -> (usize, usize, usize) {
+    let mut m1 = 0usize;
+    let mut c1 = 0usize;
+    let mut m2 = 0usize;
+    for e in batch {
+        if e.len > m1 {
+            m2 = m1;
+            m1 = e.len;
+            c1 = 1;
+        } else if e.len == m1 && m1 > 0 {
+            c1 += 1;
+        } else if e.len > m2 {
+            m2 = e.len;
+        }
+    }
+    (m1, c1, m2)
+}
+
+/// The batch maximum after removing one member of length `len`, given a
+/// top-2 scan `(m1, c1, m2)`.
+#[inline]
+fn max_after_remove(len: usize, m1: usize, c1: usize, m2: usize) -> usize {
+    if len < m1 || c1 > 1 {
+        m1
+    } else {
+        m2
+    }
+}
+
+/// Warm-start `lens` from `prev` and locally repair. Returns the
+/// repaired assignment and the number of moves applied, or `None` when
+/// the batch diverged or repair could not certify the tolerance band
+/// (the caller then plans cold).
+pub fn warm_start(
+    cm: &CostModel,
+    lens: &[usize],
+    d: usize,
+    prev: &Assignment,
+    scratch: &mut PlanScratch,
+) -> Option<(Assignment, usize)> {
+    let n = lens.len();
+    if n == 0 || d == 0 || prev.len() != d {
+        return None;
+    }
+    let prev_n: usize = prev.iter().map(|b| b.len()).sum();
+    if prev_n == 0 {
+        return None;
+    }
+    if n.abs_diff(prev_n) as f64 > DIVERGENCE_FRACTION * prev_n as f64 {
+        return None;
+    }
+
+    // Previous step's rank → batch map, ranks in LPT order.
+    let mut ranked: Vec<(usize, usize, usize)> = Vec::with_capacity(prev_n);
+    for (b, batch) in prev.iter().enumerate() {
+        for e in batch {
+            ranked.push((e.len, e.id, b));
+        }
+    }
+    ranked.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+
+    // Transfer: the current rank-r example goes where the previous
+    // rank-r example went; overflow ranks go to the cheapest batch.
+    scratch.refs_desc(lens);
+    let mut assignment: Assignment = vec![Vec::new(); d];
+    let mut stats: Vec<BatchStat> = vec![BatchStat::default(); d];
+    for (rank, &e) in scratch.refs.iter().enumerate() {
+        let batch = if rank < prev_n {
+            ranked[rank].2
+        } else {
+            let mut best = 0;
+            let mut best_cost = f64::INFINITY;
+            for (i, s) in stats.iter().enumerate() {
+                let c = s.eval(cm);
+                if c < best_cost {
+                    best_cost = c;
+                    best = i;
+                }
+            }
+            best
+        };
+        assignment[batch].push(e);
+        stats[batch].add(e.len);
+    }
+
+    let moves = repair(cm, &mut assignment, &mut stats);
+
+    let makespan = stats.iter().map(|s| s.eval(cm)).fold(0.0, f64::max);
+    let lb = lower_bound(cm, lens, d);
+    if makespan <= lb * (1.0 + REPAIR_TOLERANCE) + 1e-9 {
+        Some((assignment, moves))
+    } else {
+        None
+    }
+}
+
+/// Bounded local repair: move (or swap) items from the costliest batch
+/// toward the cheapest while the pairwise maximum strictly improves.
+fn repair(
+    cm: &CostModel,
+    assignment: &mut Assignment,
+    stats: &mut [BatchStat],
+) -> usize {
+    let d = assignment.len();
+    if d < 2 {
+        return 0;
+    }
+    let mut moves = 0usize;
+    while moves < REPAIR_MOVE_BUDGET {
+        let mut hi = 0;
+        let mut lo = 0;
+        let mut hi_cost = f64::NEG_INFINITY;
+        let mut lo_cost = f64::INFINITY;
+        for (i, s) in stats.iter().enumerate() {
+            let c = s.eval(cm);
+            if c > hi_cost {
+                hi_cost = c;
+                hi = i;
+            }
+            if c < lo_cost {
+                lo_cost = c;
+                lo = i;
+            }
+        }
+        if hi == lo || assignment[hi].is_empty() {
+            break;
+        }
+        let (m1, c1, m2) = top2(&assignment[hi]);
+
+        // Best single-item migration hi → lo.
+        let mut best: Option<(usize, f64)> = None;
+        for (k, e) in assignment[hi].iter().enumerate() {
+            let mut sh = stats[hi];
+            sh.remove(e.len, max_after_remove(e.len, m1, c1, m2));
+            let mut sl = stats[lo];
+            sl.add(e.len);
+            let pair = sh.eval(cm).max(sl.eval(cm));
+            let improves = match best {
+                None => true,
+                Some((_, b)) => pair < b,
+            };
+            if pair + 1e-9 < hi_cost && improves {
+                best = Some((k, pair));
+            }
+        }
+        if let Some((k, _)) = best {
+            let e = assignment[hi].remove(k);
+            stats[hi].remove(e.len, max_after_remove(e.len, m1, c1, m2));
+            stats[lo].add(e.len);
+            assignment[lo].push(e);
+            moves += 1;
+            continue;
+        }
+
+        // No improving migration: best swap hi[k] ↔ lo[j].
+        let (l1, lc1, l2) = top2(&assignment[lo]);
+        let mut best_swap: Option<(usize, usize, f64)> = None;
+        for (k, eh) in assignment[hi].iter().enumerate() {
+            for (j, el) in assignment[lo].iter().enumerate() {
+                if el.len >= eh.len {
+                    continue; // only swaps that lighten hi
+                }
+                let mut sh = stats[hi];
+                sh.remove(eh.len, max_after_remove(eh.len, m1, c1, m2));
+                sh.add(el.len);
+                let mut sl = stats[lo];
+                sl.remove(el.len, max_after_remove(el.len, l1, lc1, l2));
+                sl.add(eh.len);
+                let pair = sh.eval(cm).max(sl.eval(cm));
+                let improves = match best_swap {
+                    None => true,
+                    Some((_, _, b)) => pair < b,
+                };
+                if pair + 1e-9 < hi_cost && improves {
+                    best_swap = Some((k, j, pair));
+                }
+            }
+        }
+        match best_swap {
+            Some((k, j, _)) => {
+                let eh = assignment[hi][k];
+                let el = assignment[lo][j];
+                stats[hi]
+                    .remove(eh.len, max_after_remove(eh.len, m1, c1, m2));
+                stats[hi].add(el.len);
+                stats[lo]
+                    .remove(el.len, max_after_remove(el.len, l1, lc1, l2));
+                stats[lo].add(eh.len);
+                assignment[hi][k] = el;
+                assignment[lo][j] = eh;
+                moves += 1;
+            }
+            None => break,
+        }
+    }
+    moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::greedy::balance_lpt;
+    use crate::balance::types::{
+        assert_valid_assignment, identity_with_lens, make_refs,
+    };
+    use crate::util::prop::check;
+
+    const LIN: CostModel = CostModel::Linear { alpha: 1.0 };
+
+    #[test]
+    fn batch_stat_eval_matches_cost_model_eval() {
+        let batch = make_refs(&[3, 5, 5, 11]);
+        for cm in [
+            CostModel::Linear { alpha: 2.0 },
+            CostModel::TransformerUnpadded { alpha: 1.0, beta: 0.03 },
+            CostModel::TransformerPadded { alpha: 1.0, beta: 0.1 },
+            CostModel::ConvPadded { alpha: 1.0, lambda: 0.01 },
+        ] {
+            let mut s = BatchStat::default();
+            for e in &batch {
+                s.add(e.len);
+            }
+            assert!(
+                (s.eval(&cm) - cm.eval(&batch)).abs() < 1e-9,
+                "{cm:?}: {} vs {}",
+                s.eval(&cm),
+                cm.eval(&batch)
+            );
+        }
+    }
+
+    #[test]
+    fn batch_stat_remove_handles_duplicate_maxima() {
+        let mut s = BatchStat::default();
+        for l in [5, 9, 9, 2] {
+            s.add(l);
+        }
+        // Removing one of the two 9s keeps max 9.
+        s.remove(9, 9);
+        assert_eq!(s.max, 9);
+        assert_eq!(s.sum, 16);
+        // Removing the last 9 drops max to the caller-provided 5.
+        s.remove(9, 5);
+        assert_eq!(s.max, 5);
+        assert_eq!(s.count, 2);
+    }
+
+    #[test]
+    fn lower_bound_is_sound_for_every_regime() {
+        check("lb soundness", 80, |g| {
+            let d = g.usize(1, 8);
+            let n = g.usize(1, 80);
+            let lens = g.seq_lengths(n, 3.2, 1.2);
+            let a = balance_lpt(&lens, d);
+            for cm in [
+                CostModel::Linear { alpha: 1.0 },
+                CostModel::TransformerUnpadded { alpha: 1.0, beta: 0.01 },
+                CostModel::TransformerPadded { alpha: 1.0, beta: 0.0 },
+                CostModel::ConvPadded { alpha: 1.0, lambda: 0.001 },
+            ] {
+                let lb = lower_bound(&cm, &lens, d);
+                assert!(
+                    cm.makespan(&a) >= lb - 1e-9,
+                    "{cm:?}: makespan {} below lower bound {lb}",
+                    cm.makespan(&a)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn identity_makespan_matches_materialized_identity() {
+        check("identity makespan", 60, |g| {
+            let d = g.usize(1, 9);
+            let lens = g.seq_lengths(g.usize(0, 70), 3.0, 1.0);
+            let want = LIN.makespan(&identity_with_lens(&lens, d));
+            let got = identity_makespan(&LIN, &lens, d);
+            assert!((want - got).abs() < 1e-9, "{want} vs {got}");
+        });
+    }
+
+    #[test]
+    fn warm_start_rejects_diverged_batches() {
+        let mut s = PlanScratch::new();
+        let prev = balance_lpt(&[10, 12, 9, 11, 10, 12], 2);
+        // Empty current phase.
+        assert!(warm_start(&LIN, &[], 2, &prev, &mut s).is_none());
+        // Single example vs a 6-example history.
+        assert!(warm_start(&LIN, &[10], 2, &prev, &mut s).is_none());
+        // d mismatch.
+        assert!(warm_start(
+            &LIN,
+            &[10, 11, 12, 9, 10, 12],
+            3,
+            &prev,
+            &mut s
+        )
+        .is_none());
+        // Empty history.
+        assert!(warm_start(
+            &LIN,
+            &[10, 11, 12, 9, 10, 12],
+            2,
+            &vec![Vec::new(); 2],
+            &mut s
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn warm_start_transfers_and_certifies_similar_batches() {
+        check("warm transfer", 60, |g| {
+            let d = g.usize(2, 8);
+            let n = d * g.usize(8, 24);
+            let lens0 = g.seq_lengths(n, 3.5, 0.9);
+            let lens1 = g.seq_lengths(n, 3.5, 0.9);
+            let prev = balance_lpt(&lens0, d);
+            let mut s = PlanScratch::new();
+            if let Some((a, _)) = warm_start(&LIN, &lens1, d, &prev, &mut s)
+            {
+                assert_valid_assignment(&a, n, d);
+                let lb = lower_bound(&LIN, &lens1, d);
+                assert!(
+                    LIN.makespan(&a)
+                        <= lb * (1.0 + REPAIR_TOLERANCE) + 1e-9
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn repair_fixes_a_deliberately_lopsided_warm_seed() {
+        // prev deals everything to batch 0; warm-start inherits the
+        // lopsided shape and repair must redistribute it.
+        let lens: Vec<usize> = vec![10; 40];
+        let prev: Assignment =
+            vec![make_refs(&lens), Vec::new(), Vec::new(), Vec::new()];
+        let mut s = PlanScratch::new();
+        let (a, moves) =
+            warm_start(&LIN, &lens, 4, &prev, &mut s).expect("certifies");
+        assert_valid_assignment(&a, 40, 4);
+        assert!(moves > 0, "repair should have moved items");
+        assert!(LIN.makespan(&a) <= 110.0, "{}", LIN.makespan(&a));
+    }
+
+    #[test]
+    fn warm_start_is_deterministic() {
+        let mut g = crate::util::prop::Gen::new(5);
+        let lens0 = g.seq_lengths(96, 3.4, 1.1);
+        let lens1 = g.seq_lengths(96, 3.4, 1.1);
+        let prev = balance_lpt(&lens0, 6);
+        let a = warm_start(&LIN, &lens1, 6, &prev, &mut PlanScratch::new());
+        let b = warm_start(&LIN, &lens1, 6, &prev, &mut PlanScratch::new());
+        match (a, b) {
+            (Some((x, mx)), Some((y, my))) => {
+                assert_eq!(x, y);
+                assert_eq!(mx, my);
+            }
+            (None, None) => {}
+            _ => panic!("warm_start nondeterministic"),
+        }
+    }
+}

@@ -28,11 +28,21 @@
 //! workspace that keeps repeated planning allocation-free (§6: the
 //! dispatcher computation must stay cheap enough to hide inside the
 //! prefetch overlap).
+//!
+//! Steady-state planning is *incremental* (DESIGN.md §Incremental
+//! Planning): [`incremental`] warm-starts any balancer from the
+//! previous step's assignment and locally repairs it, and [`cache`]
+//! replays bit-identical plans for recurring batch shapes through a
+//! quantized length-histogram sketch — both behind
+//! [`Balancer::plan_incremental`], with a certified fallback to the
+//! from-scratch solve.
 
 pub mod balancer;
+pub mod cache;
 pub mod convpad;
 pub mod cost;
 pub mod greedy;
+pub mod incremental;
 pub mod kk;
 pub mod padded;
 pub mod prebalance;
@@ -41,7 +51,9 @@ pub mod scratch;
 pub mod types;
 
 pub use balancer::{registry, Balancer, CostRegime};
+pub use cache::{PlanCache, Sketch, DEFAULT_PLAN_CACHE_SIZE};
 pub use cost::{CostModel, PhaseCost};
+pub use incremental::{IncrementalPlan, PlanSource, REPAIR_TOLERANCE};
 pub use scratch::PlanScratch;
 pub use types::{Assignment, BatchingMode, ExampleRef};
 

@@ -123,6 +123,13 @@ pub struct TrainRunConfig {
     /// Registry balancer name overriding every phase (None = the
     /// default tailored selection; ignored when `balance` is false).
     pub balancer: Option<String>,
+    /// Planned-but-unconsumed steps the pipeline keeps in flight
+    /// (`--pipeline-depth`; 1 = double buffering, 2–3 absorb planning
+    /// spikes).
+    pub pipeline_depth: usize,
+    /// Capacity of each planning cache in the pipeline's step history
+    /// (`--plan-cache-size`; 0 disables caching).
+    pub plan_cache_size: usize,
 }
 
 impl Default for TrainRunConfig {
@@ -136,6 +143,9 @@ impl Default for TrainRunConfig {
             seed: 0,
             balance: true,
             balancer: None,
+            pipeline_depth: 2,
+            plan_cache_size:
+                crate::balance::cache::DEFAULT_PLAN_CACHE_SIZE,
         }
     }
 }
@@ -159,7 +169,33 @@ impl TrainRunConfig {
             seed: j.get("seed").as_i64().unwrap_or(0) as u64,
             balance: j.get("balance").as_bool().unwrap_or(d.balance),
             balancer: j.get("balancer").as_str().map(str::to_string),
+            pipeline_depth: j
+                .get("pipeline_depth")
+                .as_usize()
+                .unwrap_or(d.pipeline_depth),
+            plan_cache_size: j
+                .get("plan_cache_size")
+                .as_usize()
+                .unwrap_or(d.plan_cache_size),
         }
+    }
+
+    /// The pipeline configuration this run requests.
+    pub fn pipeline_config(
+        &self,
+    ) -> crate::orchestrator::pipeline::PipelineConfig {
+        crate::orchestrator::pipeline::PipelineConfig {
+            depth: self.pipeline_depth,
+            plan_cache_size: self.plan_cache_size,
+        }
+    }
+
+    /// Validate user-supplied knobs (depth bounds, cache size) with a
+    /// printable error.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.pipeline_config()
+            .validate()
+            .map_err(|e| anyhow::anyhow!(e))
     }
 }
 
@@ -208,5 +244,32 @@ mod tests {
         assert_eq!(c.workers, 2);
         assert!(!c.balance);
         assert_eq!(c.lr, 0.1);
+        // New knobs default sensibly and validate.
+        assert_eq!(c.pipeline_depth, 2);
+        assert!(c.plan_cache_size > 0);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn train_config_parses_and_validates_pipeline_knobs() {
+        let j = Json::parse(
+            r#"{"pipeline_depth": 3, "plan_cache_size": 16}"#,
+        )
+        .unwrap();
+        let c = TrainRunConfig::from_json(&j);
+        assert_eq!(c.pipeline_depth, 3);
+        assert_eq!(c.plan_cache_size, 16);
+        assert!(c.validate().is_ok());
+
+        let bad = TrainRunConfig {
+            pipeline_depth: 0,
+            ..TrainRunConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = TrainRunConfig {
+            pipeline_depth: 99,
+            ..TrainRunConfig::default()
+        };
+        assert!(bad.validate().is_err());
     }
 }

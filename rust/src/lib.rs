@@ -10,9 +10,11 @@
 //!   [`balance::Balancer`] trait + registry, the [`comm`] node-wise
 //!   all-to-all communicator, the [`nodewise`] rearrangement ILP, and the
 //!   [`orchestrator`] that wires them into the multimodal training
-//!   workflow — planning phases in parallel on reusable scratch and
-//!   double-buffering steps through the
-//!   [`orchestrator::pipeline::StepPipeline`]. The [`sim`]
+//!   workflow — planning phases in parallel on reusable scratch,
+//!   replanning incrementally from each step's predecessor
+//!   ([`balance::Balancer::plan_incremental`] + the sketch-keyed
+//!   [`balance::cache::PlanCache`]), and deep-buffering steps through
+//!   the [`orchestrator::pipeline::StepPipeline`]. The [`sim`]
 //!   discrete-event cluster simulator regenerates every table and
 //!   figure of the paper's evaluation; the [`trainer`] runs a real
 //!   tiny-MLLM end to end over the [`runtime`] PJRT client.

@@ -35,6 +35,7 @@ USAGE:
   orchmllm train       [--artifacts artifacts/test] [--workers 4]
                        [--mini-batch 4] [--steps 20] [--lr 0.05]
                        [--balancer <name>] [--no-balance]
+                       [--pipeline-depth 2] [--plan-cache-size 32]
   orchmllm balancers                                 # registry listing
   orchmllm help
 ";
@@ -153,6 +154,7 @@ fn cmd_incoherence(args: &Args) {
 }
 
 fn cmd_train(args: &Args) {
+    let defaults = TrainRunConfig::default();
     let cfg = TrainRunConfig {
         artifacts: args.get_or("artifacts", "artifacts/test").to_string(),
         workers: args.usize("workers", 4),
@@ -162,7 +164,15 @@ fn cmd_train(args: &Args) {
         seed: args.u64("seed", 0),
         balance: !args.flag("no-balance"),
         balancer: args.get("balancer").map(str::to_string),
+        pipeline_depth: args
+            .usize("pipeline-depth", defaults.pipeline_depth),
+        plan_cache_size: args
+            .usize("plan-cache-size", defaults.plan_cache_size),
     };
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid train configuration: {e:#}");
+        std::process::exit(2);
+    }
     match trainer::run(&cfg) {
         Ok(summary) => println!("{summary}"),
         Err(e) => {

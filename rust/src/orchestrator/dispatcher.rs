@@ -14,14 +14,19 @@
 //!
 //! Steps 1–3 are "computation" in the paper's taxonomy and run inside
 //! the prefetch overlap; step 4 is the only on-critical-path work. The
-//! hot path is [`Dispatcher::dispatch_with`], which threads a
-//! [`PlanScratch`] so a warmed-up dispatcher performs no allocation in
-//! its sort/heap/volume loops.
+//! hot path is [`Dispatcher::dispatch_incremental`], which threads a
+//! [`PlanScratch`] (no allocation in the sort/heap/volume loops) *and*
+//! a [`PhaseHistory`]: recurring batch shapes replay a cached solve
+//! bit-identically, similar shapes warm-start from the previous step's
+//! assignment, and only diverged batches pay the from-scratch solve
+//! ([`Dispatcher::dispatch_with`], the history-free baseline).
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::balance::balancer::{registry, Balancer};
+use crate::balance::cache::{PlanCache, Sketch, DEFAULT_PLAN_CACHE_SIZE};
+use crate::balance::incremental::PlanSource;
 use crate::balance::scratch::PlanScratch;
 use crate::balance::types::{Assignment, ExampleRef};
 use crate::comm::costmodel::{allgather_cost, alltoall_cost, CollectiveCost};
@@ -30,6 +35,40 @@ use crate::comm::volume::VolumeMatrix;
 use crate::nodewise;
 
 use super::rearrangement::Rearrangement;
+
+/// Per-phase planning history carried across steps: the previous
+/// accepted balancer-local assignment (the warm-start donor) plus the
+/// sketch-keyed solve cache. One per phase — histories, like scratches,
+/// are never shared between the concurrently-planning dispatchers.
+#[derive(Clone, Debug)]
+pub struct PhaseHistory {
+    /// Previous step's balancer-local assignment. Ids index into *that*
+    /// step's active set; only the rank structure is reused, so the two
+    /// steps' id spaces never mix.
+    pub prev_local: Assignment,
+    /// Cache of balancer-local solves keyed by the exact `(d,
+    /// active_lens)` input, bucketed by the quantized histogram sketch.
+    /// Hits are bit-identical replays of an earlier solve.
+    pub cache: PlanCache<Assignment>,
+    /// Reusable exact-key buffer (d ‖ active lens).
+    key_buf: Vec<u64>,
+}
+
+impl PhaseHistory {
+    pub fn new(cache_capacity: usize) -> PhaseHistory {
+        PhaseHistory {
+            prev_local: Vec::new(),
+            cache: PlanCache::new(cache_capacity),
+            key_buf: Vec::new(),
+        }
+    }
+}
+
+impl Default for PhaseHistory {
+    fn default() -> PhaseHistory {
+        PhaseHistory::new(DEFAULT_PLAN_CACHE_SIZE)
+    }
+}
 
 /// Which payload communicator realizes the rearrangement.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,6 +113,11 @@ pub struct DispatchPlan {
     pub peak_bytes: f64,
     /// Dispatcher *computation* time (overlappable, §6).
     pub compute_nanos: u128,
+    /// How the balancer-local solve was produced (identity dispatches
+    /// and history-free calls are `Cold`).
+    pub source: PlanSource,
+    /// Local repair moves applied on the warm path (0 otherwise).
+    pub repair_moves: usize,
 }
 
 impl DispatchPlan {
@@ -129,7 +173,8 @@ impl Dispatcher {
     }
 
     /// Plan this phase's rearrangement, reusing `scratch` buffers — the
-    /// allocation-free hot path the step pipeline runs every iteration.
+    /// allocation-free, history-free hot path (every step plans from
+    /// scratch).
     pub fn dispatch_with(
         &self,
         topo: &Topology,
@@ -137,6 +182,42 @@ impl Dispatcher {
         lens: &[usize],
         payload: &[f64],
         scratch: &mut PlanScratch,
+    ) -> DispatchPlan {
+        self.dispatch_core(topo, placement, lens, payload, scratch, None)
+    }
+
+    /// Plan this phase's rearrangement incrementally: consult the
+    /// sketch-keyed solve cache, warm-start from the previous step's
+    /// assignment, and fall back to the from-scratch solve when the
+    /// batch diverged. `history` carries the cross-step state and is
+    /// updated in place.
+    pub fn dispatch_incremental(
+        &self,
+        topo: &Topology,
+        placement: &[usize],
+        lens: &[usize],
+        payload: &[f64],
+        scratch: &mut PlanScratch,
+        history: &mut PhaseHistory,
+    ) -> DispatchPlan {
+        self.dispatch_core(
+            topo,
+            placement,
+            lens,
+            payload,
+            scratch,
+            Some(history),
+        )
+    }
+
+    fn dispatch_core(
+        &self,
+        topo: &Topology,
+        placement: &[usize],
+        lens: &[usize],
+        payload: &[f64],
+        scratch: &mut PlanScratch,
+        mut history: Option<&mut PhaseHistory>,
     ) -> DispatchPlan {
         let t0 = Instant::now();
         let d = topo.instances;
@@ -157,6 +238,8 @@ impl Dispatcher {
         // Step 2: post-balancing over the active set. The identity
         // balancer keeps the sampled placement (the "OrchMLLM w/o
         // balance" baseline) rather than re-dealing.
+        let mut source = PlanSource::Cold;
+        let mut repair_moves = 0usize;
         let assignment: Assignment = if self.balancer.is_identity() {
             let mut a: Assignment = vec![Vec::new(); d];
             for &g in &scratch.active {
@@ -167,7 +250,57 @@ impl Dispatcher {
             // The balancer receives the whole scratch; temporarily move
             // the lens slice out so the borrows stay disjoint.
             let active_lens = std::mem::take(&mut scratch.active_lens);
-            let mut local = self.balancer.balance(&active_lens, d, scratch);
+            let mut local = match history.as_deref_mut() {
+                Some(h) if h.cache.capacity() > 0 => {
+                    // The solve is a pure function of (active lens, d):
+                    // sketch-bucketed exact lookup first, then
+                    // warm-start, then cold solve.
+                    let sketch = Sketch::of(&active_lens, d);
+                    h.key_buf.clear();
+                    h.key_buf.push(d as u64);
+                    h.key_buf
+                        .extend(active_lens.iter().map(|&l| l as u64));
+                    if let Some(cached) =
+                        h.cache.lookup(sketch, &h.key_buf)
+                    {
+                        source = PlanSource::Cached;
+                        h.prev_local.clone_from(&cached);
+                        cached
+                    } else {
+                        let inc = self.balancer.plan_incremental(
+                            &active_lens,
+                            d,
+                            &h.prev_local,
+                            scratch,
+                        );
+                        source = inc.source;
+                        repair_moves = inc.repair_moves;
+                        h.prev_local.clone_from(&inc.assignment);
+                        h.cache.insert(
+                            sketch,
+                            &h.key_buf,
+                            inc.assignment.clone(),
+                        );
+                        inc.assignment
+                    }
+                }
+                Some(h) => {
+                    // Caching disabled (capacity 0): skip the sketch,
+                    // key build, and insert clone entirely — the warm
+                    // start from the previous assignment still applies.
+                    let inc = self.balancer.plan_incremental(
+                        &active_lens,
+                        d,
+                        &h.prev_local,
+                        scratch,
+                    );
+                    source = inc.source;
+                    repair_moves = inc.repair_moves;
+                    h.prev_local.clone_from(&inc.assignment);
+                    inc.assignment
+                }
+                None => self.balancer.balance(&active_lens, d, scratch),
+            };
             scratch.active_lens = active_lens;
             // Map algorithm-local ids back to global example ids.
             for batch in &mut local {
@@ -255,6 +388,8 @@ impl Dispatcher {
             comm,
             peak_bytes,
             compute_nanos: t0.elapsed().as_nanos(),
+            source,
+            repair_moves,
         }
     }
 }
@@ -377,6 +512,72 @@ mod tests {
             assert_eq!(reused.route, fresh.route);
             assert_eq!(reused.nodewise_perm, fresh.nodewise_perm);
         }
+    }
+
+    #[test]
+    fn incremental_first_call_matches_from_scratch() {
+        // With an empty history the incremental path must plan cold and
+        // agree with the history-free dispatch exactly.
+        let (topo, placement, lens, payload) = setup(8, 12, 8);
+        let dp = disp("greedy", Communicator::AllToAll { nodewise: true });
+        let mut scratch = PlanScratch::new();
+        let mut history = PhaseHistory::new(8);
+        let cold = dp.dispatch_with(
+            &topo, &placement, &lens, &payload, &mut scratch,
+        );
+        let inc = dp.dispatch_incremental(
+            &topo, &placement, &lens, &payload, &mut scratch,
+            &mut history,
+        );
+        assert_eq!(inc.source, crate::balance::PlanSource::Cold);
+        assert_eq!(inc.assignment, cold.assignment);
+        assert_eq!(inc.route, cold.route);
+        assert_eq!(inc.nodewise_perm, cold.nodewise_perm);
+    }
+
+    #[test]
+    fn repeated_dispatch_hits_the_cache_bit_identically() {
+        let (topo, placement, lens, payload) = setup(6, 10, 9);
+        let dp = disp("kk", Communicator::AllToAll { nodewise: true });
+        let mut scratch = PlanScratch::new();
+        let mut history = PhaseHistory::new(8);
+        let first = dp.dispatch_incremental(
+            &topo, &placement, &lens, &payload, &mut scratch,
+            &mut history,
+        );
+        let second = dp.dispatch_incremental(
+            &topo, &placement, &lens, &payload, &mut scratch,
+            &mut history,
+        );
+        assert_eq!(second.source, crate::balance::PlanSource::Cached);
+        assert_eq!(second.assignment, first.assignment);
+        assert_eq!(second.route, first.route);
+        assert_eq!(second.nodewise_perm, first.nodewise_perm);
+        assert_eq!(second.comm, first.comm);
+        assert_eq!(history.cache.hits, 1);
+    }
+
+    #[test]
+    fn warm_dispatch_on_similar_batch_stays_valid() {
+        let (topo, placement, lens, payload) = setup(8, 20, 10);
+        let dp = disp("greedy", Communicator::AllToAll { nodewise: true });
+        let mut scratch = PlanScratch::new();
+        let mut history = PhaseHistory::new(8);
+        dp.dispatch_incremental(
+            &topo, &placement, &lens, &payload, &mut scratch,
+            &mut history,
+        );
+        // Perturb one example's length: same shape, different key.
+        let mut lens2 = lens.clone();
+        lens2[3] += 1;
+        let plan = dp.dispatch_incremental(
+            &topo, &placement, &lens2, &payload, &mut scratch,
+            &mut history,
+        );
+        let assigned: usize =
+            plan.assignment.iter().map(|b| b.len()).sum();
+        assert_eq!(assigned, lens2.len());
+        assert_ne!(plan.source, crate::balance::PlanSource::Cached);
     }
 
     #[test]

@@ -16,7 +16,14 @@
 //!   plan_step_with`] plans them concurrently under
 //!   `std::thread::scope`, each phase on its own [`PlanScratch`] — the
 //!   serial path ([`Orchestrator::plan_step_serial`]) exists as the
-//!   before/after baseline for `benches/table2_overhead`.
+//!   before/after baseline for `benches/table2_overhead`;
+//! * **Incremental rebalancing** — the steady-state path
+//!   ([`Orchestrator::plan_step_incremental`]) threads a
+//!   [`StepHistory`]: each phase warm-starts its solve from the
+//!   previous step's assignment and caches solves under a length-
+//!   histogram sketch, and exactly-recurring steps replay the whole
+//!   [`StepPlan`] from the step-level cache (DESIGN.md §Incremental
+//!   Planning).
 //!
 //! The resulting [`StepPlan`] is consumed by both the discrete-event
 //! simulator (pricing) and the real trainer (execution) — the same plan
@@ -25,6 +32,8 @@
 use std::sync::Arc;
 
 use crate::balance::balancer::{registry, Balancer};
+use crate::balance::cache::{PlanCache, Sketch, DEFAULT_PLAN_CACHE_SIZE};
+use crate::balance::incremental::PlanSource;
 use crate::balance::scratch::PlanScratch;
 use crate::comm::costmodel::{alltoall_cost, CollectiveCost};
 use crate::comm::topology::Topology;
@@ -32,7 +41,9 @@ use crate::comm::volume::VolumeMatrix;
 use crate::data::synth::Example;
 use crate::model::flops::PhaseKind;
 
-use super::dispatcher::{Communicator, DispatchPlan, Dispatcher};
+use super::dispatcher::{
+    Communicator, DispatchPlan, Dispatcher, PhaseHistory,
+};
 use super::rearrangement::Rearrangement;
 
 /// Orchestrator configuration: which phases balance, with what
@@ -148,6 +159,16 @@ pub struct StepPlan {
 }
 
 impl StepPlan {
+    /// How each phase's solve was produced this step
+    /// (vision, audio, llm).
+    pub fn plan_sources(&self) -> [PlanSource; 3] {
+        [
+            self.vision.plan.source,
+            self.audio.plan.source,
+            self.llm.source,
+        ]
+    }
+
     /// Sum of on-critical-path communication seconds.
     pub fn comm_seconds(&self) -> f64 {
         self.vision.plan.comm.seconds
@@ -186,10 +207,70 @@ pub struct StepScratch {
     pub llm: PhaseScratch,
 }
 
+/// Cross-step planning state: each modality phase carries its own
+/// [`PhaseHistory`] (previous assignment + solve cache), and the step
+/// level adds a full-[`StepPlan`] cache so exactly-recurring steps skip
+/// dispatch *and* composition entirely.
+#[derive(Clone, Debug)]
+pub struct StepHistory {
+    pub vision: PhaseHistory,
+    pub audio: PhaseHistory,
+    pub llm: PhaseHistory,
+    /// Full-step plan cache, keyed by the sketch of the interleaved LLM
+    /// lengths and verified against every example's fields + placement.
+    pub step_cache: PlanCache<StepPlan>,
+    /// Reusable exact-key buffer for the step cache.
+    key_buf: Vec<u64>,
+}
+
+impl StepHistory {
+    /// Histories with every cache capped at `plan_cache_size` entries
+    /// (0 disables caching; warm-starting still applies).
+    pub fn new(plan_cache_size: usize) -> StepHistory {
+        StepHistory {
+            vision: PhaseHistory::new(plan_cache_size),
+            audio: PhaseHistory::new(plan_cache_size),
+            llm: PhaseHistory::new(plan_cache_size),
+            step_cache: PlanCache::new(plan_cache_size),
+            key_buf: Vec::new(),
+        }
+    }
+
+    /// Aggregate hit rate across the step cache and the three per-phase
+    /// solve caches.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hits = self.step_cache.hits
+            + self.vision.cache.hits
+            + self.audio.cache.hits
+            + self.llm.cache.hits;
+        let misses = self.step_cache.misses
+            + self.vision.cache.misses
+            + self.audio.cache.misses
+            + self.llm.cache.misses;
+        if hits + misses == 0 {
+            0.0
+        } else {
+            hits as f64 / (hits + misses) as f64
+        }
+    }
+}
+
+impl Default for StepHistory {
+    fn default() -> StepHistory {
+        StepHistory::new(DEFAULT_PLAN_CACHE_SIZE)
+    }
+}
+
 /// Below this many global examples the per-step cost of two scoped
 /// thread spawns exceeds the phase solves being parallelized (tiny
 /// trainer workloads), so planning stays on the calling thread.
 const PARALLEL_MIN_EXAMPLES: usize = 256;
+
+/// Above this many global examples the step-level plan cache is
+/// bypassed: each entry costs an O(n) exact key plus a full `StepPlan`
+/// clone, which non-recurring streams would pay every step for zero
+/// hits (per-phase solve caches and warm-starting still apply).
+const STEP_CACHE_MAX_EXAMPLES: usize = 16_384;
 
 /// The MLLM Global Orchestrator.
 #[derive(Clone, Debug)]
@@ -206,7 +287,7 @@ impl Orchestrator {
     /// mini-batches. Pure computation — no communication happens here.
     /// Convenience wrapper over a fresh scratch; hot callers (the step
     /// pipeline, the simulator loop) should reuse one via
-    /// [`Orchestrator::plan_step_with`].
+    /// [`Orchestrator::plan_step_incremental`].
     pub fn plan_step(
         &self,
         topo: &Topology,
@@ -216,14 +297,29 @@ impl Orchestrator {
     }
 
     /// Plan one step with phase dispatchers running concurrently and
-    /// all hot-loop buffers reused from `scratch`.
+    /// all hot-loop buffers reused from `scratch` — every phase solves
+    /// from scratch (the history-free baseline).
     pub fn plan_step_with(
         &self,
         topo: &Topology,
         minibatches: &[Vec<Example>],
         scratch: &mut StepScratch,
     ) -> StepPlan {
-        self.plan_inner(topo, minibatches, scratch, true)
+        self.plan_inner(topo, minibatches, scratch, true, None)
+    }
+
+    /// The shipped steady-state path: parallel phases on reused scratch
+    /// *plus* cross-step history — recurring steps replay from the plan
+    /// cache, similar steps warm-start from the previous assignment,
+    /// and diverged steps fall back to the from-scratch solve.
+    pub fn plan_step_incremental(
+        &self,
+        topo: &Topology,
+        minibatches: &[Vec<Example>],
+        scratch: &mut StepScratch,
+        history: &mut StepHistory,
+    ) -> StepPlan {
+        self.plan_inner(topo, minibatches, scratch, true, Some(history))
     }
 
     /// The pre-refactor baseline: one phase after another, fresh
@@ -239,6 +335,7 @@ impl Orchestrator {
             minibatches,
             &mut StepScratch::default(),
             false,
+            None,
         )
     }
 
@@ -248,6 +345,7 @@ impl Orchestrator {
         minibatches: &[Vec<Example>],
         scratch: &mut StepScratch,
         parallel: bool,
+        mut history: Option<&mut StepHistory>,
     ) -> StepPlan {
         let t0 = std::time::Instant::now();
         let d = topo.instances;
@@ -260,6 +358,51 @@ impl Orchestrator {
             for &e in mb {
                 examples.push(e);
                 home.push(i);
+            }
+        }
+
+        // Step-level cache: an exactly-recurring step (same examples on
+        // the same homes, same topology) replays the full plan —
+        // dispatch, node-wise permutation, and composition included —
+        // bit-identically. Above STEP_CACHE_MAX_EXAMPLES the cache is
+        // bypassed: a non-recurring large-scale stream would pay an
+        // O(n) key build + plan clone every step for zero hits.
+        let mut step_sketch: Option<Sketch> = None;
+        if let Some(h) = history.as_deref_mut() {
+            if h.step_cache.capacity() > 0
+                && examples.len() <= STEP_CACHE_MAX_EXAMPLES
+            {
+                let sketch =
+                    Sketch::of_iter(examples.iter().map(|e| e.llm_len()), d);
+                h.key_buf.clear();
+                h.key_buf.push(d as u64);
+                // The cached plan embeds topology-dependent routes,
+                // node-wise permutations, and comm prices, so the
+                // topology's identifying parameters are part of the key.
+                h.key_buf.push(topo.per_node as u64);
+                h.key_buf.push(topo.intra_bw.to_bits());
+                h.key_buf.push(topo.inter_bw.to_bits());
+                h.key_buf.push(topo.base_latency.to_bits());
+                for (e, &hm) in examples.iter().zip(home.iter()) {
+                    h.key_buf.push(hm as u64);
+                    h.key_buf.push(e.id as u64);
+                    h.key_buf.push(e.task as u64);
+                    h.key_buf.push(e.vis_len as u64);
+                    h.key_buf.push(e.aud_len as u64);
+                    h.key_buf.push(e.text_len as u64);
+                    h.key_buf.push(e.vis_tokens as u64);
+                    h.key_buf.push(e.aud_tokens as u64);
+                }
+                if let Some(mut plan) =
+                    h.step_cache.lookup(sketch, &h.key_buf)
+                {
+                    plan.vision.plan.source = PlanSource::Cached;
+                    plan.audio.plan.source = PlanSource::Cached;
+                    plan.llm.source = PlanSource::Cached;
+                    plan.compute_nanos = t0.elapsed().as_nanos();
+                    return plan;
+                }
+                step_sketch = Some(sketch);
             }
         }
         let cfg = &self.cfg;
@@ -287,66 +430,47 @@ impl Orchestrator {
         let StepScratch { vision, audio, llm } = scratch;
         let home_ref = &home;
         let parallel = parallel && examples.len() >= PARALLEL_MIN_EXAMPLES;
-        let (vision_plan, audio_plan, llm_plan) = if parallel {
-            // The dispatchers share nothing mutable: each phase plans on
-            // its own scratch. The LLM phase (usually the largest) runs
-            // on the calling thread; encoders on scoped threads.
-            std::thread::scope(|s| {
-                let hv = s.spawn(move || {
-                    vd.dispatch_with(
-                        topo,
-                        home_ref,
-                        &vision.lens,
-                        &vision.payload,
-                        &mut vision.plan,
+        let (vision_plan, audio_plan, llm_plan) = {
+            // Like the scratches, each phase's history is private to its
+            // dispatcher, so the three planning streams stay disjoint.
+            let (vh, ah, lh) = match history.as_deref_mut() {
+                Some(h) => {
+                    let StepHistory {
+                        vision: hist_v,
+                        audio: hist_a,
+                        llm: hist_l,
+                        ..
+                    } = h;
+                    (Some(hist_v), Some(hist_a), Some(hist_l))
+                }
+                None => (None, None, None),
+            };
+            if parallel {
+                // The dispatchers share nothing mutable: each phase
+                // plans on its own scratch + history. The LLM phase
+                // (usually the largest) runs on the calling thread;
+                // encoders on scoped threads.
+                std::thread::scope(|s| {
+                    let hv = s.spawn(move || {
+                        dispatch_phase(&vd, topo, home_ref, vision, vh)
+                    });
+                    let ha = s.spawn(move || {
+                        dispatch_phase(&ad, topo, home_ref, audio, ah)
+                    });
+                    let lp = dispatch_phase(&ld, topo, home_ref, llm, lh);
+                    (
+                        hv.join().expect("vision planner panicked"),
+                        ha.join().expect("audio planner panicked"),
+                        lp,
                     )
-                });
-                let ha = s.spawn(move || {
-                    ad.dispatch_with(
-                        topo,
-                        home_ref,
-                        &audio.lens,
-                        &audio.payload,
-                        &mut audio.plan,
-                    )
-                });
-                let lp = ld.dispatch_with(
-                    topo,
-                    home_ref,
-                    &llm.lens,
-                    &llm.payload,
-                    &mut llm.plan,
-                );
+                })
+            } else {
                 (
-                    hv.join().expect("vision planner panicked"),
-                    ha.join().expect("audio planner panicked"),
-                    lp,
+                    dispatch_phase(&vd, topo, home_ref, vision, vh),
+                    dispatch_phase(&ad, topo, home_ref, audio, ah),
+                    dispatch_phase(&ld, topo, home_ref, llm, lh),
                 )
-            })
-        } else {
-            (
-                vd.dispatch_with(
-                    topo,
-                    home_ref,
-                    &vision.lens,
-                    &vision.payload,
-                    &mut vision.plan,
-                ),
-                ad.dispatch_with(
-                    topo,
-                    home_ref,
-                    &audio.lens,
-                    &audio.payload,
-                    &mut audio.plan,
-                ),
-                ld.dispatch_with(
-                    topo,
-                    home_ref,
-                    &llm.lens,
-                    &llm.payload,
-                    &mut llm.plan,
-                ),
-            )
+            }
         };
 
         // ---- rearrangement composition ---------------------------------
@@ -359,7 +483,7 @@ impl Orchestrator {
             |e| e.aud_tokens,
         );
 
-        StepPlan {
+        let plan = StepPlan {
             d,
             examples,
             home,
@@ -367,7 +491,13 @@ impl Orchestrator {
             audio: EncoderPlan { plan: audio_plan, ..audio },
             llm: llm_plan,
             compute_nanos: t0.elapsed().as_nanos(),
+        };
+        if let (Some(h), Some(sketch)) =
+            (history.as_deref_mut(), step_sketch)
+        {
+            h.step_cache.insert(sketch, &h.key_buf, plan.clone());
         }
+        plan
     }
 
     /// Build the encoder-output route `Π_M ∘ Π_Eₖ⁻¹` (or its two-hop
@@ -423,6 +553,33 @@ impl Orchestrator {
             out_route,
             out_comm,
         }
+    }
+}
+
+/// Dispatch one phase, incrementally when a history stream is present.
+fn dispatch_phase(
+    dispatcher: &Dispatcher,
+    topo: &Topology,
+    home: &[usize],
+    ph: &mut PhaseScratch,
+    history: Option<&mut PhaseHistory>,
+) -> DispatchPlan {
+    match history {
+        Some(h) => dispatcher.dispatch_incremental(
+            topo,
+            home,
+            &ph.lens,
+            &ph.payload,
+            &mut ph.plan,
+            h,
+        ),
+        None => dispatcher.dispatch_with(
+            topo,
+            home,
+            &ph.lens,
+            &ph.payload,
+            &mut ph.plan,
+        ),
     }
 }
 
@@ -552,6 +709,78 @@ mod tests {
                 parallel.vision.out_route,
                 serial.vision.out_route
             );
+        }
+    }
+
+    #[test]
+    fn incremental_first_step_matches_from_scratch() {
+        // Empty history → every phase plans cold → identical to the
+        // history-free path.
+        let topo = Topology::h100(8);
+        let mbs = sample(8, 20, 13);
+        let o = orch(OrchestratorConfig::orchmllm(7168.0));
+        let scratch_plan = o.plan_step(&topo, &mbs);
+        let mut scratch = StepScratch::default();
+        let mut history = StepHistory::new(8);
+        let inc =
+            o.plan_step_incremental(&topo, &mbs, &mut scratch, &mut history);
+        assert_eq!(inc.llm.route, scratch_plan.llm.route);
+        assert_eq!(inc.llm.assignment, scratch_plan.llm.assignment);
+        assert_eq!(
+            inc.vision.plan.assignment,
+            scratch_plan.vision.plan.assignment
+        );
+        assert_eq!(inc.vision.out_route, scratch_plan.vision.out_route);
+    }
+
+    #[test]
+    fn incremental_step_cache_replays_bit_identically() {
+        let topo = Topology::h100(8);
+        let mbs = sample(8, 16, 14);
+        let o = orch(OrchestratorConfig::orchmllm(7168.0));
+        let mut scratch = StepScratch::default();
+        let mut history = StepHistory::new(8);
+        let first =
+            o.plan_step_incremental(&topo, &mbs, &mut scratch, &mut history);
+        let second =
+            o.plan_step_incremental(&topo, &mbs, &mut scratch, &mut history);
+        assert_eq!(
+            second.plan_sources(),
+            [PlanSource::Cached; 3],
+            "recurring step must replay from the step cache"
+        );
+        assert_eq!(second.llm.route, first.llm.route);
+        assert_eq!(second.llm.assignment, first.llm.assignment);
+        assert_eq!(
+            second.vision.plan.assignment,
+            first.vision.plan.assignment
+        );
+        assert_eq!(second.audio.out_route, first.audio.out_route);
+        assert!(history.cache_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn incremental_plans_stay_valid_across_evolving_steps() {
+        let topo = Topology::h100(8);
+        let o = orch(OrchestratorConfig::orchmllm(7168.0));
+        let mut scratch = StepScratch::default();
+        let mut history = StepHistory::default();
+        let mut g = Generator::new(DatasetConfig::default(), 21);
+        for _ in 0..4 {
+            let mbs: Vec<Vec<Example>> =
+                (0..8).map(|_| g.batch(24)).collect();
+            let plan = o.plan_step_incremental(
+                &topo, &mbs, &mut scratch, &mut history,
+            );
+            let n = plan.examples.len();
+            let mut seen = vec![false; n];
+            for batch in plan.assignment(PhaseKind::Llm) {
+                for e in batch {
+                    assert!(!seen[e.id]);
+                    seen[e.id] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "example lost on warm step");
         }
     }
 

@@ -20,7 +20,9 @@ pub mod global;
 pub mod pipeline;
 pub mod rearrangement;
 
-pub use dispatcher::{Communicator, Dispatcher, DispatchPlan};
-pub use global::{Orchestrator, OrchestratorConfig, StepPlan, StepScratch};
-pub use pipeline::{PlannedStep, StepPipeline};
+pub use dispatcher::{Communicator, Dispatcher, DispatchPlan, PhaseHistory};
+pub use global::{
+    Orchestrator, OrchestratorConfig, StepHistory, StepPlan, StepScratch,
+};
+pub use pipeline::{PipelineConfig, PlannedStep, StepPipeline};
 pub use rearrangement::Rearrangement;

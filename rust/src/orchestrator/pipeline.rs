@@ -1,26 +1,79 @@
-//! Double-buffered step planning: the §6 overlap on the execution path.
+//! Deep-buffered step planning: the §6 overlap on the execution path.
 //!
 //! The paper prices dispatcher computation as free because it "overlaps
 //! with the forward pass via prefetch" — this module is where that
 //! actually happens. A [`StepPipeline`] owns a background planning
-//! thread that samples the next step's mini-batches and runs the full
+//! thread that samples the next steps' mini-batches and runs the full
 //! [`Orchestrator`] plan (post-balancing, node-wise rearrangement,
 //! composition) while the caller executes the current step. The channel
 //! is bounded at `depth` planned-but-unconsumed steps (depth 1 =
-//! classic double buffering: plan t+1 while t executes), so planning
-//! can never run unboundedly ahead of the consumer.
+//! classic double buffering; depth 2–3 absorb planning spikes — a cold
+//! solve at d ≥ 1024, an allocator hiccup — without ever stalling the
+//! consumer), so planning can never run unboundedly ahead.
 //!
-//! The planning thread reuses one [`StepScratch`] across steps and
-//! plans the three phases concurrently, so the planning latency that
-//! must hide under one step's compute is the slowest single phase, not
-//! the sum — measured per step in [`PlannedStep::plan_nanos`] and
-//! reported by the trainer and the Table-2 bench.
+//! The planning thread reuses one [`StepScratch`] across steps, plans
+//! the three phases concurrently, and carries a [`StepHistory`] so
+//! steady-state steps go through the incremental path: warm-started
+//! solves and sketch-cache replays instead of from-scratch planning.
+//! Every rank runs an identical pipeline over the identical sampled
+//! stream, and the incremental planner is a deterministic function of
+//! that stream, so all ranks still agree on every plan without
+//! communication (§5.2.1). Per-step planning latency is measured in
+//! [`PlannedStep::plan_nanos`] and reported by the trainer and the
+//! Table-2 bench.
 
+use crate::balance::cache::DEFAULT_PLAN_CACHE_SIZE;
 use crate::comm::topology::Topology;
 use crate::data::loader::Prefetcher;
 use crate::data::synth::{DatasetConfig, Example};
 
-use super::global::{Orchestrator, StepPlan, StepScratch};
+use super::global::{Orchestrator, StepHistory, StepPlan, StepScratch};
+
+/// Upper bound on the pipeline depth: lookahead beyond a few steps only
+/// costs memory (every in-flight step retains its mini-batches + plan).
+pub const MAX_PIPELINE_DEPTH: usize = 8;
+
+/// Lookahead + caching configuration for a [`StepPipeline`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PipelineConfig {
+    /// Planned-but-unconsumed steps in flight (1 = double buffering;
+    /// 2–3 absorb planning spikes at large d).
+    pub depth: usize,
+    /// Capacity of each planning cache — per phase and per step — in
+    /// the pipeline's [`StepHistory`] (0 disables caching; warm-
+    /// starting still applies).
+    pub plan_cache_size: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> PipelineConfig {
+        PipelineConfig {
+            depth: 1,
+            plan_cache_size: DEFAULT_PLAN_CACHE_SIZE,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Validate CLI/config-supplied values, returning a printable error
+    /// instead of clamping silently.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.depth == 0 || self.depth > MAX_PIPELINE_DEPTH {
+            return Err(format!(
+                "pipeline depth must be in 1..={MAX_PIPELINE_DEPTH}, \
+                 got {}",
+                self.depth
+            ));
+        }
+        if self.plan_cache_size > 65_536 {
+            return Err(format!(
+                "plan cache size {} is unreasonably large (max 65536)",
+                self.plan_cache_size
+            ));
+        }
+        Ok(())
+    }
+}
 
 /// One planned step, handed to the executor.
 pub struct PlannedStep {
@@ -39,7 +92,8 @@ pub struct StepPipeline {
 
 impl StepPipeline {
     /// Start planning: `d` instances × `batch_size` examples per step
-    /// for `steps` steps, at most `depth` planned steps in flight.
+    /// for `steps` steps, at most `depth` planned steps in flight
+    /// (caching at the default capacity).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         orch: Orchestrator,
@@ -51,15 +105,51 @@ impl StepPipeline {
         steps: usize,
         depth: usize,
     ) -> StepPipeline {
+        StepPipeline::with_config(
+            orch,
+            topo,
+            data_cfg,
+            seed,
+            d,
+            batch_size,
+            steps,
+            PipelineConfig { depth, ..PipelineConfig::default() },
+        )
+    }
+
+    /// Start planning with an explicit lookahead/caching configuration.
+    /// Out-of-range values are clamped into the documented bounds; use
+    /// [`PipelineConfig::validate`] on user-supplied input first to
+    /// surface an error instead (the CLI/config layers do).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_config(
+        orch: Orchestrator,
+        topo: Topology,
+        data_cfg: DatasetConfig,
+        seed: u64,
+        d: usize,
+        batch_size: usize,
+        steps: usize,
+        config: PipelineConfig,
+    ) -> StepPipeline {
         let mut scratch = StepScratch::default();
+        let mut history =
+            StepHistory::new(config.plan_cache_size.min(65_536));
         let inner = Prefetcher::new(
             data_cfg,
             seed,
             d,
             batch_size,
             steps,
-            depth.max(1),
-            move |mbs| orch.plan_step_with(&topo, mbs, &mut scratch),
+            config.depth.clamp(1, MAX_PIPELINE_DEPTH),
+            move |mbs| {
+                orch.plan_step_incremental(
+                    &topo,
+                    mbs,
+                    &mut scratch,
+                    &mut history,
+                )
+            },
         );
         StepPipeline { inner }
     }
@@ -81,8 +171,12 @@ mod tests {
     use crate::model::flops::PhaseKind;
     use crate::orchestrator::global::OrchestratorConfig;
 
-    fn pipeline(steps: usize, seed: u64) -> StepPipeline {
-        StepPipeline::new(
+    fn pipeline_with(
+        steps: usize,
+        seed: u64,
+        config: PipelineConfig,
+    ) -> StepPipeline {
+        StepPipeline::with_config(
             Orchestrator::new(OrchestratorConfig::orchmllm(7168.0)),
             Topology::h100(4),
             DatasetConfig::tiny(2, 2),
@@ -90,8 +184,12 @@ mod tests {
             4,
             6,
             steps,
-            1,
+            config,
         )
+    }
+
+    fn pipeline(steps: usize, seed: u64) -> StepPipeline {
+        pipeline_with(steps, seed, PipelineConfig::default())
     }
 
     #[test]
@@ -108,14 +206,22 @@ mod tests {
     }
 
     #[test]
-    fn pipelined_plans_match_inline_planning() {
-        // Same seed → the pipeline must produce exactly the plans the
-        // trainer would have computed inline (SPMD determinism).
+    fn pipelined_plans_match_inline_incremental_planning() {
+        // Same seed → the pipeline must produce exactly the plans an
+        // inline incremental planner (same evolving history) would have
+        // computed — the SPMD determinism every rank relies on.
         let p = pipeline(3, 7);
         let orch = Orchestrator::new(OrchestratorConfig::orchmllm(7168.0));
         let topo = Topology::h100(4);
+        let mut scratch = StepScratch::default();
+        let mut history = StepHistory::default();
         while let Some(step) = p.next() {
-            let inline = orch.plan_step(&topo, &step.minibatches);
+            let inline = orch.plan_step_incremental(
+                &topo,
+                &step.minibatches,
+                &mut scratch,
+                &mut history,
+            );
             assert_eq!(step.plan.llm.route, inline.llm.route);
             assert_eq!(
                 step.plan.assignment(PhaseKind::Llm),
@@ -126,8 +232,42 @@ mod tests {
     }
 
     #[test]
+    fn deeper_pipelines_produce_the_same_plans() {
+        // Depth is an execution knob, not an algorithm change: depths 1
+        // and 3 must yield identical plan sequences for the same seed.
+        let shallow = pipeline_with(
+            4,
+            11,
+            PipelineConfig { depth: 1, ..PipelineConfig::default() },
+        );
+        let deep = pipeline_with(
+            4,
+            11,
+            PipelineConfig { depth: 3, ..PipelineConfig::default() },
+        );
+        loop {
+            match (shallow.next(), deep.next()) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.minibatches, b.minibatches);
+                    assert_eq!(a.plan.llm.route, b.plan.llm.route);
+                    assert_eq!(
+                        a.plan.assignment(PhaseKind::Llm),
+                        b.plan.assignment(PhaseKind::Llm)
+                    );
+                }
+                (None, None) => break,
+                _ => panic!("pipelines yielded different step counts"),
+            }
+        }
+    }
+
+    #[test]
     fn early_drop_shuts_down_cleanly() {
-        let p = pipeline(100, 9);
+        let p = pipeline_with(
+            100,
+            9,
+            PipelineConfig { depth: 3, ..PipelineConfig::default() },
+        );
         let _ = p.next();
         drop(p); // must join the planning thread without consuming all
     }
@@ -138,5 +278,20 @@ mod tests {
         let step = p.next().unwrap();
         assert!(step.plan_nanos > 0);
         assert!(step.plan_nanos >= step.plan.compute_nanos);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_depths() {
+        let bad = PipelineConfig { depth: 0, plan_cache_size: 8 };
+        assert!(bad.validate().is_err());
+        let bad = PipelineConfig {
+            depth: MAX_PIPELINE_DEPTH + 1,
+            plan_cache_size: 8,
+        };
+        assert!(bad.validate().is_err());
+        let ok = PipelineConfig { depth: 3, plan_cache_size: 0 };
+        assert!(ok.validate().is_ok());
+        let huge = PipelineConfig { depth: 2, plan_cache_size: 1 << 20 };
+        assert!(huge.validate().is_err());
     }
 }

@@ -15,6 +15,7 @@
 //! staging buffers. OOM ends the run (Fig. 10/12 behaviour).
 
 use crate::balance::balancer::registry;
+use crate::balance::incremental::PlanSource;
 use crate::balance::types::ExampleRef;
 use crate::comm::costmodel::allreduce_cost;
 use crate::comm::topology::Topology;
@@ -22,7 +23,7 @@ use crate::data::synth::{DatasetConfig, Example, Generator};
 use crate::model::config::MllmConfig;
 use crate::model::flops::{PhaseKind, SubmoduleCost};
 use crate::orchestrator::global::{
-    Orchestrator, OrchestratorConfig, StepPlan, StepScratch,
+    Orchestrator, OrchestratorConfig, StepHistory, StepPlan, StepScratch,
 };
 use crate::util::stats::Summary;
 
@@ -280,6 +281,25 @@ pub fn simulate_step_modes(
     }
 }
 
+/// Per-step plan-time distribution and warm/cold breakdown for one run
+/// (§6 telemetry; zeroed for baselines that never run the dispatcher).
+/// Steady-state (t ≥ 2) steps plan warm or cached; only step 1 — or a
+/// diverged batch — pays the cold from-scratch solve.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanTimeStats {
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Mean plan time over steps with at least one warm/cached phase.
+    pub warm_ms: f64,
+    /// Mean plan time over fully cold (from-scratch) steps.
+    pub cold_ms: f64,
+    /// Fraction of phase solves replayed from a sketch cache.
+    pub cache_hit_rate: f64,
+    /// Fraction of phase solves warm-started or cached.
+    pub warm_rate: f64,
+}
+
 /// Aggregate of a simulated multi-step run.
 #[derive(Clone, Debug)]
 pub struct RunSummary {
@@ -301,6 +321,8 @@ pub struct RunSummary {
     /// Percentage of planning time hidden behind phase compute (100 =
     /// fully overlapped, the paper's claim).
     pub plan_overlapped_pct: f64,
+    /// Plan-time percentiles and warm/cold/cached breakdown.
+    pub plan_stats: PlanTimeStats,
     /// Per-dispatcher max-over-instances inter-node bytes (Eq. 5 metric)
     /// for the input rearrangements (Fig.-13), per modality.
     pub inter_node_mb: [f64; 3],
@@ -353,6 +375,7 @@ pub fn simulate_run_named(
     let orch = Orchestrator::new(cfg.clone());
     let mut generator = Generator::new(data_cfg, seed);
     let mut scratch = StepScratch::default();
+    let mut history = StepHistory::default();
 
     let mut mfu = Summary::new();
     let mut tpt = Summary::new();
@@ -361,14 +384,24 @@ pub fn simulate_run_named(
     let mut mem = Summary::new();
     let mut disp_ms = Summary::new();
     let mut plan_ms = Summary::new();
+    let mut warm_plan_ms = Summary::new();
+    let mut cold_plan_ms = Summary::new();
     let mut overlap = Summary::new();
     let mut inter = [Summary::new(), Summary::new(), Summary::new()];
+    let mut phase_solves = 0u64;
+    let mut warm_solves = 0u64;
+    let mut cached_solves = 0u64;
     let mut oom = false;
 
     for _ in 0..steps {
         let minibatches: Vec<Vec<Example>> =
             (0..gpus).map(|_| generator.batch(mini_batch)).collect();
-        let plan = orch.plan_step_with(&topo, &minibatches, &mut scratch);
+        let plan = orch.plan_step_incremental(
+            &topo,
+            &minibatches,
+            &mut scratch,
+            &mut history,
+        );
         let sim = simulate_step_modes(
             model,
             &topo,
@@ -390,6 +423,23 @@ pub fn simulate_run_named(
             sim.comm_secs * 1e3 + 0.5 + sim.dispatcher_secs * 1e3,
         );
         plan_ms.push(sim.plan_secs * 1e3);
+        // Warm-vs-cold planning breakdown: a step is "cold" only when
+        // every phase solved from scratch (step 1, or a diverged
+        // steady-state batch).
+        let sources = plan.plan_sources();
+        for s in sources {
+            phase_solves += 1;
+            match s {
+                PlanSource::Warm => warm_solves += 1,
+                PlanSource::Cached => cached_solves += 1,
+                PlanSource::Cold => {}
+            }
+        }
+        if sources.iter().all(|s| *s == PlanSource::Cold) {
+            cold_plan_ms.push(sim.plan_secs * 1e3);
+        } else {
+            warm_plan_ms.push(sim.plan_secs * 1e3);
+        }
         overlap.push(if sim.plan_secs > 0.0 {
             100.0 * sim.plan_secs.min(sim.compute_secs) / sim.plan_secs
         } else {
@@ -437,6 +487,23 @@ pub fn simulate_run_named(
         dispatcher_overhead_ms: disp_ms.mean(),
         plan_ms: plan_ms.mean(),
         plan_overlapped_pct: overlap.mean(),
+        plan_stats: PlanTimeStats {
+            p50_ms: plan_ms.percentile(50.0),
+            p95_ms: plan_ms.percentile(95.0),
+            p99_ms: plan_ms.percentile(99.0),
+            warm_ms: warm_plan_ms.mean(),
+            cold_ms: cold_plan_ms.mean(),
+            cache_hit_rate: if phase_solves == 0 {
+                0.0
+            } else {
+                cached_solves as f64 / phase_solves as f64
+            },
+            warm_rate: if phase_solves == 0 {
+                0.0
+            } else {
+                (warm_solves + cached_solves) as f64 / phase_solves as f64
+            },
+        },
         inter_node_mb: [inter[0].mean(), inter[1].mean(), inter[2].mean()],
     }
 }
@@ -526,6 +593,21 @@ mod tests {
             "overlap {}%",
             orch.plan_overlapped_pct
         );
+    }
+
+    #[test]
+    fn plan_time_percentiles_are_populated_and_ordered() {
+        let orch = quick(SystemKind::OrchMllm, 32, 30);
+        let ps = orch.plan_stats;
+        assert!(ps.p50_ms > 0.0, "p50 not measured");
+        assert!(ps.p95_ms >= ps.p50_ms);
+        assert!(ps.p99_ms >= ps.p95_ms);
+        // 3 steps × 3 phases were classified somewhere.
+        assert!(ps.warm_rate >= 0.0 && ps.warm_rate <= 1.0);
+        assert!(ps.cache_hit_rate >= 0.0 && ps.cache_hit_rate <= 1.0);
+        // The first step can never be warm: with a single cold step and
+        // random (non-recurring) batches, cold mean is measured.
+        assert!(ps.cold_ms > 0.0, "cold step not classified");
     }
 
     #[test]

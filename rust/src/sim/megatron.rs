@@ -194,6 +194,7 @@ pub fn simulate_megatron(
         dispatcher_overhead_ms: 0.0,
         plan_ms: 0.0,
         plan_overlapped_pct: 100.0,
+        plan_stats: crate::sim::engine::PlanTimeStats::default(),
         inter_node_mb: [0.0; 3],
     }
 }

@@ -63,6 +63,50 @@ pub fn render_overhead(cells: &[RunSummary]) -> String {
         out.push_str(&format!("{:>10.2}", c.plan_ms));
     }
     out.push_str("\n");
+    // Per-step plan-time percentiles + warm/cold split: means hide the
+    // cold-start spike (step 1) and the steady-state warm plateau that
+    // the incremental planner creates.
+    out.push_str(&format!("{:<16}", "Plan p50 (ms)"));
+    for c in cells {
+        out.push_str(&format!("{:>10.2}", c.plan_stats.p50_ms));
+    }
+    out.push_str("\n");
+    out.push_str(&format!("{:<16}", "Plan p95 (ms)"));
+    for c in cells {
+        out.push_str(&format!("{:>10.2}", c.plan_stats.p95_ms));
+    }
+    out.push_str("\n");
+    out.push_str(&format!("{:<16}", "Plan p99 (ms)"));
+    for c in cells {
+        out.push_str(&format!("{:>10.2}", c.plan_stats.p99_ms));
+    }
+    out.push_str("\n");
+    out.push_str(&format!("{:<16}", "Warm plan (ms)"));
+    for c in cells {
+        out.push_str(&format!("{:>10.2}", c.plan_stats.warm_ms));
+    }
+    out.push_str("\n");
+    out.push_str(&format!("{:<16}", "Cold plan (ms)"));
+    for c in cells {
+        out.push_str(&format!("{:>10.2}", c.plan_stats.cold_ms));
+    }
+    out.push_str("\n");
+    out.push_str(&format!("{:<16}", "Warm rate (%)"));
+    for c in cells {
+        out.push_str(&format!(
+            "{:>10.1}",
+            c.plan_stats.warm_rate * 100.0
+        ));
+    }
+    out.push_str("\n");
+    out.push_str(&format!("{:<16}", "Cache hit (%)"));
+    for c in cells {
+        out.push_str(&format!(
+            "{:>10.1}",
+            c.plan_stats.cache_hit_rate * 100.0
+        ));
+    }
+    out.push_str("\n");
     out.push_str(&format!("{:<16}", "Overlapped (%)"));
     for c in cells {
         out.push_str(&format!("{:>10.1}", c.plan_overlapped_pct));
@@ -119,6 +163,9 @@ mod tests {
         assert!(s.contains("OrchMLLM"));
         let s2 = render_overhead(&[a.clone()]);
         assert!(s2.contains("Overhead"));
+        assert!(s2.contains("Plan p99"));
+        assert!(s2.contains("Warm plan"));
+        assert!(s2.contains("Cache hit"));
         let s3 = render_mfu_memory(&[vec![a], vec![b]]);
         assert!(s3.contains("mem GB"));
     }

@@ -134,6 +134,7 @@ fn orchestrator_config(
 
 /// Run a training job, returning the aggregated report.
 pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
+    cfg.validate()?;
     let dir = Path::new(&cfg.artifacts);
     let manifest = Manifest::load(dir).with_context(|| {
         format!(
@@ -166,10 +167,12 @@ pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
                     content,
                     cfg.lr,
                 )?;
-                // Identical stream + deterministic planner on every
-                // rank: the lengths "all-gather". Depth 1 = plan t+1
-                // while t executes.
-                let pipeline = StepPipeline::new(
+                // Identical stream + deterministic incremental planner
+                // on every rank: the lengths "all-gather". Depth and
+                // cache capacity come from --pipeline-depth /
+                // --plan-cache-size (depth 1 = plan t+1 while t
+                // executes; deeper absorbs planning spikes).
+                let pipeline = StepPipeline::with_config(
                     Orchestrator::new(orch_cfg),
                     topo,
                     data_cfg,
@@ -177,7 +180,7 @@ pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
                     cfg.workers,
                     cfg.mini_batch,
                     cfg.steps,
-                    1,
+                    cfg.pipeline_config(),
                 );
                 let mut outcomes = Vec::new();
                 let mut plan_nanos: u128 = 0;

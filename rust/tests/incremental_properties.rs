@@ -1,0 +1,252 @@
+//! Incremental-planning properties, registry-wide: for EVERY registered
+//! balancer, `plan_incremental` must
+//!
+//! 1. produce a valid assignment — every example id exactly once,
+//!    exactly `d` mini-batches — from any history (warm, diverged, or
+//!    empty);
+//! 2. stay within the documented repair tolerance of the from-scratch
+//!    plan: `makespan(incremental) <= makespan(balance) ×
+//!    (1 + REPAIR_TOLERANCE)` under the balancer's own cost model;
+//! 3. never lose to the identity dealing (the `NoBalance` floor — the
+//!    `Guarded` invariant extended to the incremental path);
+//! 4. be a deterministic pure function of `(lens, d, prev)` (§5.2.1);
+//! 5. fall back to the bit-exact from-scratch plan on divergence (empty
+//!    phase, single-example batch, empty history, d mismatch);
+//!
+//! and the sketch-keyed caches must replay plans **bit-identically**:
+//! a cache hit equals the miss that populated it, at the phase level
+//! (dispatcher) and the step level (orchestrator).
+
+use orchmllm::balance::incremental::{PlanSource, REPAIR_TOLERANCE};
+use orchmllm::balance::types::{
+    assert_valid_assignment, identity_with_lens,
+};
+use orchmllm::balance::{registry, PlanScratch};
+use orchmllm::comm::topology::Topology;
+use orchmllm::orchestrator::dispatcher::{
+    Communicator, Dispatcher, PhaseHistory,
+};
+use orchmllm::orchestrator::global::{
+    Orchestrator, OrchestratorConfig, StepHistory, StepScratch,
+};
+use orchmllm::util::prop::{check, Gen};
+use orchmllm::util::rng::Pcg64;
+
+#[test]
+fn every_balancer_warm_plan_is_valid_and_within_tolerance() {
+    check("incremental tolerance", 60, |g| {
+        let d = g.usize(1, 10);
+        let n = g.usize(0, 120);
+        // Two draws from the same distribution: consecutive steps.
+        let lens_prev = g.seq_lengths(n, 3.3, 1.2);
+        let lens_now = g.seq_lengths(n, 3.3, 1.2);
+        let mut scratch = PlanScratch::new();
+        for name in registry::NAMES {
+            let b = registry::must(name);
+            let prev = b.balance(&lens_prev, d, &mut scratch);
+            let inc =
+                b.plan_incremental(&lens_now, d, &prev, &mut scratch);
+            assert_valid_assignment(&inc.assignment, n, d);
+
+            let cm = b.cost_model();
+            let from_scratch = b.balance(&lens_now, d, &mut scratch);
+            assert!(
+                cm.makespan(&inc.assignment)
+                    <= cm.makespan(&from_scratch)
+                        * (1.0 + REPAIR_TOLERANCE)
+                        + 1e-6,
+                "{name}: incremental {} exceeds tolerance over \
+                 from-scratch {}",
+                cm.makespan(&inc.assignment),
+                cm.makespan(&from_scratch)
+            );
+            // The NoBalance floor holds on the incremental path too.
+            let identity = identity_with_lens(&lens_now, d);
+            assert!(
+                cm.makespan(&inc.assignment)
+                    <= cm.makespan(&identity) + 1e-6,
+                "{name}: incremental {} worse than NoBalance {}",
+                cm.makespan(&inc.assignment),
+                cm.makespan(&identity)
+            );
+        }
+    });
+}
+
+#[test]
+fn every_balancer_is_deterministic_incrementally() {
+    check("incremental determinism", 30, |g| {
+        let d = g.usize(1, 8);
+        let n = g.usize(0, 100);
+        let lens_prev = g.seq_lengths(n, 3.2, 1.1);
+        let lens_now = g.seq_lengths(n, 3.2, 1.1);
+        let mut scratch = PlanScratch::new();
+        for name in registry::NAMES {
+            let b = registry::must(name);
+            let prev = b.balance(&lens_prev, d, &mut scratch);
+            let a =
+                b.plan_incremental(&lens_now, d, &prev, &mut scratch);
+            let b2 = b.plan_incremental(
+                &lens_now,
+                d,
+                &prev,
+                &mut PlanScratch::new(),
+            );
+            assert_eq!(
+                a.assignment, b2.assignment,
+                "{name}: incremental plan nondeterministic"
+            );
+            assert_eq!(a.source, b2.source, "{name}: source flapped");
+        }
+    });
+}
+
+#[test]
+fn divergence_falls_back_to_the_bit_exact_cold_plan() {
+    let mut scratch = PlanScratch::new();
+    let mut g = Gen::new(17);
+    let lens_prev = g.seq_lengths(64, 3.4, 1.0);
+    for name in registry::NAMES {
+        let b = registry::must(name);
+        let prev = b.balance(&lens_prev, 4, &mut scratch);
+
+        // Empty phase: nothing to plan, but the result must be valid
+        // and exactly the cold plan.
+        let inc = b.plan_incremental(&[], 4, &prev, &mut scratch);
+        assert_valid_assignment(&inc.assignment, 0, 4);
+        assert_eq!(inc.assignment, b.balance(&[], 4, &mut scratch));
+        assert_eq!(inc.source, PlanSource::Cold, "{name}: empty phase");
+
+        // Single-example batch against a 64-example history: diverged.
+        let inc = b.plan_incremental(&[37], 4, &prev, &mut scratch);
+        assert_valid_assignment(&inc.assignment, 1, 4);
+        assert_eq!(inc.assignment, b.balance(&[37], 4, &mut scratch));
+        assert_eq!(inc.source, PlanSource::Cold, "{name}: single ex");
+
+        // Empty history: the very first step is always cold.
+        let inc = b.plan_incremental(
+            &lens_prev,
+            4,
+            &Vec::new(),
+            &mut scratch,
+        );
+        assert_eq!(
+            inc.assignment,
+            b.balance(&lens_prev, 4, &mut scratch),
+            "{name}: empty history must plan cold"
+        );
+
+        // d changed between steps (elastic resize): diverged.
+        let inc =
+            b.plan_incremental(&lens_prev, 6, &prev, &mut scratch);
+        assert_valid_assignment(&inc.assignment, lens_prev.len(), 6);
+        assert_eq!(
+            inc.assignment,
+            b.balance(&lens_prev, 6, &mut scratch),
+            "{name}: d mismatch must plan cold"
+        );
+    }
+}
+
+fn dispatch_setup(
+    d: usize,
+    n_per: usize,
+    seed: u64,
+) -> (Topology, Vec<usize>, Vec<usize>, Vec<f64>) {
+    let topo = Topology::h100(d);
+    let mut rng = Pcg64::new(seed);
+    let n = d * n_per;
+    let placement: Vec<usize> = (0..n).map(|g| g / n_per).collect();
+    let lens: Vec<usize> = (0..n).map(|_| rng.range(1, 2048)).collect();
+    let payload: Vec<f64> =
+        lens.iter().map(|&l| (l * 4) as f64).collect();
+    (topo, placement, lens, payload)
+}
+
+#[test]
+fn phase_cache_hits_are_bit_identical_for_every_balancer() {
+    let (topo, placement, lens, payload) = dispatch_setup(6, 12, 23);
+    let mut scratch = PlanScratch::new();
+    for name in registry::NAMES {
+        let dp = Dispatcher::by_name(
+            name,
+            Communicator::AllToAll { nodewise: true },
+        )
+        .expect("registered name");
+        let mut history = PhaseHistory::new(8);
+        let miss = dp.dispatch_incremental(
+            &topo, &placement, &lens, &payload, &mut scratch,
+            &mut history,
+        );
+        let hit = dp.dispatch_incremental(
+            &topo, &placement, &lens, &payload, &mut scratch,
+            &mut history,
+        );
+        if dp.balancer.is_identity() {
+            continue; // identity path never consults the cache
+        }
+        assert_eq!(
+            hit.source,
+            PlanSource::Cached,
+            "{name}: second identical dispatch must hit the cache"
+        );
+        assert_eq!(hit.assignment, miss.assignment, "{name}");
+        assert_eq!(hit.route, miss.route, "{name}");
+        assert_eq!(hit.nodewise_perm, miss.nodewise_perm, "{name}");
+        assert_eq!(hit.comm, miss.comm, "{name}");
+    }
+}
+
+#[test]
+fn step_cache_hit_equals_the_plan_that_populated_it() {
+    let topo = Topology::h100(6);
+    let mut g = orchmllm::data::synth::Generator::new(
+        orchmllm::data::synth::DatasetConfig::default(),
+        31,
+    );
+    let mbs: Vec<Vec<orchmllm::data::synth::Example>> =
+        (0..6).map(|_| g.batch(10)).collect();
+    let orch = Orchestrator::new(OrchestratorConfig::orchmllm(7168.0));
+    let mut scratch = StepScratch::default();
+    let mut history = StepHistory::new(8);
+    let miss =
+        orch.plan_step_incremental(&topo, &mbs, &mut scratch, &mut history);
+    let hit =
+        orch.plan_step_incremental(&topo, &mbs, &mut scratch, &mut history);
+    assert_eq!(hit.plan_sources(), [PlanSource::Cached; 3]);
+    assert_eq!(hit.llm.assignment, miss.llm.assignment);
+    assert_eq!(hit.llm.route, miss.llm.route);
+    assert_eq!(hit.vision.plan.assignment, miss.vision.plan.assignment);
+    assert_eq!(hit.vision.out_route, miss.vision.out_route);
+    assert_eq!(hit.audio.out_route, miss.audio.out_route);
+    assert_eq!(hit.examples, miss.examples);
+    assert_eq!(hit.home, miss.home);
+}
+
+#[test]
+fn warm_steps_keep_the_guarded_floor_under_drift() {
+    // Simulate a drifting workload: each step's lengths shift scale a
+    // little. Every step's incremental plan must stay valid and keep
+    // the NoBalance floor, whether it planned warm or cold.
+    let mut scratch = PlanScratch::new();
+    let mut g = Gen::new(41);
+    for name in registry::NAMES {
+        let b = registry::must(name);
+        let cm = b.cost_model();
+        let d = 5;
+        let mut prev = Vec::new();
+        for step in 0..6 {
+            let mu = 3.0 + 0.15 * step as f64;
+            let lens = g.seq_lengths(60, mu, 1.0);
+            let inc = b.plan_incremental(&lens, d, &prev, &mut scratch);
+            assert_valid_assignment(&inc.assignment, lens.len(), d);
+            let identity = identity_with_lens(&lens, d);
+            assert!(
+                cm.makespan(&inc.assignment)
+                    <= cm.makespan(&identity) + 1e-6,
+                "{name} step {step}: floor broken"
+            );
+            prev = inc.assignment;
+        }
+    }
+}

@@ -26,6 +26,7 @@ fn base_cfg() -> TrainRunConfig {
         seed: 7,
         balance: true,
         balancer: None,
+        ..TrainRunConfig::default()
     }
 }
 
