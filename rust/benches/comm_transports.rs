@@ -1,0 +1,282 @@
+//! Transport comparison bench: per-backend All-to-All / All-Gather
+//! latency vs payload size, plus the calibrated α/β each backend fits
+//! (`comm::calibrate`) next to the hard-coded `costmodel` constants
+//! the dispatcher would otherwise assume.
+//!
+//! Expected shape: `inproc` moves ownership, so its latency is flat in
+//! payload size (β saturates the fit cap); `tcp` pays a real bandwidth
+//! term, so its latency grows with size and its fitted β is the
+//! loopback throughput. The gap between fitted and hard-coded
+//! constants is exactly what `--calibrate-comm` closes for the
+//! planner.
+//!
+//! Emits `BENCH_comm_transports.json` so the numbers are tracked
+//! across PRs.
+//!
+//! Run: `cargo bench --bench comm_transports` (`-- --smoke` runs a
+//! tiny shape for CI bit-rot detection, skipping timing assertions).
+
+use std::time::Instant;
+
+use orchmllm::comm::calibrate::{fit_line, Calibration, BETA_CAP};
+use orchmllm::comm::costmodel::pairwise_alltoall_cost;
+use orchmllm::comm::transport::{registry, run_world, Transport};
+use orchmllm::orchestrator::rearrangement::Rearrangement;
+use orchmllm::sim::report;
+use orchmllm::trainer;
+use orchmllm::util::cli::Args;
+use orchmllm::util::json::Json;
+
+struct SizeSample {
+    bytes: usize,
+    a2a_min_us: f64,
+    a2a_mean_us: f64,
+    ag_min_us: f64,
+    ag_mean_us: f64,
+}
+
+fn stats_us(samples: &[f64]) -> (f64, f64) {
+    let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    (min * 1e6, mean * 1e6)
+}
+
+/// One rank's SPMD measurement loop. The All-to-All realizes a shift
+/// rearrangement (every rank ships one payload to its successor) built
+/// through `Rearrangement::sends_from` — the same bridge the trainer
+/// uses between a planned Π and a transport round.
+fn worker_loop(
+    t: Box<dyn Transport>,
+    sizes: &[usize],
+    reps: usize,
+) -> Vec<SizeSample> {
+    let d = t.world_size();
+    let rank = t.rank();
+    let shift = Rearrangement::new(
+        (0..d).collect(),
+        (0..d).map(|g| (g + 1) % d).collect(),
+    );
+    let my_sends = shift.sends_from(rank);
+    let mut out = Vec::new();
+    for &size in sizes {
+        let payload = vec![0x5Au8; size];
+        let mut a2a = Vec::with_capacity(reps);
+        let mut ag = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            // Clones hoisted out of the timed window.
+            let sends: Vec<(usize, Vec<u8>)> = my_sends
+                .iter()
+                .map(|&(_g, dst)| (dst, payload.clone()))
+                .collect();
+            t.barrier().unwrap();
+            let t0 = Instant::now();
+            let recv = t.all_to_all_bytes(sends).unwrap();
+            a2a.push(t0.elapsed().as_secs_f64());
+            assert_eq!(recv.len(), 1, "shift must deliver one payload");
+            assert_eq!(recv[0].1.len(), size);
+
+            let contrib = payload.clone();
+            t.barrier().unwrap();
+            let t0 = Instant::now();
+            let all = t.all_gather_bytes(contrib).unwrap();
+            ag.push(t0.elapsed().as_secs_f64());
+            assert_eq!(all.len(), d);
+        }
+        let (a2a_min_us, a2a_mean_us) = stats_us(&a2a);
+        let (ag_min_us, ag_mean_us) = stats_us(&ag);
+        out.push(SizeSample {
+            bytes: size,
+            a2a_min_us,
+            a2a_mean_us,
+            ag_min_us,
+            ag_mean_us,
+        });
+    }
+    out
+}
+
+fn measure_backend(
+    name: &str,
+    d: usize,
+    sizes: &[usize],
+    reps: usize,
+) -> Vec<SizeSample> {
+    let factory = registry::must(name);
+    let out = run_world(factory.as_ref(), d, |t| worker_loop(t, sizes, reps))
+        .unwrap_or_else(|e| panic!("{name}: bench world failed: {e:#}"));
+    out.into_iter().next().expect("world had at least one rank")
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let d = args.usize("workers", 4);
+    let reps = args.usize("reps", if smoke { 3 } else { 15 }).max(1);
+    let sizes: Vec<usize> = if smoke {
+        vec![1 << 10, 16 << 10]
+    } else {
+        vec![1 << 10, 8 << 10, 64 << 10, 256 << 10, 1 << 20]
+    };
+
+    println!(
+        "== comm transports: d = {d}, {} payload sizes, {reps} reps ==",
+        sizes.len()
+    );
+    let mut backends_json = Vec::new();
+    let mut measured: Vec<(&str, Vec<SizeSample>)> = Vec::new();
+    for name in registry::NAMES {
+        let samples = measure_backend(name, d, &sizes, reps);
+        println!("\n-- {name} --");
+        println!(
+            "{:<12}{:>14}{:>14}{:>14}{:>14}",
+            "bytes", "a2a min us", "a2a mean us", "ag min us", "ag mean us"
+        );
+        for s in &samples {
+            println!(
+                "{:<12}{:>14.1}{:>14.1}{:>14.1}{:>14.1}",
+                s.bytes, s.a2a_min_us, s.a2a_mean_us, s.ag_min_us,
+                s.ag_mean_us
+            );
+        }
+        measured.push((*name, samples));
+    }
+
+    // ---- calibration: fitted α/β vs the hard-coded constants -----------
+    // Fit directly over the per-size minima measured above (the same
+    // estimator `comm::calibrate` uses) instead of paying a second
+    // sweep per backend; `calibrate()` itself is exercised end-to-end
+    // by its unit tests and the `transports --calibrate` CLI.
+    let analytic = trainer::worker_topology(d);
+    let mut calibrations = Vec::new();
+    for (name, samples) in &measured {
+        let a2a_points: Vec<(f64, f64)> = samples
+            .iter()
+            .map(|s| (s.bytes as f64, s.a2a_min_us / 1e6))
+            .collect();
+        let ag_points: Vec<(f64, f64)> = samples
+            .iter()
+            .map(|s| (s.bytes as f64, s.ag_min_us / 1e6))
+            .collect();
+        let cal = Calibration {
+            transport: name.to_string(),
+            d,
+            all_to_all: fit_line(&a2a_points),
+            all_gather: fit_line(&ag_points),
+            all_to_all_points: a2a_points,
+            all_gather_points: ag_points,
+        };
+        print!("{}", report::render_calibration(&cal, &analytic));
+        calibrations.push(cal);
+    }
+
+    // Schedule-aware prediction from the calibrated constants, at the
+    // largest swept payload.
+    let probe_bytes = *sizes.last().unwrap() as f64;
+    for cal in &calibrations {
+        let topo = cal.to_topology(trainer::WORKERS_PER_NODE.min(d));
+        let pred = pairwise_alltoall_cost(&topo, probe_bytes);
+        println!(
+            "{}: pairwise-schedule prediction at {probe_bytes:.0} B: \
+             {:.1} us",
+            cal.transport,
+            pred.seconds * 1e6
+        );
+    }
+
+    // ---- shape checks (full scale only) --------------------------------
+    if !smoke {
+        // TCP must pay a real bandwidth term: the largest payload is
+        // orders of magnitude bigger than the smallest, so even a noisy
+        // run separates the minima.
+        let tcp = measured
+            .iter()
+            .find(|(n, _)| *n == "tcp")
+            .expect("tcp measured");
+        let first = tcp.1.first().unwrap();
+        let last = tcp.1.last().unwrap();
+        assert!(
+            last.a2a_min_us > first.a2a_min_us,
+            "tcp all_to_all at {} B ({:.1} us) not slower than {} B \
+             ({:.1} us)",
+            last.bytes,
+            last.a2a_min_us,
+            first.bytes,
+            first.a2a_min_us
+        );
+        let tcp_cal = calibrations
+            .iter()
+            .find(|c| c.transport == "tcp")
+            .unwrap();
+        // A clamped (degenerate) fit returns exactly BETA_CAP, so the
+        // real check is "the slope was not clamped".
+        assert!(
+            tcp_cal.all_to_all.beta_bytes_per_s < BETA_CAP,
+            "tcp fit produced no bandwidth slope (clamped to cap)"
+        );
+    }
+
+    // ---- JSON emission (tracked across PRs) ----------------------------
+    for ((name, samples), cal) in measured.iter().zip(&calibrations) {
+        let points = Json::arr(samples.iter().map(|s| {
+            Json::obj(vec![
+                ("bytes", Json::num(s.bytes as f64)),
+                ("a2a_min_us", Json::num(s.a2a_min_us)),
+                ("a2a_mean_us", Json::num(s.a2a_mean_us)),
+                ("ag_min_us", Json::num(s.ag_min_us)),
+                ("ag_mean_us", Json::num(s.ag_mean_us)),
+            ])
+        }));
+        backends_json.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("points", points),
+            (
+                "fit",
+                Json::obj(vec![
+                    (
+                        "a2a_alpha_us",
+                        Json::num(cal.all_to_all.alpha_s * 1e6),
+                    ),
+                    (
+                        "a2a_beta_gbps",
+                        Json::num(cal.all_to_all.beta_bytes_per_s / 1e9),
+                    ),
+                    (
+                        "ag_alpha_us",
+                        Json::num(cal.all_gather.alpha_s * 1e6),
+                    ),
+                    (
+                        "ag_beta_gbps",
+                        Json::num(cal.all_gather.beta_bytes_per_s / 1e9),
+                    ),
+                ]),
+            ),
+        ]));
+    }
+    let out = Json::obj(vec![
+        ("bench", Json::str("comm_transports")),
+        ("workers", Json::num(d as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("backends", Json::arr(backends_json.into_iter())),
+        (
+            "costmodel_constants",
+            Json::obj(vec![
+                (
+                    "worker_topology_base_latency_us",
+                    Json::num(analytic.base_latency * 1e6),
+                ),
+                (
+                    "worker_topology_intra_gbps",
+                    Json::num(analytic.intra_bw / 1e9),
+                ),
+                (
+                    "worker_topology_inter_gbps",
+                    Json::num(analytic.inter_bw / 1e9),
+                ),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_comm_transports.json";
+    std::fs::write(path, out.pretty()).expect("write bench json");
+    println!("wrote {path}");
+}

@@ -1,0 +1,273 @@
+//! Transport calibration: measure a live [`Transport`] backend with
+//! synthetic collectives and fit the α/β cost-model line, so the
+//! dispatcher's analytic estimates ([`super::costmodel`]) become
+//! per-backend calibration targets instead of hard-coded constants.
+//!
+//! The α–β model prices one collective as `seconds = α + bytes / β`
+//! (launch latency + bandwidth term) — exactly the shape of the
+//! paper's Eq. 3/4 once the topology constants are substituted. This
+//! module times `all_to_all` / `all_gather` rounds over a sweep of
+//! payload sizes, takes the per-size minimum across repetitions (the
+//! noise-robust estimator of intrinsic cost), and least-squares fits
+//! the line. [`Calibration::to_topology`] then packages the fit as a
+//! [`Topology`] the existing cost functions and the dispatcher consume
+//! unchanged.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::topology::Topology;
+use super::transport::{Transport, TransportFactory};
+
+/// A fitted `seconds = α + bytes / β` line.
+#[derive(Clone, Copy, Debug)]
+pub struct FittedLine {
+    /// Launch latency in seconds (the α of Eq. 3/4).
+    pub alpha_s: f64,
+    /// Effective bandwidth in bytes/second (the β).
+    pub beta_bytes_per_s: f64,
+}
+
+/// Cap applied when the sweep shows no measurable bandwidth term
+/// (payloads too small, or a backend faster than the clock): 1 TB/s.
+/// Public so consumers can tell a real fitted slope from a clamped
+/// degenerate one (`beta_bytes_per_s < BETA_CAP`).
+pub const BETA_CAP: f64 = 1e12;
+
+impl FittedLine {
+    /// Predicted wall-clock for one collective moving `bytes`.
+    pub fn seconds(&self, bytes: f64) -> f64 {
+        self.alpha_s + bytes / self.beta_bytes_per_s
+    }
+}
+
+/// Ordinary least squares over `(bytes, seconds)` samples. Degenerate
+/// sweeps (one point, zero variance, negative slope from noise) clamp
+/// to `β = BETA_CAP` rather than emitting a nonsensical negative
+/// bandwidth; α is clamped non-negative.
+pub fn fit_line(points: &[(f64, f64)]) -> FittedLine {
+    let n = points.len() as f64;
+    if points.is_empty() {
+        return FittedLine { alpha_s: 0.0, beta_bytes_per_s: BETA_CAP };
+    }
+    let mean_x = points.iter().map(|p| p.0).sum::<f64>() / n;
+    let mean_y = points.iter().map(|p| p.1).sum::<f64>() / n;
+    let sxx: f64 =
+        points.iter().map(|p| (p.0 - mean_x).powi(2)).sum();
+    let sxy: f64 = points
+        .iter()
+        .map(|p| (p.0 - mean_x) * (p.1 - mean_y))
+        .sum();
+    let slope = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    // When the slope degenerates (flat sweep or noise-negative), the
+    // clamped slope must also be the one alpha is computed against —
+    // otherwise a raw negative slope inflates the intercept.
+    let (beta, alpha) = if slope > 1.0 / BETA_CAP {
+        (1.0 / slope, (mean_y - slope * mean_x).max(0.0))
+    } else {
+        (BETA_CAP, (mean_y - mean_x / BETA_CAP).max(0.0))
+    };
+    FittedLine { alpha_s: alpha, beta_bytes_per_s: beta }
+}
+
+/// What to measure: payload sizes swept and repetitions per size.
+#[derive(Clone, Debug)]
+pub struct CalibrationSpec {
+    pub payload_sizes: Vec<usize>,
+    pub reps: usize,
+}
+
+impl Default for CalibrationSpec {
+    fn default() -> Self {
+        CalibrationSpec {
+            payload_sizes: vec![1 << 10, 8 << 10, 64 << 10, 256 << 10],
+            reps: 5,
+        }
+    }
+}
+
+impl CalibrationSpec {
+    /// A cheap sweep for startup-time calibration (`--calibrate-comm`).
+    pub fn quick() -> Self {
+        CalibrationSpec {
+            payload_sizes: vec![1 << 10, 16 << 10, 128 << 10],
+            reps: 3,
+        }
+    }
+}
+
+/// Fitted α/β per collective for one backend at one world size.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub transport: String,
+    pub d: usize,
+    pub all_to_all: FittedLine,
+    pub all_gather: FittedLine,
+    /// Raw `(bytes, seconds)` samples behind the fits (per-size minima),
+    /// kept for reporting.
+    pub all_to_all_points: Vec<(f64, f64)>,
+    pub all_gather_points: Vec<(f64, f64)>,
+}
+
+impl Calibration {
+    /// Package the fit as a [`Topology`] for the existing cost models
+    /// and the dispatcher: measured α as the launch latency, measured
+    /// all-to-all β as the link bandwidth. Single-host backends are
+    /// flat, so intra- and inter-node bandwidth coincide.
+    pub fn to_topology(&self, per_node: usize) -> Topology {
+        let alpha =
+            0.5 * (self.all_to_all.alpha_s + self.all_gather.alpha_s);
+        Topology {
+            instances: self.d,
+            per_node: per_node.clamp(1, self.d.max(1)),
+            intra_bw: self.all_to_all.beta_bytes_per_s,
+            inter_bw: self.all_to_all.beta_bytes_per_s,
+            base_latency: alpha,
+        }
+    }
+}
+
+/// One rank's measurement loop (SPMD: every rank runs it; rank 0's
+/// samples are the ones fitted).
+fn measure(
+    t: &dyn Transport,
+    spec: &CalibrationSpec,
+) -> Result<(Vec<(f64, f64)>, Vec<(f64, f64)>)> {
+    let d = t.world_size();
+    let rank = t.rank();
+    let mut a2a = Vec::with_capacity(spec.payload_sizes.len());
+    let mut ag = Vec::with_capacity(spec.payload_sizes.len());
+    for &size in &spec.payload_sizes {
+        let payload = vec![0xA5u8; size];
+        let mut best_a2a = f64::INFINITY;
+        let mut best_ag = f64::INFINITY;
+        for _ in 0..spec.reps.max(1) {
+            // The canonical post-balancing move: each rank ships one
+            // payload to its successor (a shift rearrangement). Clones
+            // happen outside the timed window.
+            let sends = vec![((rank + 1) % d, payload.clone())];
+            t.barrier()?;
+            let t0 = Instant::now();
+            let got = t
+                .all_to_all_bytes(sends)
+                .context("calibration all_to_all")?;
+            best_a2a = best_a2a.min(t0.elapsed().as_secs_f64());
+            if got.len() != 1 || got[0].1.len() != size {
+                return Err(anyhow!(
+                    "calibration all_to_all returned wrong payload"
+                ));
+            }
+            let contrib = payload.clone();
+            t.barrier()?;
+            let t0 = Instant::now();
+            let all = t
+                .all_gather_bytes(contrib)
+                .context("calibration all_gather")?;
+            best_ag = best_ag.min(t0.elapsed().as_secs_f64());
+            if all.len() != d {
+                return Err(anyhow!(
+                    "calibration all_gather returned {} contributions",
+                    all.len()
+                ));
+            }
+        }
+        a2a.push((size as f64, best_a2a));
+        ag.push((size as f64, best_ag));
+    }
+    Ok((a2a, ag))
+}
+
+/// Time synthetic collectives on a freshly connected world of `d`
+/// ranks and fit α/β for each collective. Runs one thread per rank
+/// through [`super::transport::run_world`] (the world is SPMD); rank
+/// 0's timings feed the fit.
+pub fn calibrate(
+    factory: &dyn TransportFactory,
+    d: usize,
+    spec: &CalibrationSpec,
+) -> Result<Calibration> {
+    let name = factory.name().to_string();
+    let results =
+        super::transport::run_world(factory, d, |t| measure(t.as_ref(), spec))
+            .with_context(|| format!("calibrating '{name}' world"))?;
+    let mut rank0: Option<(Vec<(f64, f64)>, Vec<(f64, f64)>)> = None;
+    for (rank, result) in results.into_iter().enumerate() {
+        let samples = result
+            .with_context(|| format!("calibration rank {rank} failed"))?;
+        if rank == 0 {
+            rank0 = Some(samples);
+        }
+    }
+    let (a2a_points, ag_points) =
+        rank0.expect("world had at least one rank");
+    Ok(Calibration {
+        transport: name,
+        d,
+        all_to_all: fit_line(&a2a_points),
+        all_gather: fit_line(&ag_points),
+        all_to_all_points: a2a_points,
+        all_gather_points: ag_points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::registry;
+
+    #[test]
+    fn fit_recovers_exact_line() {
+        // seconds = 10µs + bytes / 1 GB/s.
+        let points: Vec<(f64, f64)> = [1e3, 1e4, 1e5, 1e6]
+            .iter()
+            .map(|&b| (b, 10e-6 + b / 1e9))
+            .collect();
+        let fit = fit_line(&points);
+        assert!((fit.alpha_s - 10e-6).abs() < 1e-9, "{fit:?}");
+        let rel = (fit.beta_bytes_per_s - 1e9).abs() / 1e9;
+        assert!(rel < 1e-6, "{fit:?}");
+        assert!((fit.seconds(1e6) - (10e-6 + 1e-3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_degenerate_sweeps_are_clamped() {
+        let flat = fit_line(&[(1e3, 5e-6), (1e6, 5e-6)]);
+        assert_eq!(flat.beta_bytes_per_s, BETA_CAP);
+        assert!(flat.alpha_s > 0.0);
+        let empty = fit_line(&[]);
+        assert_eq!(empty.alpha_s, 0.0);
+        // Noise-negative slope must not produce negative bandwidth,
+        // and alpha must come from the *clamped* slope — roughly the
+        // mean latency, not the inflated raw-slope intercept (9 µs).
+        let noisy = fit_line(&[(1e3, 9e-6), (1e6, 2e-6)]);
+        assert!(noisy.beta_bytes_per_s > 0.0);
+        assert!(noisy.alpha_s >= 0.0);
+        assert!(
+            (noisy.alpha_s - 5.5e-6).abs() < 1e-6,
+            "alpha {} should track the mean of a degenerate sweep",
+            noisy.alpha_s
+        );
+    }
+
+    #[test]
+    fn calibrates_registered_backends() {
+        let spec = CalibrationSpec {
+            payload_sizes: vec![256, 4096],
+            reps: 2,
+        };
+        for name in registry::NAMES {
+            let factory = registry::must(name);
+            let cal = calibrate(factory.as_ref(), 2, &spec).unwrap();
+            assert_eq!(cal.transport, *name);
+            assert_eq!(cal.d, 2);
+            assert!(cal.all_to_all.alpha_s.is_finite());
+            assert!(cal.all_to_all.beta_bytes_per_s > 0.0);
+            assert_eq!(cal.all_to_all_points.len(), 2);
+            let topo = cal.to_topology(2);
+            assert_eq!(topo.instances, 2);
+            assert!(topo.intra_bw > 0.0);
+            assert!(topo.base_latency >= 0.0);
+        }
+    }
+}

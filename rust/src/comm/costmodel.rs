@@ -84,6 +84,33 @@ pub fn alltoall_cost(
     CollectiveCost { seconds, peak_bytes }
 }
 
+/// Pairwise-exchange All-to-All as the `tcp` loopback transport
+/// schedules it: `d-1` sequential steps, each moving `bytes_per_peer`
+/// to one peer while receiving the same from another (full duplex).
+///
+/// `base_latency` is the *per-collective* launch term (see
+/// [`Topology::base_latency`]) and is charged once — a calibrated
+/// topology ([`crate::comm::calibrate::Calibration::to_topology`])
+/// fits α over whole timed collectives at a fixed `d`, so the per-step
+/// latencies are already folded into it. This is the schedule-aware
+/// prediction the comm bench compares against measured transport
+/// latency.
+pub fn pairwise_alltoall_cost(
+    topo: &Topology,
+    bytes_per_peer: f64,
+) -> CollectiveCost {
+    let d = topo.instances as f64;
+    if d <= 1.0 {
+        return CollectiveCost { seconds: 0.0, peak_bytes: 0.0 };
+    }
+    let bw = topo.min_bw();
+    let seconds = topo.base_latency + (d - 1.0) * bytes_per_peer / bw;
+    CollectiveCost {
+        seconds,
+        peak_bytes: (d - 1.0) * bytes_per_peer,
+    }
+}
+
 /// Ring All-Reduce of `bytes` gradient bytes across `d` instances
 /// (2(d-1)/d · bytes over the slowest link) — used by the simulator to
 /// price the DP gradient synchronization.
@@ -180,5 +207,19 @@ mod tests {
         let t = topo(1);
         assert_eq!(allgather_cost(&t, &[123]).seconds, 0.0);
         assert_eq!(allreduce_cost(&t, 1e9).seconds, 0.0);
+        assert_eq!(pairwise_alltoall_cost(&t, 1e9).seconds, 0.0);
+    }
+
+    #[test]
+    fn pairwise_schedule_scales_with_steps() {
+        let t4 = topo(4);
+        let c4 = pairwise_alltoall_cost(&t4, 1e6);
+        let c8 = pairwise_alltoall_cost(&topo(8), 1e6);
+        // Launch latency charged once; bandwidth term scales with the
+        // (d-1) sequential steps: 4 extra steps of 1 MB each.
+        let extra = c8.seconds - c4.seconds;
+        let want = 4.0 * 1e6 / t4.min_bw();
+        assert!((extra - want).abs() / want < 1e-9, "extra {extra}");
+        assert!(c8.peak_bytes > c4.peak_bytes);
     }
 }

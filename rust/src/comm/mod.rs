@@ -1,18 +1,29 @@
 //! Communication layer: cluster topology, collective cost models
 //! (paper Eq. 3/4/5 and Appendix B), communication-volume accounting,
-//! and a real in-process collective engine used by the [`crate::trainer`].
+//! and the pluggable [`transport`] backends that actually move bytes
+//! for the [`crate::trainer`].
 //!
-//! Two consumers share this module:
+//! Three consumers share this module:
 //! * the **simulator** prices All-Gather / All-to-All operations with the
 //!   analytic models in [`costmodel`];
-//! * the **trainer** actually moves bytes between DP worker threads with
-//!   the engine in [`engine`] — the same dispatch plans drive both.
+//! * the **trainer** moves real bytes between DP workers through a
+//!   [`transport::Transport`] — `inproc` shared-memory channels or
+//!   `tcp` loopback sockets, resolved by name through
+//!   [`transport::registry`] exactly like the balancer registry;
+//! * [`calibrate`] closes the loop between the two: it times synthetic
+//!   collectives on a live transport and fits the α/β line, so the
+//!   analytic models can be fed measured per-backend constants
+//!   ([`calibrate::Calibration::to_topology`]) instead of the
+//!   hard-coded testbed numbers.
 
+pub mod calibrate;
 pub mod costmodel;
-pub mod engine;
 pub mod topology;
+pub mod transport;
 pub mod volume;
 
+pub use calibrate::{calibrate, Calibration, CalibrationSpec, FittedLine};
 pub use costmodel::{allgather_cost, alltoall_cost, CollectiveCost};
 pub use topology::Topology;
+pub use transport::{Transport, TransportExt, TransportFactory, Wire};
 pub use volume::VolumeMatrix;

@@ -1,0 +1,610 @@
+//! Pluggable communication transports — the comm-layer twin of the
+//! [`crate::balance::registry`] extension point.
+//!
+//! The paper's dispatcher assumes a communicator it can retarget: the
+//! All-to-All rearrangement (§4.2) is what makes post-balancing cheap,
+//! so the *substrate* carrying it must be swappable before any
+//! multi-node story exists. This module turns the trainer's hard-wired
+//! in-process engine into an API:
+//!
+//! * [`Transport`] — a rank-scoped handle into one SPMD collective
+//!   group: `all_to_all_bytes`, `all_gather_bytes`, `all_reduce_sum`,
+//!   `barrier`. Object-safe (the trainer holds `Box<dyn Transport>`),
+//!   so the data plane is raw framed bytes; typed payloads ride on top
+//!   via [`Wire`] + [`TransportExt`].
+//! * [`Wire`] — manifest-based encode/decode for payloads that cross
+//!   ranks: every frame starts with a one-byte dtype tag and explicit
+//!   lengths, so a decoder can validate what it received instead of
+//!   trusting the sender. The trainer's batch shards
+//!   (`(example_id, Vec<f32>)` token rows, `(example_id, Vec<i32>)`
+//!   text) implement it here.
+//! * [`TransportFactory`] + [`registry`] — name → backend resolution
+//!   for the `--transport` CLI flag, mirroring the balancer registry:
+//!   `inproc` (shared-memory channels, the NCCL stand-in) and `tcp`
+//!   (loopback sockets with per-peer connections, proving the same
+//!   worker code runs over a real network substrate).
+//!
+//! # SPMD contract (pinned by `rust/tests/transport_conformance.rs`)
+//!
+//! All `d` ranks must issue the *same sequence* of collectives; each
+//! call is one round, and rounds never overlap. Backends must deliver:
+//!
+//! * `all_to_all_bytes`: results sorted by source rank, with each
+//!   source's payloads in its send order; self-sends loop back.
+//! * `all_gather_bytes`: one contribution per rank, returned in rank
+//!   order. A rank that skips a round must fail loudly, never replay a
+//!   stale contribution.
+//! * `all_reduce_sum`: elementwise sum accumulated in **increasing rank
+//!   order** — the fixed reduction order that keeps results bit-stable
+//!   across backends and across repeated runs. The default impl is a
+//!   reduce-scatter + all-gather over the byte collectives: O(n) extra
+//!   memory per rank regardless of `d` (each rank stages one chunk set,
+//!   not `d` full buffers).
+//! * failure semantics: a protocol mismatch (wrong round, wrong op,
+//!   wrong dtype) is an error, not a hang; backends should surface dead
+//!   or stalled peers as errors where the substrate allows it.
+
+pub mod inproc;
+pub mod tcp;
+
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+// ---------------------------------------------------------------------------
+// Wire: manifest-based payload encoding
+// ---------------------------------------------------------------------------
+
+/// Dtype tags opening every [`Wire`] manifest.
+const TAG_F32S: u8 = 1;
+const TAG_I32S: u8 = 2;
+const TAG_ID_F32S: u8 = 3;
+const TAG_ID_I32S: u8 = 4;
+const TAG_U64: u8 = 5;
+const TAG_BYTES: u8 = 6;
+
+/// A payload that can cross rank boundaries: encodes itself with a
+/// self-describing manifest (dtype tag + element counts) so the
+/// receiving side validates shape and dtype before trusting the bytes.
+pub trait Wire: Sized + Send {
+    /// Append the manifest + payload to `out`.
+    fn encode(&self, out: &mut Vec<u8>);
+
+    /// Decode a full buffer produced by [`Wire::encode`].
+    fn decode(bytes: &[u8]) -> Result<Self>;
+
+    /// Convenience: encode into a fresh buffer.
+    fn to_wire(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode(&mut out);
+        out
+    }
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn take_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    let end = *pos + 8;
+    let slice = bytes
+        .get(*pos..end)
+        .ok_or_else(|| anyhow!("wire: truncated u64 at offset {pos}"))?;
+    *pos = end;
+    Ok(u64::from_le_bytes(slice.try_into().unwrap()))
+}
+
+fn take_tag(bytes: &[u8], pos: &mut usize, want: u8) -> Result<()> {
+    let got = *bytes
+        .get(*pos)
+        .ok_or_else(|| anyhow!("wire: empty buffer, wanted tag {want}"))?;
+    if got != want {
+        bail!("wire: dtype tag mismatch (got {got}, wanted {want})");
+    }
+    *pos += 1;
+    Ok(())
+}
+
+/// Encode an `f32` slice as little-endian bytes (no manifest).
+pub fn f32s_to_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Decode little-endian `f32` bytes (no manifest).
+pub fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("wire: f32 buffer length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn put_f32s(out: &mut Vec<u8>, data: &[f32]) {
+    put_u64(out, data.len() as u64);
+    for x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Checked `pos + n * elem_size` — a corrupt or malicious count must
+/// error, not wrap around and alias a differently-shaped payload.
+fn payload_end(pos: usize, n: usize, elem_size: usize) -> Result<usize> {
+    n.checked_mul(elem_size)
+        .and_then(|b| pos.checked_add(b))
+        .ok_or_else(|| anyhow!("wire: implausible element count {n}"))
+}
+
+fn take_f32s(bytes: &[u8], pos: &mut usize) -> Result<Vec<f32>> {
+    let n = take_u64(bytes, pos)? as usize;
+    let end = payload_end(*pos, n, 4)?;
+    let slice = bytes
+        .get(*pos..end)
+        .ok_or_else(|| anyhow!("wire: truncated f32 payload ({n} elems)"))?;
+    *pos = end;
+    bytes_to_f32s(slice)
+}
+
+fn put_i32s(out: &mut Vec<u8>, data: &[i32]) {
+    put_u64(out, data.len() as u64);
+    for x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn take_i32s(bytes: &[u8], pos: &mut usize) -> Result<Vec<i32>> {
+    let n = take_u64(bytes, pos)? as usize;
+    let end = payload_end(*pos, n, 4)?;
+    let slice = bytes
+        .get(*pos..end)
+        .ok_or_else(|| anyhow!("wire: truncated i32 payload ({n} elems)"))?;
+    *pos = end;
+    Ok(slice
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn check_consumed(bytes: &[u8], pos: usize) -> Result<()> {
+    if pos != bytes.len() {
+        bail!(
+            "wire: {} trailing bytes after payload",
+            bytes.len() - pos
+        );
+    }
+    Ok(())
+}
+
+impl Wire for Vec<f32> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(TAG_F32S);
+        put_f32s(out, self);
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut pos = 0;
+        take_tag(bytes, &mut pos, TAG_F32S)?;
+        let v = take_f32s(bytes, &mut pos)?;
+        check_consumed(bytes, pos)?;
+        Ok(v)
+    }
+}
+
+impl Wire for Vec<i32> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(TAG_I32S);
+        put_i32s(out, self);
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut pos = 0;
+        take_tag(bytes, &mut pos, TAG_I32S)?;
+        let v = take_i32s(bytes, &mut pos)?;
+        check_consumed(bytes, pos)?;
+        Ok(v)
+    }
+}
+
+/// The trainer's f32 batch shard: `(global example id, token rows)`.
+impl Wire for (usize, Vec<f32>) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(TAG_ID_F32S);
+        put_u64(out, self.0 as u64);
+        put_f32s(out, &self.1);
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut pos = 0;
+        take_tag(bytes, &mut pos, TAG_ID_F32S)?;
+        let id = take_u64(bytes, &mut pos)? as usize;
+        let v = take_f32s(bytes, &mut pos)?;
+        check_consumed(bytes, pos)?;
+        Ok((id, v))
+    }
+}
+
+/// The trainer's i32 batch shard: `(global example id, text tokens)`.
+impl Wire for (usize, Vec<i32>) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(TAG_ID_I32S);
+        put_u64(out, self.0 as u64);
+        put_i32s(out, &self.1);
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut pos = 0;
+        take_tag(bytes, &mut pos, TAG_ID_I32S)?;
+        let id = take_u64(bytes, &mut pos)? as usize;
+        let v = take_i32s(bytes, &mut pos)?;
+        check_consumed(bytes, pos)?;
+        Ok((id, v))
+    }
+}
+
+impl Wire for u64 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(TAG_U64);
+        put_u64(out, *self);
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut pos = 0;
+        take_tag(bytes, &mut pos, TAG_U64)?;
+        let v = take_u64(bytes, &mut pos)?;
+        check_consumed(bytes, pos)?;
+        Ok(v)
+    }
+}
+
+impl Wire for Vec<u8> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(TAG_BYTES);
+        put_u64(out, self.len() as u64);
+        out.extend_from_slice(self);
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut pos = 0;
+        take_tag(bytes, &mut pos, TAG_BYTES)?;
+        let n = take_u64(bytes, &mut pos)? as usize;
+        let end = payload_end(pos, n, 1)?;
+        let slice = bytes
+            .get(pos..end)
+            .ok_or_else(|| anyhow!("wire: truncated byte payload"))?;
+        let v = slice.to_vec();
+        check_consumed(bytes, end)?;
+        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transport
+// ---------------------------------------------------------------------------
+
+/// A rank-scoped handle into one SPMD collective group.
+///
+/// One `Transport` belongs to exactly one rank; the factory hands out
+/// `d` of them, one per worker. All methods take `&self` so a handle
+/// can sit behind `Box<dyn Transport>` inside a worker without
+/// threading mutability through the training loop.
+pub trait Transport: Send {
+    /// This handle's rank in `0..world_size()`.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks in the group (the paper's `d`).
+    fn world_size(&self) -> usize;
+
+    /// Point-to-point rearrangement round: submit `(dst, payload)`
+    /// pairs, receive the `(src, payload)` pairs addressed to this
+    /// rank, sorted by `src` with each source's payloads in send order.
+    /// Self-sends loop back and cost no wire traffic.
+    fn all_to_all_bytes(
+        &self,
+        sends: Vec<(usize, Vec<u8>)>,
+    ) -> Result<Vec<(usize, Vec<u8>)>>;
+
+    /// Every rank contributes one buffer; all ranks receive all `d`
+    /// buffers in rank order.
+    fn all_gather_bytes(&self, bytes: Vec<u8>) -> Result<Vec<Vec<u8>>>;
+
+    /// Synchronization point with no data.
+    fn barrier(&self) -> Result<()>;
+
+    /// Sum-all-reduce of equally-shaped f32 buffers (gradient sync).
+    ///
+    /// Default: reduce-scatter + all-gather over the byte collectives.
+    /// Each rank owns chunk `r` of the buffer, receives every rank's
+    /// slice of its chunk (an All-to-All of `n/d`-sized pieces), sums
+    /// them in **increasing source-rank order** (the fixed, bit-stable
+    /// reduction order), then all-gathers the reduced chunks. Peak
+    /// extra memory is O(n) per rank — independent of `d`, unlike the
+    /// all-gather-of-full-buffers strawman's O(d·n).
+    fn all_reduce_sum(&self, data: &mut [f32]) -> Result<()> {
+        let d = self.world_size();
+        let rank = self.rank();
+        if d == 1 {
+            return Ok(());
+        }
+        let n = data.len();
+        let bounds = |k: usize| (k * n / d, (k + 1) * n / d);
+
+        // Reduce-scatter: ship slice k of my buffer to chunk owner k.
+        let sends: Vec<(usize, Vec<u8>)> = (0..d)
+            .map(|k| {
+                let (lo, hi) = bounds(k);
+                (k, f32s_to_bytes(&data[lo..hi]))
+            })
+            .collect();
+        let received = self
+            .all_to_all_bytes(sends)
+            .context("all_reduce_sum reduce-scatter")?;
+        let (lo, hi) = bounds(rank);
+        let mut acc = vec![0.0f32; hi - lo];
+        if received.len() != d {
+            bail!(
+                "all_reduce_sum: expected {d} chunk contributions, got {}",
+                received.len()
+            );
+        }
+        for (idx, (src, bytes)) in received.into_iter().enumerate() {
+            if src != idx {
+                bail!(
+                    "all_reduce_sum: contribution {idx} came from rank \
+                     {src}; a peer skipped the round"
+                );
+            }
+            let chunk = bytes_to_f32s(&bytes)?;
+            if chunk.len() != acc.len() {
+                bail!(
+                    "all_reduce_sum: rank {src} sent chunk of {} elems, \
+                     expected {}",
+                    chunk.len(),
+                    acc.len()
+                );
+            }
+            // Fixed reduction order: contributions arrive sorted by
+            // src, so every element sums rank 0, 1, …, d-1.
+            for (a, x) in acc.iter_mut().zip(&chunk) {
+                *a += x;
+            }
+        }
+
+        // All-gather the reduced chunks back into the full buffer.
+        let gathered = self
+            .all_gather_bytes(f32s_to_bytes(&acc))
+            .context("all_reduce_sum all-gather")?;
+        if gathered.len() != d {
+            bail!(
+                "all_reduce_sum: expected {d} reduced chunks, got {}",
+                gathered.len()
+            );
+        }
+        for (k, bytes) in gathered.into_iter().enumerate() {
+            let chunk = bytes_to_f32s(&bytes)?;
+            let (lo, hi) = bounds(k);
+            if chunk.len() != hi - lo {
+                bail!(
+                    "all_reduce_sum: reduced chunk {k} has {} elems, \
+                     expected {}",
+                    chunk.len(),
+                    hi - lo
+                );
+            }
+            data[lo..hi].copy_from_slice(&chunk);
+        }
+        Ok(())
+    }
+}
+
+/// Typed collectives over any [`Transport`]: encode with [`Wire`],
+/// move bytes, decode, preserving the ordering contract.
+pub trait TransportExt: Transport {
+    /// Typed [`Transport::all_to_all_bytes`].
+    fn all_to_all<T: Wire>(
+        &self,
+        sends: Vec<(usize, T)>,
+    ) -> Result<Vec<(usize, T)>> {
+        let raw: Vec<(usize, Vec<u8>)> = sends
+            .into_iter()
+            .map(|(dst, item)| (dst, item.to_wire()))
+            .collect();
+        self.all_to_all_bytes(raw)?
+            .into_iter()
+            .map(|(src, bytes)| {
+                T::decode(&bytes)
+                    .with_context(|| format!("payload from rank {src}"))
+                    .map(|item| (src, item))
+            })
+            .collect()
+    }
+
+    /// Typed [`Transport::all_gather_bytes`].
+    fn all_gather<T: Wire>(&self, item: &T) -> Result<Vec<T>> {
+        self.all_gather_bytes(item.to_wire())?
+            .iter()
+            .enumerate()
+            .map(|(src, bytes)| {
+                T::decode(bytes)
+                    .with_context(|| format!("contribution from rank {src}"))
+            })
+            .collect()
+    }
+}
+
+impl<X: Transport + ?Sized> TransportExt for X {}
+
+// ---------------------------------------------------------------------------
+// Factory + registry
+// ---------------------------------------------------------------------------
+
+/// Builds a fully-connected world of `d` rank-scoped [`Transport`]
+/// handles. Mirrors the balancer registry: resolved by name, described
+/// by metadata the CLI lists.
+pub trait TransportFactory: Send + Sync + fmt::Debug {
+    /// Registry name (also the `--transport` CLI spelling).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for the `transports` CLI listing.
+    fn description(&self) -> &'static str;
+
+    /// Construct the `d` handles, rank `i` at index `i`. The handles
+    /// are live as soon as this returns; dropping all of them tears the
+    /// group down.
+    fn connect(&self, d: usize) -> Result<Vec<Box<dyn Transport>>>;
+}
+
+/// Connect a world of `d` ranks and run `f` on every handle, one
+/// thread per rank, returning the per-rank results in rank order. The
+/// one SPMD world harness shared by calibration, the conformance
+/// suite, the comm bench, and the backend unit tests — a rank that
+/// panics becomes an error, not a poisoned join.
+///
+/// Scoped threads, so `f` may borrow from the caller (no `'static`
+/// bound).
+pub fn run_world<R, F>(
+    factory: &dyn TransportFactory,
+    d: usize,
+    f: F,
+) -> Result<Vec<R>>
+where
+    F: Fn(Box<dyn Transport>) -> R + Send + Sync,
+    R: Send,
+{
+    let handles = factory
+        .connect(d)
+        .with_context(|| format!("connecting '{}' world", factory.name()))?;
+    std::thread::scope(|scope| {
+        let f = &f;
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|t| scope.spawn(move || f(t)))
+            .collect();
+        joins
+            .into_iter()
+            .enumerate()
+            .map(|(rank, join)| {
+                join.join()
+                    .map_err(|_| anyhow!("rank {rank} thread panicked"))
+            })
+            .collect()
+    })
+}
+
+/// Name → implementation resolution for the `--transport` CLI flag,
+/// the conformance suite, and the comm benches.
+pub mod registry {
+    use super::inproc::InProcFactory;
+    use super::tcp::TcpLoopbackFactory;
+    use super::*;
+
+    /// Every registered transport name, in presentation order.
+    pub const NAMES: &[&str] = &["inproc", "tcp"];
+
+    /// Resolve a registered transport backend by name (aliases
+    /// accepted).
+    pub fn create(name: &str) -> Option<Arc<dyn TransportFactory>> {
+        Some(match name {
+            "inproc" | "in-proc" | "threads" => Arc::new(InProcFactory),
+            "tcp" | "tcp-loopback" | "loopback" => {
+                Arc::new(TcpLoopbackFactory::from_env())
+            }
+            _ => return None,
+        })
+    }
+
+    /// Resolve or panic with the list of valid names — for internal
+    /// callers whose names are compile-time constants.
+    pub fn must(name: &str) -> Arc<dyn TransportFactory> {
+        create(name).unwrap_or_else(|| {
+            panic!("unknown transport '{name}' (registered: {NAMES:?})")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_roundtrips_every_payload_kind() {
+        let f: Vec<f32> = vec![1.5, -2.25, 0.0];
+        assert_eq!(Vec::<f32>::decode(&f.to_wire()).unwrap(), f);
+
+        let i: Vec<i32> = vec![-7, 0, 123456];
+        assert_eq!(Vec::<i32>::decode(&i.to_wire()).unwrap(), i);
+
+        let shard: (usize, Vec<f32>) = (42, vec![3.25; 8]);
+        assert_eq!(
+            <(usize, Vec<f32>)>::decode(&shard.to_wire()).unwrap(),
+            shard
+        );
+
+        let text: (usize, Vec<i32>) = (7, vec![1, 2, 3]);
+        assert_eq!(
+            <(usize, Vec<i32>)>::decode(&text.to_wire()).unwrap(),
+            text
+        );
+
+        assert_eq!(u64::decode(&99u64.to_wire()).unwrap(), 99);
+
+        let raw: Vec<u8> = vec![0xde, 0xad];
+        assert_eq!(Vec::<u8>::decode(&raw.to_wire()).unwrap(), raw);
+    }
+
+    #[test]
+    fn wire_rejects_mismatched_manifest() {
+        let f: Vec<f32> = vec![1.0];
+        // Decoding f32 bytes as i32 must fail on the dtype tag.
+        assert!(Vec::<i32>::decode(&f.to_wire()).is_err());
+        // Truncation must fail, not read garbage.
+        let enc = f.to_wire();
+        assert!(Vec::<f32>::decode(&enc[..enc.len() - 1]).is_err());
+        // Trailing bytes must fail.
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert!(Vec::<f32>::decode(&padded).is_err());
+        // Empty buffer.
+        assert!(Vec::<f32>::decode(&[]).is_err());
+        // A tampered manifest whose element count would overflow the
+        // end-offset arithmetic must error, not wrap and alias.
+        let mut evil = vec![TAG_F32S];
+        evil.extend_from_slice(&(1u64 << 62).to_le_bytes());
+        evil.extend_from_slice(&[0u8; 8]);
+        assert!(Vec::<f32>::decode(&evil).is_err());
+        let mut evil_bytes = vec![TAG_BYTES];
+        evil_bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Vec::<u8>::decode(&evil_bytes).is_err());
+    }
+
+    #[test]
+    fn f32_byte_helpers_roundtrip() {
+        let data = vec![1.0f32, f32::MIN_POSITIVE, -0.0, 7e30];
+        let bytes = f32s_to_bytes(&data);
+        assert_eq!(bytes_to_f32s(&bytes).unwrap(), data);
+        assert!(bytes_to_f32s(&bytes[..5]).is_err());
+    }
+
+    #[test]
+    fn registry_resolves_every_listed_name() {
+        for name in registry::NAMES {
+            let f = registry::create(name)
+                .unwrap_or_else(|| panic!("{name} missing from create()"));
+            assert_eq!(f.name(), *name, "name() disagrees with registry key");
+            assert!(!f.description().is_empty());
+        }
+        assert!(registry::create("nccl").is_none());
+    }
+
+    #[test]
+    fn aliases_resolve_to_the_same_backend() {
+        assert_eq!(registry::must("in-proc").name(), "inproc");
+        assert_eq!(registry::must("loopback").name(), "tcp");
+        assert_eq!(registry::must("tcp-loopback").name(), "tcp");
+    }
+}

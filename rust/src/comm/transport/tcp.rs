@@ -1,0 +1,574 @@
+//! TCP loopback transport: the same SPMD worker code over real
+//! sockets — the proof that the [`Transport`] abstraction carries the
+//! trainer, and the template for genuinely multi-node backends.
+//!
+//! # Topology
+//!
+//! `connect(d)` builds a full mesh over `127.0.0.1`: one
+//! `TcpStream` per unordered rank pair, established through per-rank
+//! listeners (ephemeral ports by default; `ORCHMLLM_TCP_BASE_PORT`
+//! pins `base+rank` for sandboxed runners). Each stream opens with an
+//! 8-byte handshake naming the connecting rank, so acceptors bind
+//! streams to peers regardless of arrival order.
+//!
+//! # Framing
+//!
+//! Every collective round moves length-prefixed frames:
+//!
+//! ```text
+//! magic: u32 | op: u8 | round: u64 | count: u64 | count × (len: u64, bytes)
+//! ```
+//!
+//! The `(op, round)` pair is verified on receive, so an SPMD ordering
+//! violation (a rank issuing a different collective sequence) surfaces
+//! as a loud protocol error instead of silently mismatched data.
+//!
+//! # Schedule
+//!
+//! Each collective runs `d-1` pairwise exchange steps: at step `s`,
+//! rank `r` sends to `(r+s) mod d` on a scoped writer thread while
+//! reading from `(r-s) mod d` on the calling thread. Every posted read
+//! has a concurrently posted matching write, so the schedule is
+//! deadlock-free for arbitrary payload sizes without relying on kernel
+//! socket buffering. A peer that dies or stalls trips the per-stream
+//! read timeout (`ORCHMLLM_TCP_TIMEOUT_SECS`, default 30, `0` =
+//! blocking) — failure semantics are "error within the timeout", never
+//! a silent hang.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{Transport, TransportFactory};
+
+const FRAME_MAGIC: u32 = 0x4f43_4d4c; // "OCML"
+const HANDSHAKE_MAGIC: u32 = 0x4f43_4853; // "OCHS"
+
+const OP_ALL_TO_ALL: u8 = 1;
+const OP_ALL_GATHER: u8 = 2;
+const OP_BARRIER: u8 = 3;
+
+/// Sanity bound on a single payload (4 GiB) — corruption guard, not a
+/// capacity target.
+const MAX_PAYLOAD_BYTES: u64 = 1 << 32;
+/// Sanity bound on payload count per frame.
+const MAX_PAYLOAD_COUNT: u64 = 1 << 24;
+
+fn op_name(op: u8) -> &'static str {
+    match op {
+        OP_ALL_TO_ALL => "all_to_all",
+        OP_ALL_GATHER => "all_gather",
+        OP_BARRIER => "barrier",
+        _ => "unknown",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+fn encode_frame(op: u8, round: u64, payloads: &[Vec<u8>]) -> Vec<u8> {
+    let total: usize =
+        21 + payloads.iter().map(|p| 8 + p.len()).sum::<usize>();
+    let mut out = Vec::with_capacity(total);
+    out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    out.push(op);
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&(payloads.len() as u64).to_le_bytes());
+    for p in payloads {
+        out.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+fn write_frame(stream: &TcpStream, frame: &[u8]) -> std::io::Result<()> {
+    let mut w = stream;
+    w.write_all(frame)?;
+    w.flush()
+}
+
+fn read_frame(
+    stream: &TcpStream,
+    want_op: u8,
+    want_round: u64,
+) -> Result<Vec<Vec<u8>>> {
+    let mut r = stream;
+    let mut header = [0u8; 21];
+    r.read_exact(&mut header).with_context(|| {
+        format!(
+            "reading {} frame header (peer dead, or stalled past the \
+             read timeout — SPMD ordering violation?)",
+            op_name(want_op)
+        )
+    })?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    let op = header[4];
+    let round = u64::from_le_bytes(header[5..13].try_into().unwrap());
+    let count = u64::from_le_bytes(header[13..21].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        bail!("tcp transport: bad frame magic {magic:#x} (corrupt stream)");
+    }
+    if op != want_op || round != want_round {
+        bail!(
+            "tcp transport: SPMD ordering violation — expected {} round \
+             {want_round}, peer sent {} round {round}",
+            op_name(want_op),
+            op_name(op)
+        );
+    }
+    if count > MAX_PAYLOAD_COUNT {
+        bail!("tcp transport: implausible payload count {count}");
+    }
+    // Cap the up-front reserve: a corrupt header that sneaks past the
+    // count guard must not trigger a huge allocation before the first
+    // per-payload length read can reject the frame.
+    let mut payloads = Vec::with_capacity(count.min(1024) as usize);
+    for i in 0..count {
+        let mut len_buf = [0u8; 8];
+        r.read_exact(&mut len_buf)
+            .with_context(|| format!("reading payload {i} length"))?;
+        let len = u64::from_le_bytes(len_buf);
+        if len > MAX_PAYLOAD_BYTES {
+            bail!("tcp transport: implausible payload length {len}");
+        }
+        let mut buf = vec![0u8; len as usize];
+        r.read_exact(&mut buf)
+            .with_context(|| format!("reading payload {i} body"))?;
+        payloads.push(buf);
+    }
+    Ok(payloads)
+}
+
+// ---------------------------------------------------------------------------
+// Transport
+// ---------------------------------------------------------------------------
+
+/// One rank's handle into a loopback-TCP collective group.
+pub struct TcpLoopbackTransport {
+    rank: usize,
+    d: usize,
+    /// `peers[p]` is the stream to rank `p`; `None` at `p == rank`.
+    peers: Vec<Option<TcpStream>>,
+    /// Collective round counter; all ranks advance it in lockstep
+    /// because the group is SPMD.
+    round: AtomicU64,
+}
+
+impl TcpLoopbackTransport {
+    fn peer(&self, p: usize) -> Result<&TcpStream> {
+        self.peers[p]
+            .as_ref()
+            .ok_or_else(|| anyhow!("no stream for peer {p}"))
+    }
+
+    /// One pairwise exchange step: write `frame` to `dst` on a scoped
+    /// thread while reading a `(want_op, round)` frame from `src`.
+    /// Takes the frame by reference so callers whose frame is constant
+    /// across steps (all_gather, barrier) encode it once per round.
+    fn exchange(
+        &self,
+        dst: usize,
+        src: usize,
+        frame: &[u8],
+        want_op: u8,
+        round: u64,
+    ) -> Result<Vec<Vec<u8>>> {
+        let dst_stream = self.peer(dst)?;
+        let src_stream = self.peer(src)?;
+        std::thread::scope(|scope| {
+            let writer =
+                scope.spawn(move || write_frame(dst_stream, frame));
+            // Read before joining the writer: the matching write on the
+            // src side is concurrent with this read, and joining first
+            // could close a d>=3 cycle of writers all waiting on
+            // unposted reads.
+            let got = read_frame(src_stream, want_op, round);
+            writer
+                .join()
+                .map_err(|_| anyhow!("tcp writer thread panicked"))?
+                .with_context(|| format!("sending to rank {dst}"))?;
+            got.with_context(|| format!("receiving from rank {src}"))
+        })
+    }
+}
+
+impl Transport for TcpLoopbackTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.d
+    }
+
+    fn all_to_all_bytes(
+        &self,
+        sends: Vec<(usize, Vec<u8>)>,
+    ) -> Result<Vec<(usize, Vec<u8>)>> {
+        let d = self.d;
+        let mut per_dst: Vec<Vec<Vec<u8>>> = vec![Vec::new(); d];
+        for (dst, payload) in sends {
+            if dst >= d {
+                // Error before any traffic or round advance, so an
+                // SPMD-consistent bad call leaves the group aligned.
+                bail!("all_to_all: dst {dst} out of range (d = {d})");
+            }
+            per_dst[dst].push(payload);
+        }
+        let round = self.round.fetch_add(1, Ordering::Relaxed);
+        let mut per_src: Vec<Vec<Vec<u8>>> = vec![Vec::new(); d];
+        per_src[self.rank] = std::mem::take(&mut per_dst[self.rank]);
+        for s in 1..d {
+            let dst = (self.rank + s) % d;
+            let src = (self.rank + d - s) % d;
+            let frame = encode_frame(OP_ALL_TO_ALL, round, &per_dst[dst]);
+            per_src[src] =
+                self.exchange(dst, src, &frame, OP_ALL_TO_ALL, round)?;
+        }
+        let mut out = Vec::new();
+        for (src, payloads) in per_src.into_iter().enumerate() {
+            for p in payloads {
+                out.push((src, p));
+            }
+        }
+        Ok(out)
+    }
+
+    fn all_gather_bytes(&self, bytes: Vec<u8>) -> Result<Vec<Vec<u8>>> {
+        let d = self.d;
+        let round = self.round.fetch_add(1, Ordering::Relaxed);
+        let mut slots: Vec<Option<Vec<u8>>> = vec![None; d];
+        // The contribution is identical on every step: encode it once.
+        let frame = encode_frame(
+            OP_ALL_GATHER,
+            round,
+            std::slice::from_ref(&bytes),
+        );
+        for s in 1..d {
+            let dst = (self.rank + s) % d;
+            let src = (self.rank + d - s) % d;
+            let mut got =
+                self.exchange(dst, src, &frame, OP_ALL_GATHER, round)?;
+            if got.len() != 1 {
+                bail!(
+                    "all_gather: rank {src} sent {} contributions, \
+                     expected exactly 1",
+                    got.len()
+                );
+            }
+            slots[src] = Some(got.pop().unwrap());
+        }
+        slots[self.rank] = Some(bytes);
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(src, s)| {
+                s.ok_or_else(|| {
+                    anyhow!("all_gather: missing contribution from {src}")
+                })
+            })
+            .collect()
+    }
+
+    fn barrier(&self) -> Result<()> {
+        let d = self.d;
+        let round = self.round.fetch_add(1, Ordering::Relaxed);
+        let frame = encode_frame(OP_BARRIER, round, &[]);
+        for s in 1..d {
+            let dst = (self.rank + s) % d;
+            let src = (self.rank + d - s) % d;
+            let got = self.exchange(dst, src, &frame, OP_BARRIER, round)?;
+            if !got.is_empty() {
+                bail!("barrier: rank {src} attached {} payloads", got.len());
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Factory
+// ---------------------------------------------------------------------------
+
+/// Factory for the `tcp` backend (loopback full mesh).
+#[derive(Clone, Copy, Debug)]
+pub struct TcpLoopbackFactory {
+    /// First listener port; rank `r` listens on `base_port + r`.
+    /// `0` = ephemeral ports (the default — always safe in parallel
+    /// test runs).
+    pub base_port: u16,
+    /// Per-stream read timeout; `None` blocks forever.
+    pub timeout: Option<Duration>,
+}
+
+impl Default for TcpLoopbackFactory {
+    fn default() -> Self {
+        TcpLoopbackFactory {
+            base_port: 0,
+            timeout: Some(Duration::from_secs(30)),
+        }
+    }
+}
+
+impl TcpLoopbackFactory {
+    /// Construct from the environment:
+    /// `ORCHMLLM_TCP_BASE_PORT` (default 0 = ephemeral) and
+    /// `ORCHMLLM_TCP_TIMEOUT_SECS` (default 30; 0 = no timeout).
+    /// Unparsable values warn loudly before falling back — a silently
+    /// ignored port override would defeat the pinning it exists for.
+    pub fn from_env() -> Self {
+        fn parsed<T: std::str::FromStr>(var: &str) -> Option<T> {
+            let raw = std::env::var(var).ok()?;
+            match raw.trim().parse::<T>() {
+                Ok(v) => Some(v),
+                Err(_) => {
+                    eprintln!(
+                        "warning: ignoring unparsable {var}='{raw}', \
+                         using the default"
+                    );
+                    None
+                }
+            }
+        }
+        let base_port = parsed::<u16>("ORCHMLLM_TCP_BASE_PORT").unwrap_or(0);
+        let timeout = match parsed::<u64>("ORCHMLLM_TCP_TIMEOUT_SECS") {
+            Some(0) => None,
+            Some(secs) => Some(Duration::from_secs(secs)),
+            None => Some(Duration::from_secs(30)),
+        };
+        TcpLoopbackFactory { base_port, timeout }
+    }
+}
+
+impl TransportFactory for TcpLoopbackFactory {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn description(&self) -> &'static str {
+        "loopback TCP full mesh, length-prefixed frames per peer pair"
+    }
+
+    fn connect(&self, d: usize) -> Result<Vec<Box<dyn Transport>>> {
+        if d == 0 {
+            bail!("transport world size must be >= 1");
+        }
+        // The single-threaded dial-then-accept handshake parks up to
+        // d-1 completed connections in each listener's accept queue,
+        // which is only safe under the kernel's 128-entry backlog.
+        if d > 128 {
+            bail!(
+                "tcp loopback mesh supports at most 128 ranks (got {d}); \
+                 larger worlds need a multi-process backend with \
+                 concurrent rendezvous"
+            );
+        }
+        // Bind every rank's listener up front so addresses are known
+        // before any connect.
+        let mut listeners = Vec::with_capacity(d);
+        let mut addrs: Vec<SocketAddr> = Vec::with_capacity(d);
+        for rank in 0..d {
+            let port = if self.base_port == 0 {
+                0
+            } else {
+                self.base_port.checked_add(rank as u16).ok_or_else(
+                    || anyhow!("ORCHMLLM_TCP_BASE_PORT + {rank} overflows"),
+                )?
+            };
+            let listener = TcpListener::bind(("127.0.0.1", port))
+                .with_context(|| {
+                    format!("binding listener for rank {rank} (port {port})")
+                })?;
+            addrs.push(listener.local_addr()?);
+            listeners.push(listener);
+        }
+
+        // Full mesh: rank i dials rank j for every i < j. Loopback
+        // connects complete against the listener backlog, so dialing
+        // and accepting can run sequentially on this one thread.
+        let mut streams: Vec<Vec<Option<TcpStream>>> = (0..d)
+            .map(|_| (0..d).map(|_| None).collect())
+            .collect();
+        for j in 0..d {
+            for i in 0..j {
+                let stream =
+                    TcpStream::connect(addrs[j]).with_context(|| {
+                        format!("rank {i} dialing rank {j} at {}", addrs[j])
+                    })?;
+                let mut hello = [0u8; 8];
+                hello[0..4]
+                    .copy_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
+                hello[4..8].copy_from_slice(&(i as u32).to_le_bytes());
+                (&stream)
+                    .write_all(&hello)
+                    .with_context(|| format!("handshake {i} -> {j}"))?;
+                streams[i][j] = Some(stream);
+            }
+        }
+        for (j, listener) in listeners.iter().enumerate() {
+            for _ in 0..j {
+                let (stream, _) = listener
+                    .accept()
+                    .with_context(|| format!("rank {j} accepting a peer"))?;
+                let mut hello = [0u8; 8];
+                (&stream)
+                    .read_exact(&mut hello)
+                    .context("reading handshake")?;
+                let magic =
+                    u32::from_le_bytes(hello[0..4].try_into().unwrap());
+                let peer =
+                    u32::from_le_bytes(hello[4..8].try_into().unwrap())
+                        as usize;
+                if magic != HANDSHAKE_MAGIC {
+                    bail!("bad handshake magic {magic:#x} on rank {j}");
+                }
+                if peer >= j || streams[j][peer].is_some() {
+                    bail!("duplicate or out-of-order handshake from {peer}");
+                }
+                streams[j][peer] = Some(stream);
+            }
+        }
+
+        // Tune every stream: no Nagle batching (collectives are
+        // latency-bound), bounded reads AND writes (a stalled peer
+        // also backs up the sender once the kernel buffer fills, so
+        // both directions must error within the timeout).
+        for row in &streams {
+            for stream in row.iter().flatten() {
+                stream.set_nodelay(true).context("set_nodelay")?;
+                stream
+                    .set_read_timeout(self.timeout)
+                    .context("set_read_timeout")?;
+                stream
+                    .set_write_timeout(self.timeout)
+                    .context("set_write_timeout")?;
+            }
+        }
+
+        Ok(streams
+            .into_iter()
+            .enumerate()
+            .map(|(rank, peers)| {
+                Box::new(TcpLoopbackTransport {
+                    rank,
+                    d,
+                    peers,
+                    round: AtomicU64::new(0),
+                }) as Box<dyn Transport>
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_world<R, F>(d: usize, f: F) -> Vec<R>
+    where
+        F: Fn(Box<dyn Transport>) -> R + Send + Sync,
+        R: Send,
+    {
+        crate::comm::transport::run_world(
+            &TcpLoopbackFactory::default(),
+            d,
+            f,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let payloads = vec![vec![1u8, 2, 3], vec![], vec![9u8; 100]];
+        let frame = encode_frame(OP_ALL_TO_ALL, 7, &payloads);
+        // Loop the frame through a real socket pair.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let tx = TcpStream::connect(addr).unwrap();
+        let (rx, _) = listener.accept().unwrap();
+        write_frame(&tx, &frame).unwrap();
+        let got = read_frame(&rx, OP_ALL_TO_ALL, 7).unwrap();
+        assert_eq!(got, payloads);
+        // Round/op mismatches are loud.
+        write_frame(&tx, &frame).unwrap();
+        let err = read_frame(&rx, OP_ALL_GATHER, 7).unwrap_err();
+        assert!(err.to_string().contains("SPMD"), "{err}");
+    }
+
+    #[test]
+    fn mesh_routes_all_collectives() {
+        let d = 3;
+        let out = run_world(d, move |t| {
+            let rank = t.rank();
+            assert_eq!(t.world_size(), d);
+            // all_to_all: everyone sends rank*10+dst to every dst.
+            let sends: Vec<(usize, Vec<u8>)> = (0..d)
+                .map(|dst| (dst, vec![(rank * 10 + dst) as u8]))
+                .collect();
+            let recv = t.all_to_all_bytes(sends).unwrap();
+            let want: Vec<(usize, Vec<u8>)> = (0..d)
+                .map(|src| (src, vec![(src * 10 + rank) as u8]))
+                .collect();
+            assert_eq!(recv, want);
+            // all_gather in rank order.
+            let all = t.all_gather_bytes(vec![rank as u8; 2]).unwrap();
+            assert_eq!(
+                all,
+                (0..d).map(|r| vec![r as u8; 2]).collect::<Vec<_>>()
+            );
+            t.barrier().unwrap();
+            // all_reduce_sum through the generic default impl.
+            let mut grads: Vec<f32> =
+                (0..10).map(|i| (rank + i) as f32).collect();
+            t.all_reduce_sum(&mut grads).unwrap();
+            grads
+        });
+        let want: Vec<f32> = (0..10)
+            .map(|i| (0..3).map(|r| (r + i) as f32).sum())
+            .collect();
+        for got in out {
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn single_rank_degenerates() {
+        let out = run_world(1, |t| {
+            let recv = t
+                .all_to_all_bytes(vec![(0, vec![5u8]), (0, vec![6u8])])
+                .unwrap();
+            assert_eq!(recv, vec![(0, vec![5u8]), (0, vec![6u8])]);
+            assert_eq!(
+                t.all_gather_bytes(vec![1u8]).unwrap(),
+                vec![vec![1u8]]
+            );
+            t.barrier().unwrap();
+            let mut x = vec![3.0f32];
+            t.all_reduce_sum(&mut x).unwrap();
+            assert_eq!(x, vec![3.0]);
+        });
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn large_payloads_do_not_deadlock() {
+        // Bigger than loopback socket buffers in both directions: the
+        // scoped-writer schedule must still complete.
+        let big = 4 << 20;
+        let out = run_world(2, move |t| {
+            let rank = t.rank();
+            let recv = t
+                .all_to_all_bytes(vec![(1 - rank, vec![rank as u8; big])])
+                .unwrap();
+            assert_eq!(recv.len(), 1);
+            assert_eq!(recv[0].0, 1 - rank);
+            assert_eq!(recv[0].1.len(), big);
+            assert!(recv[0].1.iter().all(|&b| b == (1 - rank) as u8));
+        });
+        assert_eq!(out.len(), 2);
+    }
+}

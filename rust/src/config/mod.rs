@@ -130,6 +130,12 @@ pub struct TrainRunConfig {
     /// Capacity of each planning cache in the pipeline's step history
     /// (`--plan-cache-size`; 0 disables caching).
     pub plan_cache_size: usize,
+    /// Comm backend carrying the run (`--transport`): a name from
+    /// `comm::transport::registry` (`inproc`, `tcp`, …).
+    pub transport: String,
+    /// Calibrate α/β on the live transport before training and plan
+    /// against the measured topology (`--calibrate-comm`).
+    pub calibrate_comm: bool,
 }
 
 impl Default for TrainRunConfig {
@@ -146,6 +152,8 @@ impl Default for TrainRunConfig {
             pipeline_depth: 2,
             plan_cache_size:
                 crate::balance::cache::DEFAULT_PLAN_CACHE_SIZE,
+            transport: "inproc".into(),
+            calibrate_comm: false,
         }
     }
 }
@@ -177,6 +185,15 @@ impl TrainRunConfig {
                 .get("plan_cache_size")
                 .as_usize()
                 .unwrap_or(d.plan_cache_size),
+            transport: j
+                .get("transport")
+                .as_str()
+                .unwrap_or(&d.transport)
+                .to_string(),
+            calibrate_comm: j
+                .get("calibrate_comm")
+                .as_bool()
+                .unwrap_or(d.calibrate_comm),
         }
     }
 
@@ -190,12 +207,22 @@ impl TrainRunConfig {
         }
     }
 
-    /// Validate user-supplied knobs (depth bounds, cache size) with a
-    /// printable error.
+    /// Validate user-supplied knobs (depth bounds, cache size,
+    /// transport name) with a printable error.
     pub fn validate(&self) -> anyhow::Result<()> {
         self.pipeline_config()
             .validate()
-            .map_err(|e| anyhow::anyhow!(e))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        if crate::comm::transport::registry::create(&self.transport)
+            .is_none()
+        {
+            anyhow::bail!(
+                "unknown transport '{}' (registered: {:?})",
+                self.transport,
+                crate::comm::transport::registry::NAMES
+            );
+        }
+        Ok(())
     }
 }
 
@@ -247,7 +274,29 @@ mod tests {
         // New knobs default sensibly and validate.
         assert_eq!(c.pipeline_depth, 2);
         assert!(c.plan_cache_size > 0);
+        assert_eq!(c.transport, "inproc");
+        assert!(!c.calibrate_comm);
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn train_config_validates_transport_names() {
+        let j = Json::parse(
+            r#"{"transport": "tcp", "calibrate_comm": true}"#,
+        )
+        .unwrap();
+        let c = TrainRunConfig::from_json(&j);
+        assert_eq!(c.transport, "tcp");
+        assert!(c.calibrate_comm);
+        assert!(c.validate().is_ok());
+
+        let bad = TrainRunConfig {
+            transport: "nccl".into(),
+            ..TrainRunConfig::default()
+        };
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown transport"), "{err}");
+        assert!(err.contains("inproc"), "{err}");
     }
 
     #[test]

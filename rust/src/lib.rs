@@ -8,7 +8,11 @@
 //! * **Layer 3 (this crate)** — the paper's system contribution: the
 //!   [`balance`] post-balancing algorithms behind the pluggable
 //!   [`balance::Balancer`] trait + registry, the [`comm`] node-wise
-//!   all-to-all communicator, the [`nodewise`] rearrangement ILP, and the
+//!   all-to-all communicator behind the pluggable
+//!   [`comm::transport::Transport`] trait + registry (in-process
+//!   channels or loopback-TCP sockets, with per-backend α/β
+//!   calibration in [`comm::calibrate`]), the [`nodewise`]
+//!   rearrangement ILP, and the
 //!   [`orchestrator`] that wires them into the multimodal training
 //!   workflow — planning phases in parallel on reusable scratch,
 //!   replanning incrementally from each step's predecessor

@@ -7,11 +7,14 @@
 //!   incoherence  regenerate the Fig. 3 dataset analysis
 //!   train        run the real tiny-MLLM DP trainer over PJRT artifacts
 //!   balancers    list the registered post-balancing algorithms
+//!   transports   list the registered comm backends (+ calibrate α/β)
 //!
 //! Options accept `--key value` or `--key=value`; run with no arguments
 //! for usage.
 
 use orchmllm::balance::registry;
+use orchmllm::comm::calibrate::{calibrate, CalibrationSpec};
+use orchmllm::comm::transport::registry as transport_registry;
 use orchmllm::config::{SimRunConfig, TrainRunConfig};
 use orchmllm::data::incoherence::IncoherenceReport;
 use orchmllm::data::synth::{DatasetConfig, Generator};
@@ -36,7 +39,9 @@ USAGE:
                        [--mini-batch 4] [--steps 20] [--lr 0.05]
                        [--balancer <name>] [--no-balance]
                        [--pipeline-depth 2] [--plan-cache-size 32]
+                       [--transport inproc|tcp] [--calibrate-comm]
   orchmllm balancers                                 # registry listing
+  orchmllm transports  [--calibrate] [--workers 4]   # comm backends
   orchmllm help
 ";
 
@@ -49,6 +54,7 @@ fn main() {
         Some("incoherence") => cmd_incoherence(&args),
         Some("train") => cmd_train(&args),
         Some("balancers") => cmd_balancers(),
+        Some("transports") => cmd_transports(&args),
         _ => print!("{USAGE}"),
     }
 }
@@ -168,6 +174,10 @@ fn cmd_train(args: &Args) {
             .usize("pipeline-depth", defaults.pipeline_depth),
         plan_cache_size: args
             .usize("plan-cache-size", defaults.plan_cache_size),
+        transport: args
+            .get_or("transport", &defaults.transport)
+            .to_string(),
+        calibrate_comm: args.flag("calibrate-comm"),
     };
     if let Err(e) = cfg.validate() {
         eprintln!("invalid train configuration: {e:#}");
@@ -201,4 +211,32 @@ fn cmd_balancers() {
     println!(
         "\nselect with `--balancer <name>` on `sim` and `train`."
     );
+}
+
+fn cmd_transports(args: &Args) {
+    println!("registered comm transports:\n");
+    println!("{:<12}{}", "name", "description");
+    for name in transport_registry::NAMES {
+        let f = transport_registry::must(name);
+        println!("{:<12}{}", f.name(), f.description());
+    }
+    println!("\nselect with `--transport <name>` on `train`.");
+    if !args.flag("calibrate") {
+        return;
+    }
+    let d = args.usize("workers", 4);
+    println!("\ncalibrating α/β at d = {d} (quick sweep):");
+    for name in transport_registry::NAMES {
+        let f = transport_registry::must(name);
+        match calibrate(f.as_ref(), d, &CalibrationSpec::quick()) {
+            Ok(cal) => print!(
+                "{}",
+                report::render_calibration(&cal, &trainer::worker_topology(d))
+            ),
+            Err(e) => {
+                eprintln!("calibration of '{name}' failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
 }

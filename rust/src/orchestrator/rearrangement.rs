@@ -124,6 +124,19 @@ impl Rearrangement {
             to: self.to.iter().map(|&b| perm[b]).collect(),
         }
     }
+
+    /// The `(example, dst)` pairs instance `rank` must submit to an
+    /// All-to-All transport round to realize this rearrangement —
+    /// loopback (stay-on-rank) moves included, since the transport
+    /// short-circuits them. This is the bridge between a planned Π and
+    /// a `Transport::all_to_all` call (see the conformance suite and
+    /// `benches/comm_transports.rs`).
+    pub fn sends_from(&self, rank: usize) -> Vec<(usize, usize)> {
+        (0..self.len())
+            .filter(|&g| self.from[g] == rank)
+            .map(|g| (g, self.to[g]))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -160,6 +173,17 @@ mod tests {
         let a = Rearrangement::new(vec![0], vec![1]);
         let b = Rearrangement::new(vec![0], vec![1]);
         let _ = a.compose(&b);
+    }
+
+    #[test]
+    fn sends_partition_the_examples() {
+        let r = Rearrangement::new(vec![0, 0, 1, 2], vec![1, 0, 2, 2]);
+        assert_eq!(r.sends_from(0), vec![(0, 1), (1, 0)]);
+        assert_eq!(r.sends_from(1), vec![(2, 2)]);
+        assert_eq!(r.sends_from(2), vec![(3, 2)]);
+        // Every example appears exactly once across ranks.
+        let total: usize = (0..3).map(|k| r.sends_from(k).len()).sum();
+        assert_eq!(total, r.len());
     }
 
     #[test]

@@ -1,6 +1,9 @@
-//! Table/figure renderers for simulator outputs.
+//! Table/figure renderers for simulator, trainer, and comm-layer
+//! outputs.
 
 use super::engine::RunSummary;
+use crate::comm::calibrate::Calibration;
+use crate::comm::topology::Topology;
 
 /// Render a Fig. 8/9-style grouped bar table: rows = systems, columns =
 /// models, cells = (MFU %, TPT tokens/s/GPU).
@@ -148,6 +151,40 @@ pub fn render_mfu_memory(rows: &[Vec<RunSummary>]) -> String {
     out
 }
 
+/// Render a fitted transport calibration next to the analytic
+/// reference constants the cost models would otherwise use — the
+/// "measured vs hard-coded" comparison the comm bench and the
+/// `transports --calibrate` CLI print.
+pub fn render_calibration(cal: &Calibration, analytic: &Topology) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "\n== transport '{}' @ d = {} ==\n",
+        cal.transport, cal.d
+    ));
+    out.push_str(&format!(
+        "{:<14}{:>12}{:>14}\n",
+        "collective", "alpha (us)", "beta (GB/s)"
+    ));
+    for (name, line) in [
+        ("all_to_all", &cal.all_to_all),
+        ("all_gather", &cal.all_gather),
+    ] {
+        out.push_str(&format!(
+            "{:<14}{:>12.2}{:>14.3}\n",
+            name,
+            line.alpha_s * 1e6,
+            line.beta_bytes_per_s / 1e9
+        ));
+    }
+    out.push_str(&format!(
+        "{:<14}{:>12.2}{:>14.3}  (hard-coded costmodel constants)\n",
+        "analytic",
+        analytic.base_latency * 1e6,
+        analytic.min_bw() / 1e9
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,5 +205,29 @@ mod tests {
         assert!(s2.contains("Cache hit"));
         let s3 = render_mfu_memory(&[vec![a], vec![b]]);
         assert!(s3.contains("mem GB"));
+    }
+
+    #[test]
+    fn renders_calibration_table() {
+        use crate::comm::calibrate::FittedLine;
+        let cal = Calibration {
+            transport: "tcp".into(),
+            d: 4,
+            all_to_all: FittedLine {
+                alpha_s: 25e-6,
+                beta_bytes_per_s: 3.2e9,
+            },
+            all_gather: FittedLine {
+                alpha_s: 40e-6,
+                beta_bytes_per_s: 2.5e9,
+            },
+            all_to_all_points: vec![(1024.0, 26e-6)],
+            all_gather_points: vec![(1024.0, 41e-6)],
+        };
+        let s = render_calibration(&cal, &Topology::h100(4));
+        assert!(s.contains("transport 'tcp'"));
+        assert!(s.contains("all_to_all"));
+        assert!(s.contains("analytic"));
+        assert!(s.contains("25.00"), "{s}");
     }
 }

@@ -16,12 +16,13 @@ pub mod content;
 pub mod worker;
 
 use std::path::Path;
-use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::balance::registry;
+use crate::comm::calibrate::{self, CalibrationSpec};
 use crate::comm::topology::Topology;
+use crate::comm::transport::registry as transport_registry;
 use crate::config::TrainRunConfig;
 use crate::data::synth::{DatasetConfig, TaskMix};
 use crate::orchestrator::global::{Orchestrator, OrchestratorConfig};
@@ -29,7 +30,7 @@ use crate::orchestrator::pipeline::StepPipeline;
 use crate::runtime::manifest::Manifest;
 
 use content::ContentGen;
-use worker::{Comms, StepOutcome, Worker};
+use worker::{StepOutcome, Worker};
 
 /// Aggregated result of a training run.
 #[derive(Clone, Debug)]
@@ -43,6 +44,8 @@ pub struct TrainReport {
     pub plan_secs_per_step: f64,
     pub workers: usize,
     pub steps: usize,
+    /// Which comm backend carried the run (`--transport`).
+    pub transport: String,
 }
 
 impl TrainReport {
@@ -58,10 +61,12 @@ impl TrainReport {
             }
         }
         format!(
-            "train: {} workers, {} steps\n{curve}loss {first:.4} -> {last:.4}\n\
+            "train: {} workers over '{}' transport, {} steps\n\
+             {curve}loss {first:.4} -> {last:.4}\n\
              {:.0} tokens/step, {:.3}s/step ({:.1}ms comm, \
              {:.2}ms plan overlapped)",
             self.workers,
+            self.transport,
             self.steps,
             self.tokens_per_step,
             self.secs_per_step,
@@ -96,12 +101,16 @@ pub fn dataset_for_manifest(manifest: &Manifest) -> Result<DatasetConfig> {
     })
 }
 
+/// Workers grouped per pretend "node" — shared by [`worker_topology`]
+/// and the calibrated-topology path so both agree on node shape.
+pub const WORKERS_PER_NODE: usize = 2;
+
 /// The trainer's worker topology: pretend two workers share a "node" so
 /// the node-wise rearrangement path is exercised end to end.
 pub fn worker_topology(workers: usize) -> Topology {
     Topology {
         instances: workers,
-        per_node: 2.min(workers),
+        per_node: WORKERS_PER_NODE.min(workers),
         intra_bw: 10e9,
         inter_bw: 1e9,
         base_latency: 0.0,
@@ -143,16 +152,38 @@ pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
         )
     })?;
     let data_cfg = dataset_for_manifest(&manifest)?;
-    let topo = worker_topology(cfg.workers);
+    let factory =
+        transport_registry::create(&cfg.transport).ok_or_else(|| {
+            anyhow!(
+                "unknown transport '{}' (registered: {:?})",
+                cfg.transport,
+                transport_registry::NAMES
+            )
+        })?;
+    // The planner's topology: hard-coded worker constants by default,
+    // or measured α/β from a calibration pass over the live backend
+    // (`--calibrate-comm`) so cost estimates track the real substrate.
+    let topo = if cfg.calibrate_comm {
+        let cal = calibrate::calibrate(
+            factory.as_ref(),
+            cfg.workers,
+            &CalibrationSpec::quick(),
+        )
+        .context("calibrating comm transport")?;
+        cal.to_topology(WORKERS_PER_NODE.min(cfg.workers))
+    } else {
+        worker_topology(cfg.workers)
+    };
     let embed_bytes = manifest.config.d_llm as f64 * 4.0;
     let orch_cfg = orchestrator_config(cfg, embed_bytes)?;
     let content =
         ContentGen { seed: cfg.seed ^ 0xC0FFEE, vocab: manifest.config.vocab };
-    let comms = Arc::new(Comms::new(cfg.workers));
+    let transports = factory.connect(cfg.workers).with_context(|| {
+        format!("connecting '{}' transport world", cfg.transport)
+    })?;
 
     let mut handles = Vec::new();
-    for rank in 0..cfg.workers {
-        let comms = Arc::clone(&comms);
+    for (rank, transport) in transports.into_iter().enumerate() {
         let cfg = cfg.clone();
         let orch_cfg = orch_cfg.clone();
         let data_cfg = data_cfg;
@@ -163,7 +194,7 @@ pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
                     rank,
                     topo,
                     &dir,
-                    comms,
+                    transport,
                     content,
                     cfg.lr,
                 )?;
@@ -226,6 +257,7 @@ pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
             / steps.max(1) as f64,
         workers: cfg.workers,
         steps,
+        transport: cfg.transport.clone(),
     })
 }
 

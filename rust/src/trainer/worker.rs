@@ -1,6 +1,10 @@
 //! One DP worker: executes the orchestrator's [`StepPlan`] against real
-//! PJRT executables, moving example payloads through the collective
-//! engine exactly as the paper's communicator would over NCCL.
+//! PJRT executables, moving example payloads through a pluggable
+//! [`Transport`] exactly as the paper's communicator would over NCCL.
+//! The worker is generic over `dyn Transport`, so the identical SPMD
+//! code runs over in-process channels (`--transport inproc`) or
+//! loopback TCP sockets (`--transport tcp`) — see
+//! `crate::comm::transport`.
 //!
 //! Per step (SPMD across workers):
 //!   1. vision/audio phase inputs All-to-All (metadata moves home →
@@ -17,12 +21,11 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::comm::engine::Collectives;
 use crate::comm::topology::Topology;
+use crate::comm::transport::{Transport, TransportExt};
 use crate::runtime::xla_stub as xla;
 use crate::data::synth::Example;
 use crate::orchestrator::global::StepPlan;
@@ -32,33 +35,20 @@ use crate::runtime::tensor::HostTensor;
 
 use super::content::ContentGen;
 
-/// Payloads that cross worker threads.
+/// Payloads that cross worker boundaries (both implement
+/// [`crate::comm::transport::Wire`]: example id + data rows).
 pub type F32Msg = (usize, Vec<f32>);
 pub type I32Msg = (usize, Vec<i32>);
-
-/// Shared collective group bundle.
-pub struct Comms {
-    pub f32s: Arc<Collectives<F32Msg>>,
-    pub i32s: Arc<Collectives<I32Msg>>,
-    pub grads: Arc<Collectives<Vec<f32>>>,
-}
-
-impl Comms {
-    pub fn new(d: usize) -> Comms {
-        Comms {
-            f32s: Collectives::new(d),
-            i32s: Collectives::new(d),
-            grads: Collectives::new(d),
-        }
-    }
-}
 
 /// One worker's state.
 pub struct Worker {
     pub rank: usize,
     pub topo: Topology,
     pub runtime: Runtime,
-    pub comms: Arc<Comms>,
+    /// Rank-scoped handle into the collective group; every payload the
+    /// step moves goes through this, so swapping the backend swaps the
+    /// whole comm substrate.
+    pub transport: Box<dyn Transport>,
     pub content: ContentGen,
     /// Parameters cached as device-ready literals: converted once at
     /// init and refreshed once per optimizer step, instead of per bucket
@@ -90,10 +80,24 @@ impl Worker {
         rank: usize,
         topo: Topology,
         artifacts: &Path,
-        comms: Arc<Comms>,
+        transport: Box<dyn Transport>,
         content: ContentGen,
         lr: f64,
     ) -> Result<Worker> {
+        if transport.rank() != rank {
+            bail!(
+                "transport handle is scoped to rank {} but worker is \
+                 rank {rank}",
+                transport.rank()
+            );
+        }
+        if transport.world_size() != topo.instances {
+            bail!(
+                "transport world size {} != topology instances {}",
+                transport.world_size(),
+                topo.instances
+            );
+        }
         let runtime = Runtime::load(artifacts, &[])?;
         let mut params = HashMap::new();
         for sub in ["vision", "audio", "llm"] {
@@ -104,7 +108,7 @@ impl Worker {
                 .collect::<Result<Vec<_>>>()?;
             params.insert(sub.to_string(), lits);
         }
-        Ok(Worker { rank, topo, runtime, comms, content, params, lr })
+        Ok(Worker { rank, topo, runtime, transport, content, params, lr })
     }
 
     fn cfg(&self) -> &crate::runtime::manifest::ModelInfo {
@@ -192,7 +196,10 @@ impl Worker {
             sends.push((route.to[g], (g, payload)));
         }
         let t0 = std::time::Instant::now();
-        let received = self.comms.f32s.all_to_all(self.rank, sends);
+        let received = self
+            .transport
+            .all_to_all::<F32Msg>(sends)
+            .context("encoder metadata all-to-all")?;
         *comm_s += t0.elapsed().as_secs_f64();
         let mut by_id: HashMap<usize, Vec<f32>> = received
             .into_iter()
@@ -329,7 +336,10 @@ impl Worker {
         }
         let _ = plan;
         let t0 = std::time::Instant::now();
-        let received = self.comms.f32s.all_to_all(self.rank, sends);
+        let received = self
+            .transport
+            .all_to_all::<F32Msg>(sends)
+            .context("encoder output all-to-all (composed route)")?;
         *comm_s += t0.elapsed().as_secs_f64();
         Ok(received.into_iter().map(|(_s, (g, d))| (g, d)).collect())
     }
@@ -348,7 +358,10 @@ impl Worker {
             sends.push((inv_route.to[g], (g, data)));
         }
         let t0 = std::time::Instant::now();
-        let received = self.comms.f32s.all_to_all(self.rank, sends);
+        let received = self
+            .transport
+            .all_to_all::<F32Msg>(sends)
+            .context("token-gradient all-to-all (inverse route)")?;
         *comm_s += t0.elapsed().as_secs_f64();
         Ok(received.into_iter().map(|(_s, (g, d))| (g, d)).collect())
     }
@@ -367,7 +380,10 @@ impl Worker {
             sends.push((plan.llm.route.to[g], (g, self.content.text(e))));
         }
         let t0 = std::time::Instant::now();
-        let received = self.comms.i32s.all_to_all(self.rank, sends);
+        let received = self
+            .transport
+            .all_to_all::<I32Msg>(sends)
+            .context("text-token all-to-all")?;
         *comm_s += t0.elapsed().as_secs_f64();
         Ok(received.into_iter().map(|(_s, (g, d))| (g, d)).collect())
     }
@@ -549,7 +565,9 @@ impl Worker {
                 flat.extend_from_slice(g.f32s());
             }
         }
-        self.comms.grads.all_reduce_sum(self.rank, &mut flat);
+        self.transport
+            .all_reduce_sum(&mut flat)
+            .context("gradient all-reduce")?;
         let loss_g = flat[0] as f64;
         let tokens_g = flat[1] as f64;
 

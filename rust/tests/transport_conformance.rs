@@ -1,0 +1,362 @@
+//! Transport conformance suite: one parameterized battery run against
+//! every backend in `comm::transport::registry`, pinning the SPMD
+//! contract the trainer depends on — routing, rank order, multi-payload
+//! pairs, round isolation, empty sends, the d = 1 degenerate, and the
+//! bit-stable rank-order all-reduce. Plus the trainer-invariance check:
+//! a full training step must be bit-identical whether the bytes move
+//! over in-process channels or loopback TCP sockets.
+//!
+//! CI runs this file with `--test-threads=1`; the TCP backend binds
+//! ephemeral ports by default (`ORCHMLLM_TCP_BASE_PORT` overrides), so
+//! parallel local runs are safe too.
+
+use orchmllm::comm::transport::{self, registry, Transport, TransportExt};
+
+/// Run `f` on every rank of a `d`-rank world of the named backend and
+/// collect the per-rank results in rank order (thin wrapper over the
+/// shared `transport::run_world` harness, adding the backend name to
+/// failures).
+fn run_world<R, F>(backend: &str, d: usize, f: F) -> Vec<R>
+where
+    F: Fn(Box<dyn Transport>) -> R + Send + Sync,
+    R: Send,
+{
+    let factory = registry::must(backend);
+    let out = transport::run_world(factory.as_ref(), d, f)
+        .unwrap_or_else(|e| panic!("{backend}: world of {d} failed: {e:#}"));
+    assert_eq!(out.len(), d, "{backend}: wrong rank count");
+    out
+}
+
+/// Run `test` against every registered backend, so a new transport
+/// inherits the whole battery by registering itself.
+fn for_every_backend(test: fn(&'static str)) {
+    for name in registry::NAMES {
+        test(name);
+    }
+}
+
+#[test]
+fn handles_are_rank_scoped() {
+    for_every_backend(|backend| {
+        let out = run_world(backend, 3, |t| (t.rank(), t.world_size()));
+        assert_eq!(out, vec![(0, 3), (1, 3), (2, 3)], "{backend}");
+    });
+}
+
+#[test]
+fn all_to_all_routes_every_pair() {
+    for_every_backend(|backend| {
+        let d = 4;
+        let out = run_world(backend, d, move |t| {
+            let rank = t.rank();
+            // Everyone sends one tagged payload to every rank,
+            // including itself (loopback).
+            let sends: Vec<(usize, Vec<u8>)> = (0..d)
+                .map(|dst| (dst, vec![rank as u8, dst as u8]))
+                .collect();
+            t.all_to_all_bytes(sends).unwrap()
+        });
+        for (rank, got) in out.into_iter().enumerate() {
+            let want: Vec<(usize, Vec<u8>)> = (0..d)
+                .map(|src| (src, vec![src as u8, rank as u8]))
+                .collect();
+            assert_eq!(got, want, "{backend} rank {rank}");
+        }
+    });
+}
+
+#[test]
+fn all_to_all_preserves_per_source_send_order() {
+    for_every_backend(|backend| {
+        let out = run_world(backend, 2, |t| {
+            let rank = t.rank();
+            let sends = if rank == 0 {
+                vec![
+                    (1, vec![7u8]),
+                    (1, vec![8u8]),
+                    (0, vec![1u8]),
+                    (1, vec![9u8]),
+                ]
+            } else {
+                vec![]
+            };
+            t.all_to_all_bytes(sends).unwrap()
+        });
+        // Rank 0 keeps its self-send; rank 1 sees 7, 8, 9 in order.
+        assert_eq!(out[0], vec![(0, vec![1u8])], "{backend}");
+        assert_eq!(
+            out[1],
+            vec![(0, vec![7u8]), (0, vec![8u8]), (0, vec![9u8])],
+            "{backend}"
+        );
+    });
+}
+
+#[test]
+fn all_gather_returns_rank_order() {
+    for_every_backend(|backend| {
+        let d = 4;
+        let out = run_world(backend, d, move |t| {
+            t.all_gather_bytes(vec![t.rank() as u8; 3]).unwrap()
+        });
+        for got in out {
+            assert_eq!(
+                got,
+                (0..d).map(|r| vec![r as u8; 3]).collect::<Vec<_>>(),
+                "{backend}"
+            );
+        }
+    });
+}
+
+#[test]
+fn rounds_are_isolated() {
+    // Interleave every collective kind for several rounds; each round
+    // must deliver exactly its own payloads (no leaks, no replays).
+    for_every_backend(|backend| {
+        let d = 3;
+        let out = run_world(backend, d, move |t| {
+            let rank = t.rank();
+            let mut log = Vec::new();
+            for round in 0..5u8 {
+                let recv = t
+                    .all_to_all_bytes(vec![(
+                        (rank + 1) % d,
+                        vec![round, rank as u8],
+                    )])
+                    .unwrap();
+                assert_eq!(recv.len(), 1, "{backend} round {round} leaked");
+                assert_eq!(
+                    recv[0],
+                    ((rank + d - 1) % d, vec![round, ((rank + d - 1) % d) as u8]),
+                    "{backend} round {round}"
+                );
+                let all =
+                    t.all_gather_bytes(vec![round, rank as u8]).unwrap();
+                assert_eq!(
+                    all,
+                    (0..d)
+                        .map(|r| vec![round, r as u8])
+                        .collect::<Vec<_>>(),
+                    "{backend} round {round} stale gather"
+                );
+                t.barrier().unwrap();
+                log.push(recv[0].1[0]);
+            }
+            log
+        });
+        for got in out {
+            assert_eq!(got, vec![0, 1, 2, 3, 4], "{backend}");
+        }
+    });
+}
+
+#[test]
+fn empty_sends_are_valid_rounds() {
+    for_every_backend(|backend| {
+        let d = 3;
+        let out = run_world(backend, d, move |t| {
+            // A round where nobody sends anything…
+            let recv = t.all_to_all_bytes(vec![]).unwrap();
+            assert!(recv.is_empty(), "{backend}");
+            // …and one where payloads are zero-length but present.
+            let recv = t
+                .all_to_all_bytes(vec![((t.rank() + 1) % d, Vec::new())])
+                .unwrap();
+            assert_eq!(recv.len(), 1, "{backend}");
+            assert!(recv[0].1.is_empty(), "{backend}");
+            // Empty gather contribution.
+            let all = t.all_gather_bytes(Vec::new()).unwrap();
+            assert_eq!(all, vec![Vec::<u8>::new(); d], "{backend}");
+        });
+        assert_eq!(out.len(), d);
+    });
+}
+
+#[test]
+fn single_rank_world_degenerates() {
+    for_every_backend(|backend| {
+        let out = run_world(backend, 1, |t| {
+            assert_eq!(t.world_size(), 1);
+            let recv = t
+                .all_to_all_bytes(vec![(0, vec![1u8]), (0, vec![2u8])])
+                .unwrap();
+            assert_eq!(recv, vec![(0, vec![1u8]), (0, vec![2u8])]);
+            assert_eq!(
+                t.all_gather_bytes(vec![9u8]).unwrap(),
+                vec![vec![9u8]]
+            );
+            t.barrier().unwrap();
+            let mut data = vec![1.5f32, -2.0];
+            t.all_reduce_sum(&mut data).unwrap();
+            assert_eq!(data, vec![1.5, -2.0]);
+        });
+        assert_eq!(out.len(), 1);
+    });
+}
+
+#[test]
+fn out_of_range_destination_errors_before_traffic() {
+    for_every_backend(|backend| {
+        let d = 2;
+        let out = run_world(backend, d, move |t| {
+            // SPMD-consistent bad call: every rank attempts it, every
+            // rank must get a local error without touching the group…
+            let err = t
+                .all_to_all_bytes(vec![(d, vec![0u8])])
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("out of range"), "{backend}: {err}");
+            // …so a following good round still lines up.
+            let rank = t.rank();
+            let recv = t
+                .all_to_all_bytes(vec![(1 - rank, vec![rank as u8])])
+                .unwrap();
+            assert_eq!(recv, vec![(1 - rank, vec![(1 - rank) as u8])]);
+        });
+        assert_eq!(out.len(), d);
+    });
+}
+
+#[test]
+fn all_reduce_is_bit_stable_rank_order() {
+    // Values chosen so floating-point addition order is observable:
+    // summing big + small + small in a different order changes the
+    // result. The contract is "accumulate in increasing rank order".
+    for_every_backend(|backend| {
+        let d = 4;
+        // Lengths exercise uneven chunking (n % d != 0) and n < d.
+        for n in [1usize, 3, 10, 17] {
+            let out = run_world(backend, d, move |t| {
+                let rank = t.rank();
+                let mut data: Vec<f32> = (0..n)
+                    .map(|i| {
+                        if rank == 0 {
+                            1.0e8 + i as f32
+                        } else {
+                            0.25 + (rank * n + i) as f32 * 1e-3
+                        }
+                    })
+                    .collect();
+                t.all_reduce_sum(&mut data).unwrap();
+                data
+            });
+            // Reference: strict rank-order accumulation.
+            let mut want = vec![0.0f32; n];
+            for rank in 0..d {
+                for (i, w) in want.iter_mut().enumerate() {
+                    let x = if rank == 0 {
+                        1.0e8 + i as f32
+                    } else {
+                        0.25 + (rank * n + i) as f32 * 1e-3
+                    };
+                    *w += x;
+                }
+            }
+            for (rank, got) in out.into_iter().enumerate() {
+                assert_eq!(got, want, "{backend} rank {rank} n {n}");
+            }
+        }
+    });
+}
+
+#[test]
+fn typed_payloads_cross_every_backend() {
+    // The trainer's actual Wire payloads (batch shards) through the
+    // typed extension layer.
+    for_every_backend(|backend| {
+        let d = 3;
+        let out = run_world(backend, d, move |t| {
+            let rank = t.rank();
+            let sends: Vec<(usize, (usize, Vec<f32>))> = (0..d)
+                .map(|dst| (dst, (rank * 100 + dst, vec![rank as f32; 4])))
+                .collect();
+            let recv = t.all_to_all::<(usize, Vec<f32>)>(sends).unwrap();
+            for (src, (id, rows)) in &recv {
+                assert_eq!(*id, src * 100 + rank, "{backend}");
+                assert_eq!(rows, &vec![*src as f32; 4], "{backend}");
+            }
+            let texts =
+                t.all_gather(&(rank, vec![rank as i32; 2])).unwrap();
+            texts
+        });
+        for got in out {
+            let want: Vec<(usize, Vec<i32>)> =
+                (0..d).map(|r| (r, vec![r as i32; 2])).collect();
+            assert_eq!(got, want, "{backend}");
+        }
+    });
+}
+
+#[test]
+fn backends_agree_bit_for_bit() {
+    // The same deterministic SPMD program must produce identical bytes
+    // on every backend — the cheap cross-backend invariance check that
+    // does not need trainer artifacts.
+    let d = 3;
+    let program = move |t: Box<dyn Transport>| -> (Vec<(usize, Vec<u8>)>, Vec<Vec<u8>>, Vec<f32>) {
+        let rank = t.rank();
+        let a2a = t
+            .all_to_all_bytes(
+                (0..d)
+                    .map(|dst| (dst, vec![(rank * 7 + dst) as u8; 5]))
+                    .collect(),
+            )
+            .unwrap();
+        let ag = t.all_gather_bytes(vec![rank as u8; 9]).unwrap();
+        let mut grads: Vec<f32> =
+            (0..13).map(|i| (rank + 1) as f32 * 0.1 + i as f32).collect();
+        t.all_reduce_sum(&mut grads).unwrap();
+        (a2a, ag, grads)
+    };
+    let mut reference: Option<Vec<_>> = None;
+    for name in registry::NAMES {
+        let out = run_world(name, d, program);
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => assert_eq!(&out, r, "{name} diverges from {:?}", registry::NAMES[0]),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trainer invariance across transports (the TCP trainer smoke test)
+// ---------------------------------------------------------------------------
+
+/// Full trainer step over real PJRT artifacts: bit-identical metrics
+/// in-proc vs TCP-loopback. Skips (like every trainer test) when
+/// `make artifacts` has not produced `artifacts/test`.
+#[test]
+fn trainer_step_bit_identical_across_transports() {
+    use orchmllm::config::TrainRunConfig;
+    use orchmllm::trainer;
+
+    if !std::path::Path::new("artifacts/test/manifest.json").exists() {
+        eprintln!("skipping: artifacts/test not built");
+        return;
+    }
+    let base = TrainRunConfig {
+        artifacts: "artifacts/test".into(),
+        workers: 2,
+        mini_batch: 3,
+        steps: 3,
+        lr: 2.0,
+        seed: 11,
+        ..TrainRunConfig::default()
+    };
+    let inproc = trainer::run_collect(&TrainRunConfig {
+        transport: "inproc".into(),
+        ..base.clone()
+    })
+    .unwrap();
+    let tcp = trainer::run_collect(&TrainRunConfig {
+        transport: "tcp".into(),
+        ..base
+    })
+    .unwrap();
+    // Bit-identical, not approximately equal: the transports carry the
+    // same bytes and the reduction order is fixed.
+    assert_eq!(inproc.losses, tcp.losses);
+    assert_eq!(inproc.tokens_per_step, tcp.tokens_per_step);
+}
