@@ -65,6 +65,22 @@ fn main() {
         100.0 * (fresh - reused) / fresh
     );
 
+    // Oracle latency at gap-harness scale: `ilp` is not a per-step
+    // solver, but its certify time bounds what the gap suite costs.
+    let mut b_ilp = Bencher::new("exact oracle (balance/ilp)");
+    for (n, d) in [(12usize, 3usize), (16, 4), (20, 4)] {
+        let lens = balance::synth_lengths(&mut rng, n, 3.4, 1.1);
+        b_ilp.iter(&format!("ilp::solve   n={n} d={d}"), || {
+            orchmllm::balance::ilp::solve(
+                &orchmllm::balance::CostModel::Linear { alpha: 1.0 },
+                &lens,
+                d,
+                200_000,
+            )
+        });
+    }
+    b_ilp.report();
+
     let mut b2 = Bencher::new("node-wise rearrangement");
     for d in [16usize, 64, 128, 320] {
         let topo = Topology::h100(d);

@@ -1,0 +1,106 @@
+//! Approximation-gap suite: every registered heuristic vs the exact
+//! `ilp` oracle across a grid of modality-incoherence profiles.
+//!
+//! Every future balancer PR becomes a measurable gap delta: the sweep
+//! emits `BENCH_balancer_gaps.json` (per-heuristic, per-profile
+//! mean/max gaps over oracle-certified cases), and `--baseline
+//! ci/gap_baseline.json` gates the run against the checked-in
+//! per-heuristic max-gap ceilings — CI fails on any regression past
+//! the ceiling + slack.
+//!
+//! Run: `cargo bench --bench balancer_gaps`
+//!   `-- --smoke`            the small CI grid (what the baseline gates)
+//!   `-- --baseline <path>`  fail on regressions vs the checked-in file
+//!   `-- --node-budget <n>`  override the oracle budget
+
+use orchmllm::balance::gaps::{run_gap_suite, GapConfig};
+use orchmllm::sim::report;
+use orchmllm::util::cli::Args;
+use orchmllm::util::json::Json;
+
+/// `cargo bench` runs with CWD at the package root (`rust/`), while
+/// developers run from the workspace root — accept both.
+fn read_either(path: &str) -> Option<String> {
+    std::fs::read_to_string(path)
+        .or_else(|_| std::fs::read_to_string(format!("../{path}")))
+        .ok()
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let mut cfg = if smoke { GapConfig::smoke() } else { GapConfig::full() };
+    cfg.node_budget = args.usize("node-budget", cfg.node_budget);
+    cfg.seed = args.u64("seed", cfg.seed);
+
+    let t0 = std::time::Instant::now();
+    let gaps = run_gap_suite(&cfg);
+    eprintln!(
+        "  swept {} rows in {:.1}s",
+        gaps.rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    print!("{}", report::render_balancer_gaps(&gaps));
+
+    // The oracle must actually be an oracle on this grid: a sweep where
+    // it stopped certifying is a gap report against nothing. The gated
+    // smoke grid must certify nearly everywhere; the larger full grid
+    // is allowed more best-effort cells.
+    let min_certified = if smoke { 0.8 } else { 0.5 };
+    assert!(
+        gaps.certified_fraction() >= min_certified,
+        "oracle certified only {:.0}% of cases — shrink the grid or \
+         raise --node-budget",
+        gaps.certified_fraction() * 100.0
+    );
+    // Per heuristic too: certification varies by cost model (the
+    // padded regimes have the loosest bounds), and a heuristic with no
+    // certified cases would otherwise report a vacuous 0.0 gap.
+    let min_certified_each = min_certified * 0.5;
+    for &h in orchmllm::balance::gaps::GAP_HEURISTICS {
+        assert!(
+            gaps.certified_fraction_of(h) >= min_certified_each,
+            "oracle certified only {:.0}% of {h}'s cases — its gap \
+             ceiling would gate nothing",
+            gaps.certified_fraction_of(h) * 100.0
+        );
+    }
+
+    // ---- JSON emission (tracked across PRs, uploaded by CI) ------------
+    let mut out = gaps.to_json();
+    if let Json::Obj(m) = &mut out {
+        m.insert("smoke".into(), Json::Bool(smoke));
+    }
+    let path = "BENCH_balancer_gaps.json";
+    std::fs::write(path, out.pretty()).expect("write bench json");
+    println!("wrote {path}");
+
+    // ---- baseline gate -------------------------------------------------
+    if let Some(baseline_path) = args.get("baseline") {
+        let text = read_either(baseline_path).unwrap_or_else(|| {
+            panic!("baseline '{baseline_path}' not found")
+        });
+        let baseline = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("{baseline_path}: {e}"));
+        let regressions = gaps.check_baseline(&baseline);
+        println!("\nbaseline gate ({baseline_path}):");
+        for &h in orchmllm::balance::gaps::GAP_HEURISTICS {
+            println!(
+                "  {h:<12} max gap {:>7.4}  (ceiling {})",
+                gaps.overall_max_gap(h),
+                baseline
+                    .get("max_gap")
+                    .get(h)
+                    .as_f64()
+                    .map(|c| format!("{c:.4}"))
+                    .unwrap_or_else(|| "missing".into())
+            );
+        }
+        assert!(
+            regressions.is_empty(),
+            "approximation-gap regressions:\n  {}",
+            regressions.join("\n  ")
+        );
+        println!("  PASS: no heuristic regressed past its ceiling");
+    }
+}

@@ -265,6 +265,7 @@ pub mod registry {
     use super::*;
     use crate::balance::convpad::ConvPadBalancer;
     use crate::balance::greedy::GreedyLpt;
+    use crate::balance::ilp::IlpBalancer;
     use crate::balance::kk::KarmarkarKarp;
     use crate::balance::padded::BinaryPadded;
     use crate::balance::prebalance::{BucketedPrebalance, FixedBatchPrebalance};
@@ -278,6 +279,7 @@ pub mod registry {
         "quadratic",
         "convpad",
         "kk",
+        "ilp",
         "prebalance-fixed",
         "prebalance-bucketed",
     ];
@@ -300,6 +302,10 @@ pub mod registry {
             "kk" | "karmarkar-karp" | "ldm" => {
                 Arc::new(Guarded(KarmarkarKarp))
             }
+            // ilp self-guards: its incumbent is seeded with the better
+            // of LPT and the identity dealing, and branch-and-bound can
+            // only improve on the seed.
+            "ilp" | "exact" | "bnb" => Arc::new(IlpBalancer::default()),
             "prebalance-fixed" => Arc::new(Guarded(FixedBatchPrebalance)),
             "prebalance-bucketed" => Arc::new(Guarded(BucketedPrebalance)),
             _ => return None,
@@ -334,6 +340,8 @@ mod tests {
         assert_eq!(registry::must("lpt").name(), "greedy");
         assert_eq!(registry::must("karmarkar-karp").name(), "kk");
         assert_eq!(registry::must("no-balance").name(), "none");
+        assert_eq!(registry::must("exact").name(), "ilp");
+        assert_eq!(registry::must("bnb").name(), "ilp");
     }
 
     #[test]

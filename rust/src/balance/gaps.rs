@@ -1,0 +1,534 @@
+//! Approximation-gap harness: every heuristic vs the exact oracle.
+//!
+//! With [`super::ilp`] certifying optima on small instances, every
+//! registered heuristic's distance from the true minimax optimum is
+//! measurable instead of assumed. The harness sweeps a grid of
+//! **modality-incoherence profiles** — length distributions spanning
+//! the near-uniform to pathologically-skewed batches §2.3/§3 describe —
+//! and reports, per `(heuristic, profile)`:
+//!
+//! ```text
+//! gap = makespan(heuristic) / makespan(oracle) − 1
+//! ```
+//!
+//! under the heuristic's *own* cost model, counted only on cases the
+//! oracle certified ([`IlpStatus::Optimal`]) so every gap is against a
+//! true optimum, never a best-effort incumbent. Certified gaps are
+//! nonnegative by construction — a negative gap would mean the "exact"
+//! solver lost to a heuristic and is asserted against.
+//!
+//! `benches/balancer_gaps.rs` drives this, emits
+//! `BENCH_balancer_gaps.json`, and gates CI against the checked-in
+//! ceilings in `ci/gap_baseline.json` ([`GapReport::check_baseline`]);
+//! `sim::report::render_balancer_gaps` renders the table.
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+use super::balancer::registry;
+use super::ilp::{self, IlpStatus};
+use super::scratch::PlanScratch;
+
+/// The heuristics the gap suite measures (everything registered except
+/// the identity, the oracle itself, and the sampling-time baselines).
+pub const GAP_HEURISTICS: &[&str] =
+    &["greedy", "kk", "padded", "quadratic", "convpad"];
+
+/// A modality-incoherence profile: how one phase's active lengths are
+/// distributed across a mini-batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProfileKind {
+    /// Mild incoherence: tight log-normal around the median length.
+    NearUniform,
+    /// Production shape (§2.3): heavy-tailed log-normal.
+    HeavyTail,
+    /// One giant sequence among tiny ones — the padded-batching and
+    /// greedy-commitment worst case.
+    OneGiant,
+    /// Task-mixture bimodality: text-only-like short sequences mixed
+    /// with vision/audio-heavy long ones (Fig. 3's two extremes).
+    Bimodal,
+}
+
+/// A named profile in the sweep grid.
+#[derive(Clone, Copy, Debug)]
+pub struct GapProfile {
+    pub name: &'static str,
+    pub kind: ProfileKind,
+}
+
+/// The default grid: ≥ 4 incoherence profiles, mildest to harshest.
+pub const PROFILES: &[GapProfile] = &[
+    GapProfile { name: "near-uniform", kind: ProfileKind::NearUniform },
+    GapProfile { name: "heavy-tail", kind: ProfileKind::HeavyTail },
+    GapProfile { name: "one-giant", kind: ProfileKind::OneGiant },
+    GapProfile { name: "bimodal", kind: ProfileKind::Bimodal },
+];
+
+impl GapProfile {
+    /// Sample one batch's active lengths.
+    pub fn lengths(&self, rng: &mut Pcg64, n: usize) -> Vec<usize> {
+        match self.kind {
+            ProfileKind::NearUniform => (0..n)
+                .map(|_| {
+                    (rng.lognormal(4.0, 0.2).round() as usize).max(1)
+                })
+                .collect(),
+            ProfileKind::HeavyTail => (0..n)
+                .map(|_| {
+                    (rng.lognormal(3.2, 1.4).round() as usize).max(1)
+                })
+                .collect(),
+            ProfileKind::OneGiant => {
+                let mut lens: Vec<usize> =
+                    (0..n).map(|_| rng.range(2, 16)).collect();
+                let giant = rng.range(0, n.max(1));
+                lens[giant] = rng.range(2_000, 8_000);
+                lens
+            }
+            ProfileKind::Bimodal => (0..n)
+                .map(|_| {
+                    let (mu, sigma) = if rng.bool(0.5) {
+                        (2.5, 0.4) // text-only-like
+                    } else {
+                        (5.5, 0.5) // vision/audio-heavy
+                    };
+                    (rng.lognormal(mu, sigma).round() as usize).max(1)
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Sweep configuration: instance sizes are kept small enough for the
+/// oracle to certify within the node budget.
+#[derive(Clone, Copy, Debug)]
+pub struct GapConfig {
+    /// Cases per `(profile, size)` cell.
+    pub cases_per_cell: usize,
+    /// `(n, d)` instance sizes.
+    pub sizes: &'static [(usize, usize)],
+    /// Oracle node budget per solve.
+    pub node_budget: usize,
+    pub seed: u64,
+}
+
+impl GapConfig {
+    /// The CI smoke grid (also what `ci/gap_baseline.json` gates).
+    pub fn smoke() -> GapConfig {
+        GapConfig {
+            cases_per_cell: 6,
+            sizes: &[(10, 2), (12, 3), (14, 4), (16, 4)],
+            node_budget: 200_000,
+            seed: 42,
+        }
+    }
+
+    /// The full grid (local runs, larger instances).
+    pub fn full() -> GapConfig {
+        GapConfig {
+            cases_per_cell: 12,
+            sizes: &[(12, 3), (16, 4), (20, 5), (24, 6)],
+            node_budget: 1_000_000,
+            seed: 42,
+        }
+    }
+
+    /// A minimal grid for unit tests.
+    pub fn tiny() -> GapConfig {
+        GapConfig {
+            cases_per_cell: 2,
+            sizes: &[(8, 2), (10, 3)],
+            node_budget: 50_000,
+            seed: 7,
+        }
+    }
+}
+
+/// Aggregate gaps of one heuristic on one profile.
+#[derive(Clone, Debug)]
+pub struct GapRow {
+    pub heuristic: String,
+    pub profile: String,
+    pub cases: usize,
+    /// Cases the oracle certified (gaps are measured on these only).
+    pub certified: usize,
+    pub mean_gap: f64,
+    pub max_gap: f64,
+    pub mean_oracle_nodes: f64,
+}
+
+/// The full sweep result.
+#[derive(Clone, Debug)]
+pub struct GapReport {
+    pub rows: Vec<GapRow>,
+    pub node_budget: usize,
+    pub seed: u64,
+}
+
+impl GapReport {
+    /// Max gap of one heuristic across every profile (certified cases).
+    pub fn overall_max_gap(&self, heuristic: &str) -> f64 {
+        self.rows
+            .iter()
+            .filter(|r| r.heuristic == heuristic && r.certified > 0)
+            .map(|r| r.max_gap)
+            .fold(0.0, f64::max)
+    }
+
+    /// Mean gap of one heuristic across every certified case.
+    pub fn overall_mean_gap(&self, heuristic: &str) -> f64 {
+        let (mut sum, mut count) = (0.0f64, 0usize);
+        for r in &self.rows {
+            if r.heuristic == heuristic {
+                sum += r.mean_gap * r.certified as f64;
+                count += r.certified;
+            }
+        }
+        if count == 0 {
+            0.0
+        } else {
+            sum / count as f64
+        }
+    }
+
+    /// Fraction of all `(heuristic, case)` solves the oracle certified.
+    pub fn certified_fraction(&self) -> f64 {
+        let cases: usize = self.rows.iter().map(|r| r.cases).sum();
+        let certified: usize =
+            self.rows.iter().map(|r| r.certified).sum();
+        if cases == 0 {
+            0.0
+        } else {
+            certified as f64 / cases as f64
+        }
+    }
+
+    /// Certified fraction for one heuristic. The gate checks this per
+    /// heuristic, not just in aggregate: a cost model the oracle stops
+    /// certifying would otherwise make its heuristic's gap read as a
+    /// vacuous 0.0 while the aggregate fraction still passes.
+    pub fn certified_fraction_of(&self, heuristic: &str) -> f64 {
+        let (mut cases, mut certified) = (0usize, 0usize);
+        for r in &self.rows {
+            if r.heuristic == heuristic {
+                cases += r.cases;
+                certified += r.certified;
+            }
+        }
+        if cases == 0 {
+            0.0
+        } else {
+            certified as f64 / cases as f64
+        }
+    }
+
+    /// Serialize for `BENCH_balancer_gaps.json`.
+    pub fn to_json(&self) -> Json {
+        let rows = Json::arr(self.rows.iter().map(|r| {
+            Json::obj(vec![
+                ("heuristic", Json::str(&r.heuristic)),
+                ("profile", Json::str(&r.profile)),
+                ("cases", Json::num(r.cases as f64)),
+                ("certified", Json::num(r.certified as f64)),
+                ("mean_gap", Json::num(r.mean_gap)),
+                ("max_gap", Json::num(r.max_gap)),
+                ("mean_oracle_nodes", Json::num(r.mean_oracle_nodes)),
+            ])
+        }));
+        let overall = Json::obj(
+            GAP_HEURISTICS
+                .iter()
+                .map(|&h| {
+                    (
+                        h,
+                        Json::obj(vec![
+                            (
+                                "max_gap",
+                                Json::num(self.overall_max_gap(h)),
+                            ),
+                            (
+                                "mean_gap",
+                                Json::num(self.overall_mean_gap(h)),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("bench", Json::str("balancer_gaps")),
+            ("node_budget", Json::num(self.node_budget as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "certified_fraction",
+                Json::num(self.certified_fraction()),
+            ),
+            ("rows", rows),
+            ("overall", overall),
+        ])
+    }
+
+    /// Gate against a checked-in baseline (`ci/gap_baseline.json`):
+    ///
+    /// ```json
+    /// { "slack": 0.02, "max_gap": { "greedy": 0.34, ... } }
+    /// ```
+    ///
+    /// Returns one message per regression — a heuristic whose measured
+    /// overall max gap exceeds its ceiling plus the slack (which
+    /// absorbs cross-platform libm ULP noise in the generated lengths),
+    /// a heuristic the oracle certified nothing for (its gap would be a
+    /// vacuous 0.0), or a measured heuristic the baseline does not
+    /// cover. Empty = pass.
+    pub fn check_baseline(&self, baseline: &Json) -> Vec<String> {
+        let slack = baseline.get("slack").as_f64().unwrap_or(0.0);
+        let ceilings = baseline.get("max_gap");
+        let mut regressions = Vec::new();
+        for &h in GAP_HEURISTICS {
+            if self.certified_fraction_of(h) == 0.0 {
+                regressions.push(format!(
+                    "{h}: oracle certified no cases — gap unmeasured, \
+                     gate cannot pass vacuously"
+                ));
+                continue;
+            }
+            let measured = self.overall_max_gap(h);
+            match ceilings.get(h).as_f64() {
+                Some(ceiling) => {
+                    if measured > ceiling + slack {
+                        regressions.push(format!(
+                            "{h}: max gap {measured:.4} exceeds \
+                             baseline {ceiling:.4} (+{slack:.4} slack)"
+                        ));
+                    }
+                }
+                None => regressions.push(format!(
+                    "{h}: no baseline entry in ci/gap_baseline.json"
+                )),
+            }
+        }
+        regressions
+    }
+}
+
+/// Run the sweep: every heuristic in [`GAP_HEURISTICS`] against the
+/// oracle on every `(profile, size, case)` cell. Deterministic in
+/// `cfg.seed` — each cell draws from its own forked stream, so cells
+/// are independent of sweep order.
+pub fn run_gap_suite(cfg: &GapConfig) -> GapReport {
+    let mut scratch = PlanScratch::new();
+    let balancers: Vec<_> = GAP_HEURISTICS
+        .iter()
+        .map(|&h| {
+            let b = registry::must(h);
+            let cm = b.cost_model();
+            (b, cm)
+        })
+        .collect();
+    #[derive(Default)]
+    struct Acc {
+        cases: usize,
+        certified: usize,
+        gap_sum: f64,
+        gap_max: f64,
+        nodes_sum: f64,
+    }
+    let mut rows = Vec::new();
+    for profile in PROFILES {
+        let mut accs: Vec<Acc> = (0..balancers.len())
+            .map(|_| Acc::default())
+            .collect();
+        // One stream per (profile, size, case): deterministic cells,
+        // shared by every heuristic so comparisons are like-for-like.
+        let mut root = Pcg64::new(cfg.seed);
+        for (si, &(n, d)) in cfg.sizes.iter().enumerate() {
+            for case in 0..cfg.cases_per_cell {
+                let mut rng = root.fork((si * 1_000 + case) as u64);
+                let lens = profile.lengths(&mut rng, n);
+                // Heuristics sharing a cost model (greedy and kk are
+                // both Linear) share one oracle solve per cell.
+                let mut oracle_cache: Vec<(
+                    crate::balance::cost::CostModel,
+                    crate::balance::ilp::IlpSolution,
+                )> = Vec::new();
+                for ((b, cm), acc) in balancers.iter().zip(&mut accs) {
+                    acc.cases += 1;
+                    let heur = b.balance(&lens, d, &mut scratch);
+                    let oracle = match oracle_cache
+                        .iter()
+                        .find(|(c, _)| c == cm)
+                    {
+                        Some((_, s)) => s.clone(),
+                        None => {
+                            let s = ilp::solve_with(
+                                cm,
+                                &lens,
+                                d,
+                                cfg.node_budget,
+                                &mut scratch,
+                            );
+                            oracle_cache.push((*cm, s.clone()));
+                            s
+                        }
+                    };
+                    if oracle.status != IlpStatus::Optimal
+                        || oracle.makespan <= 0.0
+                    {
+                        continue;
+                    }
+                    let gap =
+                        cm.makespan(&heur) / oracle.makespan - 1.0;
+                    assert!(
+                        gap >= -1e-9,
+                        "{}: heuristic beat a certified optimum \
+                         (gap {gap})",
+                        b.name()
+                    );
+                    let gap = gap.max(0.0);
+                    acc.certified += 1;
+                    acc.gap_sum += gap;
+                    acc.gap_max = acc.gap_max.max(gap);
+                    acc.nodes_sum += oracle.nodes as f64;
+                }
+            }
+        }
+        for (&h, acc) in GAP_HEURISTICS.iter().zip(&accs) {
+            rows.push(GapRow {
+                heuristic: h.to_string(),
+                profile: profile.name.to_string(),
+                cases: acc.cases,
+                certified: acc.certified,
+                mean_gap: if acc.certified == 0 {
+                    0.0
+                } else {
+                    acc.gap_sum / acc.certified as f64
+                },
+                max_gap: acc.gap_max,
+                mean_oracle_nodes: if acc.certified == 0 {
+                    0.0
+                } else {
+                    acc.nodes_sum / acc.certified as f64
+                },
+            });
+        }
+    }
+    GapReport { rows, node_budget: cfg.node_budget, seed: cfg.seed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_suite_certifies_and_reports_nonnegative_gaps() {
+        let report = run_gap_suite(&GapConfig::tiny());
+        assert_eq!(
+            report.rows.len(),
+            PROFILES.len() * GAP_HEURISTICS.len()
+        );
+        assert!(
+            report.certified_fraction() > 0.8,
+            "oracle certified only {:.0}% of tiny instances",
+            report.certified_fraction() * 100.0
+        );
+        for r in &report.rows {
+            assert!(r.max_gap >= r.mean_gap - 1e-12, "{r:?}");
+            assert!(r.certified <= r.cases, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn suite_is_deterministic() {
+        let a = run_gap_suite(&GapConfig::tiny());
+        let b = run_gap_suite(&GapConfig::tiny());
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.heuristic, y.heuristic);
+            assert_eq!(x.certified, y.certified);
+            assert_eq!(x.max_gap, y.max_gap);
+            assert_eq!(x.mean_gap, y.mean_gap);
+        }
+    }
+
+    #[test]
+    fn profiles_produce_their_shapes() {
+        let mut rng = Pcg64::new(1);
+        for p in PROFILES {
+            let lens = p.lengths(&mut rng, 40);
+            assert_eq!(lens.len(), 40);
+            assert!(lens.iter().all(|&l| l >= 1), "{}", p.name);
+        }
+        let giant = GapProfile {
+            name: "one-giant",
+            kind: ProfileKind::OneGiant,
+        };
+        let lens = giant.lengths(&mut rng, 30);
+        assert!(lens.iter().any(|&l| l >= 2_000));
+    }
+
+    #[test]
+    fn json_roundtrip_exposes_overall_gaps() {
+        let report = run_gap_suite(&GapConfig::tiny());
+        let j = report.to_json();
+        assert_eq!(j.get("bench").as_str(), Some("balancer_gaps"));
+        for &h in GAP_HEURISTICS {
+            assert!(
+                j.get("overall").get(h).get("max_gap").as_f64().is_some(),
+                "{h} missing from overall"
+            );
+        }
+        let rows = j.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), report.rows.len());
+    }
+
+    #[test]
+    fn gate_fails_when_a_heuristic_has_no_certified_cases() {
+        // A cost model the oracle stops certifying must fail the gate
+        // loudly, not pass with a vacuous 0.0 gap.
+        let mut report = run_gap_suite(&GapConfig::tiny());
+        for r in &mut report.rows {
+            if r.heuristic == "quadratic" {
+                r.certified = 0;
+            }
+        }
+        let generous = Json::parse(
+            r#"{"slack": 0.0, "max_gap": {"greedy": 10.0, "kk": 10.0,
+                "quadratic": 10.0, "padded": 10.0, "convpad": 10.0}}"#,
+        )
+        .unwrap();
+        let regressions = report.check_baseline(&generous);
+        assert!(
+            regressions
+                .iter()
+                .any(|r| r.contains("quadratic") && r.contains("unmeasured")),
+            "{regressions:?}"
+        );
+    }
+
+    #[test]
+    fn baseline_gate_passes_and_fails_correctly() {
+        let report = run_gap_suite(&GapConfig::tiny());
+        // Generous ceilings: must pass.
+        let pass = Json::parse(
+            r#"{"slack": 0.02, "max_gap": {"greedy": 10.0, "kk": 10.0,
+                "quadratic": 10.0, "padded": 10.0, "convpad": 10.0}}"#,
+        )
+        .unwrap();
+        assert!(report.check_baseline(&pass).is_empty());
+        // Impossible ceilings: every heuristic with a positive gap
+        // regresses, and a missing entry is itself a failure.
+        let fail = Json::parse(
+            r#"{"slack": 0.0, "max_gap": {"greedy": -1.0}}"#,
+        )
+        .unwrap();
+        let regressions = report.check_baseline(&fail);
+        assert!(
+            regressions.iter().any(|r| r.contains("greedy")),
+            "{regressions:?}"
+        );
+        assert!(
+            regressions.iter().any(|r| r.contains("no baseline entry")),
+            "{regressions:?}"
+        );
+    }
+}

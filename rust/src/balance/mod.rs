@@ -19,6 +19,7 @@
 //! | `quadratic` | [`quadratic::balance_quadratic`] | no padding | β ≈ α          | Alg 4 (3rd) |
 //! | `convpad`   | [`convpad::balance_convpad`]     | padding    | conv-attention | Alg 5 (4th) |
 //! | `kk`        | [`kk::balance_kk`] (Karmarkar–Karp largest-differencing, LPT fallback) | no padding | β ≪ α | — |
+//! | `ilp`       | [`ilp::solve`] (exact branch-and-bound, the optimality oracle for small n·d) | no padding | β ≪ α | §5.1 opt |
 //! | `prebalance-*` | sampling-time baselines as post-hoc balancers | — | — | §3.2 |
 //!
 //! [`prebalance`] also holds the original sampling-time baseline
@@ -36,25 +37,37 @@
 //! quantized length-histogram sketch — both behind
 //! [`Balancer::plan_incremental`], with a certified fallback to the
 //! from-scratch solve.
+//!
+//! [`ilp`] is the exact oracle (branch-and-bound with a node budget and
+//! a certified-optimal status), [`gaps`] measures every heuristic's
+//! approximation gap against it across modality-incoherence profiles
+//! (`BENCH_balancer_gaps.json`, gated in CI), and [`select`] picks the
+//! per-phase algorithm from the registry's metadata and the model
+//! configuration (`--balancer auto`).
 
 pub mod balancer;
 pub mod cache;
 pub mod convpad;
 pub mod cost;
+pub mod gaps;
 pub mod greedy;
+pub mod ilp;
 pub mod incremental;
 pub mod kk;
 pub mod padded;
 pub mod prebalance;
 pub mod quadratic;
 pub mod scratch;
+pub mod select;
 pub mod types;
 
 pub use balancer::{registry, Balancer, CostRegime};
 pub use cache::{PlanCache, Sketch, DEFAULT_PLAN_CACHE_SIZE};
 pub use cost::{CostModel, PhaseCost};
+pub use ilp::{IlpSolution, IlpStatus};
 pub use incremental::{IncrementalPlan, PlanSource, REPAIR_TOLERANCE};
 pub use scratch::PlanScratch;
+pub use select::{select_for_phase, PhaseTraits, Selection};
 pub use types::{Assignment, BatchingMode, ExampleRef};
 
 use crate::util::rng::Pcg64;

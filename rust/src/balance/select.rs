@@ -1,0 +1,290 @@
+//! Metadata-driven balancer auto-selection (`--balancer auto`).
+//!
+//! §5.1 tailors the post-balancing algorithm to each phase's cost
+//! regime; until now that tailoring was hard-coded in
+//! `OrchestratorConfig::orchmllm`. This module derives it instead: a
+//! phase is summarized as [`PhaseTraits`] (conv front-end? padded
+//! batching? how large is the attention share β·L/α at the phase's
+//! straggler length?), the traits map to a wanted `(batching_mode,
+//! cost_regime)` pair, and the pair resolves against the **registry's
+//! own metadata** — so a newly registered algorithm with the right
+//! metadata is picked up without touching the selection code.
+//!
+//! Selection rules, in priority order (documented in DESIGN.md §Exact
+//! Balancer & Auto-Selection):
+//!
+//! 1. conv front-end → `(Padded, ConvAttention)` — conv encoders cannot
+//!    pack, and their padded attention term dominates (App. A);
+//! 2. padded batching (without conv) → `(Padded, Linear)`;
+//! 3. `β·L/α ≥` [`QUADRATIC_ATTENTION_RATIO`] → `(Unpadded,
+//!    Quadratic)` — the attention quadratic is no longer negligible at
+//!    the phase's longest sequences, so the balancer must trade the
+//!    linear and quadratic terms;
+//! 4. otherwise → `(Unpadded, Linear)`.
+//!
+//! Resolution scans [`registry::NAMES`] in presentation order and takes
+//! the first non-identity, non-oracle balancer whose metadata matches;
+//! if nothing matches (a stripped-down registry), it falls back to
+//! `(Unpadded, Linear)` and finally to the identity balancer — `auto`
+//! never fails, it only degrades.
+
+use std::sync::Arc;
+
+use super::balancer::{registry, Balancer, CostRegime};
+use super::types::BatchingMode;
+
+/// Spelling of the auto-selection pseudo-balancer on `--balancer`.
+pub const AUTO: &str = "auto";
+
+/// Attention-to-linear FLOP ratio `β·L/α` (at the phase's maximum
+/// sequence length `L`) above which the quadratic-aware balancer is
+/// selected. 0.15 ≈ "the stragglers the balancer exists to fix spend
+/// ≥ 15% of their time in attention".
+pub const QUADRATIC_ATTENTION_RATIO: f64 = 0.15;
+
+/// The per-phase facts auto-selection decides on, derived from the
+/// model configuration (`MllmConfig::phase_traits`) or stated directly
+/// by a caller that knows its architecture (the trainer).
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseTraits {
+    /// The encoder has a convolutional front-end (Whisper-style
+    /// ConvTransformer): attention must pad, cost is `λ·b·max(l)²`.
+    pub conv_frontend: bool,
+    /// The phase batches with padding (Eq. 1 `L = b·max(l)`).
+    pub padded: bool,
+    /// `β·L/α`: attention FLOPs over token-linear FLOPs for one
+    /// sequence at the phase's maximum length.
+    pub beta_len_over_alpha: f64,
+}
+
+impl PhaseTraits {
+    /// An unpadded phase whose attention share is negligible — the
+    /// trainer's tiny encoders and LLM trunk.
+    pub fn unpadded_linear() -> PhaseTraits {
+        PhaseTraits {
+            conv_frontend: false,
+            padded: false,
+            beta_len_over_alpha: 0.0,
+        }
+    }
+
+    /// A conv-front-end encoder phase (padding forced).
+    pub fn conv_encoder() -> PhaseTraits {
+        PhaseTraits {
+            conv_frontend: true,
+            padded: true,
+            beta_len_over_alpha: 0.0,
+        }
+    }
+}
+
+/// One resolved selection: the balancer plus the rule that produced it
+/// (surfaced by `orchmllm balancers` so decisions are inspectable).
+#[derive(Clone)]
+pub struct Selection {
+    pub balancer: Arc<dyn Balancer>,
+    pub rule: String,
+}
+
+impl std::fmt::Debug for Selection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Selection")
+            .field("balancer", &self.balancer.name())
+            .field("rule", &self.rule)
+            .finish()
+    }
+}
+
+/// The first registered balancer (scanning `names` in order) whose
+/// metadata matches the wanted batching mode + cost regime. Identity
+/// balancers and the exact oracle never auto-select: `none` would
+/// disable balancing and `ilp` is an oracle, not a per-step solver.
+pub fn select_by_metadata(
+    names: &[&str],
+    mode: BatchingMode,
+    regime: CostRegime,
+) -> Option<Arc<dyn Balancer>> {
+    for name in names {
+        let Some(b) = registry::create(name) else { continue };
+        if b.is_identity() || b.name() == "ilp" {
+            continue;
+        }
+        if b.batching_mode() == mode && b.cost_regime() == regime {
+            return Some(b);
+        }
+    }
+    None
+}
+
+/// Resolve a phase's balancer from its traits over the full registry.
+pub fn select_for_phase(traits: &PhaseTraits) -> Selection {
+    select_for_phase_from(registry::NAMES, traits)
+}
+
+/// [`select_for_phase`] over an explicit name list — the testable core,
+/// and the definition of "falls back safely": a registry missing the
+/// wanted metadata degrades to `(Unpadded, Linear)`, and a registry
+/// with no usable balancer at all degrades to the identity.
+pub fn select_for_phase_from(
+    names: &[&str],
+    traits: &PhaseTraits,
+) -> Selection {
+    let (mode, regime, rule) = if traits.conv_frontend {
+        (
+            BatchingMode::Padded,
+            CostRegime::ConvAttention,
+            "conv front-end → conv-attention regime".to_string(),
+        )
+    } else if traits.padded {
+        (
+            BatchingMode::Padded,
+            CostRegime::Linear,
+            "padded batching → padded linear regime".to_string(),
+        )
+    } else if traits.beta_len_over_alpha >= QUADRATIC_ATTENTION_RATIO {
+        (
+            BatchingMode::Unpadded,
+            CostRegime::Quadratic,
+            format!(
+                "β·L/α = {:.2} ≥ {QUADRATIC_ATTENTION_RATIO} → \
+                 quadratic regime",
+                traits.beta_len_over_alpha
+            ),
+        )
+    } else {
+        (
+            BatchingMode::Unpadded,
+            CostRegime::Linear,
+            format!(
+                "β·L/α = {:.2} < {QUADRATIC_ATTENTION_RATIO} → \
+                 linear unpadded regime",
+                traits.beta_len_over_alpha
+            ),
+        )
+    };
+    if let Some(b) = select_by_metadata(names, mode, regime) {
+        return Selection { balancer: b, rule };
+    }
+    // Requested metadata unavailable: degrade to linear unpadded.
+    if let Some(b) =
+        select_by_metadata(names, BatchingMode::Unpadded, CostRegime::Linear)
+    {
+        return Selection {
+            balancer: b,
+            rule: format!("{rule} (unavailable; linear fallback)"),
+        };
+    }
+    Selection {
+        balancer: Arc::new(super::balancer::NoBalance),
+        rule: format!("{rule} (no registered balancer; identity fallback)"),
+    }
+}
+
+/// The trainer's per-phase traits (vision, audio, llm): its tiny model
+/// mirrors the paper's architecture — a conv front-end on the audio
+/// encoder forces padding there, while the tiny hidden sizes keep the
+/// attention share of the other phases negligible.
+pub fn trainer_phase_traits() -> [PhaseTraits; 3] {
+    [
+        PhaseTraits::unpadded_linear(),
+        PhaseTraits::conv_encoder(),
+        PhaseTraits::unpadded_linear(),
+    ]
+}
+
+/// Whether `name` is a valid `--balancer` spelling: a registered
+/// algorithm (or alias) or the `auto` pseudo-balancer.
+pub fn is_valid_spec(name: &str) -> bool {
+    name == AUTO || registry::create(name).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rules_map_traits_to_the_documented_algorithms() {
+        let conv = select_for_phase(&PhaseTraits::conv_encoder());
+        assert_eq!(conv.balancer.name(), "convpad");
+        assert!(conv.rule.contains("conv front-end"), "{}", conv.rule);
+
+        let padded = select_for_phase(&PhaseTraits {
+            conv_frontend: false,
+            padded: true,
+            beta_len_over_alpha: 0.0,
+        });
+        assert_eq!(padded.balancer.name(), "padded");
+
+        let quad = select_for_phase(&PhaseTraits {
+            conv_frontend: false,
+            padded: false,
+            beta_len_over_alpha: 0.3,
+        });
+        assert_eq!(quad.balancer.name(), "quadratic");
+
+        let lin = select_for_phase(&PhaseTraits::unpadded_linear());
+        assert_eq!(lin.balancer.name(), "greedy");
+    }
+
+    #[test]
+    fn conv_outranks_the_quadratic_rule() {
+        let s = select_for_phase(&PhaseTraits {
+            conv_frontend: true,
+            padded: true,
+            beta_len_over_alpha: 10.0,
+        });
+        assert_eq!(s.balancer.name(), "convpad");
+    }
+
+    #[test]
+    fn missing_metadata_falls_back_safely() {
+        // A registry without convpad degrades conv phases to linear.
+        let s = select_for_phase_from(
+            &["none", "greedy", "kk"],
+            &PhaseTraits::conv_encoder(),
+        );
+        assert_eq!(s.balancer.name(), "greedy");
+        assert!(s.rule.contains("fallback"), "{}", s.rule);
+
+        // A registry with nothing usable degrades to the identity.
+        let s = select_for_phase_from(
+            &["none", "bogus"],
+            &PhaseTraits::unpadded_linear(),
+        );
+        assert!(s.balancer.is_identity());
+        assert!(s.rule.contains("identity fallback"), "{}", s.rule);
+    }
+
+    #[test]
+    fn oracle_and_identity_never_auto_select() {
+        // ilp matches (Unpadded, Linear) metadata but is excluded, and
+        // scanning it first must not shadow greedy.
+        let s = select_for_phase_from(
+            &["none", "ilp", "greedy"],
+            &PhaseTraits::unpadded_linear(),
+        );
+        assert_eq!(s.balancer.name(), "greedy");
+    }
+
+    #[test]
+    fn selection_is_deterministic() {
+        let t = PhaseTraits {
+            conv_frontend: false,
+            padded: false,
+            beta_len_over_alpha: 0.2,
+        };
+        let a = select_for_phase(&t);
+        let b = select_for_phase(&t);
+        assert_eq!(a.balancer.name(), b.balancer.name());
+        assert_eq!(a.rule, b.rule);
+    }
+
+    #[test]
+    fn spec_validation_accepts_auto_and_registry_names() {
+        assert!(is_valid_spec("auto"));
+        assert!(is_valid_spec("greedy"));
+        assert!(is_valid_spec("ilp"));
+        assert!(is_valid_spec("lpt")); // alias
+        assert!(!is_valid_spec("bogus"));
+    }
+}

@@ -208,7 +208,7 @@ impl TrainRunConfig {
     }
 
     /// Validate user-supplied knobs (depth bounds, cache size,
-    /// transport name) with a printable error.
+    /// transport and balancer names) with a printable error.
     pub fn validate(&self) -> anyhow::Result<()> {
         self.pipeline_config()
             .validate()
@@ -221,6 +221,15 @@ impl TrainRunConfig {
                 self.transport,
                 crate::comm::transport::registry::NAMES
             );
+        }
+        if let Some(name) = &self.balancer {
+            if !crate::balance::select::is_valid_spec(name) {
+                anyhow::bail!(
+                    "unknown balancer '{name}' (registered: {:?}, plus \
+                     'auto')",
+                    crate::balance::registry::NAMES
+                );
+            }
         }
         Ok(())
     }
@@ -297,6 +306,24 @@ mod tests {
         let err = bad.validate().unwrap_err().to_string();
         assert!(err.contains("unknown transport"), "{err}");
         assert!(err.contains("inproc"), "{err}");
+    }
+
+    #[test]
+    fn train_config_validates_balancer_specs() {
+        for name in ["auto", "greedy", "ilp", "none"] {
+            let c = TrainRunConfig {
+                balancer: Some(name.into()),
+                ..TrainRunConfig::default()
+            };
+            assert!(c.validate().is_ok(), "{name} rejected");
+        }
+        let bad = TrainRunConfig {
+            balancer: Some("not-an-algorithm".into()),
+            ..TrainRunConfig::default()
+        };
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown balancer"), "{err}");
+        assert!(err.contains("auto"), "{err}");
     }
 
     #[test]

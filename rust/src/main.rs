@@ -12,13 +12,14 @@
 //! Options accept `--key value` or `--key=value`; run with no arguments
 //! for usage.
 
-use orchmllm::balance::registry;
+use orchmllm::balance::{registry, select};
 use orchmllm::comm::calibrate::{calibrate, CalibrationSpec};
 use orchmllm::comm::transport::registry as transport_registry;
 use orchmllm::config::{SimRunConfig, TrainRunConfig};
 use orchmllm::data::incoherence::IncoherenceReport;
 use orchmllm::data::synth::{DatasetConfig, Generator};
 use orchmllm::model::config::MllmConfig;
+use orchmllm::model::flops::PhaseKind;
 use orchmllm::sim::engine::{simulate_run, simulate_run_named, SystemKind};
 use orchmllm::sim::report;
 use orchmllm::trainer;
@@ -30,17 +31,18 @@ orchmllm — OrchMLLM reproduction CLI
 USAGE:
   orchmllm sim         [--system orchmllm] [--model mllm-10b] [--gpus 128]
                        [--mini-batch 60] [--steps 5] [--seed 42]
-                       [--balancer greedy|padded|quadratic|convpad|kk|none]
+                       [--balancer auto|greedy|padded|quadratic|convpad|
+                                   kk|ilp|none]
                        [--config file.json]
   orchmllm overall     [--gpus 2560] [--steps 3]       # Fig. 8 + 9
   orchmllm overhead    [--steps 3]                     # Table 2
   orchmllm incoherence [--n 100000] [--seed 7]         # Fig. 3
   orchmllm train       [--artifacts artifacts/test] [--workers 4]
                        [--mini-batch 4] [--steps 20] [--lr 0.05]
-                       [--balancer <name>] [--no-balance]
+                       [--balancer <name|auto>] [--no-balance]
                        [--pipeline-depth 2] [--plan-cache-size 32]
                        [--transport inproc|tcp] [--calibrate-comm]
-  orchmllm balancers                                 # registry listing
+  orchmllm balancers                                 # registry + auto rules
   orchmllm transports  [--calibrate] [--workers 4]   # comm backends
   orchmllm help
 ";
@@ -75,9 +77,10 @@ fn cmd_sim(args: &Args) {
         }
     };
     if let Some(name) = &cfg.balancer {
-        if registry::create(name).is_none() {
+        if !select::is_valid_spec(name) {
             eprintln!(
-                "unknown --balancer '{name}'; registered: {:?}",
+                "unknown --balancer '{name}'; registered: {:?} (plus \
+                 'auto')",
                 registry::NAMES
             );
             std::process::exit(2);
@@ -196,20 +199,49 @@ fn cmd_balancers() {
     println!("registered post-balancing algorithms:\n");
     println!(
         "{:<22}{:<12}{:<16}{}",
-        "name", "batching", "cost regime", "identity"
+        "name", "batching", "cost regime", "notes"
     );
     for name in registry::NAMES {
         let b = registry::must(name);
+        let notes = if b.is_identity() {
+            "identity"
+        } else if b.name() == "ilp" {
+            "exact oracle (node-budgeted)"
+        } else {
+            ""
+        };
         println!(
             "{:<22}{:<12}{:<16}{}",
             b.name(),
             format!("{:?}", b.batching_mode()).to_lowercase(),
             format!("{:?}", b.cost_regime()).to_lowercase(),
-            if b.is_identity() { "yes" } else { "" }
+            notes
         );
     }
+
+    // The `--balancer auto` resolution, per model, with the rule that
+    // produced each pick — the selection is metadata-driven, so this
+    // listing is the place to inspect it.
+    println!("\nauto-selection (`--balancer auto`), by model:\n");
     println!(
-        "\nselect with `--balancer <name>` on `sim` and `train`."
+        "{:<12}{:<10}{:<12}{}",
+        "model", "phase", "balancer", "rule"
+    );
+    for model in MllmConfig::all() {
+        for phase in PhaseKind::ALL {
+            let sel =
+                select::select_for_phase(&model.phase_traits(phase));
+            println!(
+                "{:<12}{:<10}{:<12}{}",
+                model.name,
+                phase.name(),
+                sel.balancer.name(),
+                sel.rule
+            );
+        }
+    }
+    println!(
+        "\nselect with `--balancer <name|auto>` on `sim` and `train`."
     );
 }
 

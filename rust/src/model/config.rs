@@ -22,6 +22,10 @@ pub struct SubmoduleConfig {
     pub hidden: usize,
     pub ffn_hidden: usize,
     pub style: BlockStyle,
+    /// Convolutional front-end before the transformer stack (the
+    /// Whisper-style audio encoder): attention must pad, which drives
+    /// balancer auto-selection toward the conv-attention regime.
+    pub conv_frontend: bool,
 }
 
 impl SubmoduleConfig {
@@ -59,9 +63,9 @@ impl MllmConfig {
     pub fn mllm_10b() -> MllmConfig {
         MllmConfig {
             name: "MLLM-10B",
-            llm: SubmoduleConfig { layers: 28, hidden: 3584, ffn_hidden: 18944, style: BlockStyle::Gqa },
-            vision: SubmoduleConfig { layers: 36, hidden: 2048, ffn_hidden: 8192, style: BlockStyle::Encoder },
-            audio: SubmoduleConfig { layers: 32, hidden: 1280, ffn_hidden: 5120, style: BlockStyle::Encoder },
+            llm: SubmoduleConfig { layers: 28, hidden: 3584, ffn_hidden: 18944, style: BlockStyle::Gqa, conv_frontend: false },
+            vision: SubmoduleConfig { layers: 36, hidden: 2048, ffn_hidden: 8192, style: BlockStyle::Encoder, conv_frontend: false },
+            audio: SubmoduleConfig { layers: 32, hidden: 1280, ffn_hidden: 5120, style: BlockStyle::Encoder, conv_frontend: true },
             vis_downsample: 1,
             aud_downsample: 2,
             max_image_res: 448,
@@ -71,9 +75,9 @@ impl MllmConfig {
     pub fn mllm_18b() -> MllmConfig {
         MllmConfig {
             name: "MLLM-18B",
-            llm: SubmoduleConfig { layers: 48, hidden: 5120, ffn_hidden: 13824, style: BlockStyle::Gqa },
-            vision: SubmoduleConfig { layers: 40, hidden: 2400, ffn_hidden: 9600, style: BlockStyle::Encoder },
-            audio: SubmoduleConfig { layers: 32, hidden: 1280, ffn_hidden: 5120, style: BlockStyle::Encoder },
+            llm: SubmoduleConfig { layers: 48, hidden: 5120, ffn_hidden: 13824, style: BlockStyle::Gqa, conv_frontend: false },
+            vision: SubmoduleConfig { layers: 40, hidden: 2400, ffn_hidden: 9600, style: BlockStyle::Encoder, conv_frontend: false },
+            audio: SubmoduleConfig { layers: 32, hidden: 1280, ffn_hidden: 5120, style: BlockStyle::Encoder, conv_frontend: true },
             vis_downsample: 4,
             aud_downsample: 2,
             max_image_res: 672,
@@ -83,9 +87,9 @@ impl MllmConfig {
     pub fn mllm_84b() -> MllmConfig {
         MllmConfig {
             name: "MLLM-84B",
-            llm: SubmoduleConfig { layers: 80, hidden: 8192, ffn_hidden: 29568, style: BlockStyle::Gqa },
-            vision: SubmoduleConfig { layers: 45, hidden: 3200, ffn_hidden: 12800, style: BlockStyle::Encoder },
-            audio: SubmoduleConfig { layers: 48, hidden: 3072, ffn_hidden: 12288, style: BlockStyle::Encoder },
+            llm: SubmoduleConfig { layers: 80, hidden: 8192, ffn_hidden: 29568, style: BlockStyle::Gqa, conv_frontend: false },
+            vision: SubmoduleConfig { layers: 45, hidden: 3200, ffn_hidden: 12800, style: BlockStyle::Encoder, conv_frontend: false },
+            audio: SubmoduleConfig { layers: 48, hidden: 3072, ffn_hidden: 12288, style: BlockStyle::Encoder, conv_frontend: true },
             vis_downsample: 4,
             aud_downsample: 4,
             max_image_res: 896,
@@ -113,6 +117,42 @@ impl MllmConfig {
     pub fn max_patches(&self) -> usize {
         let side = self.max_image_res / 14;
         side * side
+    }
+
+    /// The per-phase facts balancer auto-selection decides on
+    /// (`--balancer auto`, DESIGN.md §Exact Balancer & Auto-Selection):
+    /// the submodule's front-end + batching constraints, and the
+    /// attention share `β·L/α` at the phase's *maximum* sequence length
+    /// — the straggler length post-balancing exists to fix. Length caps
+    /// come from this config (vision) and the dataset defaults
+    /// (audio frames, text tokens), matching what `sim::engine` feeds
+    /// the generator.
+    pub fn phase_traits(
+        &self,
+        phase: crate::model::flops::PhaseKind,
+    ) -> crate::balance::select::PhaseTraits {
+        use crate::data::synth::DatasetConfig;
+        use crate::model::flops::{PhaseKind, SubmoduleCost};
+        let data = DatasetConfig::default();
+        let (sub, max_len) = match phase {
+            PhaseKind::Vision => (&self.vision, self.max_patches()),
+            PhaseKind::Audio => (&self.audio, data.max_aud),
+            PhaseKind::Llm => (
+                &self.llm,
+                data.max_text
+                    + self.max_patches() / self.vis_downsample
+                    + data.max_aud / self.aud_downsample,
+            ),
+        };
+        let cost = SubmoduleCost::from_config(sub, 0.0);
+        crate::balance::select::PhaseTraits {
+            conv_frontend: sub.conv_frontend,
+            // A conv front-end is the only thing forcing padding in the
+            // Table-1 architectures (paper §8 "Input preprocessing").
+            padded: sub.conv_frontend,
+            beta_len_over_alpha: cost.beta_flops * max_len as f64
+                / cost.alpha_flops,
+        }
     }
 }
 
@@ -151,5 +191,30 @@ mod tests {
     fn max_patches_scale_with_resolution() {
         assert_eq!(MllmConfig::mllm_10b().max_patches(), 32 * 32);
         assert_eq!(MllmConfig::mllm_84b().max_patches(), 64 * 64);
+    }
+
+    #[test]
+    fn phase_traits_reflect_the_architecture() {
+        use crate::model::flops::PhaseKind;
+        for m in MllmConfig::all() {
+            let vis = m.phase_traits(PhaseKind::Vision);
+            let aud = m.phase_traits(PhaseKind::Audio);
+            let llm = m.phase_traits(PhaseKind::Llm);
+            // Only the Whisper-style audio encoder has a conv
+            // front-end, and conv is what forces padding.
+            assert!(!vis.conv_frontend && !vis.padded, "{}", m.name);
+            assert!(aud.conv_frontend && aud.padded, "{}", m.name);
+            assert!(!llm.conv_frontend && !llm.padded, "{}", m.name);
+            // Attention share is a sane fraction at every Table-1 scale.
+            for t in [vis, llm] {
+                assert!(
+                    t.beta_len_over_alpha > 0.0
+                        && t.beta_len_over_alpha < 1.0,
+                    "{}: β·L/α = {}",
+                    m.name,
+                    t.beta_len_over_alpha
+                );
+            }
+        }
     }
 }

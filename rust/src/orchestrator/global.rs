@@ -127,6 +127,46 @@ impl OrchestratorConfig {
         self.llm_balancer = b;
         self
     }
+
+    /// Apply metadata-driven selections to the three phases from the
+    /// given `(vision, audio, llm)` traits — the shared core of
+    /// [`OrchestratorConfig::with_auto_balancers`] and the trainer's
+    /// `--balancer auto` path.
+    pub fn with_selected_balancers(
+        mut self,
+        traits: &[crate::balance::select::PhaseTraits; 3],
+    ) -> OrchestratorConfig {
+        use crate::balance::select::select_for_phase;
+        self.vision_balancer = select_for_phase(&traits[0]).balancer;
+        self.audio_balancer = select_for_phase(&traits[1]).balancer;
+        self.llm_balancer = select_for_phase(&traits[2]).balancer;
+        self
+    }
+
+    /// Auto-select each phase's balancer from the registry's metadata
+    /// and the model configuration (`--balancer auto`): conv front-end
+    /// → conv-attention regime, large β·L/α → quadratic regime, else
+    /// linear — see `balance::select` and DESIGN.md §Exact Balancer &
+    /// Auto-Selection.
+    pub fn with_auto_balancers(
+        self,
+        model: &crate::model::config::MllmConfig,
+    ) -> OrchestratorConfig {
+        self.with_selected_balancers(&[
+            model.phase_traits(PhaseKind::Vision),
+            model.phase_traits(PhaseKind::Audio),
+            model.phase_traits(PhaseKind::Llm),
+        ])
+    }
+
+    /// The auto-selected configuration for a model: `orchmllm` defaults
+    /// with every phase's balancer resolved by metadata.
+    pub fn auto(
+        model: &crate::model::config::MllmConfig,
+        embed_bytes: f64,
+    ) -> OrchestratorConfig {
+        Self::orchmllm(embed_bytes).with_auto_balancers(model)
+    }
 }
 
 /// One phase's plan plus the composed output route (encoders only).

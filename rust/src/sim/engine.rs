@@ -370,7 +370,11 @@ pub fn simulate_run_named(
         .orchestrator_config(model)
         .expect("non-megatron system");
     if let Some(name) = balancer {
-        cfg = cfg.with_balancer(registry::must(name));
+        cfg = if name == crate::balance::select::AUTO {
+            cfg.with_auto_balancers(model)
+        } else {
+            cfg.with_balancer(registry::must(name))
+        };
     }
     let orch = Orchestrator::new(cfg.clone());
     let mut generator = Generator::new(data_cfg, seed);

@@ -2,6 +2,7 @@
 //! outputs.
 
 use super::engine::RunSummary;
+use crate::balance::gaps::GapReport;
 use crate::comm::calibrate::Calibration;
 use crate::comm::topology::Topology;
 
@@ -151,6 +152,37 @@ pub fn render_mfu_memory(rows: &[Vec<RunSummary>]) -> String {
     out
 }
 
+/// Render the approximation-gap sweep (heuristic vs exact oracle, the
+/// `benches/balancer_gaps.rs` output): one row per `(heuristic,
+/// profile)` with mean/max gap over oracle-certified cases.
+pub fn render_balancer_gaps(report: &GapReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== approximation gaps vs ilp oracle (node budget {}, \
+         certified {:.0}%) ==\n",
+        report.node_budget,
+        report.certified_fraction() * 100.0
+    ));
+    out.push_str(&format!(
+        "{:<12}{:<14}{:>7}{:>7}{:>10}{:>10}{:>14}\n",
+        "heuristic", "profile", "cases", "cert", "mean %", "max %",
+        "oracle nodes"
+    ));
+    for r in &report.rows {
+        out.push_str(&format!(
+            "{:<12}{:<14}{:>7}{:>7}{:>10.2}{:>10.2}{:>14.0}\n",
+            r.heuristic,
+            r.profile,
+            r.cases,
+            r.certified,
+            r.mean_gap * 100.0,
+            r.max_gap * 100.0,
+            r.mean_oracle_nodes
+        ));
+    }
+    out
+}
+
 /// Render a fitted transport calibration next to the analytic
 /// reference constants the cost models would otherwise use — the
 /// "measured vs hard-coded" comparison the comm bench and the
@@ -205,6 +237,17 @@ mod tests {
         assert!(s2.contains("Cache hit"));
         let s3 = render_mfu_memory(&[vec![a], vec![b]]);
         assert!(s3.contains("mem GB"));
+    }
+
+    #[test]
+    fn renders_gap_table() {
+        use crate::balance::gaps::{run_gap_suite, GapConfig};
+        let report = run_gap_suite(&GapConfig::tiny());
+        let s = render_balancer_gaps(&report);
+        assert!(s.contains("ilp oracle"), "{s}");
+        assert!(s.contains("greedy"));
+        assert!(s.contains("one-giant"));
+        assert!(s.contains("max %"));
     }
 
     #[test]

@@ -19,7 +19,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::balance::registry;
+use crate::balance::{registry, select};
 use crate::comm::calibrate::{self, CalibrationSpec};
 use crate::comm::topology::Topology;
 use crate::comm::transport::registry as transport_registry;
@@ -129,13 +129,22 @@ fn orchestrator_config(
     };
     if cfg.balance {
         if let Some(name) = &cfg.balancer {
-            let b = registry::create(name).ok_or_else(|| {
-                anyhow!(
-                    "unknown balancer '{name}' (registered: {:?})",
-                    registry::NAMES
-                )
-            })?;
-            orch_cfg = orch_cfg.with_balancer(b);
+            if name == select::AUTO {
+                // The tiny trainer model mirrors the paper architecture
+                // (conv audio front-end, negligible attention share
+                // elsewhere) — resolve each phase from that metadata.
+                orch_cfg = orch_cfg.with_selected_balancers(
+                    &select::trainer_phase_traits(),
+                );
+            } else {
+                let b = registry::create(name).ok_or_else(|| {
+                    anyhow!(
+                        "unknown balancer '{name}' (registered: {:?})",
+                        registry::NAMES
+                    )
+                })?;
+                orch_cfg = orch_cfg.with_balancer(b);
+            }
         }
     }
     Ok(orch_cfg)
@@ -308,6 +317,14 @@ mod tests {
 
         cfg.balancer = Some("not-an-algorithm".into());
         assert!(orchestrator_config(&cfg, 128.0).is_err());
+
+        // `auto` resolves per phase from the trainer's architecture:
+        // conv audio front-end → convpad, everything else linear.
+        cfg.balancer = Some("auto".into());
+        let oc = orchestrator_config(&cfg, 128.0).unwrap();
+        assert_eq!(oc.vision_balancer.name(), "greedy");
+        assert_eq!(oc.audio_balancer.name(), "convpad");
+        assert_eq!(oc.llm_balancer.name(), "greedy");
 
         cfg.balance = false;
         // --no-balance wins over --balancer.

@@ -1,0 +1,179 @@
+//! Balancer auto-selection (`--balancer auto`), end to end: the
+//! documented trait→algorithm rules, the Table-1 model resolutions,
+//! safe fallback on missing registry metadata, determinism, and the
+//! orchestrator/simulator wiring.
+
+use orchmllm::balance::select::{
+    select_for_phase, select_for_phase_from, PhaseTraits,
+    QUADRATIC_ATTENTION_RATIO,
+};
+use orchmllm::model::config::MllmConfig;
+use orchmllm::model::flops::PhaseKind;
+use orchmllm::orchestrator::global::OrchestratorConfig;
+use orchmllm::sim::engine::{simulate_run_named, SystemKind};
+
+#[test]
+fn trait_table_resolves_to_the_documented_algorithms() {
+    struct Case {
+        label: &'static str,
+        traits: PhaseTraits,
+        expect: &'static str,
+    }
+    let cases = [
+        Case {
+            label: "conv front-end",
+            traits: PhaseTraits::conv_encoder(),
+            expect: "convpad",
+        },
+        Case {
+            label: "conv outranks quadratic",
+            traits: PhaseTraits {
+                conv_frontend: true,
+                padded: true,
+                beta_len_over_alpha: 5.0,
+            },
+            expect: "convpad",
+        },
+        Case {
+            label: "padded without conv",
+            traits: PhaseTraits {
+                conv_frontend: false,
+                padded: true,
+                beta_len_over_alpha: 0.0,
+            },
+            expect: "padded",
+        },
+        Case {
+            label: "attention-heavy unpadded",
+            traits: PhaseTraits {
+                conv_frontend: false,
+                padded: false,
+                beta_len_over_alpha: QUADRATIC_ATTENTION_RATIO + 0.05,
+            },
+            expect: "quadratic",
+        },
+        Case {
+            label: "attention-light unpadded",
+            traits: PhaseTraits {
+                conv_frontend: false,
+                padded: false,
+                beta_len_over_alpha: QUADRATIC_ATTENTION_RATIO - 0.05,
+            },
+            expect: "greedy",
+        },
+        Case {
+            label: "exactly at the threshold",
+            traits: PhaseTraits {
+                conv_frontend: false,
+                padded: false,
+                beta_len_over_alpha: QUADRATIC_ATTENTION_RATIO,
+            },
+            expect: "quadratic",
+        },
+    ];
+    for c in cases {
+        let sel = select_for_phase(&c.traits);
+        assert_eq!(
+            sel.balancer.name(),
+            c.expect,
+            "{}: rule was '{}'",
+            c.label,
+            sel.rule
+        );
+    }
+}
+
+#[test]
+fn table1_models_resolve_per_the_documented_rules() {
+    // (model, [vision, audio, llm]) — audio is always the conv
+    // front-end; vision/llm flip between greedy and quadratic as the
+    // attention share β·L/α crosses the threshold at each scale.
+    let expect: [(&str, [&str; 3]); 3] = [
+        ("MLLM-10B", ["greedy", "convpad", "quadratic"]),
+        ("MLLM-18B", ["quadratic", "convpad", "quadratic"]),
+        ("MLLM-84B", ["quadratic", "convpad", "greedy"]),
+    ];
+    for (model, phases) in expect {
+        let m = MllmConfig::by_name(model).unwrap();
+        for (phase, want) in PhaseKind::ALL.iter().zip(phases) {
+            let traits = m.phase_traits(*phase);
+            let sel = select_for_phase(&traits);
+            assert_eq!(
+                sel.balancer.name(),
+                want,
+                "{model} {}: β·L/α = {:.3}, rule '{}'",
+                phase.name(),
+                traits.beta_len_over_alpha,
+                sel.rule
+            );
+        }
+    }
+}
+
+#[test]
+fn auto_is_deterministic_per_model() {
+    for m in MllmConfig::all() {
+        for phase in PhaseKind::ALL {
+            let a = select_for_phase(&m.phase_traits(phase));
+            let b = select_for_phase(&m.phase_traits(phase));
+            assert_eq!(a.balancer.name(), b.balancer.name());
+            assert_eq!(a.rule, b.rule);
+        }
+    }
+}
+
+#[test]
+fn missing_registry_metadata_degrades_not_fails() {
+    // conv phase, registry without any padded algorithm: linear
+    // fallback, never a panic and never the hard-coded default.
+    let conv = PhaseTraits::conv_encoder();
+    let sel = select_for_phase_from(&["greedy", "kk"], &conv);
+    assert_eq!(sel.balancer.name(), "greedy");
+
+    // Nothing usable at all: identity, balancing degrades to off.
+    let sel = select_for_phase_from(&[], &conv);
+    assert!(sel.balancer.is_identity());
+}
+
+#[test]
+fn orchestrator_auto_config_wires_all_three_phases() {
+    let m = MllmConfig::mllm_10b();
+    let cfg = OrchestratorConfig::auto(&m, 3584.0 * 2.0);
+    assert_eq!(cfg.vision_balancer.name(), "greedy");
+    assert_eq!(cfg.audio_balancer.name(), "convpad");
+    assert_eq!(cfg.llm_balancer.name(), "quadratic");
+
+    let m84 = MllmConfig::mllm_84b();
+    let cfg = OrchestratorConfig::auto(&m84, 8192.0 * 2.0);
+    assert_eq!(cfg.vision_balancer.name(), "quadratic");
+    assert_eq!(cfg.llm_balancer.name(), "greedy");
+}
+
+#[test]
+fn simulated_auto_run_balances_like_the_tailored_config() {
+    // `--balancer auto` end to end through the simulator: the
+    // auto-selected configuration must land in the same MFU band as the
+    // hand-tailored default and far above no-balance.
+    let m = MllmConfig::mllm_10b();
+    let auto = simulate_run_named(
+        SystemKind::OrchMllm, &m, 16, 16, 2, 42, Some("auto"),
+    );
+    let tailored = simulate_run_named(
+        SystemKind::OrchMllm, &m, 16, 16, 2, 42, None,
+    );
+    let none = simulate_run_named(
+        SystemKind::OrchMllm, &m, 16, 16, 2, 42, Some("none"),
+    );
+    assert!(
+        auto.mfu > 1.15 * none.mfu,
+        "auto {} vs none {}",
+        auto.mfu,
+        none.mfu
+    );
+    assert!(
+        auto.mfu > 0.85 * tailored.mfu,
+        "auto {} fell far below tailored {}",
+        auto.mfu,
+        tailored.mfu
+    );
+}

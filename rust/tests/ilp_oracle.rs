@@ -1,0 +1,174 @@
+//! Oracle properties of the exact `ilp` balancer:
+//!
+//! 1. on instances small enough to brute-force, the branch-and-bound
+//!    makespan equals the true optimum under every Eq.-2 cost regime;
+//! 2. registry-wide: on certified instances NO registered heuristic
+//!    beats the oracle under that heuristic's own cost model — the
+//!    property the gap harness rests on;
+//! 3. the registered `ilp` balancer is a first-class citizen: valid
+//!    assignments, deterministic, never worse than `greedy` or the
+//!    identity dealing, total at any scale (best-effort past the work
+//!    guard).
+
+use orchmllm::balance::cost::CostModel;
+use orchmllm::balance::ilp::{self, IlpStatus};
+use orchmllm::balance::types::{
+    assert_valid_assignment, ExampleRef,
+};
+use orchmllm::balance::{registry, PlanScratch};
+use orchmllm::util::prop::check;
+
+/// All Eq.-2 regimes at test coefficients.
+const MODELS: [CostModel; 4] = [
+    CostModel::Linear { alpha: 1.0 },
+    CostModel::TransformerUnpadded { alpha: 1.0, beta: 0.02 },
+    CostModel::TransformerPadded { alpha: 1.0, beta: 0.0 },
+    CostModel::ConvPadded { alpha: 1.0, lambda: 0.002 },
+];
+
+/// True optimum by enumerating all d^n assignments.
+fn brute_force_opt(cm: &CostModel, lens: &[usize], d: usize) -> f64 {
+    let n = lens.len();
+    let mut assign = vec![0usize; n];
+    let mut best = f64::INFINITY;
+    loop {
+        let mut batches: Vec<Vec<ExampleRef>> = vec![Vec::new(); d];
+        for (id, &b) in assign.iter().enumerate() {
+            batches[b].push(ExampleRef { id, len: lens[id] });
+        }
+        best = best.min(cm.makespan(&batches));
+        // Increment the base-d counter.
+        let mut k = 0;
+        loop {
+            if k == n {
+                return best;
+            }
+            assign[k] += 1;
+            if assign[k] < d {
+                break;
+            }
+            assign[k] = 0;
+            k += 1;
+        }
+    }
+}
+
+#[test]
+fn bnb_matches_brute_force_on_tiny_instances() {
+    check("ilp == brute force", 40, |g| {
+        let d = g.usize(2, 4); // 2..=3
+        let n = g.usize(1, 8); // 1..=7  => at most 3^7 = 2187 states
+        let lens = g.seq_lengths(n, 3.0, 1.2);
+        for cm in MODELS {
+            let s = ilp::solve(&cm, &lens, d, 1_000_000);
+            assert_eq!(
+                s.status,
+                IlpStatus::Optimal,
+                "{cm:?}: tiny instance must certify"
+            );
+            let opt = brute_force_opt(&cm, &lens, d);
+            assert!(
+                (s.makespan - opt).abs() <= 1e-9 * opt.max(1.0),
+                "{cm:?}: B&B {} != brute-force optimum {opt} \
+                 (lens {lens:?}, d {d})",
+                s.makespan
+            );
+        }
+    });
+}
+
+#[test]
+fn no_registered_heuristic_beats_a_certified_oracle() {
+    check("oracle dominance", 24, |g| {
+        let d = g.usize(2, 5);
+        let n = g.usize(d, 13);
+        let lens = g.seq_lengths(n, 3.4, 1.1);
+        let mut scratch = PlanScratch::new();
+        for name in registry::NAMES {
+            let b = registry::must(name);
+            let cm = b.cost_model();
+            let oracle = ilp::solve(&cm, &lens, d, 120_000);
+            if oracle.status != IlpStatus::Optimal {
+                continue; // only certified optima are binding
+            }
+            let heur = b.balance(&lens, d, &mut scratch);
+            assert!(
+                oracle.makespan <= cm.makespan(&heur) + 1e-9,
+                "{name} beat the certified oracle: {} < {} \
+                 (lens {lens:?}, d {d})",
+                cm.makespan(&heur),
+                oracle.makespan
+            );
+        }
+    });
+}
+
+#[test]
+fn certified_solutions_match_their_own_lower_bound_contract() {
+    // Certification must be honest: status Optimal with a makespan
+    // strictly above the from-scratch re-solve would be a soundness
+    // bug. Re-solving with a bigger budget can never improve on a
+    // certified optimum.
+    check("certificate stability", 20, |g| {
+        let d = g.usize(2, 4);
+        let n = g.usize(1, 12);
+        let lens = g.seq_lengths(n, 3.2, 1.0);
+        for cm in MODELS {
+            let small = ilp::solve(&cm, &lens, d, 100_000);
+            if small.status != IlpStatus::Optimal {
+                continue;
+            }
+            let big = ilp::solve(&cm, &lens, d, 2_000_000);
+            assert!(
+                (small.makespan - big.makespan).abs() <= 1e-9,
+                "{cm:?}: certified {} but larger budget found {}",
+                small.makespan,
+                big.makespan
+            );
+        }
+    });
+}
+
+#[test]
+fn registered_ilp_is_a_first_class_balancer() {
+    assert!(
+        registry::NAMES.contains(&"ilp"),
+        "ilp missing from the registry"
+    );
+    let b = registry::must("ilp");
+    assert_eq!(b.name(), "ilp");
+    assert!(!b.is_identity());
+
+    // Valid + deterministic + self-guarded across shapes, including
+    // past the work guard where it degrades to best-effort.
+    let mut scratch = PlanScratch::new();
+    let mut g = orchmllm::util::prop::Gen::new(19);
+    for &(n, d) in &[(0usize, 3usize), (5, 8), (40, 4), (600, 128)] {
+        let lens = g.seq_lengths(n, 3.3, 1.1);
+        let a1 = b.balance(&lens, d, &mut scratch);
+        let a2 = b.balance(&lens, d, &mut PlanScratch::new());
+        assert_valid_assignment(&a1, n, d);
+        assert_eq!(a1, a2, "ilp nondeterministic at n={n} d={d}");
+        let cm = b.cost_model();
+        let greedy = registry::must("greedy");
+        let g_plan = greedy.balance(&lens, d, &mut scratch);
+        assert!(
+            cm.makespan(&a1) <= cm.makespan(&g_plan) + 1e-9,
+            "ilp worse than greedy at n={n} d={d}"
+        );
+    }
+}
+
+#[test]
+fn oracle_improves_on_lpt_where_lpt_is_suboptimal() {
+    // The classic LPT trap: 8,7,6,5,4 on two batches (LPT 17, OPT 15)
+    // — through the *registered* balancer, not just the solver API.
+    let b = registry::must("ilp");
+    let cm = b.cost_model();
+    let a = b.balance(&[8, 7, 6, 5, 4], 2, &mut PlanScratch::new());
+    assert!(
+        (cm.makespan(&a) - 15.0).abs() < 1e-9,
+        "registered ilp returned {}",
+        cm.makespan(&a)
+    );
+}
