@@ -1,9 +1,10 @@
 //! Quickstart: the OrchMLLM public API in ~60 lines.
 //!
 //! Samples an incoherent multimodal global batch across 8 DP instances,
-//! plans one step with the MLLM Global Orchestrator, and prints the
-//! per-phase imbalance before/after post-balancing plus the priced
-//! communication cost of the rearrangement.
+//! plans one step through a [`PlanSession`] — the single entry point
+//! into the MLLM Global Orchestrator — and prints the per-phase
+//! imbalance before/after post-balancing plus the priced communication
+//! cost of the rearrangement and the plan's provenance report.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -11,7 +12,8 @@ use orchmllm::balance::cost::CostModel;
 use orchmllm::comm::topology::Topology;
 use orchmllm::data::synth::{DatasetConfig, Example, Generator};
 use orchmllm::model::flops::PhaseKind;
-use orchmllm::orchestrator::global::{Orchestrator, OrchestratorConfig};
+use orchmllm::orchestrator::global::OrchestratorConfig;
+use orchmllm::orchestrator::session::{PlanOptions, PlanSession};
 
 fn main() {
     let d = 8;
@@ -24,18 +26,24 @@ fn main() {
     let minibatches: Vec<Vec<Example>> =
         (0..d).map(|_| generator.batch(mini_batch)).collect();
 
-    // 2. Plan the step: per-phase Batch Post-Balancing Dispatchers +
-    //    node-wise all-to-all + rearrangement composition (§5, §6).
-    let orch = Orchestrator::new(OrchestratorConfig::orchmllm(3584.0 * 2.0));
-    let plan = orch.plan_step(&topo, &minibatches);
+    // 2. Plan the step: a session owns all planning state, and one
+    //    `plan` call runs the per-phase Batch Post-Balancing
+    //    Dispatchers + node-wise all-to-all + rearrangement composition
+    //    (§5, §6).
+    let mut session = PlanSession::with_defaults(
+        OrchestratorConfig::orchmllm(3584.0 * 2.0),
+        topo,
+    );
+    let plan = session.plan(&minibatches, PlanOptions::auto());
 
     // 3. Per-phase imbalance (max/mean token cost across instances).
     let lin = CostModel::Linear { alpha: 1.0 };
     println!("phase     before   after   (max/mean token cost, 1.0 = perfect)");
-    let baseline = Orchestrator::new(OrchestratorConfig::no_balance(
-        3584.0 * 2.0,
-    ))
-    .plan_step(&topo, &minibatches);
+    let baseline = PlanSession::with_defaults(
+        OrchestratorConfig::no_balance(3584.0 * 2.0),
+        topo,
+    )
+    .plan(&minibatches, PlanOptions::auto());
     for phase in PhaseKind::ALL {
         println!(
             "{:<8}  {:>6.3}   {:>6.3}",
@@ -56,5 +64,12 @@ fn main() {
     println!(
         "dispatcher compute: {:.2} ms (overlapped with the forward pass)",
         plan.compute_nanos as f64 / 1e6
+    );
+
+    // 5. Where the plan came from — the session's provenance report.
+    let report = session.report().expect("one step planned");
+    println!(
+        "provenance: step {} via {:?}, sources {:?}",
+        report.step, report.mode, report.sources
     );
 }

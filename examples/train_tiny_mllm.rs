@@ -63,6 +63,17 @@ fn main() {
     println!("{}", report.render());
     println!("wallclock: {:.1}s", t0.elapsed().as_secs_f64());
 
+    // Every worker plans through a PlanSession, so provenance is a
+    // direct read off the report instead of an inference: how many
+    // phase solves the tolerance gate warm-accepted, and how many a
+    // sketch cache replayed. (A fresh-every-step synthetic stream may
+    // legitimately plan all-cold; the rates just get printed here.)
+    println!(
+        "session provenance: {:.0}% warm solves, {:.0}% cache hits",
+        report.plan_warm_rate * 100.0,
+        report.plan_cache_hit_rate * 100.0
+    );
+
     let first = report.losses.first().copied().unwrap_or(f64::NAN);
     let last10: f64 = report.losses.iter().rev().take(10).sum::<f64>()
         / 10f64.min(report.losses.len() as f64);

@@ -24,9 +24,9 @@
 use orchmllm::comm::topology::Topology;
 use orchmllm::data::synth::{DatasetConfig, Example, Generator};
 use orchmllm::model::config::MllmConfig;
-use orchmllm::orchestrator::global::{
-    Orchestrator, OrchestratorConfig, StepHistory, StepScratch,
-};
+use orchmllm::orchestrator::global::OrchestratorConfig;
+use orchmllm::orchestrator::pipeline::PipelineConfig;
+use orchmllm::orchestrator::session::{PlanOptions, PlanSession};
 use orchmllm::sim::engine::{simulate_run, SystemKind};
 use orchmllm::sim::report;
 use orchmllm::util::bench::Bencher;
@@ -94,35 +94,49 @@ fn main() {
     }
 
     // ---- serial vs parallel vs incremental planning --------------------
-    // The acceptance workload: 3 phases, d = 32 instances. `serial` is
-    // the pre-trait path (one phase after another, fresh allocations
-    // each step); `parallel` plans phases concurrently on a reused
-    // StepScratch; `incremental` adds the cross-step history — the
-    // steady-state (t ≥ 2) path the pipeline actually runs.
+    // The acceptance workload: 3 phases, d = 32 instances. `serial`
+    // plans one phase after another on the calling thread; `parallel`
+    // plans phases concurrently; `incremental` adds the cross-step
+    // history — the steady-state (t ≥ 2) path the pipeline actually
+    // runs. All three are PlanOptions on the same PlanSession entry
+    // point, each on its own session's warmed scratch — so since PR 5
+    // the serial→parallel delta isolates *phase parallelism* alone
+    // (the pre-session serial case also paid fresh allocations each
+    // step; PR-1's zero-alloc win is no longer part of this number —
+    // keep that in mind when comparing `speedup` across PRs).
     let d = args.usize("plan-gpus", if smoke { 8 } else { 32 });
     let mb = args.usize("plan-mb", if smoke { 8 } else { 60 });
     let cache_size = args.usize("plan-cache-size", 32);
     let topo = Topology::h100(d);
-    let orch =
-        Orchestrator::new(OrchestratorConfig::orchmllm(3584.0 * 2.0));
+    let cfg = OrchestratorConfig::orchmllm(3584.0 * 2.0);
+    let pipe_cfg =
+        PipelineConfig { plan_cache_size: cache_size, ..Default::default() };
     let mut generator = Generator::new(DatasetConfig::default(), seed);
     let minibatches: Vec<Vec<Example>> =
         (0..d).map(|_| generator.batch(mb)).collect();
+
+    // One session per strategy: each strategy is a PlanOptions value on
+    // the same entry point, so the comparison measures the solve
+    // strategy, not the API path.
+    let mut serial_session =
+        PlanSession::new(cfg.clone(), pipe_cfg, topo);
+    let mut parallel_session =
+        PlanSession::new(cfg.clone(), pipe_cfg, topo);
+    let mut inc_session = PlanSession::new(cfg, pipe_cfg, topo);
 
     let mut bench = Bencher::new(&format!(
         "step planning (3 phases, d={d}, n={} per phase)",
         d * mb
     ));
     let (serial_ms, serial_best_ms) = {
-        let r = bench.iter("serial, fresh allocations", || {
-            orch.plan_step_serial(&topo, &minibatches)
+        let r = bench.iter("serial phases", || {
+            serial_session.plan(&minibatches, PlanOptions::serial())
         });
         (r.mean_ms(), r.min_ns / 1e6)
     };
-    let mut scratch = StepScratch::default();
     let (parallel_ms, parallel_p50_ms, parallel_best_ms) = {
         let r = bench.iter("parallel phases + scratch", || {
-            orch.plan_step_with(&topo, &minibatches, &mut scratch)
+            parallel_session.plan(&minibatches, PlanOptions::from_scratch())
         });
         (r.mean_ms(), r.p50_ns / 1e6, r.min_ns / 1e6)
     };
@@ -133,21 +147,15 @@ fn main() {
     let shapes: Vec<Vec<Vec<Example>>> = (0..4)
         .map(|_| (0..d).map(|_| generator.batch(mb)).collect())
         .collect();
-    let mut inc_scratch = StepScratch::default();
-    let mut history = StepHistory::new(cache_size);
     for s in &shapes {
-        orch.plan_step_incremental(
-            &topo, s, &mut inc_scratch, &mut history,
-        );
+        inc_session.plan(s, PlanOptions::auto());
     }
     let mut idx = 0usize;
     let (incr_ms, incr_p50_ms, incr_p99_ms) = {
         let r = bench.iter("incremental (warm + plan cache)", || {
-            let plan = orch.plan_step_incremental(
-                &topo,
+            let plan = inc_session.plan(
                 &shapes[idx % shapes.len()],
-                &mut inc_scratch,
-                &mut history,
+                PlanOptions::auto(),
             );
             idx += 1;
             plan
@@ -156,7 +164,7 @@ fn main() {
     };
     bench.report();
 
-    let cache_hit_rate = history.cache_hit_rate();
+    let cache_hit_rate = inc_session.cache_hit_rate();
     let speedup = serial_ms / parallel_ms.max(1e-9);
     let steady_speedup = parallel_p50_ms / incr_p50_ms.max(1e-9);
     println!(

@@ -97,6 +97,29 @@ pub trait Balancer: Send + Sync + fmt::Debug {
         prev: &Assignment,
         scratch: &mut PlanScratch,
     ) -> IncrementalPlan {
+        self.plan_incremental_with(
+            lens,
+            d,
+            prev,
+            scratch,
+            incremental::REPAIR_TOLERANCE,
+        )
+    }
+
+    /// [`Balancer::plan_incremental`] with an explicit warm-acceptance
+    /// tolerance (the `PlanOptions::tolerance` knob): the warm-started
+    /// plan is kept only when its makespan certifies within
+    /// `1 + tolerance` of the sound lower bound. Same contract as
+    /// `plan_incremental`, with `tolerance` in place of
+    /// [`incremental::REPAIR_TOLERANCE`].
+    fn plan_incremental_with(
+        &self,
+        lens: &[usize],
+        d: usize,
+        prev: &Assignment,
+        scratch: &mut PlanScratch,
+        tolerance: f64,
+    ) -> IncrementalPlan {
         if self.is_identity() {
             return IncrementalPlan {
                 assignment: self.balance(lens, d, scratch),
@@ -106,7 +129,9 @@ pub trait Balancer: Send + Sync + fmt::Debug {
         }
         let cm = self.cost_model();
         if let Some((assignment, repair_moves)) =
-            incremental::warm_start(&cm, lens, d, prev, scratch)
+            incremental::warm_start_with(
+                &cm, lens, d, prev, scratch, tolerance,
+            )
         {
             // §5.1 floor holds on the warm path too: keep the warm plan
             // only while it beats (or ties) the identity dealing.
@@ -235,14 +260,17 @@ impl<B: Balancer> Balancer for Guarded<B> {
         }
     }
 
-    fn plan_incremental(
+    fn plan_incremental_with(
         &self,
         lens: &[usize],
         d: usize,
         prev: &Assignment,
         scratch: &mut PlanScratch,
+        tolerance: f64,
     ) -> IncrementalPlan {
-        let mut plan = self.0.plan_incremental(lens, d, prev, scratch);
+        let mut plan = self
+            .0
+            .plan_incremental_with(lens, d, prev, scratch, tolerance);
         if self.0.is_identity() {
             return plan;
         }
@@ -415,12 +443,13 @@ mod tests {
             ) -> Assignment {
                 identity_with_lens(lens, d)
             }
-            fn plan_incremental(
+            fn plan_incremental_with(
                 &self,
                 lens: &[usize],
                 d: usize,
                 _prev: &Assignment,
                 _s: &mut PlanScratch,
+                _tolerance: f64,
             ) -> IncrementalPlan {
                 let mut a: Assignment = vec![Vec::new(); d];
                 for (id, &len) in lens.iter().enumerate() {

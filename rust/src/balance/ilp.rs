@@ -18,10 +18,27 @@
 //!   (every regime satisfies `eval(batch ∪ {l}) ≥ eval(batch) +
 //!   eval({l})`), and the next item's singleton cost;
 //! * **symmetry breaking**: equal-length items may only be placed in
-//!   nondecreasing batch-index order, and among currently-empty batches
-//!   only the lowest-indexed one is tried — both preserve at least one
+//!   nondecreasing batch-index order, which preserves at least one
 //!   optimal solution because batch costs depend only on the length
 //!   multiset;
+//! * **twin-batch dominance**: a candidate batch whose current
+//!   aggregates equal a lower-indexed batch's is skipped. Every cost
+//!   regime evaluates through [`BatchStat`] and equal aggregates stay
+//!   equal under any identical sequence of future placements, so the
+//!   two subtrees are cost-isomorphic — "these two items in one twin
+//!   vs. swapped into the other" explores the same makespans twice.
+//!   Formally: in the lexicographically-smallest optimal assignment
+//!   (items in LPT order), no item is ever placed in a batch with a
+//!   lower-indexed aggregate twin, else swapping the twins' remaining
+//!   placements yields an equal-cost lex-smaller assignment. Subsumes
+//!   the old empty-batch rule and is what pushes certified coverage to
+//!   n ≈ 32 on the duplicate-heavy profiles;
+//! * **last-item dominance**: the final item's cheapest placement
+//!   (smallest resulting batch cost) minimizes the completed makespan
+//!   — for any other batch `b`, the completed makespan is
+//!   `max(M₋ᵦ, nc_b) ≥ makespan(b*)` by case analysis on whether the
+//!   witness batch is `b` itself — so the last level branches exactly
+//!   once;
 //! * **node budget**: the search explores at most `node_budget`
 //!   placements (which also bounds recursion depth), then returns the
 //!   incumbent as [`IlpStatus::BestEffort`]. A completed search — or an
@@ -151,16 +168,17 @@ impl<'a> Search<'a> {
             0
         };
         // Candidate batches, cheapest-after-placement first (good-first
-        // search finds strong incumbents early); among empty batches
-        // only the lowest-indexed is a candidate.
+        // search finds strong incumbents early). Twin-batch dominance:
+        // a batch whose current aggregates equal *any* lower-indexed
+        // batch's is skipped — the subtrees are cost-isomorphic (swap
+        // the twins' future placements), and the lex-smallest optimum
+        // always uses the lowest-indexed twin. Empty batches are all
+        // twins of the first empty one, so the old empty-batch rule
+        // falls out as a special case.
         let mut cands: Vec<(f64, usize)> = Vec::with_capacity(self.d);
-        let mut seen_empty = false;
         for b in min_batch..self.d {
-            if self.stats[b].count == 0 {
-                if seen_empty {
-                    continue;
-                }
-                seen_empty = true;
+            if self.stats[..b].iter().any(|s| *s == self.stats[b]) {
+                continue;
             }
             let mut s = self.stats[b];
             s.add(len);
@@ -169,6 +187,11 @@ impl<'a> Search<'a> {
         cands.sort_by(|a, b| {
             a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
         });
+        // Last-item dominance: the cheapest placement of the final item
+        // completes with the minimal makespan, so branch it alone.
+        if k + 1 == self.items.len() {
+            cands.truncate(1);
+        }
 
         for (new_cost, b) in cands {
             if self.proven || self.exhausted {
@@ -434,6 +457,41 @@ mod tests {
         assert_eq!(s.status, IlpStatus::BestEffort);
         assert_eq!(s.nodes, 0);
         assert_valid_assignment(&s.assignment, 2_000, 64);
+    }
+
+    #[test]
+    fn dominance_certifies_a_31_item_padded_instance() {
+        // All-equal lengths under a padded regime: the balanced
+        // 8/8/8/7 split is optimal but sits strictly above the
+        // superadditive lower bound (31 does not divide by 4), so
+        // certification requires the search to *complete* — feasible
+        // at n = 31 only because the equal-length rule and twin-batch
+        // dominance collapse the 4^31 raw tree (the ROADMAP "n ≈ 32"
+        // follow-on).
+        let cm = CostModel::TransformerPadded { alpha: 1.0, beta: 0.01 };
+        let lens = vec![10usize; 31];
+        let s = solve(&cm, &lens, 4, 50_000);
+        assert_eq!(s.status, IlpStatus::Optimal, "search must complete");
+        // 8 items of padded cost 10 + 0.01·10² = 11 each.
+        assert!((s.makespan - 88.0).abs() < 1e-9, "{}", s.makespan);
+        assert!(
+            s.makespan > s.lower_bound + 1.0,
+            "certificate must be nontrivial (seed != lower bound)"
+        );
+    }
+
+    #[test]
+    fn twin_dominance_keeps_duplicate_heavy_optima() {
+        // Two-valued batches maximize aggregate-twin collisions; the
+        // pruned search must still find the exact optimum. 3+3 vs
+        // 2+2+2 is the classic LPT miss (LPT gives 7, optimum 6).
+        let lens = [3usize, 3, 2, 2, 2];
+        let lpt = LIN.makespan(&balance_lpt(&lens, 2));
+        let s = solve(&LIN, &lens, 2, 100_000);
+        assert!((lpt - 7.0).abs() < 1e-9, "{lpt}");
+        assert_eq!(s.status, IlpStatus::Optimal);
+        assert!((s.makespan - 6.0).abs() < 1e-9, "{}", s.makespan);
+        assert_valid_assignment(&s.assignment, 5, 2);
     }
 
     #[test]

@@ -73,8 +73,11 @@ pub struct IncrementalPlan {
 }
 
 /// Aggregate statistics of one mini-batch, sufficient to evaluate every
-/// Eq.-2 cost regime in O(1): `(count, Σl, Σl², max l)`.
-#[derive(Clone, Copy, Debug, Default)]
+/// Eq.-2 cost regime in O(1): `(count, Σl, Σl², max l)`. Equality of
+/// aggregates implies equal evals under *every* regime, now and after
+/// any identical sequence of future `add`s — the property the ILP
+/// solver's twin-batch dominance rule rests on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct BatchStat {
     pub count: usize,
     pub sum: usize,
@@ -205,16 +208,32 @@ fn max_after_remove(len: usize, m1: usize, c1: usize, m2: usize) -> usize {
     }
 }
 
-/// Warm-start `lens` from `prev` and locally repair. Returns the
-/// repaired assignment and the number of moves applied, or `None` when
-/// the batch diverged or repair could not certify the tolerance band
-/// (the caller then plans cold).
+/// Warm-start `lens` from `prev` and locally repair under the default
+/// [`REPAIR_TOLERANCE`] band. Returns the repaired assignment and the
+/// number of moves applied, or `None` when the batch diverged or repair
+/// could not certify the tolerance band (the caller then plans cold).
 pub fn warm_start(
     cm: &CostModel,
     lens: &[usize],
     d: usize,
     prev: &Assignment,
     scratch: &mut PlanScratch,
+) -> Option<(Assignment, usize)> {
+    warm_start_with(cm, lens, d, prev, scratch, REPAIR_TOLERANCE)
+}
+
+/// [`warm_start`] with an explicit tolerance band (the
+/// `PlanOptions::tolerance` knob): an accepted warm plan's makespan is
+/// certified within `1 + tolerance` of the sound lower bound, and hence
+/// of the from-scratch solve. `0.0` accepts only provably-optimal warm
+/// plans; larger values trade plan quality for fewer cold solves.
+pub fn warm_start_with(
+    cm: &CostModel,
+    lens: &[usize],
+    d: usize,
+    prev: &Assignment,
+    scratch: &mut PlanScratch,
+    tolerance: f64,
 ) -> Option<(Assignment, usize)> {
     let n = lens.len();
     if n == 0 || d == 0 || prev.len() != d {
@@ -265,7 +284,7 @@ pub fn warm_start(
 
     let makespan = stats.iter().map(|s| s.eval(cm)).fold(0.0, f64::max);
     let lb = lower_bound(cm, lens, d);
-    if makespan <= lb * (1.0 + REPAIR_TOLERANCE) + 1e-9 {
+    if makespan <= lb * (1.0 + tolerance) + 1e-9 {
         Some((assignment, moves))
     } else {
         None
@@ -519,6 +538,34 @@ mod tests {
         assert_valid_assignment(&a, 40, 4);
         assert!(moves > 0, "repair should have moved items");
         assert!(LIN.makespan(&a) <= 110.0, "{}", LIN.makespan(&a));
+    }
+
+    #[test]
+    fn tolerance_widens_and_narrows_the_acceptance_gate() {
+        // lens [3,3,3,2] over 2 batches: lb = 5.5, best reachable
+        // makespan 6 (gap ~9.1%). The default 5% band rejects the warm
+        // plan; a 20% band accepts it; a 0% band only ever accepts
+        // provably-optimal warm plans.
+        let lens = [3usize, 3, 3, 2];
+        let prev = balance_lpt(&lens, 2);
+        let mut s = PlanScratch::new();
+        assert!(warm_start(&LIN, &lens, 2, &prev, &mut s).is_none());
+        let (a, _) =
+            warm_start_with(&LIN, &lens, 2, &prev, &mut s, 0.20)
+                .expect("20% band must accept makespan 6 vs lb 5.5");
+        assert_valid_assignment(&a, 4, 2);
+        assert!(LIN.makespan(&a) <= 5.5 * 1.20 + 1e-9);
+        assert!(
+            warm_start_with(&LIN, &lens, 2, &prev, &mut s, 0.0).is_none(),
+            "0% band must reject a warm plan above the lower bound"
+        );
+        // An exactly-balanceable batch certifies even at tolerance 0.
+        let lens = [4usize, 4, 4, 4];
+        let prev = balance_lpt(&lens, 2);
+        let (a, _) =
+            warm_start_with(&LIN, &lens, 2, &prev, &mut s, 0.0)
+                .expect("an optimal warm plan certifies at tolerance 0");
+        assert!((LIN.makespan(&a) - 8.0).abs() < 1e-9);
     }
 
     #[test]

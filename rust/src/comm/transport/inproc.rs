@@ -4,20 +4,155 @@
 //!
 //! The engine is SPMD: all `d` participants must call the same sequence
 //! of collectives. Each collective is two barrier rounds (deposit, then
-//! read), so the cyclic `std::sync::Barrier` keeps rounds from
+//! read), so the cyclic [`MonitoredBarrier`] keeps rounds from
 //! overlapping. Payloads are moved (not copied) for All-to-All, which
 //! mirrors the zero-redundancy memory behaviour the paper claims for its
 //! communicator versus the All-Gather strawman.
+//!
+//! **Barrier watchdog.** A rank that dies asymmetrically (panics in its
+//! own step code, returns early, deadlocks elsewhere) never reaches the
+//! next barrier — with a plain `std::sync::Barrier` its peers would
+//! block forever. The monitored barrier waits with a deadline instead:
+//! when the group fails to assemble within the watchdog timeout
+//! (`ORCHMLLM_INPROC_TIMEOUT_SECS`, default 60, `0` disables —
+//! mirroring the TCP backend's read-timeout escape), every waiter marks
+//! the group broken and errors out, and all subsequent collectives on
+//! the group fail fast with the original reason. Failure semantics are
+//! the transport contract's: "error within the timeout", never a hang.
 //!
 //! [`Collectives`] is the private engine behind [`InProcTransport`];
 //! nothing outside this module touches it directly anymore — the
 //! trainer goes through `dyn Transport`.
 
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use super::{Transport, TransportFactory};
+
+/// Default watchdog timeout when `ORCHMLLM_INPROC_TIMEOUT_SECS` is not
+/// set. Generous: a healthy group assembles in microseconds; only a
+/// dead peer keeps a barrier open for a minute.
+pub const DEFAULT_WATCHDOG_SECS: u64 = 60;
+
+/// Read the watchdog timeout from the environment (`None` = disabled).
+/// Unparsable values warn loudly before falling back — mirroring the
+/// TCP backend's env handling: a silently ignored timeout override
+/// would defeat the watchdog it configures.
+fn watchdog_from_env() -> Option<Duration> {
+    let parsed = std::env::var("ORCHMLLM_INPROC_TIMEOUT_SECS")
+        .ok()
+        .and_then(|raw| match raw.trim().parse::<u64>() {
+            Ok(v) => Some(v),
+            Err(_) => {
+                eprintln!(
+                    "warning: ignoring unparsable \
+                     ORCHMLLM_INPROC_TIMEOUT_SECS='{raw}', using the \
+                     default ({DEFAULT_WATCHDOG_SECS}s)"
+                );
+                None
+            }
+        });
+    match parsed {
+        Some(0) => None,
+        Some(n) => Some(Duration::from_secs(n)),
+        None => Some(Duration::from_secs(DEFAULT_WATCHDOG_SECS)),
+    }
+}
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    /// Why the group broke, if it did. Sticky: once broken, every
+    /// current and future waiter errors out with this reason.
+    broken: Option<String>,
+}
+
+/// A cyclic barrier whose waiters time out instead of blocking forever
+/// when a peer never arrives.
+struct MonitoredBarrier {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+    d: usize,
+    timeout: Option<Duration>,
+}
+
+impl MonitoredBarrier {
+    fn new(d: usize, timeout: Option<Duration>) -> MonitoredBarrier {
+        MonitoredBarrier {
+            state: Mutex::new(BarrierState {
+                arrived: 0,
+                generation: 0,
+                broken: None,
+            }),
+            cv: Condvar::new(),
+            d,
+            timeout,
+        }
+    }
+
+    /// Ride through poisoning: a peer that panicked while holding the
+    /// lock must surface as a broken group, not a panic cascade.
+    fn lock(&self) -> MutexGuard<'_, BarrierState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn wait(&self) -> Result<()> {
+        let mut s = self.lock();
+        if let Some(why) = &s.broken {
+            bail!("inproc barrier: group already broken: {why}");
+        }
+        s.arrived += 1;
+        if s.arrived == self.d {
+            s.arrived = 0;
+            s.generation = s.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let generation = s.generation;
+        let deadline = self.timeout.map(|t| Instant::now() + t);
+        loop {
+            match deadline {
+                None => {
+                    s = self
+                        .cv
+                        .wait(s)
+                        .unwrap_or_else(|p| p.into_inner());
+                }
+                Some(deadline) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        let why = format!(
+                            "watchdog: {} of {} ranks arrived within \
+                             {:?} — a peer died or skipped a round",
+                            s.arrived, self.d, self.timeout.unwrap()
+                        );
+                        s.broken = Some(why.clone());
+                        self.cv.notify_all();
+                        bail!("inproc barrier {why}");
+                    }
+                    let (guard, _) = self
+                        .cv
+                        .wait_timeout(s, deadline - now)
+                        .unwrap_or_else(|p| p.into_inner());
+                    s = guard;
+                }
+            }
+            // Success check FIRST: if this round's generation already
+            // advanced, the round completed — a breakage observed now
+            // belongs to a *later* round and must not retroactively
+            // fail this one (a descheduled waiter can wake after its
+            // peers have moved on and broken a subsequent barrier).
+            if s.generation != generation {
+                return Ok(());
+            }
+            if let Some(why) = &s.broken {
+                bail!("inproc barrier: group broken: {why}");
+            }
+        }
+    }
+}
 
 /// A collective group over `d` in-process participants exchanging `T`.
 pub(crate) struct Collectives<T> {
@@ -26,16 +161,24 @@ pub(crate) struct Collectives<T> {
     cells: Mutex<Vec<Vec<T>>>,
     /// All-Gather slots, one per rank.
     slots: Mutex<Vec<Option<T>>>,
-    barrier: Barrier,
+    barrier: MonitoredBarrier,
 }
 
 impl<T: Send + Clone> Collectives<T> {
     pub(crate) fn new(d: usize) -> Arc<Self> {
+        Self::with_timeout(d, watchdog_from_env())
+    }
+
+    /// Group with an explicit watchdog timeout (`None` = wait forever).
+    pub(crate) fn with_timeout(
+        d: usize,
+        timeout: Option<Duration>,
+    ) -> Arc<Self> {
         Arc::new(Collectives {
             d,
             cells: Mutex::new((0..d * d).map(|_| Vec::new()).collect()),
             slots: Mutex::new(vec![None; d]),
-            barrier: Barrier::new(d),
+            barrier: MonitoredBarrier::new(d, timeout),
         })
     }
 
@@ -46,8 +189,11 @@ impl<T: Send + Clone> Collectives<T> {
     /// Point-to-point rearrangement: each rank submits (dst, payload)
     /// pairs and receives the (src, payload) pairs addressed to it.
     /// Payloads that stay on-rank take the same path (loopback).
-    pub(crate) fn all_to_all(&self, rank: usize, sends: Vec<(usize, T)>)
-        -> Vec<(usize, T)> {
+    pub(crate) fn all_to_all(
+        &self,
+        rank: usize,
+        sends: Vec<(usize, T)>,
+    ) -> Result<Vec<(usize, T)>> {
         {
             let mut cells = self.cells.lock().unwrap();
             for (dst, item) in sends {
@@ -55,7 +201,7 @@ impl<T: Send + Clone> Collectives<T> {
                 cells[rank * self.d + dst].push(item);
             }
         }
-        self.barrier.wait();
+        self.barrier.wait()?;
         let received = {
             let mut cells = self.cells.lock().unwrap();
             let mut out = Vec::new();
@@ -66,49 +212,45 @@ impl<T: Send + Clone> Collectives<T> {
             }
             out
         };
-        self.barrier.wait();
-        received
+        self.barrier.wait()?;
+        Ok(received)
     }
 
     /// Every rank contributes one value; all ranks receive all values in
     /// rank order.
-    pub(crate) fn all_gather(&self, rank: usize, item: T) -> Vec<T> {
+    pub(crate) fn all_gather(&self, rank: usize, item: T) -> Result<Vec<T>> {
         {
             let mut slots = self.slots.lock().unwrap();
             slots[rank] = Some(item);
         }
-        self.barrier.wait();
+        self.barrier.wait()?;
         let all: Vec<T> = {
             let slots = self.slots.lock().unwrap();
-            slots
-                .iter()
-                .enumerate()
-                .map(|(src, s)| {
-                    s.as_ref()
-                        .unwrap_or_else(|| {
-                            panic!(
-                                "all_gather: missing contribution from \
-                                 rank {src}"
-                            )
-                        })
-                        .clone()
-                })
-                .collect()
+            let mut all = Vec::with_capacity(self.d);
+            for (src, s) in slots.iter().enumerate() {
+                match s {
+                    Some(v) => all.push(v.clone()),
+                    None => bail!(
+                        "all_gather: missing contribution from rank {src}"
+                    ),
+                }
+            }
+            all
         };
-        self.barrier.wait();
+        self.barrier.wait()?;
         // Stale-slot guard: clear my own slot so a rank that skips a
-        // future round trips the "missing contribution" panic instead
+        // future round trips the "missing contribution" error instead
         // of silently replaying this round's value. Each rank clears
         // its own slot strictly after every rank's read (the second
         // barrier) and redeposits before the next round's read barrier,
         // so no reader ever observes the gap.
         self.slots.lock().unwrap()[rank] = None;
-        all
+        Ok(all)
     }
 
     /// Synchronization point with no data.
-    pub(crate) fn barrier(&self) {
-        self.barrier.wait();
+    pub(crate) fn barrier(&self) -> Result<()> {
+        self.barrier.wait()
     }
 }
 
@@ -124,10 +266,14 @@ impl Collectives<Vec<f32>> {
     /// Peak extra memory per rank is O(n) — one incoming chunk set plus
     /// the gathered result — independent of `d`, replacing the old
     /// all-gather-of-full-buffers O(d·n) staging.
-    pub(crate) fn all_reduce_sum(&self, rank: usize, data: &mut [f32]) {
+    pub(crate) fn all_reduce_sum(
+        &self,
+        rank: usize,
+        data: &mut [f32],
+    ) -> Result<()> {
         let d = self.d;
         if d == 1 {
-            return;
+            return Ok(());
         }
         let n = data.len();
         let bounds = |k: usize| (k * n / d, (k + 1) * n / d);
@@ -138,30 +284,49 @@ impl Collectives<Vec<f32>> {
                 (k, data[lo..hi].to_vec())
             })
             .collect();
-        let received = self.all_to_all(rank, sends);
+        let received = self.all_to_all(rank, sends)?;
         let (lo, hi) = bounds(rank);
         let mut acc = vec![0.0f32; hi - lo];
-        assert_eq!(
-            received.len(),
-            d,
-            "all_reduce_sum: a peer skipped the reduce-scatter round"
-        );
+        if received.len() != d {
+            bail!(
+                "all_reduce_sum: a peer skipped the reduce-scatter \
+                 round ({} of {d} contributions)",
+                received.len()
+            );
+        }
         // `all_to_all` returns contributions sorted by src, so this
         // accumulates rank 0, 1, …, d-1 for every element.
         for (idx, (src, chunk)) in received.into_iter().enumerate() {
-            assert_eq!(src, idx, "all_reduce_sum: missing contribution");
-            assert_eq!(chunk.len(), acc.len());
+            if src != idx {
+                bail!("all_reduce_sum: missing contribution from {idx}");
+            }
+            if chunk.len() != acc.len() {
+                bail!(
+                    "all_reduce_sum: rank {src} sent {} elems, \
+                     expected {}",
+                    chunk.len(),
+                    acc.len()
+                );
+            }
             for (a, x) in acc.iter_mut().zip(&chunk) {
                 *a += x;
             }
         }
 
-        let gathered = self.all_gather(rank, acc);
+        let gathered = self.all_gather(rank, acc)?;
         for (k, chunk) in gathered.into_iter().enumerate() {
             let (lo, hi) = bounds(k);
-            assert_eq!(chunk.len(), hi - lo);
+            if chunk.len() != hi - lo {
+                bail!(
+                    "all_reduce_sum: reduced chunk {k} has {} elems, \
+                     expected {}",
+                    chunk.len(),
+                    hi - lo
+                );
+            }
             data[lo..hi].copy_from_slice(&chunk);
         }
+        Ok(())
     }
 }
 
@@ -198,30 +363,43 @@ impl Transport for InProcTransport {
         // The engine already satisfies the ordering contract: results
         // come back grouped by src (ascending) with each source's
         // payloads in deposit (send) order.
-        Ok(self.bytes.all_to_all(self.rank, sends))
+        self.bytes.all_to_all(self.rank, sends)
     }
 
     fn all_gather_bytes(&self, bytes: Vec<u8>) -> Result<Vec<Vec<u8>>> {
-        Ok(self.bytes.all_gather(self.rank, bytes))
+        self.bytes.all_gather(self.rank, bytes)
     }
 
     fn barrier(&self) -> Result<()> {
-        self.bytes.barrier();
-        Ok(())
+        self.bytes.barrier()
     }
 
     fn all_reduce_sum(&self, data: &mut [f32]) -> Result<()> {
         // Same chunking and reduction order as the trait default, but
         // over the typed f32 group: no serialization on the gradient
         // path, bit-identical results across backends.
-        self.grads.all_reduce_sum(self.rank, data);
-        Ok(())
+        self.grads.all_reduce_sum(self.rank, data)
     }
 }
 
 /// Factory for the `inproc` backend.
-#[derive(Clone, Copy, Debug)]
-pub struct InProcFactory;
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InProcFactory {
+    /// Barrier-watchdog override for tests; `None` reads
+    /// `ORCHMLLM_INPROC_TIMEOUT_SECS` at connect time (default 60 s,
+    /// `0` disables). `Some(Duration::ZERO)` also disables.
+    pub watchdog: Option<Duration>,
+}
+
+impl InProcFactory {
+    fn timeout(&self) -> Option<Duration> {
+        match self.watchdog {
+            Some(t) if t.is_zero() => None,
+            Some(t) => Some(t),
+            None => watchdog_from_env(),
+        }
+    }
+}
 
 impl TransportFactory for InProcFactory {
     fn name(&self) -> &'static str {
@@ -236,8 +414,9 @@ impl TransportFactory for InProcFactory {
         if d == 0 {
             bail!("transport world size must be >= 1");
         }
-        let bytes = Collectives::new(d);
-        let grads = Collectives::new(d);
+        let timeout = self.timeout();
+        let bytes = Collectives::with_timeout(d, timeout);
+        let grads = Collectives::with_timeout(d, timeout);
         Ok((0..d)
             .map(|rank| {
                 Box::new(InProcTransport {
@@ -275,7 +454,7 @@ mod tests {
         let c = Collectives::<usize>::new(4);
         let out = spawn_world(4, move |rank| {
             let c = Arc::clone(&c);
-            c.all_gather(rank, rank * 10)
+            c.all_gather(rank, rank * 10).unwrap()
         });
         for got in out {
             assert_eq!(got, vec![0, 10, 20, 30]);
@@ -288,7 +467,7 @@ mod tests {
         // so the stale-slot guard is directly observable.
         let c = Collectives::<usize>::new(1);
         for round in 0..3 {
-            assert_eq!(c.all_gather(0, round), vec![round]);
+            assert_eq!(c.all_gather(0, round).unwrap(), vec![round]);
             assert!(
                 c.slots.lock().unwrap()[0].is_none(),
                 "slot must be cleared after round {round}"
@@ -305,7 +484,7 @@ mod tests {
             let sends = (0..3)
                 .map(|dst| (dst, format!("{rank}->{dst}")))
                 .collect();
-            let mut recv = c.all_to_all(rank, sends);
+            let mut recv = c.all_to_all(rank, sends).unwrap();
             recv.sort();
             recv
         });
@@ -327,7 +506,7 @@ mod tests {
             } else {
                 vec![]
             };
-            c.all_to_all(rank, sends)
+            c.all_to_all(rank, sends).unwrap()
         });
         assert!(out[0].is_empty());
         let vals: Vec<u32> = out[1].iter().map(|&(_, v)| v).collect();
@@ -345,7 +524,7 @@ mod tests {
                 let c = Arc::clone(&c);
                 let mut data: Vec<f32> =
                     (0..n).map(|i| (rank * n + i) as f32 * 0.25).collect();
-                c.all_reduce_sum(rank, &mut data);
+                c.all_reduce_sum(rank, &mut data).unwrap();
                 data
             });
             // Reference: fixed rank-order sum (the bit-stable contract).
@@ -368,8 +547,9 @@ mod tests {
             let c = Arc::clone(&c);
             let mut sums = Vec::new();
             for round in 0..5 {
-                let recv =
-                    c.all_to_all(rank, vec![(1 - rank, round * 10 + rank)]);
+                let recv = c
+                    .all_to_all(rank, vec![(1 - rank, round * 10 + rank)])
+                    .unwrap();
                 assert_eq!(recv.len(), 1, "round {round} leaked payloads");
                 sums.push(recv[0].1);
             }
@@ -380,27 +560,115 @@ mod tests {
     }
 
     #[test]
+    fn watchdog_errors_a_lonely_barrier_out() {
+        // Rank 1 never shows up: the waiter must error within the
+        // timeout, not block forever.
+        let c = Collectives::<usize>::with_timeout(
+            2,
+            Some(Duration::from_millis(50)),
+        );
+        let t0 = Instant::now();
+        let err = c.barrier().unwrap_err().to_string();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "watchdog did not fire in time"
+        );
+        assert!(err.contains("watchdog"), "{err}");
+        // The group is now broken: subsequent rounds fail fast with
+        // the original reason instead of waiting out another timeout.
+        let t1 = Instant::now();
+        let again = c.all_gather(0, 1).unwrap_err().to_string();
+        assert!(again.contains("broken"), "{again}");
+        assert!(t1.elapsed() < Duration::from_millis(40), "{again}");
+    }
+
+    #[test]
+    fn watchdog_errors_peers_out_when_a_rank_dies_mid_step() {
+        // Rank 0 completes one collective then "dies" (returns early);
+        // ranks 1..d keep issuing rounds and must all error out of the
+        // next barrier instead of hanging the join below.
+        let c = Collectives::<usize>::with_timeout(
+            3,
+            Some(Duration::from_millis(80)),
+        );
+        let out = spawn_world(3, move |rank| {
+            let c = Arc::clone(&c);
+            c.all_gather(rank, rank).unwrap();
+            if rank == 0 {
+                return Ok(vec![]); // asymmetric death
+            }
+            c.all_gather(rank, rank * 2)
+        });
+        assert!(out[0].is_ok());
+        for r in &out[1..] {
+            let err = r.as_ref().unwrap_err().to_string();
+            assert!(
+                err.contains("watchdog") || err.contains("broken"),
+                "peer saw: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn healthy_groups_never_trip_the_watchdog() {
+        // A tight timeout with a healthy group: many rounds, no error.
+        let c = Collectives::<usize>::with_timeout(
+            4,
+            Some(Duration::from_secs(5)),
+        );
+        let out = spawn_world(4, move |rank| {
+            let c = Arc::clone(&c);
+            for _ in 0..50 {
+                c.barrier().unwrap();
+            }
+            c.all_gather(rank, rank).unwrap()
+        });
+        for got in out {
+            assert_eq!(got, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn factory_watchdog_override_reaches_the_transport() {
+        // One rank drops its transport without the final barrier; the
+        // surviving rank errors out through the `dyn Transport` API.
+        let factory = InProcFactory {
+            watchdog: Some(Duration::from_millis(80)),
+        };
+        let mut world = factory.connect(2).unwrap();
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        let dead = thread::spawn(move || drop(t0));
+        dead.join().unwrap();
+        let err = t1.barrier().unwrap_err().to_string();
+        assert!(err.contains("watchdog"), "{err}");
+    }
+
+    #[test]
     fn transport_handles_route_and_validate() {
-        let out = crate::comm::transport::run_world(&InProcFactory, 2, |t| {
-            let rank = t.rank();
-            assert_eq!(t.world_size(), 2);
-            // Out-of-range destination must error, not panic.
-            assert!(t
-                .all_to_all_bytes(vec![(9, vec![0u8])])
-                .is_err());
-            // (The failed call deposited nothing, so the group is still
-            // aligned.)
-            let recv = t
-                .all_to_all_bytes(vec![(1 - rank, vec![rank as u8])])
-                .unwrap();
-            assert_eq!(recv, vec![(1 - rank, vec![(1 - rank) as u8])]);
-            let all = t.all_gather_bytes(vec![rank as u8, 0xAA]).unwrap();
-            assert_eq!(all, vec![vec![0u8, 0xAA], vec![1u8, 0xAA]]);
-            t.barrier().unwrap();
-            let mut grads = vec![rank as f32; 6];
-            t.all_reduce_sum(&mut grads).unwrap();
-            assert_eq!(grads, vec![1.0; 6]); // 0 + 1
-        })
+        let out = crate::comm::transport::run_world(
+            &InProcFactory::default(),
+            2,
+            |t| {
+                let rank = t.rank();
+                assert_eq!(t.world_size(), 2);
+                // Out-of-range destination must error, not panic.
+                assert!(t.all_to_all_bytes(vec![(9, vec![0u8])]).is_err());
+                // (The failed call deposited nothing, so the group is
+                // still aligned.)
+                let recv = t
+                    .all_to_all_bytes(vec![(1 - rank, vec![rank as u8])])
+                    .unwrap();
+                assert_eq!(recv, vec![(1 - rank, vec![(1 - rank) as u8])]);
+                let all =
+                    t.all_gather_bytes(vec![rank as u8, 0xAA]).unwrap();
+                assert_eq!(all, vec![vec![0u8, 0xAA], vec![1u8, 0xAA]]);
+                t.barrier().unwrap();
+                let mut grads = vec![rank as f32; 6];
+                t.all_reduce_sum(&mut grads).unwrap();
+                assert_eq!(grads, vec![1.0; 6]); // 0 + 1
+            },
+        )
         .unwrap();
         assert_eq!(out.len(), 2);
     }

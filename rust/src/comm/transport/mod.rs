@@ -510,7 +510,9 @@ pub mod registry {
     /// accepted).
     pub fn create(name: &str) -> Option<Arc<dyn TransportFactory>> {
         Some(match name {
-            "inproc" | "in-proc" | "threads" => Arc::new(InProcFactory),
+            "inproc" | "in-proc" | "threads" => {
+                Arc::new(InProcFactory::default())
+            }
             "tcp" | "tcp-loopback" | "loopback" => {
                 Arc::new(TcpLoopbackFactory::from_env())
             }

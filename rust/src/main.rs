@@ -98,7 +98,9 @@ fn cmd_sim(args: &Args) {
     );
     println!(
         "{} | {} | {} GPUs | mb {}\n  MFU  {:.1}%\n  TPT  {:.0} tok/s/GPU\n  \
-         step {:.3}s (comm {:.1}ms)\n  mem  {:.1} GB{}\n  dispatcher {:.2}ms",
+         step {:.3}s (comm {:.1}ms)\n  mem  {:.1} GB{}\n  dispatcher {:.2}ms\n  \
+         plan {:.2}ms/step (p99 {:.2}ms; {:.0}% warm solves, {:.0}% cache \
+         hits)",
         r.system.name(),
         r.model_name,
         r.gpus,
@@ -110,6 +112,10 @@ fn cmd_sim(args: &Args) {
         r.peak_mem_gb,
         if r.oom { " (OOM!)" } else { "" },
         r.dispatcher_overhead_ms,
+        r.plan_ms,
+        r.plan_stats.p99_ms,
+        r.plan_stats.warm_rate * 100.0,
+        r.plan_stats.cache_hit_rate * 100.0,
     );
 }
 

@@ -13,20 +13,24 @@
 //!    All-Gather strawman it is compared against (Fig. 12).
 //!
 //! Steps 1–3 are "computation" in the paper's taxonomy and run inside
-//! the prefetch overlap; step 4 is the only on-critical-path work. The
-//! hot path is [`Dispatcher::dispatch_incremental`], which threads a
-//! [`PlanScratch`] (no allocation in the sort/heap/volume loops) *and*
-//! a [`PhaseHistory`]: recurring batch shapes replay a cached solve
-//! bit-identically, similar shapes warm-start from the previous step's
-//! assignment, and only diverged batches pay the from-scratch solve
-//! ([`Dispatcher::dispatch_with`], the history-free baseline).
+//! the prefetch overlap; step 4 is the only on-critical-path work.
+//! [`Dispatcher::dispatch`] is the *single* planning entry point: it
+//! threads a [`PlanScratch`] (no allocation in the sort/heap/volume
+//! loops) and a [`DispatchOptions`] — attach a [`PhaseHistory`] and
+//! recurring batch shapes replay a cached solve bit-identically,
+//! similar shapes warm-start from the previous step's assignment
+//! within the options' tolerance band, and only diverged batches pay
+//! the from-scratch solve; omit the history for the cold baseline.
+//! Callers above the phase level should not drive dispatchers directly
+//! — the stateful [`crate::orchestrator::session::PlanSession`] owns
+//! scratches and histories for all three phases.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::balance::balancer::{registry, Balancer};
 use crate::balance::cache::{PlanCache, Sketch, DEFAULT_PLAN_CACHE_SIZE};
-use crate::balance::incremental::PlanSource;
+use crate::balance::incremental::{PlanSource, REPAIR_TOLERANCE};
 use crate::balance::scratch::PlanScratch;
 use crate::balance::types::{Assignment, ExampleRef};
 use crate::comm::costmodel::{allgather_cost, alltoall_cost, CollectiveCost};
@@ -67,6 +71,56 @@ impl PhaseHistory {
 impl Default for PhaseHistory {
     fn default() -> PhaseHistory {
         PhaseHistory::new(DEFAULT_PLAN_CACHE_SIZE)
+    }
+}
+
+/// Per-call knobs of [`Dispatcher::dispatch`] — the phase-level mirror
+/// of `PlanOptions` (`crate::orchestrator::session`). The default is
+/// the history-free cold solve; attach a [`PhaseHistory`] for the
+/// incremental path.
+#[derive(Debug)]
+pub struct DispatchOptions<'h> {
+    /// Cross-step planning state. `None` = solve from scratch.
+    pub history: Option<&'h mut PhaseHistory>,
+    /// Warm-acceptance tolerance band (see
+    /// [`crate::balance::incremental::warm_start_with`]).
+    pub tolerance: f64,
+    /// Consult/populate the sketch-keyed solve cache. `false` skips the
+    /// key build and insert clone entirely; warm-starting still applies
+    /// when a history is attached.
+    pub cache: bool,
+}
+
+impl Default for DispatchOptions<'_> {
+    fn default() -> Self {
+        DispatchOptions {
+            history: None,
+            tolerance: REPAIR_TOLERANCE,
+            cache: true,
+        }
+    }
+}
+
+impl<'h> DispatchOptions<'h> {
+    /// The steady-state path: warm-start + cache through `history`.
+    pub fn incremental(history: &'h mut PhaseHistory) -> Self {
+        DispatchOptions {
+            history: Some(history),
+            tolerance: REPAIR_TOLERANCE,
+            cache: true,
+        }
+    }
+
+    /// Override the warm-acceptance tolerance band.
+    pub fn tolerance(mut self, tolerance: f64) -> Self {
+        self.tolerance = tolerance;
+        self
+    }
+
+    /// Enable or disable the sketch-keyed solve cache.
+    pub fn cache(mut self, cache: bool) -> Self {
+        self.cache = cache;
+        self
     }
 }
 
@@ -149,76 +203,28 @@ impl Dispatcher {
         Some(Dispatcher::new(registry::create(name)?, communicator))
     }
 
-    /// Plan this phase's rearrangement with a fresh scratch
-    /// (convenience path for tests and one-shot callers).
+    /// Plan this phase's rearrangement — the one planning entry point.
     ///
     /// * `placement[g]` — instance currently holding example g.
     /// * `lens[g]` — example g's sequence length in this phase (0 =
     ///   does not participate, stays put).
     /// * `payload[g]` — bytes that must move if g changes instance.
+    /// * `scratch` — reusable sort/heap/volume buffers; warmed-up calls
+    ///   are allocation-free.
+    /// * `opts` — history / tolerance / cache knobs
+    ///   ([`DispatchOptions::default`] is the cold, history-free
+    ///   solve; [`DispatchOptions::incremental`] the steady-state
+    ///   path, updating the history in place).
     pub fn dispatch(
         &self,
         topo: &Topology,
         placement: &[usize],
         lens: &[usize],
         payload: &[f64],
-    ) -> DispatchPlan {
-        self.dispatch_with(
-            topo,
-            placement,
-            lens,
-            payload,
-            &mut PlanScratch::new(),
-        )
-    }
-
-    /// Plan this phase's rearrangement, reusing `scratch` buffers — the
-    /// allocation-free, history-free hot path (every step plans from
-    /// scratch).
-    pub fn dispatch_with(
-        &self,
-        topo: &Topology,
-        placement: &[usize],
-        lens: &[usize],
-        payload: &[f64],
         scratch: &mut PlanScratch,
+        opts: DispatchOptions<'_>,
     ) -> DispatchPlan {
-        self.dispatch_core(topo, placement, lens, payload, scratch, None)
-    }
-
-    /// Plan this phase's rearrangement incrementally: consult the
-    /// sketch-keyed solve cache, warm-start from the previous step's
-    /// assignment, and fall back to the from-scratch solve when the
-    /// batch diverged. `history` carries the cross-step state and is
-    /// updated in place.
-    pub fn dispatch_incremental(
-        &self,
-        topo: &Topology,
-        placement: &[usize],
-        lens: &[usize],
-        payload: &[f64],
-        scratch: &mut PlanScratch,
-        history: &mut PhaseHistory,
-    ) -> DispatchPlan {
-        self.dispatch_core(
-            topo,
-            placement,
-            lens,
-            payload,
-            scratch,
-            Some(history),
-        )
-    }
-
-    fn dispatch_core(
-        &self,
-        topo: &Topology,
-        placement: &[usize],
-        lens: &[usize],
-        payload: &[f64],
-        scratch: &mut PlanScratch,
-        mut history: Option<&mut PhaseHistory>,
-    ) -> DispatchPlan {
+        let DispatchOptions { mut history, tolerance, cache } = opts;
         let t0 = Instant::now();
         let d = topo.instances;
         let n = lens.len();
@@ -251,7 +257,7 @@ impl Dispatcher {
             // the lens slice out so the borrows stay disjoint.
             let active_lens = std::mem::take(&mut scratch.active_lens);
             let mut local = match history.as_deref_mut() {
-                Some(h) if h.cache.capacity() > 0 => {
+                Some(h) if cache && h.cache.capacity() > 0 => {
                     // The solve is a pure function of (active lens, d):
                     // sketch-bucketed exact lookup first, then
                     // warm-start, then cold solve.
@@ -267,11 +273,12 @@ impl Dispatcher {
                         h.prev_local.clone_from(&cached);
                         cached
                     } else {
-                        let inc = self.balancer.plan_incremental(
+                        let inc = self.balancer.plan_incremental_with(
                             &active_lens,
                             d,
                             &h.prev_local,
                             scratch,
+                            tolerance,
                         );
                         source = inc.source;
                         repair_moves = inc.repair_moves;
@@ -285,14 +292,16 @@ impl Dispatcher {
                     }
                 }
                 Some(h) => {
-                    // Caching disabled (capacity 0): skip the sketch,
-                    // key build, and insert clone entirely — the warm
-                    // start from the previous assignment still applies.
-                    let inc = self.balancer.plan_incremental(
+                    // Caching disabled (opts or capacity 0): skip the
+                    // sketch, key build, and insert clone entirely — the
+                    // warm start from the previous assignment still
+                    // applies.
+                    let inc = self.balancer.plan_incremental_with(
                         &active_lens,
                         d,
                         &h.prev_local,
                         scratch,
+                        tolerance,
                     );
                     source = inc.source;
                     repair_moves = inc.repair_moves;
@@ -417,15 +426,33 @@ mod tests {
         Dispatcher::by_name(name, communicator).expect("registered name")
     }
 
+    /// One-shot cold dispatch on a fresh scratch (test convenience).
+    fn cold(
+        dp: &Dispatcher,
+        topo: &Topology,
+        placement: &[usize],
+        lens: &[usize],
+        payload: &[f64],
+    ) -> DispatchPlan {
+        dp.dispatch(
+            topo,
+            placement,
+            lens,
+            payload,
+            &mut PlanScratch::new(),
+            DispatchOptions::default(),
+        )
+    }
+
     #[test]
     fn balanced_dispatch_reduces_imbalance() {
         let (topo, placement, lens, payload) = setup(8, 16, 1);
-        let plan = disp("greedy", Communicator::AllToAll { nodewise: true })
-            .dispatch(&topo, &placement, &lens, &payload);
+        let dp = disp("greedy", Communicator::AllToAll { nodewise: true });
+        let plan = cold(&dp, &topo, &placement, &lens, &payload);
         let cm = CostModel::Linear { alpha: 1.0 };
         // Identity (no balance) batches.
-        let base = disp("none", Communicator::AllToAll { nodewise: false })
-            .dispatch(&topo, &placement, &lens, &payload);
+        let base_dp = disp("none", Communicator::AllToAll { nodewise: false });
+        let base = cold(&base_dp, &topo, &placement, &lens, &payload);
         assert!(
             cm.imbalance(&plan.assignment) < cm.imbalance(&base.assignment),
             "{} !< {}",
@@ -438,8 +465,8 @@ mod tests {
     #[test]
     fn no_balance_plan_never_moves() {
         let (topo, placement, lens, payload) = setup(4, 8, 2);
-        let plan = disp("none", Communicator::AllToAll { nodewise: false })
-            .dispatch(&topo, &placement, &lens, &payload);
+        let dp = disp("none", Communicator::AllToAll { nodewise: false });
+        let plan = cold(&dp, &topo, &placement, &lens, &payload);
         assert_eq!(plan.route.moved(), 0);
         assert!(plan.comm.seconds <= topo.base_latency + 1e-12);
     }
@@ -450,8 +477,8 @@ mod tests {
         let placement = vec![0, 0, 1, 1];
         let lens = vec![10, 0, 7, 0];
         let payload = vec![40.0, 0.0, 28.0, 0.0];
-        let plan = disp("greedy", Communicator::AllToAll { nodewise: false })
-            .dispatch(&topo, &placement, &lens, &payload);
+        let dp = disp("greedy", Communicator::AllToAll { nodewise: false });
+        let plan = cold(&dp, &topo, &placement, &lens, &payload);
         assert_eq!(plan.route.to[1], 0);
         assert_eq!(plan.route.to[3], 1);
         let assigned: usize =
@@ -462,10 +489,10 @@ mod tests {
     #[test]
     fn allgather_costs_more_than_alltoall() {
         let (topo, placement, lens, payload) = setup(16, 8, 3);
-        let a2a = disp("greedy", Communicator::AllToAll { nodewise: true })
-            .dispatch(&topo, &placement, &lens, &payload);
-        let ag = disp("greedy", Communicator::AllGather)
-            .dispatch(&topo, &placement, &lens, &payload);
+        let a2a_dp = disp("greedy", Communicator::AllToAll { nodewise: true });
+        let a2a = cold(&a2a_dp, &topo, &placement, &lens, &payload);
+        let ag_dp = disp("greedy", Communicator::AllGather);
+        let ag = cold(&ag_dp, &topo, &placement, &lens, &payload);
         assert!(ag.comm.seconds > a2a.comm.seconds);
         assert!(ag.peak_bytes > a2a.peak_bytes);
     }
@@ -473,11 +500,11 @@ mod tests {
     #[test]
     fn nodewise_reduces_inter_node_traffic() {
         let (topo, placement, lens, payload) = setup(32, 8, 4);
-        let with = disp("greedy", Communicator::AllToAll { nodewise: true })
-            .dispatch(&topo, &placement, &lens, &payload);
-        let without =
-            disp("greedy", Communicator::AllToAll { nodewise: false })
-                .dispatch(&topo, &placement, &lens, &payload);
+        let with_dp = disp("greedy", Communicator::AllToAll { nodewise: true });
+        let with = cold(&with_dp, &topo, &placement, &lens, &payload);
+        let without_dp =
+            disp("greedy", Communicator::AllToAll { nodewise: false });
+        let without = cold(&without_dp, &topo, &placement, &lens, &payload);
         let inter_with = with.route.inter_node_bytes(&topo, &payload);
         let inter_without =
             without.route.inter_node_bytes(&topo, &payload);
@@ -490,8 +517,8 @@ mod tests {
     #[test]
     fn destinations_cover_active_examples() {
         let (topo, placement, lens, payload) = setup(4, 4, 5);
-        let plan = disp("padded", Communicator::AllToAll { nodewise: false })
-            .dispatch(&topo, &placement, &lens, &payload);
+        let dp = disp("padded", Communicator::AllToAll { nodewise: false });
+        let plan = cold(&dp, &topo, &placement, &lens, &payload);
         let dst = plan.destination_of(lens.len());
         for (g, d) in dst.iter().enumerate() {
             assert_eq!(d.is_some(), lens[g] > 0);
@@ -502,11 +529,16 @@ mod tests {
     fn scratch_reuse_matches_fresh_dispatch() {
         let (topo, placement, lens, payload) = setup(8, 12, 6);
         let dp = disp("kk", Communicator::AllToAll { nodewise: true });
-        let fresh = dp.dispatch(&topo, &placement, &lens, &payload);
+        let fresh = cold(&dp, &topo, &placement, &lens, &payload);
         let mut scratch = PlanScratch::new();
         for _ in 0..3 {
-            let reused = dp.dispatch_with(
-                &topo, &placement, &lens, &payload, &mut scratch,
+            let reused = dp.dispatch(
+                &topo,
+                &placement,
+                &lens,
+                &payload,
+                &mut scratch,
+                DispatchOptions::default(),
             );
             assert_eq!(reused.assignment, fresh.assignment);
             assert_eq!(reused.route, fresh.route);
@@ -522,17 +554,26 @@ mod tests {
         let dp = disp("greedy", Communicator::AllToAll { nodewise: true });
         let mut scratch = PlanScratch::new();
         let mut history = PhaseHistory::new(8);
-        let cold = dp.dispatch_with(
-            &topo, &placement, &lens, &payload, &mut scratch,
+        let cold_plan = dp.dispatch(
+            &topo,
+            &placement,
+            &lens,
+            &payload,
+            &mut scratch,
+            DispatchOptions::default(),
         );
-        let inc = dp.dispatch_incremental(
-            &topo, &placement, &lens, &payload, &mut scratch,
-            &mut history,
+        let inc = dp.dispatch(
+            &topo,
+            &placement,
+            &lens,
+            &payload,
+            &mut scratch,
+            DispatchOptions::incremental(&mut history),
         );
         assert_eq!(inc.source, crate::balance::PlanSource::Cold);
-        assert_eq!(inc.assignment, cold.assignment);
-        assert_eq!(inc.route, cold.route);
-        assert_eq!(inc.nodewise_perm, cold.nodewise_perm);
+        assert_eq!(inc.assignment, cold_plan.assignment);
+        assert_eq!(inc.route, cold_plan.route);
+        assert_eq!(inc.nodewise_perm, cold_plan.nodewise_perm);
     }
 
     #[test]
@@ -541,13 +582,21 @@ mod tests {
         let dp = disp("kk", Communicator::AllToAll { nodewise: true });
         let mut scratch = PlanScratch::new();
         let mut history = PhaseHistory::new(8);
-        let first = dp.dispatch_incremental(
-            &topo, &placement, &lens, &payload, &mut scratch,
-            &mut history,
+        let first = dp.dispatch(
+            &topo,
+            &placement,
+            &lens,
+            &payload,
+            &mut scratch,
+            DispatchOptions::incremental(&mut history),
         );
-        let second = dp.dispatch_incremental(
-            &topo, &placement, &lens, &payload, &mut scratch,
-            &mut history,
+        let second = dp.dispatch(
+            &topo,
+            &placement,
+            &lens,
+            &payload,
+            &mut scratch,
+            DispatchOptions::incremental(&mut history),
         );
         assert_eq!(second.source, crate::balance::PlanSource::Cached);
         assert_eq!(second.assignment, first.assignment);
@@ -563,16 +612,24 @@ mod tests {
         let dp = disp("greedy", Communicator::AllToAll { nodewise: true });
         let mut scratch = PlanScratch::new();
         let mut history = PhaseHistory::new(8);
-        dp.dispatch_incremental(
-            &topo, &placement, &lens, &payload, &mut scratch,
-            &mut history,
+        dp.dispatch(
+            &topo,
+            &placement,
+            &lens,
+            &payload,
+            &mut scratch,
+            DispatchOptions::incremental(&mut history),
         );
         // Perturb one example's length: same shape, different key.
         let mut lens2 = lens.clone();
         lens2[3] += 1;
-        let plan = dp.dispatch_incremental(
-            &topo, &placement, &lens2, &payload, &mut scratch,
-            &mut history,
+        let plan = dp.dispatch(
+            &topo,
+            &placement,
+            &lens2,
+            &payload,
+            &mut scratch,
+            DispatchOptions::incremental(&mut history),
         );
         let assigned: usize =
             plan.assignment.iter().map(|b| b.len()).sum();
@@ -586,8 +643,13 @@ mod tests {
         let mut scratch = PlanScratch::new();
         for name in crate::balance::registry::NAMES {
             let plan = disp(name, Communicator::AllToAll { nodewise: true })
-                .dispatch_with(
-                    &topo, &placement, &lens, &payload, &mut scratch,
+                .dispatch(
+                    &topo,
+                    &placement,
+                    &lens,
+                    &payload,
+                    &mut scratch,
+                    DispatchOptions::default(),
                 );
             let assigned: usize =
                 plan.assignment.iter().map(|b| b.len()).sum();

@@ -11,18 +11,30 @@
 //!   planned concurrently on reusable scratch, subsequence assembly
 //!   bookkeeping, rearrangement composition, and the full
 //!   [`global::StepPlan`] shared by the simulator and trainer;
-//! * [`pipeline`] — the double-buffered [`pipeline::StepPipeline`] that
-//!   plans step *t+1* while step *t* executes (the §6 overlap on the
-//!   execution path).
+//! * [`session`] — the **public planning surface**: a stateful
+//!   [`session::PlanSession`] owning scratches, histories, and plan
+//!   caches, with one entry point ([`session::PlanSession::plan`] +
+//!   [`session::PlanOptions`]) and provenance-rich
+//!   [`session::PlanReport`]s;
+//! * [`pipeline`] — the deep-buffered [`pipeline::StepPipeline`] that
+//!   drives a session on a background thread, planning step *t+1*
+//!   while step *t* executes (the §6 overlap on the execution path).
 
 pub mod dispatcher;
 pub mod global;
 pub mod pipeline;
 pub mod rearrangement;
+pub mod session;
 
-pub use dispatcher::{Communicator, Dispatcher, DispatchPlan, PhaseHistory};
+pub use dispatcher::{
+    Communicator, DispatchOptions, Dispatcher, DispatchPlan, PhaseHistory,
+};
 pub use global::{
     Orchestrator, OrchestratorConfig, StepHistory, StepPlan, StepScratch,
 };
 pub use pipeline::{PipelineConfig, PlannedStep, StepPipeline};
 pub use rearrangement::Rearrangement;
+pub use session::{
+    PlanMode, PlanOptions, PlanReport, PlanSession, PlanTimeStats,
+    ResolvedMode, SessionStats, SolveStrategy,
+};

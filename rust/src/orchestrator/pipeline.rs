@@ -2,46 +2,46 @@
 //!
 //! The paper prices dispatcher computation as free because it "overlaps
 //! with the forward pass via prefetch" — this module is where that
-//! actually happens. A [`StepPipeline`] owns a background planning
-//! thread that samples the next steps' mini-batches and runs the full
-//! [`Orchestrator`] plan (post-balancing, node-wise rearrangement,
+//! actually happens. A [`StepPipeline`] moves a [`PlanSession`] onto a
+//! background planning thread that samples the next steps' mini-batches
+//! and runs the full plan (post-balancing, node-wise rearrangement,
 //! composition) while the caller executes the current step. The channel
-//! is bounded at `depth` planned-but-unconsumed steps (depth 1 =
-//! classic double buffering; depth 2–3 absorb planning spikes — a cold
-//! solve at d ≥ 1024, an allocator hiccup — without ever stalling the
-//! consumer), so planning can never run unboundedly ahead.
+//! is bounded at `depth` planned-but-unconsumed steps — a *session*
+//! property ([`PlanSession::depth`], from its [`PipelineConfig`]; depth
+//! 1 = classic double buffering; depth 2–3 absorb planning spikes — a
+//! cold solve at d ≥ 1024, an allocator hiccup — without ever stalling
+//! the consumer), so planning can never run unboundedly ahead.
 //!
-//! The planning thread reuses one [`StepScratch`] across steps, plans
-//! the three phases concurrently, and carries a [`StepHistory`] so
-//! steady-state steps go through the incremental path: warm-started
+//! The session owns all cross-step state, so steady-state steps go
+//! through the incremental path ([`PlanOptions::auto`]): warm-started
 //! solves and sketch-cache replays instead of from-scratch planning.
 //! Every rank runs an identical pipeline over the identical sampled
-//! stream, and the incremental planner is a deterministic function of
-//! that stream, so all ranks still agree on every plan without
-//! communication (§5.2.1). Per-step planning latency is measured in
-//! [`PlannedStep::plan_nanos`] and reported by the trainer and the
-//! Table-2 bench.
+//! stream, and the session is a deterministic function of that stream,
+//! so all ranks still agree on every plan without communication
+//! (§5.2.1). Each planned step carries its [`PlanReport`], so consumers
+//! (trainer, benches) read provenance instead of reconstructing it.
 
 use crate::balance::cache::DEFAULT_PLAN_CACHE_SIZE;
-use crate::comm::topology::Topology;
 use crate::data::loader::Prefetcher;
 use crate::data::synth::{DatasetConfig, Example};
 
-use super::global::{Orchestrator, StepHistory, StepPlan, StepScratch};
+use super::global::StepPlan;
+use super::session::{PlanOptions, PlanReport, PlanSession};
 
 /// Upper bound on the pipeline depth: lookahead beyond a few steps only
 /// costs memory (every in-flight step retains its mini-batches + plan).
 pub const MAX_PIPELINE_DEPTH: usize = 8;
 
-/// Lookahead + caching configuration for a [`StepPipeline`].
+/// Lookahead + caching configuration for a [`PlanSession`] (and hence
+/// the [`StepPipeline`] it drives).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PipelineConfig {
     /// Planned-but-unconsumed steps in flight (1 = double buffering;
     /// 2–3 absorb planning spikes at large d).
     pub depth: usize,
     /// Capacity of each planning cache — per phase and per step — in
-    /// the pipeline's [`StepHistory`] (0 disables caching; warm-
-    /// starting still applies).
+    /// the session's history (0 disables caching; warm-starting still
+    /// applies).
     pub plan_cache_size: usize,
 }
 
@@ -81,74 +81,50 @@ pub struct PlannedStep {
     pub minibatches: Vec<Vec<Example>>,
     /// The full step plan (same object the simulator prices).
     pub plan: StepPlan,
+    /// Provenance of this plan (per-phase sources, cache hit, timing).
+    pub report: PlanReport,
     /// Planning wall-time — time spent *off* the critical path.
     pub plan_nanos: u128,
 }
 
-/// Background sampler + planner with bounded lookahead.
+/// Background sampler + planner with bounded lookahead, driving one
+/// [`PlanSession`].
 pub struct StepPipeline {
-    inner: Prefetcher<StepPlan>,
+    inner: Prefetcher<(StepPlan, PlanReport)>,
 }
 
 impl StepPipeline {
-    /// Start planning: `d` instances × `batch_size` examples per step
-    /// for `steps` steps, at most `depth` planned steps in flight
-    /// (caching at the default capacity).
-    #[allow(clippy::too_many_arguments)]
+    /// Start planning: move `session` onto a background thread that
+    /// samples `batch_size` examples per instance per step for `steps`
+    /// steps and plans each with [`PlanOptions::auto`]. The instance
+    /// count comes from the session's topology and the lookahead depth
+    /// from its [`PipelineConfig`] (out-of-range depths are clamped
+    /// into the documented bounds; use [`PipelineConfig::validate`] on
+    /// user-supplied input first to surface an error instead — the
+    /// CLI/config layers do).
     pub fn new(
-        orch: Orchestrator,
-        topo: Topology,
+        mut session: PlanSession,
         data_cfg: DatasetConfig,
         seed: u64,
-        d: usize,
         batch_size: usize,
         steps: usize,
-        depth: usize,
     ) -> StepPipeline {
-        StepPipeline::with_config(
-            orch,
-            topo,
-            data_cfg,
-            seed,
-            d,
-            batch_size,
-            steps,
-            PipelineConfig { depth, ..PipelineConfig::default() },
-        )
-    }
-
-    /// Start planning with an explicit lookahead/caching configuration.
-    /// Out-of-range values are clamped into the documented bounds; use
-    /// [`PipelineConfig::validate`] on user-supplied input first to
-    /// surface an error instead (the CLI/config layers do).
-    #[allow(clippy::too_many_arguments)]
-    pub fn with_config(
-        orch: Orchestrator,
-        topo: Topology,
-        data_cfg: DatasetConfig,
-        seed: u64,
-        d: usize,
-        batch_size: usize,
-        steps: usize,
-        config: PipelineConfig,
-    ) -> StepPipeline {
-        let mut scratch = StepScratch::default();
-        let mut history =
-            StepHistory::new(config.plan_cache_size.min(65_536));
+        let d = session.topology().instances;
+        let depth = session.depth().clamp(1, MAX_PIPELINE_DEPTH);
         let inner = Prefetcher::new(
             data_cfg,
             seed,
             d,
             batch_size,
             steps,
-            config.depth.clamp(1, MAX_PIPELINE_DEPTH),
+            depth,
             move |mbs| {
-                orch.plan_step_incremental(
-                    &topo,
-                    mbs,
-                    &mut scratch,
-                    &mut history,
-                )
+                let plan = session.plan(mbs, PlanOptions::auto());
+                let report = session
+                    .report()
+                    .cloned()
+                    .expect("plan() always leaves a report");
+                (plan, report)
             },
         );
         StepPipeline { inner }
@@ -157,10 +133,14 @@ impl StepPipeline {
     /// Blocking fetch of the next planned step; `None` when the
     /// configured number of steps is exhausted.
     pub fn next(&self) -> Option<PlannedStep> {
-        self.inner.next().map(|s| PlannedStep {
-            minibatches: s.minibatches,
-            plan: s.plan,
-            plan_nanos: s.plan_nanos,
+        self.inner.next().map(|s| {
+            let (plan, report) = s.plan;
+            PlannedStep {
+                minibatches: s.minibatches,
+                plan,
+                report,
+                plan_nanos: s.plan_nanos,
+            }
         })
     }
 }
@@ -168,6 +148,7 @@ impl StepPipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::topology::Topology;
     use crate::model::flops::PhaseKind;
     use crate::orchestrator::global::OrchestratorConfig;
 
@@ -176,15 +157,16 @@ mod tests {
         seed: u64,
         config: PipelineConfig,
     ) -> StepPipeline {
-        StepPipeline::with_config(
-            Orchestrator::new(OrchestratorConfig::orchmllm(7168.0)),
-            Topology::h100(4),
+        StepPipeline::new(
+            PlanSession::new(
+                OrchestratorConfig::orchmllm(7168.0),
+                config,
+                Topology::h100(4),
+            ),
             DatasetConfig::tiny(2, 2),
             seed,
-            4,
             6,
             steps,
-            config,
         )
     }
 
@@ -206,28 +188,29 @@ mod tests {
     }
 
     #[test]
-    fn pipelined_plans_match_inline_incremental_planning() {
+    fn pipelined_plans_match_inline_session_planning() {
         // Same seed → the pipeline must produce exactly the plans an
-        // inline incremental planner (same evolving history) would have
-        // computed — the SPMD determinism every rank relies on.
+        // inline session (same evolving history) would have computed —
+        // the SPMD determinism every rank relies on.
         let p = pipeline(3, 7);
-        let orch = Orchestrator::new(OrchestratorConfig::orchmllm(7168.0));
-        let topo = Topology::h100(4);
-        let mut scratch = StepScratch::default();
-        let mut history = StepHistory::default();
+        let mut inline_session = PlanSession::with_defaults(
+            OrchestratorConfig::orchmllm(7168.0),
+            Topology::h100(4),
+        );
         while let Some(step) = p.next() {
-            let inline = orch.plan_step_incremental(
-                &topo,
-                &step.minibatches,
-                &mut scratch,
-                &mut history,
-            );
+            let inline = inline_session
+                .plan(&step.minibatches, PlanOptions::auto());
             assert_eq!(step.plan.llm.route, inline.llm.route);
             assert_eq!(
                 step.plan.assignment(PhaseKind::Llm),
                 inline.assignment(PhaseKind::Llm)
             );
             assert_eq!(step.plan.vision.out_route, inline.vision.out_route);
+            assert_eq!(
+                step.report.sources,
+                inline_session.report().unwrap().sources,
+                "pipelined provenance must match inline provenance"
+            );
         }
     }
 
@@ -273,11 +256,15 @@ mod tests {
     }
 
     #[test]
-    fn records_planning_time() {
-        let p = pipeline(1, 11);
+    fn records_planning_time_and_provenance() {
+        let p = pipeline(2, 11);
         let step = p.next().unwrap();
         assert!(step.plan_nanos > 0);
         assert!(step.plan_nanos >= step.plan.compute_nanos);
+        assert_eq!(step.report.step, 1);
+        assert!(step.report.plan_nanos > 0);
+        // The first planned step can never be warm.
+        assert!(step.report.cold(), "{:?}", step.report);
     }
 
     #[test]

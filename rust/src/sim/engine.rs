@@ -15,17 +15,21 @@
 //! staging buffers. OOM ends the run (Fig. 10/12 behaviour).
 
 use crate::balance::balancer::registry;
-use crate::balance::incremental::PlanSource;
 use crate::balance::types::ExampleRef;
 use crate::comm::costmodel::allreduce_cost;
 use crate::comm::topology::Topology;
 use crate::data::synth::{DatasetConfig, Example, Generator};
 use crate::model::config::MllmConfig;
 use crate::model::flops::{PhaseKind, SubmoduleCost};
-use crate::orchestrator::global::{
-    Orchestrator, OrchestratorConfig, StepHistory, StepPlan, StepScratch,
-};
+use crate::orchestrator::global::{OrchestratorConfig, StepPlan};
+use crate::orchestrator::pipeline::PipelineConfig;
+use crate::orchestrator::session::{PlanOptions, PlanSession};
 use crate::util::stats::Summary;
+
+// Plan-time telemetry now lives with the session that produces it;
+// re-exported here so existing consumers (megatron, benches) keep their
+// import path.
+pub use crate::orchestrator::session::PlanTimeStats;
 
 use super::gpu::GpuSpec;
 use super::megatron;
@@ -281,25 +285,6 @@ pub fn simulate_step_modes(
     }
 }
 
-/// Per-step plan-time distribution and warm/cold breakdown for one run
-/// (§6 telemetry; zeroed for baselines that never run the dispatcher).
-/// Steady-state (t ≥ 2) steps plan warm or cached; only step 1 — or a
-/// diverged batch — pays the cold from-scratch solve.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct PlanTimeStats {
-    pub p50_ms: f64,
-    pub p95_ms: f64,
-    pub p99_ms: f64,
-    /// Mean plan time over steps with at least one warm/cached phase.
-    pub warm_ms: f64,
-    /// Mean plan time over fully cold (from-scratch) steps.
-    pub cold_ms: f64,
-    /// Fraction of phase solves replayed from a sketch cache.
-    pub cache_hit_rate: f64,
-    /// Fraction of phase solves warm-started or cached.
-    pub warm_rate: f64,
-}
-
 /// Aggregate of a simulated multi-step run.
 #[derive(Clone, Debug)]
 pub struct RunSummary {
@@ -376,10 +361,12 @@ pub fn simulate_run_named(
             cfg.with_balancer(registry::must(name))
         };
     }
-    let orch = Orchestrator::new(cfg.clone());
+    // The simulator's planning stream is one session: it owns the
+    // scratch, histories, and plan caches the loop used to thread by
+    // hand, and its stats become the run's plan-time telemetry.
+    let mut session =
+        PlanSession::new(cfg.clone(), PipelineConfig::default(), topo);
     let mut generator = Generator::new(data_cfg, seed);
-    let mut scratch = StepScratch::default();
-    let mut history = StepHistory::default();
 
     let mut mfu = Summary::new();
     let mut tpt = Summary::new();
@@ -387,25 +374,14 @@ pub fn simulate_run_named(
     let mut comm_s = Summary::new();
     let mut mem = Summary::new();
     let mut disp_ms = Summary::new();
-    let mut plan_ms = Summary::new();
-    let mut warm_plan_ms = Summary::new();
-    let mut cold_plan_ms = Summary::new();
     let mut overlap = Summary::new();
     let mut inter = [Summary::new(), Summary::new(), Summary::new()];
-    let mut phase_solves = 0u64;
-    let mut warm_solves = 0u64;
-    let mut cached_solves = 0u64;
     let mut oom = false;
 
     for _ in 0..steps {
         let minibatches: Vec<Vec<Example>> =
             (0..gpus).map(|_| generator.batch(mini_batch)).collect();
-        let plan = orch.plan_step_incremental(
-            &topo,
-            &minibatches,
-            &mut scratch,
-            &mut history,
-        );
+        let plan = session.plan(&minibatches, PlanOptions::auto());
         let sim = simulate_step_modes(
             model,
             &topo,
@@ -426,24 +402,6 @@ pub fn simulate_run_named(
         disp_ms.push(
             sim.comm_secs * 1e3 + 0.5 + sim.dispatcher_secs * 1e3,
         );
-        plan_ms.push(sim.plan_secs * 1e3);
-        // Warm-vs-cold planning breakdown: a step is "cold" only when
-        // every phase solved from scratch (step 1, or a diverged
-        // steady-state batch).
-        let sources = plan.plan_sources();
-        for s in sources {
-            phase_solves += 1;
-            match s {
-                PlanSource::Warm => warm_solves += 1,
-                PlanSource::Cached => cached_solves += 1,
-                PlanSource::Cold => {}
-            }
-        }
-        if sources.iter().all(|s| *s == PlanSource::Cold) {
-            cold_plan_ms.push(sim.plan_secs * 1e3);
-        } else {
-            warm_plan_ms.push(sim.plan_secs * 1e3);
-        }
         overlap.push(if sim.plan_secs > 0.0 {
             100.0 * sim.plan_secs.min(sim.compute_secs) / sim.plan_secs
         } else {
@@ -489,25 +447,11 @@ pub fn simulate_run_named(
         peak_mem_gb: mem.max() / 1e9,
         oom,
         dispatcher_overhead_ms: disp_ms.mean(),
-        plan_ms: plan_ms.mean(),
+        // Provenance comes straight from the session instead of being
+        // re-derived from plan sources in the loop above.
+        plan_ms: session.stats().mean_plan_ms(),
         plan_overlapped_pct: overlap.mean(),
-        plan_stats: PlanTimeStats {
-            p50_ms: plan_ms.percentile(50.0),
-            p95_ms: plan_ms.percentile(95.0),
-            p99_ms: plan_ms.percentile(99.0),
-            warm_ms: warm_plan_ms.mean(),
-            cold_ms: cold_plan_ms.mean(),
-            cache_hit_rate: if phase_solves == 0 {
-                0.0
-            } else {
-                cached_solves as f64 / phase_solves as f64
-            },
-            warm_rate: if phase_solves == 0 {
-                0.0
-            } else {
-                (warm_solves + cached_solves) as f64 / phase_solves as f64
-            },
-        },
+        plan_stats: session.plan_time_stats(),
         inter_node_mb: [inter[0].mean(), inter[1].mean(), inter[2].mean()],
     }
 }

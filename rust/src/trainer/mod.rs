@@ -25,8 +25,9 @@ use crate::comm::topology::Topology;
 use crate::comm::transport::registry as transport_registry;
 use crate::config::TrainRunConfig;
 use crate::data::synth::{DatasetConfig, TaskMix};
-use crate::orchestrator::global::{Orchestrator, OrchestratorConfig};
+use crate::orchestrator::global::OrchestratorConfig;
 use crate::orchestrator::pipeline::StepPipeline;
+use crate::orchestrator::session::{PlanSession, SessionStats};
 use crate::runtime::manifest::Manifest;
 
 use content::ContentGen;
@@ -42,6 +43,13 @@ pub struct TrainReport {
     /// Mean planning wall-time per step — spent on the pipeline thread,
     /// overlapped with execution (§6), not on the critical path.
     pub plan_secs_per_step: f64,
+    /// Fraction of phase solves warm-started or replayed from a plan
+    /// cache (from the session's `PlanReport`s — steady-state steps
+    /// should push this toward 1.0).
+    pub plan_warm_rate: f64,
+    /// Fraction of phase solves replayed bit-identically from a sketch
+    /// cache.
+    pub plan_cache_hit_rate: f64,
     pub workers: usize,
     pub steps: usize,
     /// Which comm backend carried the run (`--transport`).
@@ -64,7 +72,8 @@ impl TrainReport {
             "train: {} workers over '{}' transport, {} steps\n\
              {curve}loss {first:.4} -> {last:.4}\n\
              {:.0} tokens/step, {:.3}s/step ({:.1}ms comm, \
-             {:.2}ms plan overlapped)",
+             {:.2}ms plan overlapped; {:.0}% warm solves, \
+             {:.0}% cache hits)",
             self.workers,
             self.transport,
             self.steps,
@@ -72,6 +81,8 @@ impl TrainReport {
             self.secs_per_step,
             self.comm_secs_per_step * 1e3,
             self.plan_secs_per_step * 1e3,
+            self.plan_warm_rate * 100.0,
+            self.plan_cache_hit_rate * 100.0,
         )
     }
 }
@@ -198,7 +209,7 @@ pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
         let data_cfg = data_cfg;
         let dir = dir.to_path_buf();
         handles.push(std::thread::spawn(
-            move || -> Result<(Vec<StepOutcome>, u128)> {
+            move || -> Result<(Vec<StepOutcome>, u128, SessionStats)> {
                 let mut w = Worker::new(
                     rank,
                     topo,
@@ -207,38 +218,47 @@ pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
                     content,
                     cfg.lr,
                 )?;
-                // Identical stream + deterministic incremental planner
-                // on every rank: the lengths "all-gather". Depth and
-                // cache capacity come from --pipeline-depth /
-                // --plan-cache-size (depth 1 = plan t+1 while t
-                // executes; deeper absorbs planning spikes).
-                let pipeline = StepPipeline::with_config(
-                    Orchestrator::new(orch_cfg),
-                    topo,
+                // Identical stream + deterministic session on every
+                // rank: the lengths "all-gather". The session owns the
+                // planning state; depth and cache capacity come from
+                // --pipeline-depth / --plan-cache-size (depth 1 = plan
+                // t+1 while t executes; deeper absorbs planning
+                // spikes).
+                let pipeline = StepPipeline::new(
+                    PlanSession::new(
+                        orch_cfg,
+                        cfg.pipeline_config(),
+                        topo,
+                    ),
                     data_cfg,
                     cfg.seed,
-                    cfg.workers,
                     cfg.mini_batch,
                     cfg.steps,
-                    cfg.pipeline_config(),
                 );
                 let mut outcomes = Vec::new();
                 let mut plan_nanos: u128 = 0;
+                // Session-style provenance rebuilt from the reports
+                // (the session itself lives on the pipeline thread).
+                let mut stats = SessionStats::default();
                 while let Some(step) = pipeline.next() {
                     plan_nanos += step.plan_nanos;
+                    stats.record(&step.report);
                     outcomes.push(w.step(&step.plan)?);
                 }
-                Ok((outcomes, plan_nanos))
+                Ok((outcomes, plan_nanos, stats))
             },
         ));
     }
 
     let mut per_rank = Vec::new();
     let mut plan_nanos_rank0 = 0u128;
+    let mut stats_rank0 = SessionStats::default();
     for (rank, h) in handles.into_iter().enumerate() {
-        let (outcomes, plan_nanos) = h.join().expect("worker panicked")?;
+        let (outcomes, plan_nanos, stats) =
+            h.join().expect("worker panicked")?;
         if rank == 0 {
             plan_nanos_rank0 = plan_nanos;
+            stats_rank0 = stats;
         }
         per_rank.push(outcomes);
     }
@@ -264,6 +284,8 @@ pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
         plan_secs_per_step: plan_nanos_rank0 as f64
             / 1e9
             / steps.max(1) as f64,
+        plan_warm_rate: stats_rank0.warm_rate(),
+        plan_cache_hit_rate: stats_rank0.cache_hit_rate(),
         workers: cfg.workers,
         steps,
         transport: cfg.transport.clone(),

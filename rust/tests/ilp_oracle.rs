@@ -78,6 +78,43 @@ fn bnb_matches_brute_force_on_tiny_instances() {
 }
 
 #[test]
+fn dominance_pruning_matches_brute_force_on_duplicate_heavy_batches() {
+    // Duplicate-heavy instances are where the twin-batch dominance
+    // rule fires hardest (many batches share aggregates mid-search) —
+    // and where an unsound rule would be likeliest to prune the
+    // optimum away. Draw lengths from a 3-value alphabet so twins are
+    // everywhere, then check the pruned search against an exhaustive
+    // enumeration under every Eq.-2 regime.
+    check("dominance == brute force", 30, |g| {
+        let d = g.usize(2, 4); // 2..=3
+        let n = g.usize(2, 10); // 2..=9 => at most 3^9 = 19683 states
+        let alphabet = [
+            g.usize(1, 8) * 3,
+            g.usize(1, 8) * 3 + 1,
+            g.usize(1, 8) * 3 + 2,
+        ];
+        let lens: Vec<usize> =
+            (0..n).map(|_| alphabet[g.usize(0, 3)]).collect();
+        for cm in MODELS {
+            let s = ilp::solve(&cm, &lens, d, 1_000_000);
+            assert_eq!(
+                s.status,
+                IlpStatus::Optimal,
+                "{cm:?}: duplicate-heavy tiny instance must certify"
+            );
+            assert_valid_assignment(&s.assignment, n, d);
+            let opt = brute_force_opt(&cm, &lens, d);
+            assert!(
+                (s.makespan - opt).abs() <= 1e-9 * opt.max(1.0),
+                "{cm:?}: pruned B&B {} != brute-force optimum {opt} \
+                 (lens {lens:?}, d {d})",
+                s.makespan
+            );
+        }
+    });
+}
+
+#[test]
 fn no_registered_heuristic_beats_a_certified_oracle() {
     check("oracle dominance", 24, |g| {
         let d = g.usize(2, 5);

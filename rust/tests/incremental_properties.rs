@@ -24,11 +24,11 @@ use orchmllm::balance::types::{
 use orchmllm::balance::{registry, PlanScratch};
 use orchmllm::comm::topology::Topology;
 use orchmllm::orchestrator::dispatcher::{
-    Communicator, Dispatcher, PhaseHistory,
+    Communicator, DispatchOptions, Dispatcher, PhaseHistory,
 };
-use orchmllm::orchestrator::global::{
-    Orchestrator, OrchestratorConfig, StepHistory, StepScratch,
-};
+use orchmllm::orchestrator::global::OrchestratorConfig;
+use orchmllm::orchestrator::pipeline::PipelineConfig;
+use orchmllm::orchestrator::session::{PlanOptions, PlanSession};
 use orchmllm::util::prop::{check, Gen};
 use orchmllm::util::rng::Pcg64;
 
@@ -174,13 +174,21 @@ fn phase_cache_hits_are_bit_identical_for_every_balancer() {
         )
         .expect("registered name");
         let mut history = PhaseHistory::new(8);
-        let miss = dp.dispatch_incremental(
-            &topo, &placement, &lens, &payload, &mut scratch,
-            &mut history,
+        let miss = dp.dispatch(
+            &topo,
+            &placement,
+            &lens,
+            &payload,
+            &mut scratch,
+            DispatchOptions::incremental(&mut history),
         );
-        let hit = dp.dispatch_incremental(
-            &topo, &placement, &lens, &payload, &mut scratch,
-            &mut history,
+        let hit = dp.dispatch(
+            &topo,
+            &placement,
+            &lens,
+            &payload,
+            &mut scratch,
+            DispatchOptions::incremental(&mut history),
         );
         if dp.balancer.is_identity() {
             continue; // identity path never consults the cache
@@ -206,13 +214,13 @@ fn step_cache_hit_equals_the_plan_that_populated_it() {
     );
     let mbs: Vec<Vec<orchmllm::data::synth::Example>> =
         (0..6).map(|_| g.batch(10)).collect();
-    let orch = Orchestrator::new(OrchestratorConfig::orchmllm(7168.0));
-    let mut scratch = StepScratch::default();
-    let mut history = StepHistory::new(8);
-    let miss =
-        orch.plan_step_incremental(&topo, &mbs, &mut scratch, &mut history);
-    let hit =
-        orch.plan_step_incremental(&topo, &mbs, &mut scratch, &mut history);
+    let mut session = PlanSession::new(
+        OrchestratorConfig::orchmllm(7168.0),
+        PipelineConfig { plan_cache_size: 8, ..Default::default() },
+        topo,
+    );
+    let miss = session.plan(&mbs, PlanOptions::auto());
+    let hit = session.plan(&mbs, PlanOptions::auto());
     assert_eq!(hit.plan_sources(), [PlanSource::Cached; 3]);
     assert_eq!(hit.llm.assignment, miss.llm.assignment);
     assert_eq!(hit.llm.route, miss.llm.route);

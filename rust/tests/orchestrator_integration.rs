@@ -3,29 +3,37 @@
 //! public API on realistic synthetic workloads.
 
 use orchmllm::balance::cost::CostModel;
+use orchmllm::balance::PlanScratch;
 use orchmllm::comm::topology::Topology;
 use orchmllm::data::incoherence::IncoherenceReport;
 use orchmllm::data::synth::{DatasetConfig, Example, Generator};
 use orchmllm::model::flops::PhaseKind;
-use orchmllm::orchestrator::dispatcher::{Communicator, Dispatcher};
-use orchmllm::orchestrator::global::{Orchestrator, OrchestratorConfig};
+use orchmllm::orchestrator::dispatcher::{
+    Communicator, DispatchOptions, Dispatcher,
+};
+use orchmllm::orchestrator::global::{OrchestratorConfig, StepPlan};
+use orchmllm::orchestrator::session::{PlanOptions, PlanSession};
 
 fn sample(d: usize, b: usize, seed: u64) -> Vec<Vec<Example>> {
     let mut g = Generator::new(DatasetConfig::default(), seed);
     (0..d).map(|_| g.batch(b)).collect()
 }
 
+/// One step through the public planning surface.
+fn plan(cfg: OrchestratorConfig, d: usize, mbs: &[Vec<Example>]) -> StepPlan {
+    PlanSession::with_defaults(cfg, Topology::h100(d))
+        .plan(mbs, PlanOptions::auto())
+}
+
 #[test]
 fn incoherent_data_defeats_llm_only_balance_consistently() {
     // Over many seeds, LLM-only balancing must leave encoder phases
     // imbalanced — the paper's core motivation (§3.1).
-    let topo = Topology::h100(32);
     let lin = CostModel::Linear { alpha: 1.0 };
     let mut worse = 0;
     for seed in 0..10 {
         let mbs = sample(32, 40, seed);
-        let plan = Orchestrator::new(OrchestratorConfig::llm_only(7168.0))
-            .plan_step(&topo, &mbs);
+        let plan = plan(OrchestratorConfig::llm_only(7168.0), 32, &mbs);
         let enc_imb = lin
             .imbalance(plan.assignment(PhaseKind::Vision))
             .max(lin.imbalance(plan.assignment(PhaseKind::Audio)));
@@ -38,12 +46,10 @@ fn incoherent_data_defeats_llm_only_balance_consistently() {
 
 #[test]
 fn full_balance_fixes_all_phases_across_seeds() {
-    let topo = Topology::h100(32);
     let lin = CostModel::Linear { alpha: 1.0 };
     for seed in 0..10 {
         let mbs = sample(32, 40, seed);
-        let plan = Orchestrator::new(OrchestratorConfig::orchmllm(7168.0))
-            .plan_step(&topo, &mbs);
+        let plan = plan(OrchestratorConfig::orchmllm(7168.0), 32, &mbs);
         for phase in PhaseKind::ALL {
             let imb = lin.imbalance(plan.assignment(phase));
             assert!(
@@ -59,10 +65,8 @@ fn full_balance_fixes_all_phases_across_seeds() {
 fn every_example_is_conserved_through_the_full_pipeline() {
     // No example may be lost or duplicated by any phase's dispatch,
     // including the composed encoder-output routes.
-    let topo = Topology::h100(16);
     let mbs = sample(16, 25, 3);
-    let plan = Orchestrator::new(OrchestratorConfig::orchmllm(7168.0))
-        .plan_step(&topo, &mbs);
+    let plan = plan(OrchestratorConfig::orchmllm(7168.0), 16, &mbs);
     let n = plan.examples.len();
     assert_eq!(n, 16 * 25);
 
@@ -130,9 +134,18 @@ fn nodewise_dispatch_never_increases_max_inter_node_send() {
             )
             .expect("greedy is registered")
         };
-        let with = mk(true).dispatch(&topo, &placement, &lens, &payload);
-        let without =
-            mk(false).dispatch(&topo, &placement, &lens, &payload);
+        let run = |dp: &Dispatcher| {
+            dp.dispatch(
+                &topo,
+                &placement,
+                &lens,
+                &payload,
+                &mut PlanScratch::new(),
+                DispatchOptions::default(),
+            )
+        };
+        let with = run(&mk(true));
+        let without = run(&mk(false));
         let m_with = with.route.max_inter_node_bytes(&topo, &payload);
         let m_without =
             without.route.max_inter_node_bytes(&topo, &payload);
@@ -154,10 +167,8 @@ fn generated_corpus_is_incoherent_at_scale() {
 fn balancing_is_a_pure_permutation_of_lengths() {
     // The multiset of (id, len) pairs must be identical before and
     // after — the data-level statement of consequence-invariance.
-    let topo = Topology::h100(8);
     let mbs = sample(8, 30, 21);
-    let plan = Orchestrator::new(OrchestratorConfig::orchmllm(7168.0))
-        .plan_step(&topo, &mbs);
+    let plan = plan(OrchestratorConfig::orchmllm(7168.0), 8, &mbs);
     let mut before: Vec<(usize, usize)> = plan
         .examples
         .iter()

@@ -1,0 +1,236 @@
+//! Session-parity suite: `PlanSession::plan` must be **bit-identical**
+//! to every legacy `plan_step_*` path it replaced, for every registered
+//! balancer, before the legacy methods can be removed for good.
+//!
+//! The legacy methods survive only as `#[doc(hidden)]` `#[deprecated]`
+//! shims on `Orchestrator` — this suite is their sole sanctioned
+//! caller (hence the file-wide `allow(deprecated)`). Each test drives
+//! the same sampled mini-batches through a session strategy and the
+//! corresponding shim and asserts equality of everything a plan
+//! determines: per-phase assignments, physical routes, node-wise
+//! permutations, priced communication, composed encoder-output routes,
+//! and solve provenance.
+
+#![allow(deprecated)]
+
+use orchmllm::balance::registry;
+use orchmllm::comm::topology::Topology;
+use orchmllm::data::synth::{DatasetConfig, Example, Generator};
+use orchmllm::orchestrator::global::{
+    Orchestrator, OrchestratorConfig, StepHistory, StepPlan, StepScratch,
+};
+use orchmllm::orchestrator::pipeline::PipelineConfig;
+use orchmllm::orchestrator::session::{PlanOptions, PlanSession};
+
+fn sample(d: usize, b: usize, seed: u64) -> Vec<Vec<Example>> {
+    let mut g = Generator::new(DatasetConfig::default(), seed);
+    (0..d).map(|_| g.batch(b)).collect()
+}
+
+/// Orchestrator config with one registered balancer on every phase.
+fn cfg_for(name: &str) -> OrchestratorConfig {
+    OrchestratorConfig::orchmllm(7168.0)
+        .with_balancer(registry::must(name))
+}
+
+/// Everything a step plan determines must match, bit for bit.
+fn assert_plans_identical(name: &str, a: &StepPlan, b: &StepPlan) {
+    assert_eq!(a.d, b.d, "{name}: d");
+    assert_eq!(a.examples, b.examples, "{name}: examples");
+    assert_eq!(a.home, b.home, "{name}: home placement");
+    for (phase, pa, pb) in [
+        ("vision", &a.vision.plan, &b.vision.plan),
+        ("audio", &a.audio.plan, &b.audio.plan),
+    ] {
+        assert_eq!(pa.assignment, pb.assignment, "{name}/{phase}");
+        assert_eq!(pa.route, pb.route, "{name}/{phase} route");
+        assert_eq!(pa.nodewise_perm, pb.nodewise_perm, "{name}/{phase}");
+        assert_eq!(pa.comm, pb.comm, "{name}/{phase} comm");
+        assert_eq!(pa.source, pb.source, "{name}/{phase} source");
+    }
+    assert_eq!(a.llm.assignment, b.llm.assignment, "{name}/llm");
+    assert_eq!(a.llm.route, b.llm.route, "{name}/llm route");
+    assert_eq!(a.llm.nodewise_perm, b.llm.nodewise_perm, "{name}/llm");
+    assert_eq!(a.llm.comm, b.llm.comm, "{name}/llm comm");
+    assert_eq!(a.llm.source, b.llm.source, "{name}/llm source");
+    assert_eq!(a.vision.out_route, b.vision.out_route, "{name}/vis out");
+    assert_eq!(a.audio.out_route, b.audio.out_route, "{name}/aud out");
+    assert_eq!(a.vision.out_comm, b.vision.out_comm, "{name}/vis out");
+    assert_eq!(a.audio.out_comm, b.audio.out_comm, "{name}/aud out");
+}
+
+#[test]
+fn from_scratch_parallel_matches_legacy_plan_step_with() {
+    for name in registry::NAMES {
+        let topo = Topology::h100(6);
+        let mbs = sample(6, 10, 7);
+        let orch = Orchestrator::new(cfg_for(name));
+        let mut scratch = StepScratch::default();
+        let mut session = PlanSession::with_defaults(cfg_for(name), topo);
+        // Repeated calls: scratch/session reuse must not drift.
+        for _ in 0..3 {
+            let legacy = orch.plan_step_with(&topo, &mbs, &mut scratch);
+            let new = session.plan(&mbs, PlanOptions::from_scratch());
+            assert_plans_identical(name, &new, &legacy);
+        }
+    }
+}
+
+#[test]
+fn serial_matches_legacy_plan_step_serial() {
+    for name in registry::NAMES {
+        let topo = Topology::h100(6);
+        let mbs = sample(6, 10, 11);
+        let orch = Orchestrator::new(cfg_for(name));
+        let legacy = orch.plan_step_serial(&topo, &mbs);
+        let mut session = PlanSession::with_defaults(cfg_for(name), topo);
+        let new = session.plan(&mbs, PlanOptions::serial());
+        assert_plans_identical(name, &new, &legacy);
+    }
+}
+
+#[test]
+fn incremental_matches_legacy_over_evolving_steps() {
+    // The steady-state path: both sides carry their own evolving
+    // history across steps; every step must agree bit for bit,
+    // including the provenance (warm vs cold vs cached per phase).
+    for name in registry::NAMES {
+        let topo = Topology::h100(6);
+        let orch = Orchestrator::new(cfg_for(name));
+        let mut scratch = StepScratch::default();
+        let mut history = StepHistory::default();
+        let mut session = PlanSession::with_defaults(cfg_for(name), topo);
+        let mut g = Generator::new(DatasetConfig::default(), 31);
+        for step in 0..4 {
+            let mbs: Vec<Vec<Example>> =
+                (0..6).map(|_| g.batch(12)).collect();
+            let legacy = orch.plan_step_incremental(
+                &topo,
+                &mbs,
+                &mut scratch,
+                &mut history,
+            );
+            let new = session.plan(&mbs, PlanOptions::auto());
+            assert_plans_identical(name, &new, &legacy);
+            assert_eq!(
+                new.plan_sources(),
+                legacy.plan_sources(),
+                "{name}: provenance diverged at step {step}"
+            );
+        }
+    }
+}
+
+#[test]
+fn cached_replay_matches_legacy_cached_replay() {
+    // A recurring step must replay from the step cache on both paths,
+    // and the replays must equal each other and the original solve.
+    for name in registry::NAMES {
+        let topo = Topology::h100(6);
+        let mbs = sample(6, 10, 17);
+        let orch = Orchestrator::new(cfg_for(name));
+        let mut scratch = StepScratch::default();
+        let mut history = StepHistory::new(8);
+        let mut session = PlanSession::new(
+            cfg_for(name),
+            PipelineConfig { plan_cache_size: 8, ..Default::default() },
+            topo,
+        );
+        let legacy_first = orch.plan_step_incremental(
+            &topo,
+            &mbs,
+            &mut scratch,
+            &mut history,
+        );
+        let new_first = session.plan(&mbs, PlanOptions::auto());
+        assert_plans_identical(name, &new_first, &legacy_first);
+        let legacy_hit = orch.plan_step_incremental(
+            &topo,
+            &mbs,
+            &mut scratch,
+            &mut history,
+        );
+        let new_hit = session.plan(&mbs, PlanOptions::auto());
+        assert_plans_identical(name, &new_hit, &legacy_hit);
+        assert_eq!(new_hit.plan_sources(), legacy_hit.plan_sources());
+        assert_eq!(
+            session.report().unwrap().step_cache_hit,
+            history.step_cache.hits > 0,
+            "{name}: step-cache provenance disagrees with the history"
+        );
+    }
+}
+
+#[test]
+fn cache_off_matches_a_zero_capacity_history() {
+    // PlanOptions::cache(false) must behave exactly like the legacy
+    // trick of threading a zero-capacity StepHistory: warm-starting
+    // still applies, caching never does.
+    for name in registry::NAMES {
+        let topo = Topology::h100(6);
+        let orch = Orchestrator::new(cfg_for(name));
+        let mut scratch = StepScratch::default();
+        let mut history = StepHistory::new(0);
+        let mut session = PlanSession::with_defaults(cfg_for(name), topo);
+        let mut g = Generator::new(DatasetConfig::default(), 23);
+        for _ in 0..3 {
+            let mbs: Vec<Vec<Example>> =
+                (0..6).map(|_| g.batch(10)).collect();
+            let legacy = orch.plan_step_incremental(
+                &topo,
+                &mbs,
+                &mut scratch,
+                &mut history,
+            );
+            let new = session.plan(&mbs, PlanOptions::auto().cache(false));
+            assert_plans_identical(name, &new, &legacy);
+        }
+        assert_eq!(session.cache_hit_rate(), 0.0, "{name}");
+    }
+}
+
+#[test]
+fn threaded_parallel_path_matches_legacy_at_scale() {
+    // 8 × 40 = 320 examples clears PARALLEL_MIN_EXAMPLES, so the
+    // scoped-thread planning path really runs on both sides.
+    let topo = Topology::h100(8);
+    let mbs = sample(8, 40, 9);
+    let orch =
+        Orchestrator::new(OrchestratorConfig::orchmllm(7168.0));
+    let legacy_serial = orch.plan_step_serial(&topo, &mbs);
+    let mut scratch = StepScratch::default();
+    let legacy_parallel = orch.plan_step_with(&topo, &mbs, &mut scratch);
+    let mut session = PlanSession::with_defaults(
+        OrchestratorConfig::orchmllm(7168.0),
+        topo,
+    );
+    let new_parallel = session.plan(&mbs, PlanOptions::from_scratch());
+    let new_serial = session.plan(&mbs, PlanOptions::serial());
+    assert_plans_identical("orchmllm", &new_parallel, &legacy_parallel);
+    assert_plans_identical("orchmllm", &new_serial, &legacy_serial);
+    // The §6 overlap is an execution strategy, not an algorithm change.
+    assert_plans_identical("orchmllm", &new_parallel, &new_serial);
+}
+
+#[test]
+fn auto_selected_configs_run_through_the_session() {
+    // `--balancer auto` resolves per phase from model metadata; the
+    // resulting mixed-balancer config must plan identically through
+    // the session and the legacy incremental path.
+    let model = orchmllm::model::config::MllmConfig::mllm_10b();
+    let cfg = OrchestratorConfig::auto(&model, 7168.0);
+    let topo = Topology::h100(6);
+    let mbs = sample(6, 14, 41);
+    let orch = Orchestrator::new(cfg.clone());
+    let mut scratch = StepScratch::default();
+    let mut history = StepHistory::default();
+    let legacy = orch.plan_step_incremental(
+        &topo,
+        &mbs,
+        &mut scratch,
+        &mut history,
+    );
+    let mut session = PlanSession::with_defaults(cfg, topo);
+    let new = session.plan(&mbs, PlanOptions::auto());
+    assert_plans_identical("auto", &new, &legacy);
+}
