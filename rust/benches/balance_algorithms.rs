@@ -11,7 +11,8 @@
 //!
 //! Run: `cargo bench --bench balance_algorithms`
 
-use orchmllm::balance::{self, registry, PlanScratch};
+use orchmllm::balance::incremental::BatchStat;
+use orchmllm::balance::{self, registry, PlanScratch, Sketch};
 use orchmllm::comm::topology::Topology;
 use orchmllm::nodewise;
 use orchmllm::util::bench::Bencher;
@@ -80,6 +81,33 @@ fn main() {
         });
     }
     b_ilp.report();
+
+    // Planning-kernel microbenches: the SIMD-friendly inner loops the
+    // incremental path leans on (DESIGN.md §Hot Paths). Each flat
+    // kernel is timed against its scalar/streaming twin — the pairs are
+    // pinned result-identical by unit tests, so the delta here is pure
+    // instruction-level parallelism.
+    let mut b_kernel = Bencher::new("planning kernels (SoA / multi-lane)");
+    for n in [4_096usize, 200_000] {
+        let lens = balance::synth_lengths(&mut rng, n, 5.5, 1.0);
+        b_kernel.iter(&format!("sketch of_slice    n={n}"), || {
+            Sketch::of(&lens, 64)
+        });
+        b_kernel.iter(&format!("sketch of_iter     n={n}"), || {
+            Sketch::of_iter(lens.iter().copied(), 64)
+        });
+        b_kernel.iter(&format!("batchstat of_slice n={n}"), || {
+            BatchStat::of_slice(&lens)
+        });
+        b_kernel.iter(&format!("batchstat fold-add n={n}"), || {
+            let mut s = BatchStat::default();
+            for &l in &lens {
+                s.add(l);
+            }
+            s
+        });
+    }
+    b_kernel.report();
 
     let mut b2 = Bencher::new("node-wise rearrangement");
     for d in [16usize, 64, 128, 320] {

@@ -1,0 +1,312 @@
+//! Million-sequence planning throughput: the gate on the zero-copy +
+//! SIMD hot-path work.
+//!
+//! For every registered balancer and d ∈ {64, 512, 2048}, plan a
+//! ~10⁶-sequence step (n split evenly across the d instances) and
+//! report the **cold** cost (a fresh session's first plan — the full
+//! from-scratch solve, history and caches empty) against the **warm**
+//! cost (the same recurring step replayed through the session's
+//! step-level plan cache via [`PlanSession::plan_shared`] — a sketch +
+//! key comparison and an `Arc` refcount bump, no `StepPlan` clone).
+//! Each row carries the sequences-per-second both medians imply and
+//! the process peak RSS (`VmHWM`) observed by the end of the cell.
+//!
+//! Acceptance (full scale only): the warm median must be ≥ 2× below
+//! the cold median for the headline `greedy` balancer at d = 512.
+//!
+//! Emits `BENCH_plan_throughput.json` (tracked across PRs, uploaded by
+//! the `plan-throughput` CI job).
+//!
+//! Run: `cargo bench --bench plan_throughput`
+//!   `-- --smoke`            tiny CI shape (d = 8, n = 4096), no
+//!                           acceptance assertions
+//!   `-- --baseline <path>`  fail on warm-median regressions past the
+//!                           checked-in per-(d, balancer) ceilings
+//!   `-- --n <n>`            override the per-step sequence count
+//!   `-- --cold-iters <k>` / `-- --warm-iters <k>`  sample counts
+
+use std::time::Instant;
+
+use orchmllm::balance::registry;
+use orchmllm::comm::topology::Topology;
+use orchmllm::data::synth::{DatasetConfig, Example, Generator};
+use orchmllm::orchestrator::global::OrchestratorConfig;
+use orchmllm::orchestrator::pipeline::PipelineConfig;
+use orchmllm::orchestrator::session::{PlanOptions, PlanSession};
+use orchmllm::util::cli::Args;
+use orchmllm::util::json::Json;
+
+/// `quadratic`'s comparator is O(n·d); past this work bound a single
+/// cold solve takes minutes and stops measuring the hot paths this
+/// bench exists for. Skipped cells are logged and listed in the JSON —
+/// no silent truncation.
+const QUADRATIC_MAX_WORK: usize = 1 << 30;
+
+/// `cargo bench` runs with CWD at the package root (`rust/`), while
+/// developers run from the workspace root — accept both.
+fn read_either(path: &str) -> Option<String> {
+    std::fs::read_to_string(path)
+        .or_else(|_| std::fs::read_to_string(format!("../{path}")))
+        .ok()
+}
+
+/// Process peak resident set (kB) from `/proc/self/status`. `None` on
+/// platforms without procfs. VmHWM is a process-lifetime high-water
+/// mark, so per-row values are cumulative, not per-cell.
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.trim_start_matches("VmHWM:")
+        .trim()
+        .trim_end_matches("kB")
+        .trim()
+        .parse()
+        .ok()
+}
+
+fn median(samples: &[f64]) -> f64 {
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite timings"));
+    v[v.len() / 2]
+}
+
+fn min(samples: &[f64]) -> f64 {
+    samples.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+struct Row {
+    d: usize,
+    n: usize,
+    balancer: &'static str,
+    cold_median_ms: f64,
+    cold_min_ms: f64,
+    warm_median_ms: f64,
+    warm_min_ms: f64,
+    step_cache_hits: u64,
+    peak_rss_kb: Option<u64>,
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let seed = args.u64("seed", 7);
+    let n_target = args.usize("n", if smoke { 4096 } else { 1_000_000 });
+    let cold_iters = args.usize("cold-iters", if smoke { 2 } else { 3 });
+    let warm_iters = args.usize("warm-iters", if smoke { 6 } else { 9 });
+    let ds: &[usize] = if smoke { &[8] } else { &[64, 512, 2048] };
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut skipped: Vec<(usize, &str, String)> = Vec::new();
+
+    for &d in ds {
+        let mb = (n_target / d).max(1);
+        let n = mb * d;
+        let t0 = Instant::now();
+        let mut generator = Generator::new(DatasetConfig::default(), seed);
+        let minibatches: Vec<Vec<Example>> =
+            (0..d).map(|_| generator.batch(mb)).collect();
+        eprintln!(
+            "d={d}: generated {n} sequences in {:.1}s",
+            t0.elapsed().as_secs_f64()
+        );
+
+        for &name in registry::NAMES {
+            if name == "quadratic"
+                && n.saturating_mul(d) > QUADRATIC_MAX_WORK
+            {
+                let why = format!(
+                    "O(n*d) comparator: n*d = {} > {QUADRATIC_MAX_WORK}",
+                    n.saturating_mul(d)
+                );
+                eprintln!("  skip {name} at d={d}: {why}");
+                skipped.push((d, name, why));
+                continue;
+            }
+            let cfg = OrchestratorConfig::orchmllm(3584.0 * 2.0)
+                .with_balancer(registry::must(name));
+            let pipe = PipelineConfig::default();
+            let topo = Topology::h100(d);
+
+            // Cold: a fresh session's first plan — history empty, every
+            // phase pays the from-scratch solve (plus the one-time
+            // cache population the steady state amortizes).
+            let mut cold = Vec::with_capacity(cold_iters);
+            for _ in 0..cold_iters {
+                let mut s = PlanSession::new(cfg.clone(), pipe, topo);
+                let t = Instant::now();
+                let plan =
+                    s.plan_shared(&minibatches, PlanOptions::auto());
+                cold.push(t.elapsed().as_secs_f64() * 1e3);
+                std::hint::black_box(&plan);
+            }
+
+            // Warm: one session, one untimed populating pass, then
+            // timed replays of the identical step — the plan_shared
+            // zero-copy path (step-cache hit, Arc-shared plan).
+            let mut s = PlanSession::new(cfg.clone(), pipe, topo);
+            s.plan_shared(&minibatches, PlanOptions::auto());
+            let mut warm = Vec::with_capacity(warm_iters);
+            for _ in 0..warm_iters {
+                let t = Instant::now();
+                let plan =
+                    s.plan_shared(&minibatches, PlanOptions::auto());
+                warm.push(t.elapsed().as_secs_f64() * 1e3);
+                std::hint::black_box(&plan);
+            }
+            let hits = s.stats().step_cache_hits();
+            assert_eq!(
+                hits as usize, warm_iters,
+                "warm replays must hit the step cache (d={d}, {name})"
+            );
+
+            let cold_median_ms = median(&cold);
+            let warm_median_ms = median(&warm);
+            let hwm = peak_rss_kb();
+            eprintln!(
+                "  {name:<20} cold {cold_median_ms:>10.2} ms  warm \
+                 {warm_median_ms:>9.3} ms  ({:>6.1}x)  rss {} MiB",
+                cold_median_ms / warm_median_ms.max(1e-9),
+                hwm.map(|kb| (kb / 1024).to_string())
+                    .unwrap_or_else(|| "?".into())
+            );
+            rows.push(Row {
+                d,
+                n,
+                balancer: name,
+                cold_median_ms,
+                cold_min_ms: min(&cold),
+                warm_median_ms,
+                warm_min_ms: min(&warm),
+                step_cache_hits: hits,
+                peak_rss_kb: hwm,
+            });
+        }
+    }
+
+    // ---- JSON emission (tracked across PRs, uploaded by CI) ------------
+    let rows_json = Json::arr(rows.iter().map(|r| {
+        let cold_sps = r.n as f64 / (r.cold_median_ms / 1e3).max(1e-12);
+        let warm_sps = r.n as f64 / (r.warm_median_ms / 1e3).max(1e-12);
+        Json::obj(vec![
+            ("d", Json::num(r.d as f64)),
+            ("n", Json::num(r.n as f64)),
+            ("balancer", Json::str(r.balancer)),
+            ("cold_median_ms", Json::num(r.cold_median_ms)),
+            ("cold_min_ms", Json::num(r.cold_min_ms)),
+            ("cold_seqs_per_sec", Json::num(cold_sps)),
+            ("warm_median_ms", Json::num(r.warm_median_ms)),
+            ("warm_min_ms", Json::num(r.warm_min_ms)),
+            ("warm_seqs_per_sec", Json::num(warm_sps)),
+            (
+                "warm_over_cold_speedup",
+                Json::num(
+                    r.cold_median_ms / r.warm_median_ms.max(1e-9),
+                ),
+            ),
+            ("step_cache_hits", Json::num(r.step_cache_hits as f64)),
+            (
+                "peak_rss_kb",
+                r.peak_rss_kb
+                    .map(|kb| Json::num(kb as f64))
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }));
+    let skipped_json = Json::arr(skipped.iter().map(|(d, name, why)| {
+        Json::obj(vec![
+            ("d", Json::num(*d as f64)),
+            ("balancer", Json::str(name)),
+            ("reason", Json::str(why)),
+        ])
+    }));
+    let out = Json::obj(vec![
+        ("bench", Json::str("plan_throughput")),
+        ("smoke", Json::Bool(smoke)),
+        ("seed", Json::num(seed as f64)),
+        ("n_target", Json::num(n_target as f64)),
+        ("cold_iters", Json::num(cold_iters as f64)),
+        ("warm_iters", Json::num(warm_iters as f64)),
+        ("rows", rows_json),
+        ("skipped", skipped_json),
+    ]);
+    let path = "BENCH_plan_throughput.json";
+    std::fs::write(path, out.pretty()).expect("write bench json");
+    println!("wrote {path}");
+
+    // ---- acceptance (full scale only) ----------------------------------
+    if !smoke {
+        for r in &rows {
+            if r.balancer == "greedy" && r.d == 512 {
+                let ratio =
+                    r.cold_median_ms / r.warm_median_ms.max(1e-9);
+                assert!(
+                    ratio >= 2.0,
+                    "acceptance: warm median must be >= 2x below cold \
+                     at d=512 (cold {:.2} ms, warm {:.3} ms, only \
+                     {ratio:.2}x)",
+                    r.cold_median_ms,
+                    r.warm_median_ms
+                );
+                println!(
+                    "acceptance: d=512 greedy warm/cold = {ratio:.1}x \
+                     (>= 2x required)"
+                );
+            }
+        }
+    }
+
+    // ---- baseline gate -------------------------------------------------
+    if let Some(baseline_path) = args.get("baseline") {
+        let text = read_either(baseline_path).unwrap_or_else(|| {
+            panic!("baseline '{baseline_path}' not found")
+        });
+        let baseline = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("{baseline_path}: {e}"));
+        let slack = baseline.get("slack").as_f64().unwrap_or(1.0);
+        let mut regressions = Vec::new();
+        println!("\nbaseline gate ({baseline_path}, slack {slack}x):");
+        for r in &rows {
+            let ceiling = baseline
+                .get("warm_median_ms")
+                .get(&r.d.to_string())
+                .get(r.balancer)
+                .as_f64();
+            let Some(c) = ceiling else {
+                println!(
+                    "  d={:<5} {:<20} warm {:>9.3} ms  (no ceiling — \
+                     skipped)",
+                    r.d, r.balancer, r.warm_median_ms
+                );
+                continue;
+            };
+            let limit = c * slack;
+            let ok = r.warm_median_ms <= limit;
+            println!(
+                "  d={:<5} {:<20} warm {:>9.3} ms  (limit {:>9.3} ms) {}",
+                r.d,
+                r.balancer,
+                r.warm_median_ms,
+                limit,
+                if ok { "ok" } else { "REGRESSED" }
+            );
+            if !ok {
+                regressions.push(format!(
+                    "d={} {}: warm median {:.3} ms > {:.3} ms \
+                     ({:.1} ms ceiling x {:.1} slack)",
+                    r.d,
+                    r.balancer,
+                    r.warm_median_ms,
+                    limit,
+                    c,
+                    slack
+                ));
+            }
+        }
+        assert!(
+            regressions.is_empty(),
+            "plan-throughput regressions:\n  {}",
+            regressions.join("\n  ")
+        );
+        println!("  PASS: no (d, balancer) cell regressed past its ceiling");
+    }
+}

@@ -19,13 +19,18 @@
 //! wall-times) so the speedup is tracked across PRs.
 //!
 //! Run: `cargo bench --bench table2_overhead` (`-- --smoke` runs a tiny
-//! shape for CI bit-rot detection, skipping the timing assertions).
+//! shape for CI bit-rot detection, skipping the timing assertions;
+//! `-- --depth-sweep` additionally sweeps the pipeline lookahead
+//! depth 1..=8 at d >= 1024 — smoke shrinks it to d = 8 — reporting
+//! per-depth consumer-stall times in the JSON's `depth_sweep` array).
 
 use orchmllm::comm::topology::Topology;
 use orchmllm::data::synth::{DatasetConfig, Example, Generator};
 use orchmllm::model::config::MllmConfig;
 use orchmllm::orchestrator::global::OrchestratorConfig;
-use orchmllm::orchestrator::pipeline::PipelineConfig;
+use orchmllm::orchestrator::pipeline::{
+    PipelineConfig, StepPipeline, MAX_PIPELINE_DEPTH,
+};
 use orchmllm::orchestrator::session::{PlanOptions, PlanSession};
 use orchmllm::sim::engine::{simulate_run, SystemKind};
 use orchmllm::sim::report;
@@ -212,6 +217,81 @@ fn main() {
         );
     }
 
+    // ---- depth sweep (--depth-sweep): lookahead 1..=8 at d >= 1024 -----
+    // The pipeline's lookahead depth is the knob that hides planning
+    // spikes (a cold solve at large d) from the executor. Sweep every
+    // legal depth on one shape and report how long the consumer
+    // stalled in `next()` against a fixed stand-in execute cost:
+    // depth 1 eats every spike, deeper buffers absorb them.
+    let depth_sweep = if args.flag("depth-sweep") {
+        let sweep_d =
+            args.usize("sweep-gpus", if smoke { 8 } else { 1024 });
+        let sweep_mb = args.usize("sweep-mb", if smoke { 4 } else { 8 });
+        let sweep_steps =
+            args.usize("sweep-steps", if smoke { 6 } else { 24 });
+        let execute_ms =
+            args.u64("sweep-execute-ms", if smoke { 1 } else { 10 });
+        eprintln!(
+            "\ndepth sweep (d={sweep_d}, mb {sweep_mb}, \
+             {sweep_steps} steps, execute {execute_ms} ms):"
+        );
+        let mut rows = Vec::new();
+        for depth in 1..=MAX_PIPELINE_DEPTH {
+            let session = PlanSession::new(
+                OrchestratorConfig::orchmllm(3584.0 * 2.0),
+                PipelineConfig { depth, plan_cache_size: cache_size },
+                Topology::h100(sweep_d),
+            );
+            let pipe = StepPipeline::new(
+                session,
+                DatasetConfig::default(),
+                seed,
+                sweep_mb,
+                sweep_steps,
+            );
+            let t0 = std::time::Instant::now();
+            let mut stalls_ms: Vec<f64> =
+                Vec::with_capacity(sweep_steps);
+            let mut plan_ns_total: u128 = 0;
+            loop {
+                let t = std::time::Instant::now();
+                let Some(step) = pipe.next() else { break };
+                stalls_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                plan_ns_total += step.plan_nanos;
+                // The window the background planner runs ahead in.
+                std::thread::sleep(std::time::Duration::from_millis(
+                    execute_ms,
+                ));
+            }
+            assert_eq!(stalls_ms.len(), sweep_steps);
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            stalls_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let stall_p50_ms = stalls_ms[stalls_ms.len() / 2];
+            let stall_max_ms = *stalls_ms.last().unwrap();
+            let mean_plan_ms =
+                plan_ns_total as f64 / 1e6 / sweep_steps as f64;
+            eprintln!(
+                "  depth {depth}: wall {wall_ms:>8.1} ms  stall p50 \
+                 {stall_p50_ms:>7.3} ms  max {stall_max_ms:>8.2} ms  \
+                 plan mean {mean_plan_ms:>7.3} ms"
+            );
+            rows.push(Json::obj(vec![
+                ("depth", Json::num(depth as f64)),
+                ("gpus", Json::num(sweep_d as f64)),
+                ("mini_batch", Json::num(sweep_mb as f64)),
+                ("steps", Json::num(sweep_steps as f64)),
+                ("execute_ms", Json::num(execute_ms as f64)),
+                ("wall_ms", Json::num(wall_ms)),
+                ("stall_p50_ms", Json::num(stall_p50_ms)),
+                ("stall_max_ms", Json::num(stall_max_ms)),
+                ("mean_plan_ms", Json::num(mean_plan_ms)),
+            ]));
+        }
+        rows
+    } else {
+        Vec::new()
+    };
+
     // ---- JSON emission (tracked across PRs) ----------------------------
     let sweep = Json::arr(cells.iter().map(|c| {
         Json::obj(vec![
@@ -257,6 +337,7 @@ fn main() {
                 ("plan_cache_size", Json::num(cache_size as f64)),
             ]),
         ),
+        ("depth_sweep", Json::arr(depth_sweep)),
     ]);
     let path = "BENCH_table2_overhead.json";
     std::fs::write(path, out.pretty()).expect("write bench json");

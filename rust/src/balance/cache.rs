@@ -43,14 +43,45 @@ fn fnv1a(h: u64, word: u64) -> u64 {
     (h ^ word).wrapping_mul(FNV_PRIME)
 }
 
+/// Histogram bucket for one length: floor(log2(l)) + 1 for l > 0,
+/// bucket 0 for l == 0, last bucket absorbs anything over-range.
+#[inline]
+fn bucket(l: usize) -> usize {
+    ((usize::BITS - l.leading_zeros()) as usize).min(SKETCH_BUCKETS - 1)
+}
+
 /// The quantized length-histogram sketch: the cache's bucket key.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Sketch(pub u64);
 
 impl Sketch {
     /// Sketch a length slice for a `d`-way planning problem.
+    ///
+    /// Slice form of [`Sketch::of_iter`] (the two must agree hash-for-
+    /// hash; a unit test pins it). The bucket loop counts into four
+    /// sub-histograms over 4-length chunks — no serial dependence on a
+    /// single counter array, so the loop pipelines/vectorizes — and
+    /// merges them afterwards. Counts are order-free, so the merged
+    /// histogram is exactly the streaming one.
     pub fn of(lens: &[usize], d: usize) -> Sketch {
-        Sketch::of_iter(lens.iter().copied(), d)
+        let mut sub = [[0u32; SKETCH_BUCKETS]; 4];
+        let mut chunks = lens.chunks_exact(4);
+        for c in &mut chunks {
+            sub[0][bucket(c[0])] += 1;
+            sub[1][bucket(c[1])] += 1;
+            sub[2][bucket(c[2])] += 1;
+            sub[3][bucket(c[3])] += 1;
+        }
+        let mut hist = sub[0];
+        for s in &sub[1..] {
+            for (h, &c) in hist.iter_mut().zip(s.iter()) {
+                *h += c;
+            }
+        }
+        for &l in chunks.remainder() {
+            hist[bucket(l)] += 1;
+        }
+        finish(&hist, lens.len() as u64, d)
     }
 
     /// Sketch an arbitrary length stream (used by the step-level cache,
@@ -59,19 +90,43 @@ impl Sketch {
         let mut hist = [0u32; SKETCH_BUCKETS];
         let mut n = 0u64;
         for l in lens {
-            // floor(log2(l)) + 1 for l > 0; bucket 0 for l == 0.
-            let b = (usize::BITS - l.leading_zeros()) as usize;
-            hist[b.min(SKETCH_BUCKETS - 1)] += 1;
+            hist[bucket(l)] += 1;
             n += 1;
         }
-        let mut h = FNV_OFFSET;
-        h = fnv1a(h, d as u64);
-        h = fnv1a(h, n);
-        for &c in &hist {
-            h = fnv1a(h, c as u64);
-        }
-        Sketch(h)
+        finish(&hist, n, d)
     }
+}
+
+/// Fold the 20-word sketch message (`d`, `n`, the 18 bucket counts)
+/// four words per FNV round: four independently-seeded hash lanes
+/// consume the words round-robin — breaking the serial xor-multiply
+/// chain so a superscalar core runs the lanes in parallel — then one
+/// final serial fold combines the lanes into the sketch value.
+#[inline]
+fn finish(hist: &[u32; SKETCH_BUCKETS], n: u64, d: usize) -> Sketch {
+    let mut words = [0u64; SKETCH_BUCKETS + 2];
+    words[0] = d as u64;
+    words[1] = n;
+    for (w, &c) in words[2..].iter_mut().zip(hist.iter()) {
+        *w = c as u64;
+    }
+    let mut lanes = [
+        FNV_OFFSET,
+        FNV_OFFSET ^ FNV_PRIME,
+        FNV_OFFSET.rotate_left(17),
+        FNV_OFFSET.rotate_left(31),
+    ];
+    for chunk in words.chunks_exact(4) {
+        lanes[0] = fnv1a(lanes[0], chunk[0]);
+        lanes[1] = fnv1a(lanes[1], chunk[1]);
+        lanes[2] = fnv1a(lanes[2], chunk[2]);
+        lanes[3] = fnv1a(lanes[3], chunk[3]);
+    }
+    let mut h = FNV_OFFSET;
+    for lane in lanes {
+        h = fnv1a(h, lane);
+    }
+    Sketch(h)
 }
 
 #[derive(Clone, Debug)]

@@ -85,6 +85,15 @@ pub struct BatchStat {
     pub max: usize,
 }
 
+/// Bounds for the vectorized sum-of-squares pass in
+/// [`BatchStat::of_slice`]: with every length ≤ 2²⁰ and fewer than 2²³
+/// members, per-lane u64 accumulation cannot overflow (2⁴⁰ · 2²³ =
+/// 2⁶³). Production lengths are clamped to 2¹⁶ by the generator, so
+/// real workloads always take the fast path; anything larger falls
+/// back to scalar u128 accumulation.
+const SQ_FAST_MAX_LEN: usize = 1 << 20;
+const SQ_FAST_MAX_COUNT: usize = 1 << 23;
+
 impl BatchStat {
     #[inline]
     pub fn add(&mut self, len: usize) {
@@ -92,6 +101,56 @@ impl BatchStat {
         self.sum += len;
         self.sq += (len as u128) * (len as u128);
         self.max = self.max.max(len);
+    }
+
+    /// Aggregate a whole length slice: flat SoA accumulation over
+    /// 4-wide chunks — independent lanes, no per-item branching, so
+    /// the loops autovectorize — exactly equal to folding [`Self::add`]
+    /// over the slice (integer arithmetic throughout; a unit test pins
+    /// the equivalence).
+    pub fn of_slice(lens: &[usize]) -> BatchStat {
+        let mut sum = [0u64; 4];
+        let mut max = [0usize; 4];
+        let mut chunks = lens.chunks_exact(4);
+        for c in &mut chunks {
+            sum[0] += c[0] as u64;
+            sum[1] += c[1] as u64;
+            sum[2] += c[2] as u64;
+            sum[3] += c[3] as u64;
+            max[0] = max[0].max(c[0]);
+            max[1] = max[1].max(c[1]);
+            max[2] = max[2].max(c[2]);
+            max[3] = max[3].max(c[3]);
+        }
+        let mut s = BatchStat {
+            count: lens.len(),
+            sum: (sum[0] + sum[1] + sum[2] + sum[3]) as usize,
+            sq: 0,
+            max: max[0].max(max[1]).max(max[2]).max(max[3]),
+        };
+        for &l in chunks.remainder() {
+            s.sum += l;
+            s.max = s.max.max(l);
+        }
+        if s.max <= SQ_FAST_MAX_LEN && s.count < SQ_FAST_MAX_COUNT {
+            let mut sq = [0u64; 4];
+            let mut chunks = lens.chunks_exact(4);
+            for c in &mut chunks {
+                sq[0] += (c[0] as u64) * (c[0] as u64);
+                sq[1] += (c[1] as u64) * (c[1] as u64);
+                sq[2] += (c[2] as u64) * (c[2] as u64);
+                sq[3] += (c[3] as u64) * (c[3] as u64);
+            }
+            s.sq = sq.iter().map(|&x| x as u128).sum();
+            for &l in chunks.remainder() {
+                s.sq += (l as u128) * (l as u128);
+            }
+        } else {
+            for &l in lens {
+                s.sq += (l as u128) * (l as u128);
+            }
+        }
+        s
     }
 
     /// Remove one member of length `len`. `next_max` is the batch's
@@ -143,15 +202,24 @@ impl BatchStat {
 /// * eval is monotone under adding members, so the costliest singleton
 ///   bounds whichever batch contains it.
 pub fn lower_bound(cm: &CostModel, lens: &[usize], d: usize) -> f64 {
-    let mut singleton_sum = 0.0f64;
-    let mut singleton_max = 0.0f64;
-    for &l in lens {
-        let mut s = BatchStat::default();
-        s.add(l);
-        let c = s.eval(cm);
-        singleton_sum += c;
-        singleton_max = singleton_max.max(c);
+    let s = BatchStat::of_slice(lens);
+    if s.count == 0 {
+        return 0.0;
     }
+    // Every regime's singleton cost has the closed form A·l + B·l²
+    // with A, B ≥ 0 (the padded regimes degenerate to b = 1, max = l),
+    // so the total singleton cost is A·Σl + B·Σl² and the costliest
+    // singleton sits at max l — O(1) from the slice aggregates instead
+    // of a BatchStat per element.
+    let (a, b) = match *cm {
+        CostModel::Linear { alpha } => (alpha, 0.0),
+        CostModel::TransformerUnpadded { alpha, beta } => (alpha, beta),
+        CostModel::TransformerPadded { alpha, beta } => (alpha, beta),
+        CostModel::ConvPadded { alpha, lambda } => (alpha, lambda),
+    };
+    let singleton_sum = a * s.sum as f64 + b * s.sq as f64;
+    let max = s.max as f64;
+    let singleton_max = a * max + b * max * max;
     singleton_max.max(singleton_sum / d.max(1) as f64)
 }
 
@@ -168,10 +236,7 @@ pub fn identity_makespan(cm: &CostModel, lens: &[usize], d: usize) -> f64 {
     let mut start = 0;
     for i in 0..d {
         let b = base + usize::from(i < extra);
-        let mut s = BatchStat::default();
-        for &l in &lens[start..start + b] {
-            s.add(l);
-        }
+        let s = BatchStat::of_slice(&lens[start..start + b]);
         worst = worst.max(s.eval(cm));
         start += b;
     }
@@ -247,27 +312,33 @@ pub fn warm_start_with(
         return None;
     }
 
-    // Previous step's rank → batch map, ranks in LPT order.
-    let mut ranked: Vec<(usize, usize, usize)> = Vec::with_capacity(prev_n);
+    // Previous step's rank → batch map, ranks in LPT order. `ranked`
+    // and `stats` live in the scratch arena: warmed-up sessions reuse
+    // their capacity, keeping the warm path allocation-free apart from
+    // the returned assignment itself.
+    scratch.ranked.clear();
     for (b, batch) in prev.iter().enumerate() {
         for e in batch {
-            ranked.push((e.len, e.id, b));
+            scratch.ranked.push((e.len, e.id, b));
         }
     }
-    ranked.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    scratch
+        .ranked
+        .sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
 
     // Transfer: the current rank-r example goes where the previous
     // rank-r example went; overflow ranks go to the cheapest batch.
     scratch.refs_desc(lens);
     let mut assignment: Assignment = vec![Vec::new(); d];
-    let mut stats: Vec<BatchStat> = vec![BatchStat::default(); d];
+    scratch.stats.clear();
+    scratch.stats.resize(d, BatchStat::default());
     for (rank, &e) in scratch.refs.iter().enumerate() {
         let batch = if rank < prev_n {
-            ranked[rank].2
+            scratch.ranked[rank].2
         } else {
             let mut best = 0;
             let mut best_cost = f64::INFINITY;
-            for (i, s) in stats.iter().enumerate() {
+            for (i, s) in scratch.stats.iter().enumerate() {
                 let c = s.eval(cm);
                 if c < best_cost {
                     best_cost = c;
@@ -277,12 +348,16 @@ pub fn warm_start_with(
             best
         };
         assignment[batch].push(e);
-        stats[batch].add(e.len);
+        scratch.stats[batch].add(e.len);
     }
 
-    let moves = repair(cm, &mut assignment, &mut stats);
+    let moves = repair(cm, &mut assignment, &mut scratch.stats);
 
-    let makespan = stats.iter().map(|s| s.eval(cm)).fold(0.0, f64::max);
+    let makespan = scratch
+        .stats
+        .iter()
+        .map(|s| s.eval(cm))
+        .fold(0.0, f64::max);
     let lb = lower_bound(cm, lens, d);
     if makespan <= lb * (1.0 + tolerance) + 1e-9 {
         Some((assignment, moves))
@@ -424,6 +499,24 @@ mod tests {
                 cm.eval(&batch)
             );
         }
+    }
+
+    #[test]
+    fn of_slice_matches_folding_add() {
+        check("of_slice ≡ fold(add)", 60, |g| {
+            let n = g.usize(0, 200);
+            let mut lens = g.seq_lengths(n, 3.4, 1.3);
+            if n > 0 && g.bool() {
+                // Force the scalar u128 fallback at least sometimes.
+                let i = g.usize(0, n);
+                lens[i] = SQ_FAST_MAX_LEN + g.usize(1, 1000);
+            }
+            let mut want = BatchStat::default();
+            for &l in &lens {
+                want.add(l);
+            }
+            assert_eq!(BatchStat::of_slice(&lens), want);
+        });
     }
 
     #[test]

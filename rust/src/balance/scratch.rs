@@ -14,13 +14,15 @@
 //! the one necessary allocation).
 //!
 //! Balancer implementations own `refs`, `heap`, `sums`, `sq_sums`,
-//! `ranges`, and `spill`; the dispatcher owns `active`, `active_lens`,
-//! `logical_to`, and the two volume matrices. The dispatcher hands the
-//! whole scratch to [`super::balancer::Balancer::balance`] after
-//! `mem::take`-ing the slices it is still reading.
+//! `ranges`, `spill`, `ranked`, and `stats`; the dispatcher owns
+//! `active`, `active_lens`, `logical_to`, and the two volume matrices.
+//! The dispatcher hands the whole scratch to
+//! [`super::balancer::Balancer::balance`] after `mem::take`-ing the
+//! slices it is still reading.
 
 use crate::comm::volume::VolumeMatrix;
 
+use super::incremental::BatchStat;
 use super::types::ExampleRef;
 
 /// The reusable workspace threaded through one dispatcher's planning.
@@ -41,6 +43,12 @@ pub struct PlanScratch {
     pub ranges: Vec<(usize, usize)>,
     /// Balancer-owned: overflow refs (convpad seeding).
     pub spill: Vec<ExampleRef>,
+    /// Balancer-owned: previous step's `(len, id, batch)` ranking
+    /// (warm-start transfer).
+    pub ranked: Vec<(usize, usize, usize)>,
+    /// Balancer-owned: per-batch running aggregates (warm-start
+    /// transfer and repair).
+    pub stats: Vec<BatchStat>,
     /// Dispatcher-owned: participating example ids.
     pub active: Vec<usize>,
     /// Dispatcher-owned: lengths of the participating examples.
@@ -62,6 +70,8 @@ impl PlanScratch {
             sq_sums: Vec::new(),
             ranges: Vec::new(),
             spill: Vec::new(),
+            ranked: Vec::new(),
+            stats: Vec::new(),
             active: Vec::new(),
             active_lens: Vec::new(),
             logical_to: Vec::new(),

@@ -25,5 +25,5 @@ pub mod volume;
 pub use calibrate::{calibrate, Calibration, CalibrationSpec, FittedLine};
 pub use costmodel::{allgather_cost, alltoall_cost, CollectiveCost};
 pub use topology::Topology;
-pub use transport::{Transport, TransportExt, TransportFactory, Wire};
+pub use transport::{Shard, Transport, TransportExt, TransportFactory, Wire};
 pub use volume::VolumeMatrix;

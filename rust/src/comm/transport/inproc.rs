@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use super::{Transport, TransportFactory};
+use super::{Shard, Transport, TransportFactory};
 
 /// Default watchdog timeout when `ORCHMLLM_INPROC_TIMEOUT_SECS` is not
 /// set. Generous: a healthy group assembles in microseconds; only a
@@ -335,12 +335,15 @@ impl Collectives<Vec<f32>> {
 // ---------------------------------------------------------------------------
 
 /// The `inproc` backend: one byte-payload collective group shared by
-/// `d` worker threads, plus a typed f32 group so gradient buffers skip
-/// the wire encode/decode round-trip.
+/// `d` worker threads, plus typed groups so gradient buffers and batch
+/// shards skip the wire encode/decode round-trip entirely — the shard
+/// group moves `Arc`-shared payloads, so a cross-rank send is a
+/// refcount bump, not a copy.
 pub struct InProcTransport {
     rank: usize,
     bytes: Arc<Collectives<Vec<u8>>>,
     grads: Arc<Collectives<Vec<f32>>>,
+    shards: Arc<Collectives<Shard>>,
 }
 
 impl Transport for InProcTransport {
@@ -380,6 +383,22 @@ impl Transport for InProcTransport {
         // path, bit-identical results across backends.
         self.grads.all_reduce_sum(self.rank, data)
     }
+
+    fn all_to_all_shards(
+        &self,
+        sends: Vec<(usize, Shard)>,
+    ) -> Result<Vec<(usize, Shard)>> {
+        // Typed fast path: the Shard (and the Arc'd buffer inside it)
+        // moves through the cells untouched — no Wire round-trip, no
+        // payload copy. Ordering contract is the engine's, identical
+        // to the bytes path, so `tcp` (which takes the Wire default)
+        // delivers the same logical results.
+        let d = self.world_size();
+        if let Some(&(dst, _)) = sends.iter().find(|&&(dst, _)| dst >= d) {
+            bail!("all_to_all_shards: dst {dst} out of range (d = {d})");
+        }
+        self.shards.all_to_all(self.rank, sends)
+    }
 }
 
 /// Factory for the `inproc` backend.
@@ -417,12 +436,14 @@ impl TransportFactory for InProcFactory {
         let timeout = self.timeout();
         let bytes = Collectives::with_timeout(d, timeout);
         let grads = Collectives::with_timeout(d, timeout);
+        let shards = Collectives::with_timeout(d, timeout);
         Ok((0..d)
             .map(|rank| {
                 Box::new(InProcTransport {
                     rank,
                     bytes: Arc::clone(&bytes),
                     grads: Arc::clone(&grads),
+                    shards: Arc::clone(&shards),
                 }) as Box<dyn Transport>
             })
             .collect())
@@ -642,6 +663,38 @@ mod tests {
         dead.join().unwrap();
         let err = t1.barrier().unwrap_err().to_string();
         assert!(err.contains("watchdog"), "{err}");
+    }
+
+    #[test]
+    fn shard_fast_path_moves_buffers_without_copying() {
+        // Every rank shares the same Arc'd buffer; after the exchange
+        // each rank must hold the *same allocation* it sent — proof
+        // the typed path moved the Arc instead of serializing bytes.
+        let rows: Arc<Vec<f32>> = Arc::new(vec![1.0, 2.0, 3.0]);
+        let sent_ptr = Arc::as_ptr(&rows) as usize;
+        let ptrs = crate::comm::transport::run_world(
+            &InProcFactory::default(),
+            2,
+            |t| {
+                let rank = t.rank();
+                let sends = vec![(
+                    1 - rank,
+                    Shard::f32_shared(rank, Arc::clone(&rows)),
+                )];
+                let recv = t.all_to_all_shards(sends).unwrap();
+                assert_eq!(recv.len(), 1);
+                let (src, shard) = recv.into_iter().next().unwrap();
+                assert_eq!(src, 1 - rank);
+                assert_eq!(shard.id(), 1 - rank);
+                let (_, got) = shard.into_f32().unwrap();
+                assert_eq!(*got, vec![1.0, 2.0, 3.0]);
+                Arc::as_ptr(&got) as usize
+            },
+        )
+        .unwrap();
+        for p in ptrs {
+            assert_eq!(p, sent_ptr, "shard payload was copied");
+        }
     }
 
     #[test]

@@ -247,12 +247,20 @@ pub struct PhaseScratch {
     pub plan: PlanScratch,
 }
 
-/// The orchestrator's full per-step workspace (all three phases).
+/// The orchestrator's full per-step workspace (all three phases), plus
+/// the step-level staging arenas: the flattened global example list and
+/// home placement are staged here (`clear()` + `push`, capacity
+/// retained) and only cloned into a [`StepPlan`] when a step actually
+/// builds one — a step-cache replay touches no heap at all.
 #[derive(Clone, Debug, Default)]
 pub struct StepScratch {
     pub vision: PhaseScratch,
     pub audio: PhaseScratch,
     pub llm: PhaseScratch,
+    /// Arena for the flattened global example list.
+    pub examples: Vec<Example>,
+    /// Arena for the per-example home instance.
+    pub home: Vec<usize>,
 }
 
 /// Cross-step planning state: each modality phase carries its own
@@ -266,7 +274,10 @@ pub struct StepHistory {
     pub llm: PhaseHistory,
     /// Full-step plan cache, keyed by the sketch of the interleaved LLM
     /// lengths and verified against every example's fields + placement.
-    pub step_cache: PlanCache<StepPlan>,
+    /// Entries are [`Arc`]-shared with the plans handed back to
+    /// callers: an insert is a refcount bump, and a hit replays the
+    /// cached step without cloning it.
+    pub step_cache: PlanCache<Arc<StepPlan>>,
     /// Reusable exact-key buffer for the step cache.
     key_buf: Vec<u64>,
 }
@@ -315,10 +326,15 @@ impl Default for StepHistory {
 const PARALLEL_MIN_EXAMPLES: usize = 256;
 
 /// Above this many global examples the step-level plan cache is
-/// bypassed: each entry costs an O(n) exact key plus a full `StepPlan`
-/// clone, which non-recurring streams would pay every step for zero
-/// hits (per-phase solve caches and warm-starting still apply).
-const STEP_CACHE_MAX_EXAMPLES: usize = 16_384;
+/// bypassed (per-phase solve caches and warm-starting still apply).
+/// Since cached plans became [`Arc`]-shared, an insert no longer deep-
+/// clones the `StepPlan`, so the per-step cost of a never-hitting
+/// stream is just the O(n) exact key — cheap next to a solve at the
+/// same n — and the bound now exists only to cap resident key memory:
+/// each entry's key holds 8 words per example (≈ 64 MiB per cached
+/// million-sequence step, times the LRU capacity). Streams that large
+/// and known to be non-recurring should plan with the cache off.
+const STEP_CACHE_MAX_EXAMPLES: usize = 1 << 20;
 
 /// The MLLM Global Orchestrator.
 #[derive(Clone, Debug)]
@@ -343,7 +359,7 @@ impl Orchestrator {
         minibatches: &[Vec<Example>],
         scratch: &mut StepScratch,
     ) -> StepPlan {
-        self.plan_inner(
+        let (plan, outcome) = self.plan_inner(
             topo,
             minibatches,
             scratch,
@@ -351,7 +367,8 @@ impl Orchestrator {
             None,
             REPAIR_TOLERANCE,
             true,
-        )
+        );
+        materialize(plan, &outcome)
     }
 
     /// Legacy shim: parallel phases + cross-step history. Kept (hidden)
@@ -366,7 +383,7 @@ impl Orchestrator {
         scratch: &mut StepScratch,
         history: &mut StepHistory,
     ) -> StepPlan {
-        self.plan_inner(
+        let (plan, outcome) = self.plan_inner(
             topo,
             minibatches,
             scratch,
@@ -374,7 +391,8 @@ impl Orchestrator {
             Some(history),
             REPAIR_TOLERANCE,
             true,
-        )
+        );
+        materialize(plan, &outcome)
     }
 
     /// Legacy shim: one phase after another, fresh allocations. Kept
@@ -387,7 +405,7 @@ impl Orchestrator {
         topo: &Topology,
         minibatches: &[Vec<Example>],
     ) -> StepPlan {
-        self.plan_inner(
+        let (plan, outcome) = self.plan_inner(
             topo,
             minibatches,
             &mut StepScratch::default(),
@@ -395,13 +413,20 @@ impl Orchestrator {
             None,
             REPAIR_TOLERANCE,
             true,
-        )
+        );
+        materialize(plan, &outcome)
     }
 
     /// The one planning engine every strategy funnels through. Not a
     /// public API: callers go through
-    /// [`super::session::PlanSession::plan`], which owns the scratch
-    /// and history and maps `PlanOptions` onto these knobs.
+    /// [`super::session::PlanSession::plan`] /
+    /// [`super::session::PlanSession::plan_shared`], which own the
+    /// scratch and history and map `PlanOptions` onto these knobs.
+    ///
+    /// Returns the plan behind an [`Arc`] (shared with the step cache
+    /// when the cache retains it) plus this call's [`StepOutcome`]: a
+    /// cached replay cannot stamp provenance onto the shared plan, so
+    /// who-solved-what travels beside it instead of inside it.
     ///
     /// * `parallel` — plan the three phases on scoped threads (subject
     ///   to [`PARALLEL_MIN_EXAMPLES`]);
@@ -421,14 +446,17 @@ impl Orchestrator {
         mut history: Option<&mut StepHistory>,
         tolerance: f64,
         use_cache: bool,
-    ) -> StepPlan {
+    ) -> (Arc<StepPlan>, StepOutcome) {
         let t0 = std::time::Instant::now();
         let d = topo.instances;
         assert_eq!(minibatches.len(), d, "one mini-batch per instance");
 
-        // Flatten to the global example list with home placement.
-        let mut examples = Vec::new();
-        let mut home = Vec::new();
+        // Flatten to the global example list with home placement —
+        // staged in the scratch arenas, cloned into the plan only when
+        // a step actually builds one.
+        let StepScratch { vision, audio, llm, examples, home } = scratch;
+        examples.clear();
+        home.clear();
         for (i, mb) in minibatches.iter().enumerate() {
             for &e in mb {
                 examples.push(e);
@@ -439,9 +467,7 @@ impl Orchestrator {
         // Step-level cache: an exactly-recurring step (same examples on
         // the same homes, same topology) replays the full plan —
         // dispatch, node-wise permutation, and composition included —
-        // bit-identically. Above STEP_CACHE_MAX_EXAMPLES the cache is
-        // bypassed: a non-recurring large-scale stream would pay an
-        // O(n) key build + plan clone every step for zero hits.
+        // bit-identically, as a refcount bump on the cached Arc.
         let mut step_sketch: Option<Sketch> = None;
         if let Some(h) = history.as_deref_mut() {
             if use_cache
@@ -469,14 +495,19 @@ impl Orchestrator {
                     h.key_buf.push(e.vis_tokens as u64);
                     h.key_buf.push(e.aud_tokens as u64);
                 }
-                if let Some(mut plan) =
-                    h.step_cache.lookup(sketch, &h.key_buf)
+                if let Some(plan) = h.step_cache.lookup(sketch, &h.key_buf)
                 {
-                    plan.vision.plan.source = PlanSource::Cached;
-                    plan.audio.plan.source = PlanSource::Cached;
-                    plan.llm.source = PlanSource::Cached;
-                    plan.compute_nanos = t0.elapsed().as_nanos();
-                    return plan;
+                    let outcome = StepOutcome {
+                        sources: [PlanSource::Cached; 3],
+                        repair_moves: [
+                            plan.vision.plan.repair_moves,
+                            plan.audio.plan.repair_moves,
+                            plan.llm.repair_moves,
+                        ],
+                        step_cache_hit: true,
+                        compute_nanos: t0.elapsed().as_nanos(),
+                    };
+                    return (plan, outcome);
                 }
                 step_sketch = Some(sketch);
             }
@@ -484,13 +515,13 @@ impl Orchestrator {
         let cfg = &self.cfg;
 
         // Stage per-phase lengths and payload bytes into the scratch.
-        fill_phase(&mut scratch.vision, &examples, |e| e.vis_len, |e| {
+        fill_phase(vision, examples, |e| e.vis_len, |e| {
             e.vis_len as f64 * cfg.vis_bytes_per_unit
         });
-        fill_phase(&mut scratch.audio, &examples, |e| e.aud_len, |e| {
+        fill_phase(audio, examples, |e| e.aud_len, |e| {
             e.aud_len as f64 * cfg.aud_bytes_per_unit
         });
-        fill_phase(&mut scratch.llm, &examples, |e| e.llm_len(), |e| {
+        fill_phase(llm, examples, |e| e.llm_len(), |e| {
             e.text_len as f64 * cfg.text_bytes_per_token
         });
 
@@ -503,8 +534,7 @@ impl Orchestrator {
         let ld = Dispatcher::new(cfg.llm_balancer.clone(), cfg.communicator);
 
         // ---- per-phase dispatchers (independent, §6) -------------------
-        let StepScratch { vision, audio, llm } = scratch;
-        let home_ref = &home;
+        let home_ref: &[usize] = home;
         let parallel = parallel && examples.len() >= PARALLEL_MIN_EXAMPLES;
         let (vision_plan, audio_plan, llm_plan) = {
             // Like the scratches, each phase's history is private to its
@@ -567,29 +597,39 @@ impl Orchestrator {
 
         // ---- rearrangement composition ---------------------------------
         let vision = self.encoder_out(
-            topo, &vision_plan, &llm_plan, &examples, &home,
+            topo, &vision_plan, &llm_plan, examples, home,
             |e| e.vis_tokens,
         );
         let audio = self.encoder_out(
-            topo, &audio_plan, &llm_plan, &examples, &home,
+            topo, &audio_plan, &llm_plan, examples, home,
             |e| e.aud_tokens,
         );
 
-        let plan = StepPlan {
+        let plan = Arc::new(StepPlan {
             d,
-            examples,
-            home,
+            examples: examples.clone(),
+            home: home.clone(),
             vision: EncoderPlan { plan: vision_plan, ..vision },
             audio: EncoderPlan { plan: audio_plan, ..audio },
             llm: llm_plan,
             compute_nanos: t0.elapsed().as_nanos(),
-        };
+        });
         if let (Some(h), Some(sketch)) =
             (history.as_deref_mut(), step_sketch)
         {
-            h.step_cache.insert(sketch, &h.key_buf, plan.clone());
+            h.step_cache.insert(sketch, &h.key_buf, Arc::clone(&plan));
         }
-        plan
+        let outcome = StepOutcome {
+            sources: plan.plan_sources(),
+            repair_moves: [
+                plan.vision.plan.repair_moves,
+                plan.audio.plan.repair_moves,
+                plan.llm.repair_moves,
+            ],
+            step_cache_hit: false,
+            compute_nanos: plan.compute_nanos,
+        };
+        (plan, outcome)
     }
 
     /// Build the encoder-output route `Π_M ∘ Π_Eₖ⁻¹` (or its two-hop
@@ -646,6 +686,40 @@ impl Orchestrator {
             out_comm,
         }
     }
+}
+
+/// What one `plan_inner` call did — provenance that travels beside the
+/// (possibly cache-shared) [`Arc<StepPlan>`] instead of inside it. A
+/// cached replay returns the same `StepPlan` the original build
+/// produced, whose embedded `source`/`compute_nanos` fields describe
+/// that build; this struct describes *this* call.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct StepOutcome {
+    /// Per-phase solve provenance for this call (vision, audio, llm).
+    pub(crate) sources: [PlanSource; 3],
+    /// Per-phase repair moves applied on the warm path.
+    pub(crate) repair_moves: [usize; 3],
+    /// Whether the full-step plan cache replayed this step.
+    pub(crate) step_cache_hit: bool,
+    /// Wall-clock planning time of this call.
+    pub(crate) compute_nanos: u128,
+}
+
+/// Unshare a planned step for by-value callers: unwrap the [`Arc`]
+/// when this call holds the only reference, deep-clone when the step
+/// cache retained it, then stamp the call's own provenance onto the
+/// plan so by-value consumers see exactly what the pre-`Arc` API
+/// reported (`Cached` sources on a replay, this call's timing).
+pub(crate) fn materialize(
+    plan: Arc<StepPlan>,
+    outcome: &StepOutcome,
+) -> StepPlan {
+    let mut p = Arc::try_unwrap(plan).unwrap_or_else(|a| (*a).clone());
+    p.vision.plan.source = outcome.sources[0];
+    p.audio.plan.source = outcome.sources[1];
+    p.llm.source = outcome.sources[2];
+    p.compute_nanos = outcome.compute_nanos;
+    p
 }
 
 /// Dispatch one phase, incrementally when a history stream is present.

@@ -45,8 +45,11 @@ use crate::comm::topology::Topology;
 use crate::data::synth::Example;
 use crate::util::stats::Summary;
 
+use std::sync::Arc;
+
 use super::global::{
-    Orchestrator, OrchestratorConfig, StepHistory, StepPlan, StepScratch,
+    materialize, Orchestrator, OrchestratorConfig, StepHistory,
+    StepOutcome, StepPlan, StepScratch,
 };
 use super::pipeline::PipelineConfig;
 
@@ -378,11 +381,42 @@ impl PlanSession {
     /// the returned [`StepPlan`] is what the simulator prices and the
     /// trainer executes. Provenance for this call is available from
     /// [`PlanSession::report`] immediately afterwards.
+    ///
+    /// By-value convenience over [`PlanSession::plan_shared`]: a
+    /// step-cache replay pays a deep clone here to unshare the cached
+    /// plan. Hot-path callers (the throughput bench, steady-state
+    /// recurring streams) should use `plan_shared` instead.
     pub fn plan(
         &mut self,
         minibatches: &[Vec<Example>],
         opts: PlanOptions,
     ) -> StepPlan {
+        let plan = self.plan_shared(minibatches, opts);
+        let r = self.last.as_ref().expect("plan_shared records a report");
+        let outcome = StepOutcome {
+            sources: r.sources,
+            repair_moves: r.repair_moves,
+            step_cache_hit: r.step_cache_hit,
+            compute_nanos: r.plan_nanos,
+        };
+        materialize(plan, &outcome)
+    }
+
+    /// The zero-copy planning fast path: plan one step and hand the
+    /// result back behind an [`Arc`]. On a step-cache replay the `Arc`
+    /// is shared with the cache entry — the call is a key comparison
+    /// plus a refcount bump, no `StepPlan` is cloned and (once the
+    /// session arenas are warm) no heap allocation happens at all.
+    ///
+    /// Because replays share the originally-built plan, the plan's
+    /// embedded `source`/`compute_nanos` fields describe the build that
+    /// produced it; per-call provenance (including `Cached` sources) is
+    /// what [`PlanSession::report`] returns.
+    pub fn plan_shared(
+        &mut self,
+        minibatches: &[Vec<Example>],
+        opts: PlanOptions,
+    ) -> Arc<StepPlan> {
         let t0 = Instant::now();
         let mode = match opts.mode {
             PlanMode::Auto | PlanMode::Incremental => {
@@ -395,13 +429,12 @@ impl PlanSession {
                 ResolvedMode::Serial
             }
         };
-        let step_hits_before = self.history.step_cache.hits;
         let (parallel, history) = match mode {
             ResolvedMode::Incremental => (true, Some(&mut self.history)),
             ResolvedMode::Parallel => (true, None),
             ResolvedMode::Serial => (false, None),
         };
-        let plan = self.orch.plan_inner(
+        let (plan, outcome) = self.orch.plan_inner(
             &self.topo,
             minibatches,
             &mut self.scratch,
@@ -413,14 +446,9 @@ impl PlanSession {
         let report = PlanReport {
             step: self.stats.steps + 1,
             mode,
-            sources: plan.plan_sources(),
-            repair_moves: [
-                plan.vision.plan.repair_moves,
-                plan.audio.plan.repair_moves,
-                plan.llm.repair_moves,
-            ],
-            step_cache_hit: self.history.step_cache.hits
-                > step_hits_before,
+            sources: outcome.sources,
+            repair_moves: outcome.repair_moves,
+            step_cache_hit: outcome.step_cache_hit,
             tolerance: opts.tolerance,
             plan_nanos: t0.elapsed().as_nanos(),
         };

@@ -21,11 +21,12 @@
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::comm::topology::Topology;
-use crate::comm::transport::{Transport, TransportExt};
+use crate::comm::transport::{Shard, Transport};
 use crate::runtime::xla_stub as xla;
 use crate::data::synth::Example;
 use crate::orchestrator::global::StepPlan;
@@ -35,8 +36,10 @@ use crate::runtime::tensor::HostTensor;
 
 use super::content::ContentGen;
 
-/// Payloads that cross worker boundaries (both implement
-/// [`crate::comm::transport::Wire`]: example id + data rows).
+/// Legacy wire-tuple aliases (same byte layout as [`Shard`]'s f32/i32
+/// variants). The step path now moves [`Shard`]s — `Arc`-shared
+/// payloads that in-process backends pass without copying — but the
+/// tuples remain the canonical byte manifests for external tooling.
 pub type F32Msg = (usize, Vec<f32>);
 pub type I32Msg = (usize, Vec<i32>);
 
@@ -72,7 +75,19 @@ struct EncoderState {
     /// (chunk example ids, input tensor, mask tensor).
     chunks: Vec<(Vec<usize>, HostTensor, HostTensor)>,
     /// Encoder output rows per example id: `[tokens, d_llm]` flattened.
-    out_rows: HashMap<usize, Vec<f32>>,
+    /// `Arc`-shared so routing them onward is a refcount bump on the
+    /// in-process fast path, never a buffer clone.
+    out_rows: HashMap<usize, Arc<Vec<f32>>>,
+}
+
+/// Unpack an f32-shard all-to-all result into an id-keyed row map.
+fn f32_rows(
+    received: Vec<(usize, Shard)>,
+) -> Result<HashMap<usize, Arc<Vec<f32>>>> {
+    received
+        .into_iter()
+        .map(|(_src, shard)| shard.into_f32())
+        .collect()
 }
 
 impl Worker {
@@ -182,7 +197,7 @@ impl Worker {
             Phase::Audio => &plan.audio.plan.route,
         };
         // Ship my home examples' metadata to their encoder instances.
-        let mut sends: Vec<(usize, F32Msg)> = Vec::new();
+        let mut sends: Vec<(usize, Shard)> = Vec::new();
         for (g, e) in plan.examples.iter().enumerate() {
             if plan.home[g] != self.rank || phase.meta_len(e) == 0 {
                 continue;
@@ -193,18 +208,16 @@ impl Worker {
                 }
                 Phase::Audio => self.content.frames(e, self.cfg().mel_dim),
             };
-            sends.push((route.to[g], (g, payload)));
+            sends.push((route.to[g], Shard::f32(g, payload)));
         }
         let t0 = std::time::Instant::now();
         let received = self
             .transport
-            .all_to_all::<F32Msg>(sends)
+            .all_to_all_shards(sends)
             .context("encoder metadata all-to-all")?;
         *comm_s += t0.elapsed().as_secs_f64();
-        let mut by_id: HashMap<usize, Vec<f32>> = received
-            .into_iter()
-            .map(|(_src, (g, data))| (g, data))
-            .collect();
+        let mut by_id = f32_rows(received)
+            .context("encoder metadata all-to-all")?;
 
         // My encoder mini-batch, chunked into the compiled bucket.
         let my_batch: Vec<usize> = match phase {
@@ -256,7 +269,9 @@ impl Worker {
                 let start = row * tok_l * d_llm;
                 state.out_rows.insert(
                     g,
-                    tokens.f32s()[start..start + nt * d_llm].to_vec(),
+                    Arc::new(
+                        tokens.f32s()[start..start + nt * d_llm].to_vec(),
+                    ),
                 );
             }
             state.chunks.push((chunk.to_vec(), input, mask));
@@ -271,7 +286,7 @@ impl Worker {
         plan: &StepPlan,
         phase: Phase,
         state: &EncoderState,
-        d_out_rows: &HashMap<usize, Vec<f32>>,
+        d_out_rows: &HashMap<usize, Arc<Vec<f32>>>,
     ) -> Result<Vec<HostTensor>> {
         let (bwd, b, l) = self.encoder_artifacts(phase, Dir::Bwd)?;
         let d_llm = self.cfg().d_llm;
@@ -321,27 +336,33 @@ impl Worker {
     // -- routing helpers -----------------------------------------------------
 
     /// Route encoder output rows along a rearrangement; returns rows for
-    /// examples this rank hosts in the LLM phase.
+    /// examples this rank hosts in the LLM phase. Each send shares the
+    /// encoder's output buffer (`Arc` clone) — the in-process fast path
+    /// moves it to the destination rank without ever copying the rows.
     fn route_tokens(
         &self,
         plan: &StepPlan,
         route: &crate::orchestrator::rearrangement::Rearrangement,
         state: &EncoderState,
         comm_s: &mut f64,
-    ) -> Result<HashMap<usize, Vec<f32>>> {
-        let mut sends: Vec<(usize, F32Msg)> = Vec::new();
+    ) -> Result<HashMap<usize, Arc<Vec<f32>>>> {
+        let mut sends: Vec<(usize, Shard)> = Vec::new();
         for (&g, rows) in &state.out_rows {
             debug_assert_eq!(route.from[g], self.rank);
-            sends.push((route.to[g], (g, rows.clone())));
+            sends.push((
+                route.to[g],
+                Shard::f32_shared(g, Arc::clone(rows)),
+            ));
         }
         let _ = plan;
         let t0 = std::time::Instant::now();
         let received = self
             .transport
-            .all_to_all::<F32Msg>(sends)
+            .all_to_all_shards(sends)
             .context("encoder output all-to-all (composed route)")?;
         *comm_s += t0.elapsed().as_secs_f64();
-        Ok(received.into_iter().map(|(_s, (g, d))| (g, d)).collect())
+        f32_rows(received)
+            .context("encoder output all-to-all (composed route)")
     }
 
     /// Route gradient rows back along the inverse composed route.
@@ -349,21 +370,22 @@ impl Worker {
         &self,
         _plan: &StepPlan,
         inv_route: &crate::orchestrator::rearrangement::Rearrangement,
-        rows: HashMap<usize, Vec<f32>>,
+        rows: HashMap<usize, Arc<Vec<f32>>>,
         comm_s: &mut f64,
-    ) -> Result<HashMap<usize, Vec<f32>>> {
-        let mut sends: Vec<(usize, F32Msg)> = Vec::new();
+    ) -> Result<HashMap<usize, Arc<Vec<f32>>>> {
+        let mut sends: Vec<(usize, Shard)> = Vec::new();
         for (g, data) in rows {
             debug_assert_eq!(inv_route.from[g], self.rank);
-            sends.push((inv_route.to[g], (g, data)));
+            sends.push((inv_route.to[g], Shard::f32_shared(g, data)));
         }
         let t0 = std::time::Instant::now();
         let received = self
             .transport
-            .all_to_all::<F32Msg>(sends)
+            .all_to_all_shards(sends)
             .context("token-gradient all-to-all (inverse route)")?;
         *comm_s += t0.elapsed().as_secs_f64();
-        Ok(received.into_iter().map(|(_s, (g, d))| (g, d)).collect())
+        f32_rows(received)
+            .context("token-gradient all-to-all (inverse route)")
     }
 
     /// Route text tokens home → LLM instance.
@@ -371,21 +393,28 @@ impl Worker {
         &self,
         plan: &StepPlan,
         comm_s: &mut f64,
-    ) -> Result<HashMap<usize, Vec<i32>>> {
-        let mut sends: Vec<(usize, I32Msg)> = Vec::new();
+    ) -> Result<HashMap<usize, Arc<Vec<i32>>>> {
+        let mut sends: Vec<(usize, Shard)> = Vec::new();
         for (g, e) in plan.examples.iter().enumerate() {
             if plan.home[g] != self.rank {
                 continue;
             }
-            sends.push((plan.llm.route.to[g], (g, self.content.text(e))));
+            sends.push((
+                plan.llm.route.to[g],
+                Shard::i32(g, self.content.text(e)),
+            ));
         }
         let t0 = std::time::Instant::now();
         let received = self
             .transport
-            .all_to_all::<I32Msg>(sends)
+            .all_to_all_shards(sends)
             .context("text-token all-to-all")?;
         *comm_s += t0.elapsed().as_secs_f64();
-        Ok(received.into_iter().map(|(_s, (g, d))| (g, d)).collect())
+        received
+            .into_iter()
+            .map(|(_src, shard)| shard.into_i32())
+            .collect::<Result<HashMap<_, _>>>()
+            .context("text-token all-to-all")
     }
 
     // -- LLM phase -------------------------------------------------------------
@@ -394,14 +423,14 @@ impl Worker {
     fn llm_phase(
         &mut self,
         plan: &StepPlan,
-        vis_tokens: &HashMap<usize, Vec<f32>>,
-        aud_tokens: &HashMap<usize, Vec<f32>>,
-        texts: &HashMap<usize, Vec<i32>>,
+        vis_tokens: &HashMap<usize, Arc<Vec<f32>>>,
+        aud_tokens: &HashMap<usize, Arc<Vec<f32>>>,
+        texts: &HashMap<usize, Arc<Vec<i32>>>,
     ) -> Result<(
         f64,
         f64,
-        HashMap<usize, Vec<f32>>,
-        HashMap<usize, Vec<f32>>,
+        HashMap<usize, Arc<Vec<f32>>>,
+        HashMap<usize, Arc<Vec<f32>>>,
         Vec<HostTensor>,
     )> {
         let spec = self
@@ -511,14 +540,20 @@ impl Worker {
                     let s = row * tv * d_llm;
                     d_vis_rows.insert(
                         g,
-                        d_vis.f32s()[s..s + e.vis_tokens * d_llm].to_vec(),
+                        Arc::new(
+                            d_vis.f32s()[s..s + e.vis_tokens * d_llm]
+                                .to_vec(),
+                        ),
                     );
                 }
                 if e.aud_tokens > 0 {
                     let s = row * ta * d_llm;
                     d_aud_rows.insert(
                         g,
-                        d_aud.f32s()[s..s + e.aud_tokens * d_llm].to_vec(),
+                        Arc::new(
+                            d_aud.f32s()[s..s + e.aud_tokens * d_llm]
+                                .to_vec(),
+                        ),
                     );
                 }
             }

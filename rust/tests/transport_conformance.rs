@@ -290,6 +290,47 @@ fn typed_payloads_cross_every_backend() {
 }
 
 #[test]
+fn shard_fast_path_agrees_with_the_wire_path() {
+    // `inproc` overrides `all_to_all_shards` with an Arc-moving fast
+    // path; `tcp` takes the Wire-encoding default. Both must deliver
+    // the same logical shards in the same order — and mixed dtypes in
+    // one round must survive every backend.
+    use orchmllm::comm::transport::Shard;
+    let d = 3;
+    let program = move |t: Box<dyn Transport>| -> Vec<(usize, Shard)> {
+        let rank = t.rank();
+        let mut sends: Vec<(usize, Shard)> = Vec::new();
+        for dst in 0..d {
+            sends.push((
+                dst,
+                Shard::f32(rank * 10 + dst, vec![rank as f32 + 0.5; 3]),
+            ));
+            sends.push((
+                dst,
+                Shard::i32(rank * 10 + dst, vec![-(rank as i32); 2]),
+            ));
+        }
+        t.all_to_all_shards(sends).unwrap()
+    };
+    let mut reference: Option<Vec<Vec<(usize, Shard)>>> = None;
+    for name in registry::NAMES {
+        let out = run_world(name, d, program);
+        for (rank, recv) in out.iter().enumerate() {
+            assert_eq!(recv.len(), 2 * d, "{name} rank {rank}");
+            for (src, shard) in recv {
+                assert_eq!(shard.id(), src * 10 + rank, "{name}");
+            }
+        }
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => {
+                assert_eq!(&out, r, "{name} shard routing diverges");
+            }
+        }
+    }
+}
+
+#[test]
 fn backends_agree_bit_for_bit() {
     // The same deterministic SPMD program must produce identical bytes
     // on every backend — the cheap cross-backend invariance check that
