@@ -18,6 +18,7 @@
 
 pub mod calibrate;
 pub mod costmodel;
+pub mod rendezvous;
 pub mod topology;
 pub mod transport;
 pub mod volume;

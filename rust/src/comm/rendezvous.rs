@@ -1,0 +1,392 @@
+//! File-based rendezvous: rank discovery and membership agreement for
+//! multi-process worlds (the `tcp-multiproc` backend) and for the
+//! elastic recovery protocol's epoch bumps.
+//!
+//! # Protocol
+//!
+//! All members share one directory (the trainer passes `--rdzv-dir` to
+//! every `worker` process). Time is divided into **epochs**: epoch 0
+//! is the launch rendezvous, and every recovery after a rank death
+//! bumps the epoch. Within an epoch:
+//!
+//! 1. **Register.** Member `m` writes `ep{e}.m{m}` containing its
+//!    listener address. The write is tmp-file + rename, so a scan
+//!    never observes a half-written registration.
+//! 2. **Seal.** Each joiner polls the directory until either every
+//!    *expected* member has registered or the grace window expires,
+//!    then attempts to write `ep{e}.commit` listing the members it
+//!    observed. The commit is published with tmp-file + `hard_link`,
+//!    so exactly one writer wins and every reader sees a complete
+//!    file — the sealed membership is a single atomic decision no
+//!    matter how many members race to make it.
+//! 3. **Agree.** Everyone reads the commit. A member listed in it
+//!    proceeds with the sealed world; a member that registered too
+//!    late is **evicted** (error) — the world moved on without it,
+//!    and rejoining at a later epoch is a policy decision for the
+//!    layer above, not the rendezvous.
+//!
+//! Dense transport ranks are *positions in the sorted member list*;
+//! the stable ids in the files survive shrinks so logs stay traceable
+//! to launch-time ranks.
+//!
+//! Knobs: `ORCHMLLM_RDZV_TIMEOUT_SECS` bounds the whole join (default
+//! 30, `0` disables the bound); the grace window (how long to wait for
+//! missing expected members before sealing a shrunk world) defaults to
+//! 2 s and is a struct field for tests.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Default total join timeout when `ORCHMLLM_RDZV_TIMEOUT_SECS` is
+/// unset.
+pub const DEFAULT_TIMEOUT_SECS: u64 = 30;
+/// Default grace window before sealing without missing members.
+pub const DEFAULT_GRACE_MILLIS: u64 = 2_000;
+
+/// One member's sealed-world entry: stable id + listener address.
+pub type Member = (usize, String);
+
+/// File-based rendezvous over a shared directory.
+#[derive(Clone, Debug)]
+pub struct FileRendezvous {
+    /// The shared directory; created on first use.
+    pub dir: PathBuf,
+    /// Total join deadline (`None` = unbounded).
+    pub timeout: Option<Duration>,
+    /// How long to wait for missing *expected* members before sealing
+    /// the epoch with whoever registered.
+    pub grace: Duration,
+    /// Directory poll interval.
+    pub poll: Duration,
+}
+
+impl FileRendezvous {
+    /// Rendezvous rooted at `dir`, with `ORCHMLLM_RDZV_TIMEOUT_SECS`
+    /// honored for the join bound (default 30 s, `0` = unbounded) —
+    /// env parsing warns loudly on garbage, like the other comm knobs.
+    pub fn new(dir: impl Into<PathBuf>) -> FileRendezvous {
+        let parsed = std::env::var("ORCHMLLM_RDZV_TIMEOUT_SECS")
+            .ok()
+            .and_then(|raw| match raw.trim().parse::<u64>() {
+                Ok(v) => Some(v),
+                Err(_) => {
+                    eprintln!(
+                        "warning: ignoring unparsable \
+                         ORCHMLLM_RDZV_TIMEOUT_SECS='{raw}', using the \
+                         default ({DEFAULT_TIMEOUT_SECS}s)"
+                    );
+                    None
+                }
+            });
+        let timeout = match parsed {
+            Some(0) => None,
+            Some(n) => Some(Duration::from_secs(n)),
+            None => Some(Duration::from_secs(DEFAULT_TIMEOUT_SECS)),
+        };
+        FileRendezvous {
+            dir: dir.into(),
+            timeout,
+            grace: Duration::from_millis(DEFAULT_GRACE_MILLIS),
+            poll: Duration::from_millis(10),
+        }
+    }
+
+    /// Join `epoch` as stable member `me`, advertising `addr`, and
+    /// block until membership seals. Returns the sealed member list
+    /// sorted by stable id.
+    pub fn join(
+        &self,
+        epoch: u64,
+        me: usize,
+        addr: &str,
+        expected: &[usize],
+    ) -> Result<Vec<Member>> {
+        fs::create_dir_all(&self.dir).with_context(|| {
+            format!("creating rendezvous dir {}", self.dir.display())
+        })?;
+        self.write_atomic(
+            &format!("ep{epoch}.m{me}"),
+            &format!("ep{epoch}.m{me}.tmp"),
+            addr,
+        )
+        .context("registering with the rendezvous")?;
+
+        let start = Instant::now();
+        let grace_deadline = start + self.grace;
+        loop {
+            if let Some(members) = self.read_commit(epoch)? {
+                if !members.iter().any(|&(id, _)| id == me) {
+                    bail!(
+                        "rendezvous epoch {epoch}: member {me} arrived \
+                         after membership sealed (evicted); sealed \
+                         world: {:?}",
+                        members.iter().map(|&(id, _)| id).collect::<Vec<_>>()
+                    );
+                }
+                return Ok(members);
+            }
+            let registered = self.scan_registered(epoch)?;
+            let complete = expected
+                .iter()
+                .all(|m| registered.iter().any(|&(id, _)| id == *m));
+            if complete || Instant::now() >= grace_deadline {
+                self.try_commit(epoch, me, &registered)?;
+                continue; // next iteration reads the winning commit
+            }
+            if let Some(t) = self.timeout {
+                if start.elapsed() > t {
+                    bail!(
+                        "rendezvous epoch {epoch}: timed out after {t:?} \
+                         waiting for members {expected:?} \
+                         (registered: {:?})",
+                        registered
+                            .iter()
+                            .map(|&(id, _)| id)
+                            .collect::<Vec<_>>()
+                    );
+                }
+            }
+            std::thread::sleep(self.poll);
+        }
+    }
+
+    /// Write `name` atomically: full content to `tmp_name`, then
+    /// rename into place (same directory, so the rename is atomic).
+    fn write_atomic(
+        &self,
+        name: &str,
+        tmp_name: &str,
+        content: &str,
+    ) -> Result<()> {
+        let tmp = self.dir.join(tmp_name);
+        fs::write(&tmp, content)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        let dst = self.dir.join(name);
+        fs::rename(&tmp, &dst)
+            .with_context(|| format!("publishing {}", dst.display()))?;
+        Ok(())
+    }
+
+    /// All `ep{epoch}.m{id}` registrations currently visible, sorted
+    /// by id. Filenames that do not parse (tmp files mid-rename on
+    /// non-atomic filesystems, stray editor droppings) are skipped.
+    fn scan_registered(&self, epoch: u64) -> Result<Vec<Member>> {
+        let prefix = format!("ep{epoch}.m");
+        let mut out: Vec<Member> = Vec::new();
+        let entries = fs::read_dir(&self.dir).with_context(|| {
+            format!("scanning rendezvous dir {}", self.dir.display())
+        })?;
+        for entry in entries {
+            let entry = entry.context("reading rendezvous dir entry")?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(rest) = name.strip_prefix(&prefix) else {
+                continue;
+            };
+            let Ok(id) = rest.parse::<usize>() else {
+                continue; // tmp files and other suffixes
+            };
+            // A registration published by rename is complete; an empty
+            // read means a foreign writer — skip it, the poll loop
+            // will see the real content or time out.
+            match fs::read_to_string(entry.path()) {
+                Ok(addr) if !addr.trim().is_empty() => {
+                    out.push((id, addr.trim().to_string()));
+                }
+                _ => continue,
+            }
+        }
+        out.sort_by_key(|&(id, _)| id);
+        Ok(out)
+    }
+
+    /// Publish the commit for `epoch` if nobody has yet: first writer
+    /// wins via `hard_link` (fails with `AlreadyExists` if the commit
+    /// is already published), and the linked file is complete before
+    /// it becomes visible.
+    fn try_commit(
+        &self,
+        epoch: u64,
+        me: usize,
+        members: &[Member],
+    ) -> Result<()> {
+        let commit = self.dir.join(format!("ep{epoch}.commit"));
+        if commit.exists() {
+            return Ok(());
+        }
+        let body: String = members
+            .iter()
+            .map(|(id, addr)| format!("{id} {addr}\n"))
+            .collect();
+        let tmp = self.dir.join(format!("ep{epoch}.commit.tmp{me}"));
+        fs::write(&tmp, body)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        match fs::hard_link(&tmp, &commit) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {}
+            Err(e) => {
+                let _ = fs::remove_file(&tmp);
+                return Err(anyhow!(e)).with_context(|| {
+                    format!("publishing {}", commit.display())
+                });
+            }
+        }
+        let _ = fs::remove_file(&tmp);
+        Ok(())
+    }
+
+    /// Read the sealed membership for `epoch`, if published.
+    fn read_commit(&self, epoch: u64) -> Result<Option<Vec<Member>>> {
+        let commit = self.dir.join(format!("ep{epoch}.commit"));
+        let body = match fs::read_to_string(&commit) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None)
+            }
+            Err(e) => {
+                return Err(anyhow!(e)).with_context(|| {
+                    format!("reading {}", commit.display())
+                })
+            }
+        };
+        let mut members = Vec::new();
+        for line in body.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (id, addr) = line.split_once(' ').ok_or_else(|| {
+                anyhow!("corrupt rendezvous commit line: '{line}'")
+            })?;
+            let id: usize = id.parse().with_context(|| {
+                format!("corrupt rendezvous commit id: '{line}'")
+            })?;
+            members.push((id, addr.to_string()));
+        }
+        members.sort_by_key(|&(id, _)| id);
+        Ok(Some(members))
+    }
+}
+
+/// A unique scratch directory for tests and spawned worlds:
+/// `{temp}/orchmllm-rdzv-{pid}-{seq}`. Uniqueness comes from the pid
+/// plus a process-wide counter, so parallel tests in one process and
+/// across processes never collide.
+pub fn scratch_dir(label: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "orchmllm-rdzv-{label}-{}-{seq}",
+        std::process::id()
+    ))
+}
+
+/// Best-effort cleanup of a rendezvous directory (ignores errors: a
+/// leaked scratch dir in `/tmp` must never fail a run).
+pub fn cleanup(dir: &Path) {
+    let _ = fs::remove_dir_all(dir);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    fn quick(dir: PathBuf) -> FileRendezvous {
+        FileRendezvous {
+            dir,
+            timeout: Some(Duration::from_secs(10)),
+            grace: Duration::from_secs(5),
+            poll: Duration::from_millis(2),
+        }
+    }
+
+    #[test]
+    fn concurrent_members_agree_on_the_sealed_world() {
+        let dir = scratch_dir("agree");
+        let rdzv = Arc::new(quick(dir.clone()));
+        let joins: Vec<_> = (0..4)
+            .map(|me| {
+                let rdzv = Arc::clone(&rdzv);
+                thread::spawn(move || {
+                    rdzv.join(
+                        0,
+                        me,
+                        &format!("127.0.0.1:{}", 9000 + me),
+                        &[0, 1, 2, 3],
+                    )
+                })
+            })
+            .collect();
+        let worlds: Vec<_> =
+            joins.into_iter().map(|j| j.join().unwrap().unwrap()).collect();
+        for w in &worlds {
+            assert_eq!(w, &worlds[0], "members disagree on the world");
+            assert_eq!(
+                w.iter().map(|&(id, _)| id).collect::<Vec<_>>(),
+                vec![0, 1, 2, 3]
+            );
+        }
+        cleanup(&dir);
+    }
+
+    #[test]
+    fn shrunk_epoch_seals_without_the_dead_member() {
+        let dir = scratch_dir("shrink");
+        let rdzv = Arc::new(quick(dir.clone()));
+        // Epoch 3 recovery: survivors 0 and 2 expect only each other.
+        let joins: Vec<_> = [0usize, 2]
+            .into_iter()
+            .map(|me| {
+                let rdzv = Arc::clone(&rdzv);
+                thread::spawn(move || {
+                    rdzv.join(3, me, &format!("a{me}"), &[0, 2])
+                })
+            })
+            .collect();
+        for j in joins {
+            let members = j.join().unwrap().unwrap();
+            assert_eq!(
+                members,
+                vec![(0, "a0".to_string()), (2, "a2".to_string())]
+            );
+        }
+        cleanup(&dir);
+    }
+
+    #[test]
+    fn latecomers_are_evicted_after_the_grace_window() {
+        let dir = scratch_dir("evict");
+        let mut rdzv = quick(dir.clone());
+        rdzv.grace = Duration::from_millis(30);
+        // Member 0 expects member 9, which never shows: the grace
+        // window expires and the epoch seals solo.
+        let members = rdzv.join(1, 0, "a0", &[0, 9]).unwrap();
+        assert_eq!(members, vec![(0, "a0".to_string())]);
+        // Member 9 finally arrives: evicted, loudly.
+        let err = rdzv.join(1, 9, "a9", &[0, 9]).unwrap_err().to_string();
+        assert!(err.contains("evicted"), "{err}");
+        cleanup(&dir);
+    }
+
+    #[test]
+    fn join_times_out_instead_of_spinning_forever() {
+        let dir = scratch_dir("timeout");
+        let rdzv = FileRendezvous {
+            dir: dir.clone(),
+            timeout: Some(Duration::from_millis(60)),
+            // Grace beyond the timeout: the seal path never triggers,
+            // so the total deadline must.
+            grace: Duration::from_secs(60),
+            poll: Duration::from_millis(2),
+        };
+        let err = rdzv.join(0, 0, "a0", &[0, 1]).unwrap_err().to_string();
+        assert!(err.contains("timed out"), "{err}");
+        cleanup(&dir);
+    }
+}

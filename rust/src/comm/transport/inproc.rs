@@ -20,16 +20,27 @@
 //! the group fail fast with the original reason. Failure semantics are
 //! the transport contract's: "error within the timeout", never a hang.
 //!
+//! Since the elastic runtime landed, the watchdog also *attributes*:
+//! the barrier tracks which ranks arrived in the current generation, so
+//! the timeout error carries [`TransportError::PeerDead`] naming the
+//! first missing rank — the same typed signal the `tcp` backends
+//! attach to broken sockets. [`InProcElastic`] is the thread-world
+//! rendezvous that lets survivors rebuild a shrunk group after such a
+//! death (see `trainer/elastic.rs`).
+//!
 //! [`Collectives`] is the private engine behind [`InProcTransport`];
 //! nothing outside this module touches it directly anymore — the
 //! trainer goes through `dyn Transport`.
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use super::{Shard, Transport, TransportFactory};
+use super::{
+    ElasticFactory, Shard, Transport, TransportError, TransportFactory,
+};
 
 /// Default watchdog timeout when `ORCHMLLM_INPROC_TIMEOUT_SECS` is not
 /// set. Generous: a healthy group assembles in microseconds; only a
@@ -61,12 +72,41 @@ fn watchdog_from_env() -> Option<Duration> {
     }
 }
 
+/// Why a group broke: the human-readable reason plus the rank the
+/// evidence points at (the first rank that never reached the barrier
+/// generation), when one is attributable.
+#[derive(Clone)]
+struct Broken {
+    why: String,
+    dead: Option<usize>,
+}
+
+impl Broken {
+    /// Materialize the sticky reason as an error chain: the typed
+    /// [`TransportError::PeerDead`] as the root (when attributable) so
+    /// `peer_dead()` finds it, the human message as the outer context
+    /// so logs keep reading the same as before.
+    fn to_error(&self, prefix: &str) -> anyhow::Error {
+        let msg = format!("{prefix}: {}", self.why);
+        match self.dead {
+            Some(rank) => {
+                anyhow::Error::from(TransportError::PeerDead { rank })
+                    .context(msg)
+            }
+            None => anyhow!("{msg}"),
+        }
+    }
+}
+
 struct BarrierState {
     arrived: usize,
     generation: u64,
+    /// Which ranks have arrived in the current generation — the
+    /// watchdog's attribution evidence. Reset when a round releases.
+    present: Vec<bool>,
     /// Why the group broke, if it did. Sticky: once broken, every
     /// current and future waiter errors out with this reason.
-    broken: Option<String>,
+    broken: Option<Broken>,
 }
 
 /// A cyclic barrier whose waiters time out instead of blocking forever
@@ -84,6 +124,7 @@ impl MonitoredBarrier {
             state: Mutex::new(BarrierState {
                 arrived: 0,
                 generation: 0,
+                present: vec![false; d],
                 broken: None,
             }),
             cv: Condvar::new(),
@@ -98,14 +139,16 @@ impl MonitoredBarrier {
         self.state.lock().unwrap_or_else(|p| p.into_inner())
     }
 
-    fn wait(&self) -> Result<()> {
+    fn wait(&self, rank: usize) -> Result<()> {
         let mut s = self.lock();
-        if let Some(why) = &s.broken {
-            bail!("inproc barrier: group already broken: {why}");
+        if let Some(b) = &s.broken {
+            return Err(b.to_error("inproc barrier: group already broken"));
         }
         s.arrived += 1;
+        s.present[rank] = true;
         if s.arrived == self.d {
             s.arrived = 0;
+            s.present.iter_mut().for_each(|p| *p = false);
             s.generation = s.generation.wrapping_add(1);
             self.cv.notify_all();
             return Ok(());
@@ -123,14 +166,25 @@ impl MonitoredBarrier {
                 Some(deadline) => {
                     let now = Instant::now();
                     if now >= deadline {
+                        // Attribution: the first rank with no arrival
+                        // in this generation is the prime suspect. A
+                        // hint, not a verdict — recovery re-verifies
+                        // membership by rendezvous, never by blame.
+                        let dead = s.present.iter().position(|&p| !p);
                         let why = format!(
                             "watchdog: {} of {} ranks arrived within \
-                             {:?} — a peer died or skipped a round",
-                            s.arrived, self.d, self.timeout.unwrap()
+                             {:?} — a peer died or skipped a round \
+                             (first missing rank: {})",
+                            s.arrived,
+                            self.d,
+                            self.timeout.unwrap(),
+                            dead.map_or("?".to_string(), |r| r.to_string()),
                         );
-                        s.broken = Some(why.clone());
+                        let broken = Broken { why, dead };
+                        let err = broken.to_error("inproc barrier");
+                        s.broken = Some(broken);
                         self.cv.notify_all();
-                        bail!("inproc barrier {why}");
+                        return Err(err);
                     }
                     let (guard, _) = self
                         .cv
@@ -147,8 +201,8 @@ impl MonitoredBarrier {
             if s.generation != generation {
                 return Ok(());
             }
-            if let Some(why) = &s.broken {
-                bail!("inproc barrier: group broken: {why}");
+            if let Some(b) = &s.broken {
+                return Err(b.to_error("inproc barrier: group broken"));
             }
         }
     }
@@ -201,7 +255,7 @@ impl<T: Send + Clone> Collectives<T> {
                 cells[rank * self.d + dst].push(item);
             }
         }
-        self.barrier.wait()?;
+        self.barrier.wait(rank)?;
         let received = {
             let mut cells = self.cells.lock().unwrap();
             let mut out = Vec::new();
@@ -212,7 +266,7 @@ impl<T: Send + Clone> Collectives<T> {
             }
             out
         };
-        self.barrier.wait()?;
+        self.barrier.wait(rank)?;
         Ok(received)
     }
 
@@ -223,7 +277,7 @@ impl<T: Send + Clone> Collectives<T> {
             let mut slots = self.slots.lock().unwrap();
             slots[rank] = Some(item);
         }
-        self.barrier.wait()?;
+        self.barrier.wait(rank)?;
         let all: Vec<T> = {
             let slots = self.slots.lock().unwrap();
             let mut all = Vec::with_capacity(self.d);
@@ -237,7 +291,7 @@ impl<T: Send + Clone> Collectives<T> {
             }
             all
         };
-        self.barrier.wait()?;
+        self.barrier.wait(rank)?;
         // Stale-slot guard: clear my own slot so a rank that skips a
         // future round trips the "missing contribution" error instead
         // of silently replaying this round's value. Each rank clears
@@ -249,8 +303,8 @@ impl<T: Send + Clone> Collectives<T> {
     }
 
     /// Synchronization point with no data.
-    pub(crate) fn barrier(&self) -> Result<()> {
-        self.barrier.wait()
+    pub(crate) fn barrier(&self, rank: usize) -> Result<()> {
+        self.barrier.wait(rank)
     }
 }
 
@@ -374,7 +428,7 @@ impl Transport for InProcTransport {
     }
 
     fn barrier(&self) -> Result<()> {
-        self.bytes.barrier()
+        self.bytes.barrier(self.rank)
     }
 
     fn all_reduce_sum(&self, data: &mut [f32]) -> Result<()> {
@@ -447,6 +501,125 @@ impl TransportFactory for InProcFactory {
                 }) as Box<dyn Transport>
             })
             .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// InProcElastic: thread-world rendezvous across epochs
+// ---------------------------------------------------------------------------
+
+/// Per-epoch rendezvous state: who has registered, the sealed
+/// membership once a seal happened, and the transport handles the
+/// sealing member deposited (keyed by stable member id, taken once by
+/// each member).
+#[derive(Default)]
+struct EpochState {
+    registered: BTreeSet<usize>,
+    sealed: Option<Vec<usize>>,
+    handles: BTreeMap<usize, Box<dyn Transport>>,
+}
+
+/// Elastic rendezvous for thread-per-rank worlds — the in-process twin
+/// of the file-based [`crate::comm::rendezvous`] protocol that backs
+/// `tcp-multiproc` (see [`super::mesh`]).
+///
+/// Members register at an epoch under their *stable id* (launch-time
+/// rank). Membership seals as soon as every expected member has
+/// registered, or when the grace window expires — whichever comes
+/// first — and whoever observes the seal condition builds a fresh
+/// [`InProcFactory`] group sized to the sealed world and deposits one
+/// handle per member. A member that registers after its epoch sealed
+/// is evicted with an error: the world moved on without it.
+pub struct InProcElastic {
+    /// Barrier-watchdog override handed to every epoch's group
+    /// ([`InProcFactory::watchdog`] semantics).
+    watchdog: Option<Duration>,
+    /// How long a joiner waits for missing expected members before
+    /// sealing the epoch with whoever showed up.
+    grace: Duration,
+    epochs: Mutex<BTreeMap<u64, EpochState>>,
+    cv: Condvar,
+}
+
+impl std::fmt::Debug for InProcElastic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("InProcElastic")
+            .field("watchdog", &self.watchdog)
+            .field("grace", &self.grace)
+            .finish_non_exhaustive()
+    }
+}
+
+impl InProcElastic {
+    /// Rendezvous with an explicit grace window and barrier watchdog
+    /// (watchdog `None` reads `ORCHMLLM_INPROC_TIMEOUT_SECS` at each
+    /// epoch's connect, `Some(ZERO)` disables).
+    pub fn new(watchdog: Option<Duration>, grace: Duration) -> InProcElastic {
+        InProcElastic {
+            watchdog,
+            grace,
+            epochs: Mutex::new(BTreeMap::new()),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+impl ElasticFactory for InProcElastic {
+    fn join(
+        &self,
+        epoch: u64,
+        me: usize,
+        expected: &[usize],
+    ) -> Result<(Vec<usize>, Box<dyn Transport>)> {
+        let deadline = Instant::now() + self.grace;
+        let mut epochs =
+            self.epochs.lock().unwrap_or_else(|p| p.into_inner());
+        epochs.entry(epoch).or_default().registered.insert(me);
+        self.cv.notify_all();
+        loop {
+            let state = epochs.get_mut(&epoch).expect("epoch entry exists");
+            if state.sealed.is_none() {
+                let complete = expected
+                    .iter()
+                    .all(|m| state.registered.contains(m));
+                if complete || Instant::now() >= deadline {
+                    let members: Vec<usize> =
+                        state.registered.iter().copied().collect();
+                    let world = InProcFactory {
+                        watchdog: self.watchdog,
+                    }
+                    .connect(members.len())?;
+                    for (idx, t) in world.into_iter().enumerate() {
+                        state.handles.insert(members[idx], t);
+                    }
+                    state.sealed = Some(members);
+                    self.cv.notify_all();
+                }
+            }
+            if let Some(members) = &state.sealed {
+                if !members.contains(&me) {
+                    bail!(
+                        "rendezvous epoch {epoch}: member {me} arrived \
+                         after membership sealed (evicted); sealed \
+                         world: {members:?}"
+                    );
+                }
+                let members = members.clone();
+                let t = state
+                    .handles
+                    .remove(&me)
+                    .expect("sealed member takes its handle exactly once");
+                return Ok((members, t));
+            }
+            let remaining = deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_millis(1));
+            let (guard, _) = self
+                .cv
+                .wait_timeout(epochs, remaining)
+                .unwrap_or_else(|p| p.into_inner());
+            epochs = guard;
+        }
     }
 }
 
@@ -589,7 +762,10 @@ mod tests {
             Some(Duration::from_millis(50)),
         );
         let t0 = Instant::now();
-        let err = c.barrier().unwrap_err().to_string();
+        let err = c.barrier(0).unwrap_err();
+        // Typed attribution: the only possible culprit is rank 1.
+        assert_eq!(crate::comm::transport::peer_dead(&err), Some(1));
+        let err = err.to_string();
         assert!(
             t0.elapsed() < Duration::from_secs(10),
             "watchdog did not fire in time"
@@ -622,7 +798,14 @@ mod tests {
         });
         assert!(out[0].is_ok());
         for r in &out[1..] {
-            let err = r.as_ref().unwrap_err().to_string();
+            let err = r.as_ref().unwrap_err();
+            // The dead rank is attributed through the sticky reason.
+            assert_eq!(
+                crate::comm::transport::peer_dead(err),
+                Some(0),
+                "peer saw: {err:#}"
+            );
+            let err = err.to_string();
             assert!(
                 err.contains("watchdog") || err.contains("broken"),
                 "peer saw: {err}"
@@ -640,7 +823,7 @@ mod tests {
         let out = spawn_world(4, move |rank| {
             let c = Arc::clone(&c);
             for _ in 0..50 {
-                c.barrier().unwrap();
+                c.barrier(rank).unwrap();
             }
             c.all_gather(rank, rank).unwrap()
         });
@@ -724,5 +907,65 @@ mod tests {
         )
         .unwrap();
         assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn elastic_rendezvous_seals_complete_worlds_immediately() {
+        let rdzv = Arc::new(InProcElastic::new(
+            Some(Duration::from_secs(5)),
+            Duration::from_secs(5),
+        ));
+        let out = spawn_world(3, move |rank| {
+            let rdzv = Arc::clone(&rdzv);
+            let (members, t) = rdzv.join(0, rank, &[0, 1, 2]).unwrap();
+            assert_eq!(members, vec![0, 1, 2]);
+            assert_eq!(t.rank(), rank);
+            assert_eq!(t.world_size(), 3);
+            t.all_gather_bytes(vec![rank as u8]).unwrap()
+        });
+        for got in out {
+            assert_eq!(got, vec![vec![0u8], vec![1], vec![2]]);
+        }
+    }
+
+    #[test]
+    fn elastic_rendezvous_shrinks_and_renumbers_survivors() {
+        // Stable ids {0, 2, 3} re-rendezvous at epoch 1 after id 1
+        // died: dense transport ranks must be each survivor's index in
+        // the sorted member list.
+        let rdzv = Arc::new(InProcElastic::new(
+            Some(Duration::from_secs(5)),
+            Duration::from_secs(5),
+        ));
+        let survivors = [0usize, 2, 3];
+        let out = spawn_world(3, move |i| {
+            let rdzv = Arc::clone(&rdzv);
+            let me = survivors[i];
+            let (members, t) = rdzv.join(1, me, &survivors).unwrap();
+            assert_eq!(members, vec![0, 2, 3]);
+            assert_eq!(t.world_size(), 3);
+            let rank = members.iter().position(|&m| m == me).unwrap();
+            assert_eq!(t.rank(), rank);
+            t.all_gather_bytes(vec![me as u8]).unwrap()
+        });
+        for got in out {
+            assert_eq!(got, vec![vec![0u8], vec![2], vec![3]]);
+        }
+    }
+
+    #[test]
+    fn elastic_rendezvous_evicts_latecomers_after_grace() {
+        // Member 1 never joins in time; the grace window expires and
+        // the world seals without it. When it finally arrives, it is
+        // evicted instead of wedging the sealed group.
+        let rdzv = InProcElastic::new(
+            Some(Duration::from_secs(5)),
+            Duration::from_millis(50),
+        );
+        let (members, t) = rdzv.join(2, 0, &[0, 1]).unwrap();
+        assert_eq!(members, vec![0]);
+        assert_eq!(t.world_size(), 1);
+        let err = rdzv.join(2, 1, &[0, 1]).unwrap_err().to_string();
+        assert!(err.contains("evicted"), "{err}");
     }
 }

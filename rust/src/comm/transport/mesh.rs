@@ -1,0 +1,400 @@
+//! `tcp-multiproc`: the loopback-TCP wire protocol taken out of
+//! loopback-land — rank discovery via a file [`FileRendezvous`] so the
+//! ranks of one world can live in **separate OS processes** (the
+//! `orchmllm worker` subcommand), with concurrent connect + bounded
+//! retry instead of the single-threaded dial-then-accept handshake the
+//! loopback factory uses.
+//!
+//! # Mesh build, per member
+//!
+//! 1. Bind an ephemeral listener, register its address with the
+//!    rendezvous at the current epoch.
+//! 2. Wait for the sealed membership; my dense rank is my position in
+//!    the sorted member list.
+//! 3. Dial every higher rank ([`super::tcp::dial_with_retry`] —
+//!    peers may still be binding, so refused connects back off and
+//!    retry), send the 8-byte hello naming my rank; accept one
+//!    connection per lower rank (with a deadline — a member that died
+//!    between seal and mesh build must error us out, not hang us).
+//! 4. Wrap the streams in the *same* [`TcpLoopbackTransport`] the
+//!    loopback backend uses: identical framing, pairwise schedule,
+//!    timeouts, and typed `PeerDead` classification, so the whole
+//!    conformance battery applies verbatim.
+//!
+//! [`TcpElastic`] packages steps 1–4 behind the
+//! [`ElasticFactory`] epoch API for the recovery protocol in
+//! `trainer/elastic.rs`; [`TcpMeshFactory`] is the registry entry that
+//! runs one world's members as threads of the calling process — the
+//! in-process harness that lets benches and the conformance suite
+//! drive the exact rendezvous + concurrent-dial machinery the
+//! multi-process path uses.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::tcp::{
+    dial_with_retry, read_hello, send_hello, TcpLoopbackFactory,
+    TcpLoopbackTransport,
+};
+use super::{ElasticFactory, Transport, TransportFactory};
+use crate::comm::rendezvous::{cleanup, scratch_dir, FileRendezvous, Member};
+
+/// Accept one mesh connection, bounded by `deadline`. The listener
+/// stays nonblocking between accepts; each accepted stream is flipped
+/// back to blocking before the frame protocol touches it.
+fn accept_with_deadline(
+    listener: &TcpListener,
+    deadline: Instant,
+) -> Result<TcpStream> {
+    listener
+        .set_nonblocking(true)
+        .context("setting mesh listener nonblocking")?;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream
+                    .set_nonblocking(false)
+                    .context("restoring blocking mode on mesh stream")?;
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "timed out accepting mesh peers — a sealed \
+                         member died before connecting"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                return Err(anyhow!(e)).context("accepting a mesh peer")
+            }
+        }
+    }
+}
+
+/// Build one member's transport over a sealed membership: dial higher
+/// ranks, accept lower ranks, tune every stream, and wrap them in the
+/// shared loopback transport. `members` must be sorted by stable id
+/// (the rendezvous guarantees it).
+fn connect_mesh(
+    members: &[Member],
+    me: usize,
+    listener: TcpListener,
+    timeout: Option<Duration>,
+) -> Result<Box<dyn Transport>> {
+    let d = members.len();
+    let rank = members
+        .iter()
+        .position(|&(id, _)| id == me)
+        .ok_or_else(|| anyhow!("member {me} missing from sealed world"))?;
+
+    let mut peers: Vec<Option<TcpStream>> = (0..d).map(|_| None).collect();
+    // Dial every higher rank. Loopback/TCP connects complete against
+    // the kernel backlog without the peer accepting, and the 8-byte
+    // hello fits any socket buffer, so dials cannot deadlock against
+    // our own pending accepts.
+    for (j, (id, addr)) in members.iter().enumerate().skip(rank + 1) {
+        let addr: SocketAddr = addr.parse().with_context(|| {
+            format!("member {id} advertised unparsable address '{addr}'")
+        })?;
+        let stream = dial_with_retry(addr)
+            .with_context(|| format!("rank {rank} dialing rank {j}"))?;
+        send_hello(&stream, rank)?;
+        peers[j] = Some(stream);
+    }
+    // Accept one connection per lower rank, in whatever order they
+    // arrive — the hello names the dialer.
+    let accept_deadline = Instant::now()
+        + timeout.unwrap_or(Duration::from_secs(30));
+    for _ in 0..rank {
+        let stream = accept_with_deadline(&listener, accept_deadline)?;
+        let peer = read_hello(&stream)?;
+        if peer >= rank || peers[peer].is_some() {
+            bail!("duplicate or out-of-order mesh handshake from {peer}");
+        }
+        peers[peer] = Some(stream);
+    }
+
+    // Same tuning as the loopback factory: collectives are
+    // latency-bound (no Nagle), and both directions must error within
+    // the timeout when a peer stalls.
+    for stream in peers.iter().flatten() {
+        stream.set_nodelay(true).context("set_nodelay")?;
+        stream
+            .set_read_timeout(timeout)
+            .context("set_read_timeout")?;
+        stream
+            .set_write_timeout(timeout)
+            .context("set_write_timeout")?;
+    }
+    Ok(Box::new(TcpLoopbackTransport::from_streams(rank, d, peers)))
+}
+
+// ---------------------------------------------------------------------------
+// TcpElastic: the per-process epoch API
+// ---------------------------------------------------------------------------
+
+/// Elastic mesh builder for one OS process: every [`ElasticFactory::join`]
+/// binds a fresh listener, rendezvouses at the given epoch, and builds
+/// the mesh over whoever the commit sealed. This is what the `worker`
+/// subcommand drives — epoch 0 at launch, bumped epochs on recovery.
+#[derive(Clone, Debug)]
+pub struct TcpElastic {
+    /// The shared rendezvous (same `--rdzv-dir` in every process).
+    pub rdzv: FileRendezvous,
+    /// Per-stream read/write timeout ([`TcpLoopbackFactory`] semantics).
+    pub timeout: Option<Duration>,
+}
+
+impl ElasticFactory for TcpElastic {
+    fn join(
+        &self,
+        epoch: u64,
+        me: usize,
+        expected: &[usize],
+    ) -> Result<(Vec<usize>, Box<dyn Transport>)> {
+        let listener = TcpListener::bind(("127.0.0.1", 0))
+            .context("binding mesh listener")?;
+        let addr = listener.local_addr()?.to_string();
+        let members = self
+            .rdzv
+            .join(epoch, me, &addr, expected)
+            .with_context(|| format!("rendezvous epoch {epoch}"))?;
+        let ids: Vec<usize> = members.iter().map(|&(id, _)| id).collect();
+        let transport = connect_mesh(&members, me, listener, self.timeout)
+            .with_context(|| format!("building epoch {epoch} mesh"))?;
+        Ok((ids, transport))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TcpMeshFactory: the registry entry
+// ---------------------------------------------------------------------------
+
+/// Factory for the `tcp-multiproc` backend.
+///
+/// `connect(d)` runs the `d` members as threads of the calling process
+/// over a scratch rendezvous directory — the full discovery protocol
+/// (register, seal, concurrent dial with retry) with none of the
+/// process management, which is exactly what the conformance battery
+/// and benches need. Real multi-process worlds don't call `connect`;
+/// each `orchmllm worker` process drives its own [`TcpElastic`].
+#[derive(Clone, Copy, Debug)]
+pub struct TcpMeshFactory {
+    /// Per-stream read/write timeout; `None` blocks forever.
+    pub timeout: Option<Duration>,
+}
+
+impl Default for TcpMeshFactory {
+    fn default() -> Self {
+        TcpMeshFactory {
+            timeout: Some(Duration::from_secs(30)),
+        }
+    }
+}
+
+impl TcpMeshFactory {
+    /// Honor `ORCHMLLM_TCP_TIMEOUT_SECS` exactly like the loopback
+    /// factory (default 30; 0 = no timeout).
+    pub fn from_env() -> Self {
+        TcpMeshFactory {
+            timeout: TcpLoopbackFactory::from_env().timeout,
+        }
+    }
+}
+
+impl TransportFactory for TcpMeshFactory {
+    fn name(&self) -> &'static str {
+        "tcp-multiproc"
+    }
+
+    fn description(&self) -> &'static str {
+        "TCP full mesh with file rendezvous; ranks can be separate \
+         OS processes"
+    }
+
+    fn connect(&self, d: usize) -> Result<Vec<Box<dyn Transport>>> {
+        if d == 0 {
+            bail!("transport world size must be >= 1");
+        }
+        let dir = scratch_dir("mesh");
+        let elastic = TcpElastic {
+            rdzv: FileRendezvous::new(&dir),
+            timeout: self.timeout,
+        };
+        let expected: Vec<usize> = (0..d).collect();
+        let out = std::thread::scope(|scope| {
+            let joins: Vec<_> = (0..d)
+                .map(|me| {
+                    let elastic = &elastic;
+                    let expected = &expected;
+                    scope.spawn(move || elastic.join(0, me, expected))
+                })
+                .collect();
+            joins
+                .into_iter()
+                .enumerate()
+                .map(|(me, join)| {
+                    join.join()
+                        .map_err(|_| {
+                            anyhow!("mesh join thread {me} panicked")
+                        })?
+                        .with_context(|| format!("member {me} joining"))
+                })
+                .collect::<Result<Vec<_>>>()
+        });
+        cleanup(&dir);
+        // Epoch 0 with expected = 0..d seals the complete world, so
+        // member i's transport rank is i: the factory contract's
+        // "rank i at index i" holds by construction.
+        Ok(out?.into_iter().map(|(_, t)| t).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::run_world;
+
+    fn quick_factory() -> TcpMeshFactory {
+        TcpMeshFactory {
+            timeout: Some(Duration::from_secs(10)),
+        }
+    }
+
+    #[test]
+    fn mesh_worlds_route_collectives() {
+        let d = 4;
+        let out = run_world(&quick_factory(), d, move |t| {
+            let rank = t.rank();
+            assert_eq!(t.world_size(), d);
+            let sends: Vec<(usize, Vec<u8>)> = (0..d)
+                .map(|dst| (dst, vec![(rank * 10 + dst) as u8]))
+                .collect();
+            let recv = t.all_to_all_bytes(sends).unwrap();
+            let want: Vec<(usize, Vec<u8>)> = (0..d)
+                .map(|src| (src, vec![(src * 10 + rank) as u8]))
+                .collect();
+            assert_eq!(recv, want);
+            let all = t.all_gather_bytes(vec![rank as u8]).unwrap();
+            assert_eq!(
+                all,
+                (0..d).map(|r| vec![r as u8]).collect::<Vec<_>>()
+            );
+            t.barrier().unwrap();
+            let mut grads = vec![rank as f32; 8];
+            t.all_reduce_sum(&mut grads).unwrap();
+            assert_eq!(grads, vec![6.0; 8]); // 0+1+2+3
+        })
+        .unwrap();
+        assert_eq!(out.len(), d);
+    }
+
+    #[test]
+    fn single_rank_mesh_degenerates() {
+        let out = run_world(&quick_factory(), 1, |t| {
+            assert_eq!(
+                t.all_gather_bytes(vec![7u8]).unwrap(),
+                vec![vec![7u8]]
+            );
+            t.barrier().unwrap();
+        })
+        .unwrap();
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_rendezvous_survives_startup_races() {
+        // The stress case for the retry-with-backoff dial: several
+        // worlds rendezvous and mesh up concurrently, so dials race
+        // listener binds, registration scans race renames, and the
+        // commit race has real contenders. Any lost race without
+        // retry/first-writer-wins semantics deadlocks or errors here.
+        let rounds = 4;
+        let d = 6;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..rounds)
+                .map(|_| {
+                    scope.spawn(move || {
+                        run_world(&quick_factory(), d, |t| {
+                            let rank = t.rank();
+                            for _ in 0..3 {
+                                let all = t
+                                    .all_gather_bytes(vec![rank as u8])
+                                    .unwrap();
+                                assert_eq!(all.len(), d);
+                            }
+                        })
+                        .unwrap()
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn dial_with_retry_waits_for_late_listeners() {
+        // Grab a free port, release it, and only rebind after the
+        // first dial attempts have already failed: the backoff loop
+        // must ride through the refused connects.
+        let placeholder = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = placeholder.local_addr().unwrap();
+        drop(placeholder);
+        let late = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(60));
+            let listener = TcpListener::bind(addr).unwrap();
+            let (stream, _) = listener.accept().unwrap();
+            read_hello(&stream).unwrap()
+        });
+        let stream = dial_with_retry(addr).unwrap();
+        send_hello(&stream, 42).unwrap();
+        assert_eq!(late.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn elastic_epochs_shrink_and_renumber() {
+        // Epoch 0: members {0, 1, 2}. Member 1 "dies"; epoch 1 reseals
+        // {0, 2} and renumbers the survivors densely.
+        let dir = scratch_dir("elastic-epochs");
+        let elastic = TcpElastic {
+            rdzv: FileRendezvous::new(&dir),
+            timeout: Some(Duration::from_secs(10)),
+        };
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = [0usize, 1, 2]
+                .into_iter()
+                .map(|me| {
+                    let elastic = elastic.clone();
+                    scope.spawn(move || {
+                        let (members, t) =
+                            elastic.join(0, me, &[0, 1, 2]).unwrap();
+                        assert_eq!(members, vec![0, 1, 2]);
+                        t.barrier().unwrap();
+                        if me == 1 {
+                            return; // death between epochs
+                        }
+                        let (members, t) =
+                            elastic.join(1, me, &[0, 2]).unwrap();
+                        assert_eq!(members, vec![0, 2]);
+                        assert_eq!(t.world_size(), 2);
+                        let want_rank = if me == 0 { 0 } else { 1 };
+                        assert_eq!(t.rank(), want_rank);
+                        let all =
+                            t.all_gather_bytes(vec![me as u8]).unwrap();
+                        assert_eq!(all, vec![vec![0u8], vec![2u8]]);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        cleanup(&dir);
+    }
+}

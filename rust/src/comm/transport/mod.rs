@@ -20,9 +20,19 @@
 //!   text) implement it here.
 //! * [`TransportFactory`] + [`registry`] — name → backend resolution
 //!   for the `--transport` CLI flag, mirroring the balancer registry:
-//!   `inproc` (shared-memory channels, the NCCL stand-in) and `tcp`
+//!   `inproc` (shared-memory channels, the NCCL stand-in), `tcp`
 //!   (loopback sockets with per-peer connections, proving the same
-//!   worker code runs over a real network substrate).
+//!   worker code runs over a real network substrate), and
+//!   `tcp-multiproc` (the same wire protocol with rank discovery via a
+//!   file [`crate::comm::rendezvous`], so workers run as separate OS
+//!   processes — see [`mesh`]).
+//!
+//! Death signals are typed: backends attach [`TransportError::PeerDead`]
+//! to the error chain when the substrate points at a specific dead
+//! rank, and [`peer_dead`] recovers it through any amount of
+//! `.context(...)` wrapping. The elastic runtime
+//! (`trainer/elastic.rs`) turns that signal into shrink-the-world
+//! recovery instead of a crash.
 //!
 //! # SPMD contract (pinned by `rust/tests/transport_conformance.rs`)
 //!
@@ -45,12 +55,60 @@
 //!   or stalled peers as errors where the substrate allows it.
 
 pub mod inproc;
+pub mod mesh;
 pub mod tcp;
 
 use std::fmt;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
+
+// ---------------------------------------------------------------------------
+// TransportError: typed death signals
+// ---------------------------------------------------------------------------
+
+/// Typed failure classification attached to collective errors.
+///
+/// Backends report substrate-level failures through `anyhow` context
+/// chains; `PeerDead` is the one variant the elastic runtime acts on —
+/// it names the rank the *local* evidence (a broken socket, a barrier
+/// generation the rank never joined) points at. Attribution is a hint,
+/// not a verdict: an indirectly-stalled peer can be blamed for a death
+/// it only witnessed, which is why recovery re-rendezvouses the whole
+/// surviving world instead of trusting any single rank's diagnosis
+/// (see `trainer/elastic.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportError {
+    /// A peer stopped participating mid-round: its connection died or
+    /// it never reached a barrier generation before the watchdog fired.
+    PeerDead {
+        /// The rank the local evidence points at.
+        rank: usize,
+    },
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::PeerDead { rank } => {
+                write!(f, "peer rank {rank} is dead or unreachable")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Extract the dead-peer rank from an error chain, if any link carries
+/// a [`TransportError::PeerDead`]. `anyhow`'s `downcast_ref` walks the
+/// whole context chain, so callers can wrap transport errors freely
+/// (`.context("encoder dispatch")` etc.) without losing the signal.
+pub fn peer_dead(err: &anyhow::Error) -> Option<usize> {
+    match err.downcast_ref::<TransportError>() {
+        Some(TransportError::PeerDead { rank }) => Some(*rank),
+        None => None,
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Wire: manifest-based payload encoding
@@ -395,6 +453,15 @@ pub trait Transport: Send {
     /// Synchronization point with no data.
     fn barrier(&self) -> Result<()>;
 
+    /// Liveness probe piggybacked on the barrier: every rank checks in,
+    /// and a rank that fails to arrive within the backend's timeout
+    /// surfaces as [`TransportError::PeerDead`]. The elastic trainer
+    /// runs one heartbeat round per step boundary so death between
+    /// steps is detected at the *next* step, not mid-collective.
+    fn heartbeat(&self) -> Result<()> {
+        self.barrier().context("heartbeat round")
+    }
+
     /// Sum-all-reduce of equally-shaped f32 buffers (gradient sync).
     ///
     /// Default: reduce-scatter + all-gather over the byte collectives.
@@ -563,6 +630,31 @@ pub trait TransportFactory: Send + Sync + fmt::Debug {
     fn connect(&self, d: usize) -> Result<Vec<Box<dyn Transport>>>;
 }
 
+/// A factory that can rebuild the world after membership changes — the
+/// transport-side half of the shrink-the-world recovery protocol in
+/// `trainer/elastic.rs`.
+///
+/// Members carry *stable ids* (their launch-time rank) across epochs;
+/// the dense transport rank of a member in some epoch is its index in
+/// the sorted surviving-member list. Epoch 0 is the initial, complete
+/// rendezvous: every expected member must show up. Later epochs are
+/// recovery rounds: whoever registers before the rendezvous deadline
+/// *is* the new world, and the sealed membership is returned so every
+/// survivor agrees on it.
+pub trait ElasticFactory: Send + Sync + fmt::Debug {
+    /// Join `epoch` as stable member `me`, expecting (a superset of)
+    /// `expected` to participate. Blocks until membership is sealed.
+    /// Returns the sealed member list (sorted stable ids) and this
+    /// member's transport handle into the new group (its rank is
+    /// `members.iter().position(me)`).
+    fn join(
+        &self,
+        epoch: u64,
+        me: usize,
+        expected: &[usize],
+    ) -> Result<(Vec<usize>, Box<dyn Transport>)>;
+}
+
 /// Connect a world of `d` ranks and run `f` on every handle, one
 /// thread per rank, returning the per-rank results in rank order. The
 /// one SPMD world harness shared by calibration, the conformance
@@ -604,11 +696,12 @@ where
 /// the conformance suite, and the comm benches.
 pub mod registry {
     use super::inproc::InProcFactory;
+    use super::mesh::TcpMeshFactory;
     use super::tcp::TcpLoopbackFactory;
     use super::*;
 
     /// Every registered transport name, in presentation order.
-    pub const NAMES: &[&str] = &["inproc", "tcp"];
+    pub const NAMES: &[&str] = &["inproc", "tcp", "tcp-multiproc"];
 
     /// Resolve a registered transport backend by name (aliases
     /// accepted).
@@ -619,6 +712,9 @@ pub mod registry {
             }
             "tcp" | "tcp-loopback" | "loopback" => {
                 Arc::new(TcpLoopbackFactory::from_env())
+            }
+            "tcp-multiproc" | "multiproc" | "mesh" => {
+                Arc::new(TcpMeshFactory::from_env())
             }
             _ => return None,
         })
@@ -712,6 +808,22 @@ mod tests {
         assert_eq!(registry::must("in-proc").name(), "inproc");
         assert_eq!(registry::must("loopback").name(), "tcp");
         assert_eq!(registry::must("tcp-loopback").name(), "tcp");
+        assert_eq!(registry::must("multiproc").name(), "tcp-multiproc");
+        assert_eq!(registry::must("mesh").name(), "tcp-multiproc");
+    }
+
+    #[test]
+    fn peer_dead_survives_context_wrapping() {
+        let err = anyhow::Error::from(TransportError::PeerDead { rank: 3 })
+            .context("receiving from rank 3")
+            .context("encoder dispatch round");
+        assert_eq!(peer_dead(&err), Some(3));
+        // Plain errors carry no death signal.
+        let plain = anyhow!("wire: dtype tag mismatch");
+        assert_eq!(peer_dead(&plain), None);
+        // Display names the rank for human logs too.
+        let msg = TransportError::PeerDead { rank: 7 }.to_string();
+        assert!(msg.contains("rank 7"), "{msg}");
     }
 
     #[test]

@@ -42,10 +42,10 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::{Transport, TransportFactory};
+use super::{Transport, TransportError, TransportFactory};
 
 const FRAME_MAGIC: u32 = 0x4f43_4d4c; // "OCML"
-const HANDSHAKE_MAGIC: u32 = 0x4f43_4853; // "OCHS"
+pub(crate) const HANDSHAKE_MAGIC: u32 = 0x4f43_4853; // "OCHS"
 
 const OP_ALL_TO_ALL: u8 = 1;
 const OP_ALL_GATHER: u8 = 2;
@@ -70,7 +70,28 @@ fn op_name(op: u8) -> &'static str {
 // Framing
 // ---------------------------------------------------------------------------
 
-fn encode_frame(op: u8, round: u64, payloads: &[Vec<u8>]) -> Vec<u8> {
+/// Was any link in the chain a raw I/O failure? Protocol errors (bad
+/// magic, SPMD ordering violations, implausible lengths) are *our*
+/// bugs or corruption — blaming a peer's liveness for them would send
+/// the elastic runtime chasing a death that never happened. Only
+/// socket-level failures (EOF, reset, timeout) earn a
+/// [`TransportError::PeerDead`] attribution.
+fn blame_if_io(err: anyhow::Error, peer: usize) -> anyhow::Error {
+    let io_rooted = err
+        .chain()
+        .any(|cause| cause.downcast_ref::<std::io::Error>().is_some());
+    if io_rooted {
+        err.context(TransportError::PeerDead { rank: peer })
+    } else {
+        err
+    }
+}
+
+pub(crate) fn encode_frame(
+    op: u8,
+    round: u64,
+    payloads: &[Vec<u8>],
+) -> Vec<u8> {
     let total: usize =
         21 + payloads.iter().map(|p| 8 + p.len()).sum::<usize>();
     let mut out = Vec::with_capacity(total);
@@ -85,13 +106,16 @@ fn encode_frame(op: u8, round: u64, payloads: &[Vec<u8>]) -> Vec<u8> {
     out
 }
 
-fn write_frame(stream: &TcpStream, frame: &[u8]) -> std::io::Result<()> {
+pub(crate) fn write_frame(
+    stream: &TcpStream,
+    frame: &[u8],
+) -> std::io::Result<()> {
     let mut w = stream;
     w.write_all(frame)?;
     w.flush()
 }
 
-fn read_frame(
+pub(crate) fn read_frame(
     stream: &TcpStream,
     want_op: u8,
     want_round: u64,
@@ -159,6 +183,26 @@ pub struct TcpLoopbackTransport {
 }
 
 impl TcpLoopbackTransport {
+    /// Wrap an already-established mesh of peer streams. The loopback
+    /// factory builds its mesh single-threaded below; the
+    /// `tcp-multiproc` backend ([`super::mesh`]) builds each rank's row
+    /// in its own OS process via rendezvous, then reuses this exact
+    /// transport — same framing, same schedule, same failure
+    /// semantics, proven by the shared conformance battery.
+    pub(crate) fn from_streams(
+        rank: usize,
+        d: usize,
+        peers: Vec<Option<TcpStream>>,
+    ) -> TcpLoopbackTransport {
+        debug_assert_eq!(peers.len(), d);
+        TcpLoopbackTransport {
+            rank,
+            d,
+            peers,
+            round: AtomicU64::new(0),
+        }
+    }
+
     fn peer(&self, p: usize) -> Result<&TcpStream> {
         self.peers[p]
             .as_ref()
@@ -190,8 +234,11 @@ impl TcpLoopbackTransport {
             writer
                 .join()
                 .map_err(|_| anyhow!("tcp writer thread panicked"))?
+                // A failed write is always socket-level: blame dst.
+                .map_err(|e| blame_if_io(anyhow::Error::from(e), dst))
                 .with_context(|| format!("sending to rank {dst}"))?;
-            got.with_context(|| format!("receiving from rank {src}"))
+            got.map_err(|e| blame_if_io(e, src))
+                .with_context(|| format!("receiving from rank {src}"))
         })
     }
 }
@@ -291,6 +338,71 @@ impl Transport for TcpLoopbackTransport {
 }
 
 // ---------------------------------------------------------------------------
+// Dialing
+// ---------------------------------------------------------------------------
+
+/// How many times [`dial_with_retry`] attempts a connect before giving
+/// up. With exponential backoff from [`DIAL_BACKOFF_START`], eight
+/// attempts cover ~2.5 s of peer startup skew.
+pub(crate) const DIAL_ATTEMPTS: u32 = 8;
+/// First backoff delay; doubles per failed attempt.
+pub(crate) const DIAL_BACKOFF_START: Duration = Duration::from_millis(10);
+
+/// Connect with bounded retry + exponential backoff.
+///
+/// Under *concurrent* rendezvous (the `tcp-multiproc` mesh, where every
+/// rank races to dial peers that are still binding their listeners), a
+/// refused or reset connect usually means "peer not up yet", not "peer
+/// dead" — so transient failures are retried with doubling delays and
+/// only the final failure is reported, wrapped in the full attempt
+/// count so logs distinguish "never came up" from "refused once". The
+/// single-threaded loopback factory never needs this (it binds every
+/// listener before the first dial), but uses plain connects against
+/// addresses it just bound, so there is nothing to retry there.
+pub(crate) fn dial_with_retry(addr: SocketAddr) -> Result<TcpStream> {
+    let mut delay = DIAL_BACKOFF_START;
+    let mut last: Option<std::io::Error> = None;
+    for attempt in 0..DIAL_ATTEMPTS {
+        if attempt > 0 {
+            std::thread::sleep(delay);
+            delay *= 2;
+        }
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(anyhow::Error::from(last.expect("at least one attempt ran"))
+        .context(format!(
+            "dialing {addr} failed after {DIAL_ATTEMPTS} attempts \
+             with exponential backoff"
+        )))
+}
+
+/// Write the 8-byte hello (`HANDSHAKE_MAGIC` + our rank/member id) that
+/// opens every mesh stream.
+pub(crate) fn send_hello(stream: &TcpStream, id: usize) -> Result<()> {
+    let mut hello = [0u8; 8];
+    hello[0..4].copy_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
+    hello[4..8].copy_from_slice(&(id as u32).to_le_bytes());
+    let mut w = stream;
+    w.write_all(&hello)
+        .with_context(|| format!("sending handshake as {id}"))
+}
+
+/// Read and validate a peer's hello, returning its claimed id.
+pub(crate) fn read_hello(stream: &TcpStream) -> Result<usize> {
+    let mut hello = [0u8; 8];
+    let mut r = stream;
+    r.read_exact(&mut hello).context("reading handshake")?;
+    let magic = u32::from_le_bytes(hello[0..4].try_into().unwrap());
+    if magic != HANDSHAKE_MAGIC {
+        bail!("bad handshake magic {magic:#x}");
+    }
+    Ok(u32::from_le_bytes(hello[4..8].try_into().unwrap()) as usize)
+}
+
+// ---------------------------------------------------------------------------
 // Factory
 // ---------------------------------------------------------------------------
 
@@ -363,8 +475,8 @@ impl TransportFactory for TcpLoopbackFactory {
         if d > 128 {
             bail!(
                 "tcp loopback mesh supports at most 128 ranks (got {d}); \
-                 larger worlds need a multi-process backend with \
-                 concurrent rendezvous"
+                 use the `tcp-multiproc` backend, whose concurrent \
+                 rendezvous (see transport/mesh.rs) has no backlog cap"
             );
         }
         // Bind every rank's listener up front so addresses are known
@@ -552,6 +664,27 @@ mod tests {
             assert_eq!(x, vec![3.0]);
         });
         assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn dead_peer_surfaces_typed_error() {
+        // Rank 0 drops its transport (sockets close) before the round;
+        // rank 1 must get a typed PeerDead naming rank 0, not an
+        // opaque string and not a hang.
+        let factory = TcpLoopbackFactory {
+            base_port: 0,
+            timeout: Some(Duration::from_millis(200)),
+        };
+        let mut world = factory.connect(2).unwrap();
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        drop(t0);
+        let err = t1.barrier().unwrap_err();
+        assert_eq!(
+            crate::comm::transport::peer_dead(&err),
+            Some(0),
+            "{err:#}"
+        );
     }
 
     #[test]

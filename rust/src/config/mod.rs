@@ -136,6 +136,10 @@ pub struct TrainRunConfig {
     /// Calibrate α/β on the live transport before training and plan
     /// against the measured topology (`--calibrate-comm`).
     pub calibrate_comm: bool,
+    /// Smallest world size an elastic run may shrink to
+    /// (`--min-world`): losing ranks below this floor aborts the run
+    /// with a clear error instead of continuing under-parallel.
+    pub min_world: usize,
 }
 
 impl Default for TrainRunConfig {
@@ -154,6 +158,7 @@ impl Default for TrainRunConfig {
                 crate::balance::cache::DEFAULT_PLAN_CACHE_SIZE,
             transport: "inproc".into(),
             calibrate_comm: false,
+            min_world: 1,
         }
     }
 }
@@ -194,6 +199,10 @@ impl TrainRunConfig {
                 .get("calibrate_comm")
                 .as_bool()
                 .unwrap_or(d.calibrate_comm),
+            min_world: j
+                .get("min_world")
+                .as_usize()
+                .unwrap_or(d.min_world),
         }
     }
 
@@ -230,6 +239,14 @@ impl TrainRunConfig {
                     crate::balance::registry::NAMES
                 );
             }
+        }
+        if self.min_world < 1 || self.min_world > self.workers {
+            anyhow::bail!(
+                "--min-world must satisfy 1 <= min_world <= workers \
+                 (got min_world {} with {} workers)",
+                self.min_world,
+                self.workers
+            );
         }
         Ok(())
     }
@@ -324,6 +341,27 @@ mod tests {
         let err = bad.validate().unwrap_err().to_string();
         assert!(err.contains("unknown balancer"), "{err}");
         assert!(err.contains("auto"), "{err}");
+    }
+
+    #[test]
+    fn train_config_bounds_the_min_world_floor() {
+        let j = Json::parse(r#"{"workers": 4, "min_world": 2}"#).unwrap();
+        let c = TrainRunConfig::from_json(&j);
+        assert_eq!(c.min_world, 2);
+        assert!(c.validate().is_ok());
+
+        // Default floor is 1 (any world is acceptable).
+        assert_eq!(TrainRunConfig::default().min_world, 1);
+
+        for bad_floor in [0, 5] {
+            let bad = TrainRunConfig {
+                workers: 4,
+                min_world: bad_floor,
+                ..TrainRunConfig::default()
+            };
+            let err = bad.validate().unwrap_err().to_string();
+            assert!(err.contains("--min-world"), "{err}");
+        }
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //!   overhead     regenerate the Table-2 overhead scaling
 //!   incoherence  regenerate the Fig. 3 dataset analysis
 //!   train        run the real tiny-MLLM DP trainer over PJRT artifacts
+//!   elastic      run the elastic synthetic trainer (fault injection,
+//!                shrink-the-world recovery; `tcp-multiproc` spawns
+//!                real OS processes)
+//!   worker       one elastic member process (spawned by `elastic`)
 //!   balancers    list the registered post-balancing algorithms
 //!   transports   list the registered comm backends (+ calibrate α/β)
 //!
@@ -23,6 +27,7 @@ use orchmllm::model::flops::PhaseKind;
 use orchmllm::sim::engine::{simulate_run, simulate_run_named, SystemKind};
 use orchmllm::sim::report;
 use orchmllm::trainer;
+use orchmllm::trainer::elastic::{self, FaultPlan};
 use orchmllm::util::cli::Args;
 
 const USAGE: &str = "\
@@ -42,6 +47,14 @@ USAGE:
                        [--balancer <name|auto>] [--no-balance]
                        [--pipeline-depth 2] [--plan-cache-size 32]
                        [--transport inproc|tcp] [--calibrate-comm]
+                       [--min-world 1]
+  orchmllm elastic     [--workers 4] [--mini-batch 4] [--steps 8]
+                       [--lr 0.05] [--seed 0] [--min-world 1]
+                       [--transport inproc|tcp-multiproc] [--out f.json]
+                       [--fault-rank R --fault-step N
+                        [--fault-collective 0|1|2] [--fault-resign]]
+                       [--in-process]   # threads instead of processes
+  orchmllm worker      --rank R --rdzv-dir DIR …     # spawned by elastic
   orchmllm balancers                                 # registry + auto rules
   orchmllm transports  [--calibrate] [--workers 4]   # comm backends
   orchmllm help
@@ -55,6 +68,10 @@ fn main() {
         Some("overhead") => cmd_overhead(&args),
         Some("incoherence") => cmd_incoherence(&args),
         Some("train") => cmd_train(&args),
+        Some("elastic") => cmd_elastic(&args),
+        Some("worker") => {
+            std::process::exit(elastic::worker_main(&args))
+        }
         Some("balancers") => cmd_balancers(),
         Some("transports") => cmd_transports(&args),
         _ => print!("{USAGE}"),
@@ -187,6 +204,7 @@ fn cmd_train(args: &Args) {
             .get_or("transport", &defaults.transport)
             .to_string(),
         calibrate_comm: args.flag("calibrate-comm"),
+        min_world: args.usize("min-world", defaults.min_world),
     };
     if let Err(e) = cfg.validate() {
         eprintln!("invalid train configuration: {e:#}");
@@ -199,6 +217,62 @@ fn cmd_train(args: &Args) {
             std::process::exit(1);
         }
     }
+}
+
+fn cmd_elastic(args: &Args) {
+    let cfg = TrainRunConfig {
+        workers: args.usize("workers", 4),
+        mini_batch: args.usize("mini-batch", 4),
+        steps: args.usize("steps", 8),
+        lr: args.f64("lr", 0.05),
+        seed: args.u64("seed", 0),
+        min_world: args.usize("min-world", 1),
+        transport: args.get_or("transport", "tcp-multiproc").to_string(),
+        ..TrainRunConfig::default()
+    };
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid elastic configuration: {e:#}");
+        std::process::exit(2);
+    }
+    let fault = FaultPlan::from_args(args);
+    // `tcp-multiproc` runs every member as a real OS process re-spawning
+    // this binary's `worker` subcommand; `--in-process` (and every other
+    // transport) keeps members as threads of this process.
+    let multiproc =
+        cfg.transport == "tcp-multiproc" && !args.flag("in-process");
+    let report = if multiproc {
+        std::env::current_exe()
+            .map_err(anyhow::Error::from)
+            .and_then(|bin| elastic::run_multiproc(&cfg, fault, &bin))
+    } else {
+        elastic::run_elastic_collect(&cfg, fault)
+    };
+    let report = match report {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("elastic run failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    // CI gate: an injected fault that produced no recorded transition
+    // means recovery never actually exercised — fail loudly.
+    if fault.rank.is_some() && report.transitions.is_empty() {
+        eprintln!(
+            "elastic run injected a fault but recorded no world \
+             transition — recovery did not engage"
+        );
+        std::process::exit(1);
+    }
+    if let Some(path) = args.get("out") {
+        if let Err(e) = std::fs::write(
+            path,
+            elastic::report_to_json(&report).pretty(),
+        ) {
+            eprintln!("writing {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+    println!("{}", report.render());
 }
 
 fn cmd_balancers() {

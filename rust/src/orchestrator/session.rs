@@ -479,6 +479,20 @@ impl PlanSession {
     pub fn cache_hit_rate(&self) -> f64 {
         self.history.cache_hit_rate()
     }
+
+    /// Re-target the session at a new topology (elastic shrink/grow):
+    /// swap the topology and drop the per-topology planning state —
+    /// history, plan caches, and scratch are keyed to the old world
+    /// size and must not warm-start across a resize. Cumulative
+    /// provenance ([`PlanSession::stats`]) keeps counting across the
+    /// transition.
+    pub fn resize(&mut self, topo: Topology) {
+        self.topo = topo;
+        self.scratch = StepScratch::default();
+        self.history =
+            StepHistory::new(self.pipeline.plan_cache_size.min(65_536));
+        self.last = None;
+    }
 }
 
 #[cfg(test)]
@@ -528,6 +542,31 @@ mod tests {
             assert!(seen.iter().all(|&x| x), "example lost ({opts:?})");
         }
         assert_eq!(s.steps_planned(), 6);
+    }
+
+    #[test]
+    fn resize_replans_the_shrunk_world() {
+        // Elastic shrink: the session keeps its cumulative stats but
+        // plans the next step over the new (smaller) topology with no
+        // stale warm-start from the old world size.
+        let mut s = session(OrchestratorConfig::orchmllm(7168.0), 8);
+        let plan = s.plan(&sample(8, 16, 31), PlanOptions::auto());
+        assert_eq!(plan.d, 8);
+        s.resize(Topology::h100(7));
+        let plan = s.plan(&sample(7, 16, 32), PlanOptions::auto());
+        assert_eq!(plan.d, 7);
+        let n = plan.examples.len();
+        assert_eq!(n, 7 * 16);
+        let mut seen = vec![false; n];
+        for batch in plan.assignment(PhaseKind::Llm) {
+            for e in batch {
+                assert!(!seen[e.id]);
+                seen[e.id] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "example lost after resize");
+        // Both steps count toward the session's lifetime provenance.
+        assert_eq!(s.stats().steps(), 2);
     }
 
     #[test]

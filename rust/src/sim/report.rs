@@ -217,6 +217,21 @@ pub fn render_calibration(cal: &Calibration, analytic: &Topology) -> String {
     out
 }
 
+/// Render the world-size transitions an elastic run survived (appended
+/// to the loss curve by `TrainReport::render`).
+pub fn render_transitions(
+    ts: &[crate::trainer::elastic::WorldTransition],
+) -> String {
+    let mut out = String::new();
+    for t in ts {
+        out.push_str(&format!(
+            "  step {:>4}  world {} -> {} (epoch {}, dead: {:?})\n",
+            t.step, t.from, t.to, t.epoch, t.dead
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +252,20 @@ mod tests {
         assert!(s2.contains("Cache hit"));
         let s3 = render_mfu_memory(&[vec![a], vec![b]]);
         assert!(s3.contains("mem GB"));
+    }
+
+    #[test]
+    fn renders_world_transitions() {
+        use crate::trainer::elastic::WorldTransition;
+        let s = render_transitions(&[WorldTransition {
+            step: 3,
+            epoch: 1,
+            from: 4,
+            to: 3,
+            dead: vec![2],
+        }]);
+        assert!(s.contains("world 4 -> 3"), "{s}");
+        assert!(s.contains("epoch 1"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,971 @@
+//! Elastic training runtime: rank-death detection and shrink-the-world
+//! recovery over the [`crate::comm::transport::ElasticFactory`]
+//! rendezvous layer.
+//!
+//! The paper's dispatcher re-plans every step from nothing but the
+//! sampled lengths and the topology, which makes *elasticity* almost
+//! free: when a DP rank dies, the survivors only need to agree on the
+//! new world and hand [`PlanSession`] a shrunk [`Topology`] — the next
+//! `plan` call re-deals the same global batch over `d − 1` instances.
+//! This module supplies the missing runtime pieces:
+//!
+//! * a **deterministic fault-injection harness** — [`FaultPlan`] picks
+//!   one rank, one step, and one collective (env:
+//!   `ORCHMLLM_FAULT_RANK` / `ORCHMLLM_FAULT_STEP` /
+//!   `ORCHMLLM_FAULT_COLLECTIVE`, `ORCHMLLM_FAULT_RESIGN`);
+//! * a **synthetic SPMD worker** — a pure-Rust training step (planned
+//!   all-to-all payload routing, per-example loss/gradient, rank-order
+//!   all-reduce, SGD) that needs no PJRT artifacts, so the elastic
+//!   path is exercised end to end in CI. Parameters are updated only
+//!   *after* a successful all-reduce, so a step interrupted by a death
+//!   mutates nothing and re-executes safely at the shrunk world;
+//! * the **recovery protocol** — on a typed
+//!   [`TransportError::PeerDead`](crate::comm::transport::TransportError)
+//!   every survivor abandons its collective group, re-rendezvouses at
+//!   a bumped epoch (the locally blamed rank is only a *hint*: the
+//!   sealed membership is whoever actually re-registers), resizes the
+//!   session, records a [`WorldTransition`], and re-executes the
+//!   interrupted step.
+//!
+//! Determinism argument (pinned by `rust/tests/elastic_recovery.rs`):
+//! the global batch of step *t* is sampled from a fresh generator
+//! seeded by `(seed, t)` over a fixed `stream_width` (the *launch*
+//! world size) and regrouped `stream j → dense rank j mod w`, so the
+//! batch is identical at every world size; parameters are only mutated
+//! by completed steps; an interrupted step applied no update on any
+//! rank (all survivors fail the same collective). Hence a hard death
+//! at step *N* replays step *N* at the shrunk world bit-identically to
+//! a *resignation* reference run in which the same rank leaves cleanly
+//! before step *N* — and, because the all-reduce is rank-order
+//! bit-stable on every backend, the equality holds across `inproc`
+//! threads and `tcp-multiproc` OS processes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::rendezvous::{cleanup, scratch_dir, FileRendezvous};
+use crate::comm::transport::inproc::InProcElastic;
+use crate::comm::transport::mesh::TcpElastic;
+use crate::comm::transport::{
+    peer_dead, ElasticFactory, Shard, Transport,
+};
+use crate::config::TrainRunConfig;
+use crate::data::synth::{DatasetConfig, Example, Generator};
+use crate::orchestrator::global::StepPlan;
+use crate::orchestrator::session::{PlanOptions, PlanSession};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use super::{orchestrator_config, worker_topology_with_floor, TrainReport};
+
+/// Exit code a process-mode worker uses when its planned fault fires,
+/// so the parent can tell an injected death from a real failure.
+pub const FAULT_EXIT: i32 = 17;
+
+/// Parameter count of the synthetic model (one weight per feature).
+pub const PARAM_COUNT: usize = 6;
+
+/// Detection-latency knob for elastic runs: barrier watchdog (inproc)
+/// and per-stream socket timeout (tcp mesh). Overrides
+/// `ORCHMLLM_ELASTIC_TIMEOUT_SECS`; the default keeps CI fault tests
+/// snappy without tripping on healthy scheduling jitter.
+fn detect_timeout(default_secs: u64) -> Duration {
+    let secs = std::env::var("ORCHMLLM_ELASTIC_TIMEOUT_SECS")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .unwrap_or(default_secs);
+    Duration::from_secs(secs.max(1))
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+/// One injected fault: member `rank` (a *stable* rendezvous id, not a
+/// dense rank) stops participating at step `step`, immediately before
+/// collective `collective` of that step (0 = heartbeat, 1 = the
+/// plan-routed all-to-all, 2 = the gradient all-reduce).
+///
+/// `resign == false` is a hard death: survivors discover it through a
+/// typed `PeerDead` failure. `resign == true` is a clean departure the
+/// whole world knows about in advance — survivors proactively
+/// re-rendezvous at the same step, which makes the resignation run the
+/// bit-exact reference for the hard-death run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub rank: Option<usize>,
+    pub step: usize,
+    pub collective: usize,
+    pub resign: bool,
+}
+
+impl FaultPlan {
+    /// No fault: every rank runs to completion.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Hard-kill `rank` immediately before step `step`'s heartbeat.
+    pub fn kill(rank: usize, step: usize) -> FaultPlan {
+        FaultPlan { rank: Some(rank), step, collective: 0, resign: false }
+    }
+
+    /// `rank` leaves cleanly before step `step`; survivors shrink
+    /// proactively. This is the reference run for [`FaultPlan::kill`].
+    pub fn resignation(rank: usize, step: usize) -> FaultPlan {
+        FaultPlan { rank: Some(rank), step, collective: 0, resign: true }
+    }
+
+    /// Die before a specific collective of the step instead of the
+    /// heartbeat.
+    pub fn at_collective(mut self, collective: usize) -> FaultPlan {
+        self.collective = collective;
+        self
+    }
+
+    /// Read the fault from `ORCHMLLM_FAULT_RANK` /
+    /// `ORCHMLLM_FAULT_STEP` / `ORCHMLLM_FAULT_COLLECTIVE` /
+    /// `ORCHMLLM_FAULT_RESIGN` (unset rank = no fault).
+    pub fn from_env() -> FaultPlan {
+        let num = |key: &str| {
+            std::env::var(key)
+                .ok()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+        };
+        FaultPlan {
+            rank: num("ORCHMLLM_FAULT_RANK"),
+            step: num("ORCHMLLM_FAULT_STEP").unwrap_or(0),
+            collective: num("ORCHMLLM_FAULT_COLLECTIVE").unwrap_or(0),
+            resign: std::env::var("ORCHMLLM_FAULT_RESIGN")
+                .map(|s| s == "1" || s == "true")
+                .unwrap_or(false),
+        }
+    }
+
+    /// CLI flags (`--fault-rank` / `--fault-step` /
+    /// `--fault-collective` / `--fault-resign`), falling back to the
+    /// environment when no flag names a rank.
+    pub fn from_args(args: &Args) -> FaultPlan {
+        match args.get("fault-rank") {
+            None => FaultPlan::from_env(),
+            Some(r) => FaultPlan {
+                rank: Some(r.parse().unwrap_or_else(|_| {
+                    panic!("--fault-rank expects an integer, got '{r}'")
+                })),
+                step: args.usize("fault-step", 0),
+                collective: args.usize("fault-collective", 0),
+                resign: args.flag("fault-resign"),
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// World transitions
+// ---------------------------------------------------------------------------
+
+/// One recorded shrink (or, in principle, growth) of the training
+/// world, kept in the final [`TrainReport`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WorldTransition {
+    /// Step at which the transition happened; the step was (re-)run at
+    /// the *new* world size.
+    pub step: usize,
+    /// Rendezvous epoch the survivors sealed.
+    pub epoch: u64,
+    /// World size before / after.
+    pub from: usize,
+    pub to: usize,
+    /// Stable member ids that left the world at this transition.
+    pub dead: Vec<usize>,
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic model + world-invariant sampling
+// ---------------------------------------------------------------------------
+
+fn init_params() -> Vec<f32> {
+    (0..PARAM_COUNT).map(|k| 0.05 * (k as f32 + 1.0)).collect()
+}
+
+/// Per-example feature vector — the payload the planned all-to-all
+/// actually routes, so mis-routing is a hard test failure, not a
+/// silent wrong number.
+fn features(e: &Example) -> [f32; PARAM_COUNT] {
+    [
+        1.0,
+        e.vis_tokens as f32 * 0.1,
+        e.aud_tokens as f32 * 0.1,
+        e.text_len as f32 * 0.05,
+        e.vis_len as f32 * 0.02,
+        e.aud_len as f32 * 0.02,
+    ]
+}
+
+fn target(e: &Example) -> f32 {
+    ((e.text_len * 7 + e.vis_tokens * 3 + e.aud_tokens) % 13) as f32 * 0.1
+}
+
+/// splitmix64 finalizer — decorrelates per-step generator seeds.
+fn mix_seed(seed: u64, step: usize) -> u64 {
+    let mut z = seed
+        ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ 0x243F_6A88_85A3_08D3;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Sample step `step`'s global batch and group it for a `world`-rank
+/// run. The batch is a function of `(seed, step, stream_width)` only —
+/// `stream_width` is pinned to the *launch* world size — so shrinking
+/// the world regroups the identical examples (`stream j → dense rank
+/// j mod world`) instead of changing what is trained on.
+fn global_minibatches(
+    seed: u64,
+    step: usize,
+    stream_width: usize,
+    mini_batch: usize,
+    world: usize,
+) -> Vec<Vec<Example>> {
+    let mut g = Generator::new(DatasetConfig::tiny(2, 2), mix_seed(seed, step));
+    let all = g.batch(stream_width * mini_batch);
+    let mut mbs = vec![Vec::new(); world];
+    for (j, chunk) in all.chunks(mini_batch).enumerate() {
+        mbs[j % world].extend_from_slice(chunk);
+    }
+    mbs
+}
+
+// ---------------------------------------------------------------------------
+// One synthetic SPMD step
+// ---------------------------------------------------------------------------
+
+enum StepSignal {
+    Done { loss_g: f64, tokens_g: f64, comm_s: f64, params: Vec<f32> },
+    /// This rank's injected fault fired mid-step: stop participating.
+    Died,
+}
+
+/// Execute one planned step: heartbeat → plan-routed feature payloads
+/// → local loss/grad → rank-order all-reduce → SGD. `die_at` is the
+/// injected fault point for this rank (collective index), if any.
+/// Parameters are returned, not mutated — the caller commits them only
+/// when the step completed, so an interrupted step leaves rank state
+/// untouched for safe re-execution.
+fn synthetic_step(
+    t: &dyn Transport,
+    plan: &StepPlan,
+    params: &[f32],
+    lr: f64,
+    die_at: Option<usize>,
+) -> Result<StepSignal> {
+    let rank = t.rank();
+    let mut comm_s = 0.0f64;
+
+    // Collective 0: heartbeat — the failure-detection round.
+    if die_at == Some(0) {
+        return Ok(StepSignal::Died);
+    }
+    let t0 = Instant::now();
+    t.heartbeat().context("step heartbeat")?;
+    comm_s += t0.elapsed().as_secs_f64();
+
+    // Collective 1: every example's feature payload moves home → LLM
+    // instance along the planned route.
+    if die_at == Some(1) {
+        return Ok(StepSignal::Died);
+    }
+    let mut sends: Vec<(usize, Shard)> = Vec::new();
+    for (g, e) in plan.examples.iter().enumerate() {
+        if plan.home[g] != rank || e.llm_len() == 0 {
+            continue;
+        }
+        sends.push((
+            plan.llm.route.to[g],
+            Shard::f32(g, features(e).to_vec()),
+        ));
+    }
+    let t0 = Instant::now();
+    let received = t
+        .all_to_all_shards(sends)
+        .context("planned feature all-to-all")?;
+    comm_s += t0.elapsed().as_secs_f64();
+    let mut by_id = BTreeMap::new();
+    for (_src, shard) in received {
+        let (g, rows) = shard
+            .into_f32()
+            .context("planned feature all-to-all")?;
+        by_id.insert(g, rows);
+    }
+
+    // Local loss/grad over my planned mini-batch, from *routed* bytes.
+    let mut flat = vec![0.0f32; 2 + PARAM_COUNT];
+    for eref in &plan.llm.assignment[rank] {
+        let e = &plan.examples[eref.id];
+        let phi = by_id.get(&eref.id).ok_or_else(|| {
+            anyhow!(
+                "example {} assigned to rank {rank} but its payload \
+                 was not routed here",
+                eref.id
+            )
+        })?;
+        let pred: f32 =
+            params.iter().zip(phi.iter()).map(|(p, x)| p * x).sum();
+        let err = pred - target(e);
+        flat[0] += err * err;
+        flat[1] += e.llm_len() as f32;
+        for (k, x) in phi.iter().enumerate() {
+            flat[2 + k] += 2.0 * err * x;
+        }
+    }
+
+    // Collective 2: rank-order (bit-stable) gradient all-reduce.
+    if die_at == Some(2) {
+        return Ok(StepSignal::Died);
+    }
+    let t0 = Instant::now();
+    t.all_reduce_sum(&mut flat).context("gradient all-reduce")?;
+    comm_s += t0.elapsed().as_secs_f64();
+
+    // SGD only after the reduce succeeded (rescaled by global tokens,
+    // like the real worker) — a failed step commits nothing.
+    let scale = lr as f32 / flat[1].max(1.0);
+    let params = params
+        .iter()
+        .zip(&flat[2..])
+        .map(|(p, g)| p - scale * g)
+        .collect();
+    Ok(StepSignal::Done {
+        loss_g: flat[0] as f64,
+        tokens_g: flat[1] as f64,
+        comm_s,
+        params,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Recovery: re-rendezvous at a bumped epoch
+// ---------------------------------------------------------------------------
+
+/// Abandon the current collective group and agree on the shrunk world.
+/// `dead_hint` is the locally blamed member — only a *hint*: it is
+/// excluded from the seal-immediately set, but membership is whoever
+/// re-registers before the seal (a mis-blamed live rank re-registers
+/// and stays in the world; see DESIGN.md §Elastic Runtime).
+#[allow(clippy::too_many_arguments)]
+fn rejoin(
+    elastic: &dyn ElasticFactory,
+    id: usize,
+    step: usize,
+    dead_hint: Option<usize>,
+    min_world: usize,
+    epoch: &mut u64,
+    members: &mut Vec<usize>,
+    transport: &mut Option<Box<dyn Transport>>,
+    session: &mut PlanSession,
+    transitions: &mut Vec<WorldTransition>,
+) -> Result<()> {
+    let from = members.len();
+    // Drop first: closes sockets / abandons barriers so peers still
+    // blocked on the old group fail over promptly too.
+    drop(transport.take());
+    *epoch += 1;
+    let expected: Vec<usize> = members
+        .iter()
+        .copied()
+        .filter(|m| Some(*m) != dead_hint)
+        .collect();
+    let (new_members, t) = elastic
+        .join(*epoch, id, &expected)
+        .with_context(|| {
+            format!("member {id} re-rendezvousing at epoch {epoch}")
+        })?;
+    let dead: Vec<usize> = members
+        .iter()
+        .copied()
+        .filter(|m| !new_members.contains(m))
+        .collect();
+    if new_members.len() < min_world.max(1) {
+        bail!(
+            "epoch {epoch}: world shrank to {} member(s) \
+             ({new_members:?}; dead: {dead:?}) — below the --min-world \
+             floor of {min_world}; refusing to continue",
+            new_members.len()
+        );
+    }
+    // Shrunk topology + fresh planning state: histories and caches are
+    // keyed to the old world size and must not warm-start across it.
+    session.resize(worker_topology_with_floor(
+        new_members.len(),
+        min_world,
+    )?);
+    transitions.push(WorldTransition {
+        step,
+        epoch: *epoch,
+        from,
+        to: new_members.len(),
+        dead,
+    });
+    *members = new_members;
+    *transport = Some(t);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The per-member elastic training loop
+// ---------------------------------------------------------------------------
+
+/// Run one member (stable id `id`) of an elastic world to completion.
+/// Returns `Ok(None)` when this member's injected fault fired (it
+/// stopped participating on purpose), `Ok(Some(report))` for a
+/// survivor. `stream_width` pins the sampling width to the launch
+/// world size so recovery never changes the data stream.
+pub fn run_member(
+    cfg: &TrainRunConfig,
+    fault: FaultPlan,
+    elastic: &dyn ElasticFactory,
+    id: usize,
+    stream_width: usize,
+) -> Result<Option<TrainReport>> {
+    let expected: Vec<usize> = (0..cfg.workers).collect();
+    let mut epoch = 0u64;
+    let (mut members, t) = elastic
+        .join(epoch, id, &expected)
+        .with_context(|| format!("member {id} joining epoch 0"))?;
+    let mut transport = Some(t);
+    let embed_bytes = (PARAM_COUNT * 4) as f64;
+    let mut session = PlanSession::new(
+        orchestrator_config(cfg, embed_bytes)?,
+        cfg.pipeline_config(),
+        worker_topology_with_floor(members.len(), cfg.min_world)?,
+    );
+    let mut params = init_params();
+    let mut losses: Vec<f64> = Vec::new();
+    let mut transitions: Vec<WorldTransition> = Vec::new();
+    let mut tokens_sum = 0.0f64;
+    let mut comm_sum = 0.0f64;
+    let mut plan_nanos: u128 = 0;
+    let t_run = Instant::now();
+
+    let mut step = 0usize;
+    while step < cfg.steps {
+        let fault_due =
+            fault.step == step && fault.rank.is_some_and(|r| members.contains(&r));
+        if fault_due && fault.rank == Some(id) && fault.resign {
+            // Clean departure before the step; survivors shrink below.
+            drop(transport.take());
+            return Ok(None);
+        }
+        if fault_due && fault.resign {
+            // Announced resignation: shrink proactively, then run this
+            // step at the new world (the hard-death reference path).
+            rejoin(
+                elastic,
+                id,
+                step,
+                fault.rank,
+                cfg.min_world,
+                &mut epoch,
+                &mut members,
+                &mut transport,
+                &mut session,
+                &mut transitions,
+            )?;
+            continue;
+        }
+        let die_at = (fault.rank == Some(id) && fault.step == step)
+            .then_some(fault.collective);
+
+        let minibatches = global_minibatches(
+            cfg.seed,
+            step,
+            stream_width,
+            cfg.mini_batch,
+            members.len(),
+        );
+        let t0 = Instant::now();
+        let plan = session.plan(&minibatches, PlanOptions::auto());
+        plan_nanos += t0.elapsed().as_nanos();
+        let t = transport.as_deref().expect("transport is live");
+        match synthetic_step(t, &plan, &params, cfg.lr, die_at) {
+            Ok(StepSignal::Done { loss_g, tokens_g, comm_s, params: p }) => {
+                params = p;
+                losses.push(loss_g / tokens_g.max(1.0));
+                tokens_sum += tokens_g;
+                comm_sum += comm_s;
+                step += 1;
+            }
+            Ok(StepSignal::Died) => {
+                // Injected hard death: vanish mid-collective-sequence.
+                drop(transport.take());
+                return Ok(None);
+            }
+            Err(err) => {
+                let Some(blamed) = peer_dead(&err) else {
+                    return Err(err.context(format!(
+                        "member {id} failed step {step} (not a peer \
+                         death — not recoverable)"
+                    )));
+                };
+                let dead_hint = members.get(blamed).copied();
+                rejoin(
+                    elastic,
+                    id,
+                    step,
+                    dead_hint,
+                    cfg.min_world,
+                    &mut epoch,
+                    &mut members,
+                    &mut transport,
+                    &mut session,
+                    &mut transitions,
+                )?;
+                // Re-execute the interrupted step at the shrunk world;
+                // no rank applied its update, so this is safe.
+            }
+        }
+    }
+
+    let steps = losses.len().max(1);
+    let stats = session.stats();
+    Ok(Some(TrainReport {
+        losses,
+        tokens_per_step: tokens_sum / steps as f64,
+        secs_per_step: t_run.elapsed().as_secs_f64() / steps as f64,
+        comm_secs_per_step: comm_sum / steps as f64,
+        plan_secs_per_step: plan_nanos as f64 / 1e9 / steps as f64,
+        plan_warm_rate: stats.warm_rate(),
+        plan_cache_hit_rate: stats.cache_hit_rate(),
+        workers: cfg.workers,
+        steps: cfg.steps,
+        transport: cfg.transport.clone(),
+        transitions,
+    }))
+}
+
+// ---------------------------------------------------------------------------
+// In-process harness (threads)
+// ---------------------------------------------------------------------------
+
+fn run_threaded(
+    cfg: &TrainRunConfig,
+    fault: FaultPlan,
+    elastic: &dyn ElasticFactory,
+    stream_width: usize,
+) -> Result<TrainReport> {
+    let reports = std::thread::scope(
+        |scope| -> Result<Vec<(usize, TrainReport)>> {
+            let handles: Vec<_> = (0..cfg.workers)
+                .map(|id| {
+                    scope.spawn(move || {
+                        run_member(cfg, fault, elastic, id, stream_width)
+                    })
+                })
+                .collect();
+            let mut reports = Vec::new();
+            for (id, h) in handles.into_iter().enumerate() {
+                match h.join() {
+                    Ok(Ok(Some(r))) => reports.push((id, r)),
+                    Ok(Ok(None)) => {} // planned fault fired
+                    Ok(Err(e)) => {
+                        return Err(e.context(format!(
+                            "elastic member {id} failed"
+                        )))
+                    }
+                    Err(_) => bail!("elastic member {id} panicked"),
+                }
+            }
+            Ok(reports)
+        },
+    )?;
+    let (first_id, first) =
+        reports.first().ok_or_else(|| anyhow!("no survivors"))?;
+    for (id, r) in &reports[1..] {
+        if r.losses != first.losses || r.transitions != first.transitions {
+            bail!(
+                "survivor {id} diverged from survivor {first_id}: \
+                 losses/transitions disagree"
+            );
+        }
+    }
+    Ok(first.clone())
+}
+
+/// Run an elastic training job in one process (one thread per member),
+/// with the sampling stream pinned to `stream_width` instead of
+/// `cfg.workers` — the knob the shrunk-world reference runs use.
+pub fn run_elastic_collect_with(
+    cfg: &TrainRunConfig,
+    fault: FaultPlan,
+    stream_width: usize,
+) -> Result<TrainReport> {
+    cfg.validate()?;
+    let detect = detect_timeout(2);
+    match cfg.transport.as_str() {
+        "inproc" => {
+            let elastic =
+                InProcElastic::new(Some(detect), Duration::from_secs(2));
+            run_threaded(cfg, fault, &elastic, stream_width)
+        }
+        _ => {
+            // Real sockets + file rendezvous, members as threads: the
+            // same wire path the multi-process runner uses.
+            let dir = scratch_dir("elastic");
+            let elastic = TcpElastic {
+                rdzv: FileRendezvous::new(&dir),
+                timeout: Some(detect),
+            };
+            let out = run_threaded(cfg, fault, &elastic, stream_width);
+            cleanup(&dir);
+            out
+        }
+    }
+}
+
+/// [`run_elastic_collect_with`] at the natural stream width
+/// (`cfg.workers`, the launch world size).
+pub fn run_elastic_collect(
+    cfg: &TrainRunConfig,
+    fault: FaultPlan,
+) -> Result<TrainReport> {
+    run_elastic_collect_with(cfg, fault, cfg.workers)
+}
+
+// ---------------------------------------------------------------------------
+// Multi-process runner (real OS processes over `orchmllm worker`)
+// ---------------------------------------------------------------------------
+
+fn report_path(dir: &Path, id: usize) -> PathBuf {
+    dir.join(format!("report.m{id}.json"))
+}
+
+/// Spawn `cfg.workers` real OS processes (`<bin> worker …`) over a
+/// shared file-rendezvous directory, wait for them, tolerate
+/// [`FAULT_EXIT`] from the planned fault rank only, and return the
+/// survivors' (agreeing) report.
+pub fn run_multiproc(
+    cfg: &TrainRunConfig,
+    fault: FaultPlan,
+    bin: &Path,
+) -> Result<TrainReport> {
+    cfg.validate()?;
+    let dir = scratch_dir("elastic-proc");
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let mut children = Vec::new();
+    for id in 0..cfg.workers {
+        let mut cmd = std::process::Command::new(bin);
+        cmd.arg("worker")
+            .arg("--rank")
+            .arg(id.to_string())
+            .arg("--rdzv-dir")
+            .arg(&dir)
+            .arg("--workers")
+            .arg(cfg.workers.to_string())
+            .arg("--mini-batch")
+            .arg(cfg.mini_batch.to_string())
+            .arg("--steps")
+            .arg(cfg.steps.to_string())
+            .arg("--lr")
+            .arg(cfg.lr.to_string())
+            .arg("--seed")
+            .arg(cfg.seed.to_string())
+            .arg("--min-world")
+            .arg(cfg.min_world.to_string());
+        if let Some(rank) = fault.rank {
+            cmd.arg("--fault-rank")
+                .arg(rank.to_string())
+                .arg("--fault-step")
+                .arg(fault.step.to_string())
+                .arg("--fault-collective")
+                .arg(fault.collective.to_string());
+            if fault.resign {
+                // Boolean flags must trail `--key value` pairs.
+                cmd.arg("--fault-resign");
+            }
+        }
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("spawning worker {id}"))?;
+        children.push((id, child));
+    }
+
+    let mut failures = Vec::new();
+    for (id, mut child) in children {
+        let status = child
+            .wait()
+            .with_context(|| format!("waiting for worker {id}"))?;
+        let planned_fault = fault.rank == Some(id);
+        let ok = status.success()
+            || (planned_fault && status.code() == Some(FAULT_EXIT));
+        if !ok {
+            failures.push(format!("worker {id} exited with {status}"));
+        }
+    }
+    if !failures.is_empty() {
+        bail!("elastic run failed: {}", failures.join("; "));
+    }
+
+    let mut reports: Vec<(usize, TrainReport)> = Vec::new();
+    for id in 0..cfg.workers {
+        if fault.rank == Some(id) {
+            continue;
+        }
+        let path = report_path(&dir, id);
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading survivor report {}", path.display())
+        })?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        reports.push((id, report_from_json(&j)?));
+    }
+    let (first_id, first) =
+        reports.first().ok_or_else(|| anyhow!("no survivors"))?;
+    for (id, r) in &reports[1..] {
+        if r.losses != first.losses || r.transitions != first.transitions {
+            bail!(
+                "survivor {id} diverged from survivor {first_id}: \
+                 losses/transitions disagree"
+            );
+        }
+    }
+    let out = first.clone();
+    cleanup(&dir);
+    Ok(out)
+}
+
+/// Entry point of the `orchmllm worker` subcommand: join the file
+/// rendezvous as one member, train, write the report JSON next to the
+/// rendezvous files, and return the process exit code.
+pub fn worker_main(args: &Args) -> i32 {
+    let id = args.usize("rank", 0);
+    let dir = match args.get("rdzv-dir") {
+        Some(d) => PathBuf::from(d),
+        None => {
+            eprintln!("worker: --rdzv-dir is required");
+            return 2;
+        }
+    };
+    let cfg = TrainRunConfig {
+        workers: args.usize("workers", 4),
+        mini_batch: args.usize("mini-batch", 4),
+        steps: args.usize("steps", 8),
+        lr: args.f64("lr", 0.05),
+        seed: args.u64("seed", 0),
+        min_world: args.usize("min-world", 1),
+        transport: "tcp-multiproc".into(),
+        ..TrainRunConfig::default()
+    };
+    if let Err(e) = cfg.validate() {
+        eprintln!("worker {id}: invalid configuration: {e:#}");
+        return 2;
+    }
+    let fault = FaultPlan::from_args(args);
+    let elastic = TcpElastic {
+        rdzv: FileRendezvous::new(&dir),
+        timeout: Some(detect_timeout(5)),
+    };
+    match run_member(&cfg, fault, &elastic, id, cfg.workers) {
+        Ok(Some(report)) => {
+            let path = report_path(&dir, id);
+            if let Err(e) =
+                std::fs::write(&path, report_to_json(&report).pretty())
+            {
+                eprintln!(
+                    "worker {id}: writing {}: {e}",
+                    path.display()
+                );
+                return 1;
+            }
+            0
+        }
+        Ok(None) => FAULT_EXIT,
+        Err(e) => {
+            eprintln!("worker {id} failed: {e:#}");
+            1
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report (de)serialization — crosses the process boundary losslessly:
+// Json prints f64 via Rust's shortest-roundtrip formatting.
+// ---------------------------------------------------------------------------
+
+fn transition_to_json(t: &WorldTransition) -> Json {
+    Json::obj(vec![
+        ("step", Json::num(t.step as f64)),
+        ("epoch", Json::num(t.epoch as f64)),
+        ("from", Json::num(t.from as f64)),
+        ("to", Json::num(t.to as f64)),
+        (
+            "dead",
+            Json::arr(t.dead.iter().map(|&d| Json::num(d as f64))),
+        ),
+    ])
+}
+
+fn transition_from_json(j: &Json) -> Result<WorldTransition> {
+    let field = |k: &str| {
+        j.get(k)
+            .as_usize()
+            .ok_or_else(|| anyhow!("transition field '{k}' missing"))
+    };
+    Ok(WorldTransition {
+        step: field("step")?,
+        epoch: field("epoch")? as u64,
+        from: field("from")?,
+        to: field("to")?,
+        dead: j
+            .get("dead")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| anyhow!("bad dead-member entry"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+pub fn report_to_json(r: &TrainReport) -> Json {
+    Json::obj(vec![
+        ("losses", Json::arr(r.losses.iter().map(|&l| Json::num(l)))),
+        ("tokens_per_step", Json::num(r.tokens_per_step)),
+        ("secs_per_step", Json::num(r.secs_per_step)),
+        ("comm_secs_per_step", Json::num(r.comm_secs_per_step)),
+        ("plan_secs_per_step", Json::num(r.plan_secs_per_step)),
+        ("plan_warm_rate", Json::num(r.plan_warm_rate)),
+        ("plan_cache_hit_rate", Json::num(r.plan_cache_hit_rate)),
+        ("workers", Json::num(r.workers as f64)),
+        ("steps", Json::num(r.steps as f64)),
+        ("transport", Json::str(&r.transport)),
+        (
+            "transitions",
+            Json::arr(r.transitions.iter().map(transition_to_json)),
+        ),
+    ])
+}
+
+pub fn report_from_json(j: &Json) -> Result<TrainReport> {
+    let num = |k: &str| {
+        j.get(k)
+            .as_f64()
+            .ok_or_else(|| anyhow!("report field '{k}' missing"))
+    };
+    Ok(TrainReport {
+        losses: j
+            .get("losses")
+            .as_arr()
+            .ok_or_else(|| anyhow!("report field 'losses' missing"))?
+            .iter()
+            .map(|l| l.as_f64().ok_or_else(|| anyhow!("bad loss entry")))
+            .collect::<Result<Vec<_>>>()?,
+        tokens_per_step: num("tokens_per_step")?,
+        secs_per_step: num("secs_per_step")?,
+        comm_secs_per_step: num("comm_secs_per_step")?,
+        plan_secs_per_step: num("plan_secs_per_step")?,
+        plan_warm_rate: num("plan_warm_rate")?,
+        plan_cache_hit_rate: num("plan_cache_hit_rate")?,
+        workers: num("workers")? as usize,
+        steps: num("steps")? as usize,
+        transport: j
+            .get("transport")
+            .as_str()
+            .unwrap_or("tcp-multiproc")
+            .to_string(),
+        transitions: j
+            .get("transitions")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(transition_from_json)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_env_and_args_round_trip() {
+        // No flags, no env → no fault.
+        let args = Args::parse(Vec::<String>::new());
+        assert_eq!(FaultPlan::from_args(&args), FaultPlan::none());
+
+        let args = Args::parse(
+            [
+                "worker",
+                "--fault-rank",
+                "2",
+                "--fault-step",
+                "3",
+                "--fault-collective",
+                "1",
+                "--fault-resign",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let f = FaultPlan::from_args(&args);
+        assert_eq!(
+            f,
+            FaultPlan::resignation(2, 3).at_collective(1)
+        );
+    }
+
+    #[test]
+    fn global_batch_is_world_invariant() {
+        // The same (seed, step) global batch regroups across world
+        // sizes without changing the example multiset or order within
+        // a stream.
+        let at4 = global_minibatches(9, 5, 4, 3, 4);
+        let at3 = global_minibatches(9, 5, 4, 3, 3);
+        let flat4: Vec<_> =
+            at4.iter().flatten().map(|e| e.llm_len()).collect();
+        assert_eq!(flat4.len(), 12);
+        let total3: usize = at3.iter().map(Vec::len).sum();
+        assert_eq!(total3, 12);
+        // Stream 3 (examples 9..12 of the flat batch) lands on dense
+        // rank 0 at world 3.
+        assert_eq!(at3[0].len(), 6);
+        let tail: Vec<_> =
+            at3[0][3..].iter().map(|e| e.llm_len()).collect();
+        assert_eq!(tail, flat4[9..12].to_vec());
+    }
+
+    #[test]
+    fn report_json_round_trips_bit_exactly() {
+        let r = TrainReport {
+            losses: vec![0.1 + 0.2, 1.0 / 3.0, 2.5e-7],
+            tokens_per_step: 123.456,
+            secs_per_step: 0.01,
+            comm_secs_per_step: 0.001,
+            plan_secs_per_step: 0.0001,
+            plan_warm_rate: 0.75,
+            plan_cache_hit_rate: 0.5,
+            workers: 4,
+            steps: 6,
+            transport: "tcp-multiproc".into(),
+            transitions: vec![WorldTransition {
+                step: 3,
+                epoch: 1,
+                from: 4,
+                to: 3,
+                dead: vec![2],
+            }],
+        };
+        let text = report_to_json(&r).pretty();
+        let back =
+            report_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.losses, r.losses); // bit-exact f64 round trip
+        assert_eq!(back.transitions, r.transitions);
+        assert_eq!(back.workers, 4);
+    }
+}

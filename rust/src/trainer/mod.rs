@@ -13,11 +13,12 @@
 //! consequence-invariant (validated by `rust/tests/trainer_invariance`).
 
 pub mod content;
+pub mod elastic;
 pub mod worker;
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::balance::{registry, select};
 use crate::comm::calibrate::{self, CalibrationSpec};
@@ -54,6 +55,9 @@ pub struct TrainReport {
     pub steps: usize,
     /// Which comm backend carried the run (`--transport`).
     pub transport: String,
+    /// World-size transitions an elastic run survived (empty for the
+    /// fixed-world trainer).
+    pub transitions: Vec<elastic::WorldTransition>,
 }
 
 impl TrainReport {
@@ -67,6 +71,11 @@ impl TrainReport {
             {
                 curve.push_str(&format!("  step {i:>4}  loss {l:.4}\n"));
             }
+        }
+        if !self.transitions.is_empty() {
+            curve.push_str(&crate::sim::report::render_transitions(
+                &self.transitions,
+            ));
         }
         format!(
             "train: {} workers over '{}' transport, {} steps\n\
@@ -128,8 +137,25 @@ pub fn worker_topology(workers: usize) -> Topology {
     }
 }
 
+/// [`worker_topology`] guarded by an elastic floor: refuse to build a
+/// world smaller than `min_world` (the `--min-world` knob), so a
+/// shrinking run stops with a clear error instead of limping on with
+/// too little data parallelism.
+pub fn worker_topology_with_floor(
+    workers: usize,
+    min_world: usize,
+) -> Result<Topology> {
+    if workers < min_world.max(1) {
+        bail!(
+            "world of {workers} worker(s) is below the configured \
+             --min-world floor of {min_world}"
+        );
+    }
+    Ok(worker_topology(workers))
+}
+
 /// Resolve the orchestrator configuration a training run uses.
-fn orchestrator_config(
+pub(crate) fn orchestrator_config(
     cfg: &TrainRunConfig,
     embed_bytes: f64,
 ) -> Result<OrchestratorConfig> {
@@ -289,6 +315,7 @@ pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
         workers: cfg.workers,
         steps,
         transport: cfg.transport.clone(),
+        transitions: Vec::new(),
     })
 }
 
@@ -326,6 +353,18 @@ mod tests {
         assert_eq!(t.nodes(), 2);
         assert!(t.same_node(0, 1));
         assert!(!t.same_node(1, 2));
+    }
+
+    #[test]
+    fn topology_floor_refuses_small_worlds() {
+        assert_eq!(
+            worker_topology_with_floor(4, 2).unwrap().instances,
+            4
+        );
+        let err = worker_topology_with_floor(1, 2).unwrap_err();
+        assert!(err.to_string().contains("--min-world"));
+        // A floor of 0 behaves like 1: an empty world is never valid.
+        assert!(worker_topology_with_floor(0, 0).is_err());
     }
 
     #[test]

@@ -1,0 +1,104 @@
+//! Registry-wide elastic re-planning property: after a session is
+//! resized from `d` to `d − 1` instances (one DP rank died), every
+//! registered balancer must produce a *valid* plan over the surviving
+//! minibatches — full example coverage, correct width — whose LLM
+//! makespan stays within the natural shrink bound
+//! `ms(d−1) ≤ ms(d) · d/(d−1) · slack + 2·max_item`: losing one of
+//! `d` ranks raises the ideal per-rank load by `d/(d−1)`, and no
+//! balancer is allowed to do materially worse than that after
+//! [`PlanSession::resize`] dropped its warm state.
+
+use orchmllm::balance::{registry, ExampleRef};
+use orchmllm::data::synth::{DatasetConfig, Example, Generator};
+use orchmllm::orchestrator::global::OrchestratorConfig;
+use orchmllm::orchestrator::session::{PlanOptions, PlanSession};
+use orchmllm::trainer::{worker_topology, worker_topology_with_floor};
+
+const D: usize = 4;
+const PER_RANK: usize = 6;
+
+fn minibatches(seed: u64) -> Vec<Vec<Example>> {
+    let mut g = Generator::new(DatasetConfig::default(), seed);
+    (0..D).map(|_| g.batch(PER_RANK)).collect()
+}
+
+#[test]
+fn every_balancer_replans_validly_after_losing_a_rank() {
+    for name in registry::NAMES {
+        let b = registry::must(name);
+        let cm = b.cost_model();
+        let mbs = minibatches(11);
+        for k in 0..D {
+            let mut s = PlanSession::with_defaults(
+                OrchestratorConfig::orchmllm(512.0)
+                    .with_balancer(b.clone()),
+                worker_topology(D),
+            );
+            let plan_d = s.plan(&mbs, PlanOptions::auto());
+            assert_eq!(plan_d.d, D, "{name}");
+            let ms_d = cm.makespan(&plan_d.llm.assignment);
+            // Cost of the single most expensive example — re-planning
+            // over fewer ranks can at worst misplace one item at each
+            // of the two affected batch boundaries.
+            let max_item = plan_d
+                .llm
+                .assignment
+                .iter()
+                .flatten()
+                .map(|e| {
+                    cm.makespan(&[vec![ExampleRef {
+                        id: e.id,
+                        len: e.len,
+                    }]])
+                })
+                .fold(0.0, f64::max);
+
+            // Rank k dies: resize the same session and re-plan over
+            // the survivors' minibatches.
+            s.resize(worker_topology_with_floor(D - 1, 1).unwrap());
+            let survivors: Vec<Vec<Example>> = mbs
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != k)
+                .map(|(_, m)| m.clone())
+                .collect();
+            let plan = s.plan(&survivors, PlanOptions::auto());
+            assert_eq!(plan.d, D - 1, "{name} dropping rank {k}");
+
+            // Validity: every surviving example exactly once.
+            let n = plan.examples.len();
+            assert_eq!(n, (D - 1) * PER_RANK, "{name}");
+            let mut seen = vec![false; n];
+            for batch in &plan.llm.assignment {
+                for e in batch {
+                    assert!(
+                        !seen[e.id],
+                        "{name} dropping rank {k}: example {} assigned \
+                         twice",
+                        e.id
+                    );
+                    seen[e.id] = true;
+                }
+            }
+            assert!(
+                seen.iter().all(|&x| x),
+                "{name} dropping rank {k}: example lost after resize"
+            );
+
+            // Quality: within the natural d/(d−1) shrink bound (skip
+            // the identity dealer — it makes no balancing promise).
+            if b.is_identity() {
+                continue;
+            }
+            let ms = cm.makespan(&plan.llm.assignment);
+            let bound = ms_d * D as f64 / (D - 1) as f64 * 1.25
+                + 2.0 * max_item
+                + 1e-6;
+            assert!(
+                ms <= bound,
+                "{name} dropping rank {k}: shrunk makespan {ms} \
+                 exceeds bound {bound} (d-rank makespan {ms_d})"
+            );
+        }
+    }
+}

@@ -10,7 +10,14 @@
 //! ephemeral ports by default (`ORCHMLLM_TCP_BASE_PORT` overrides), so
 //! parallel local runs are safe too.
 
-use orchmllm::comm::transport::{self, registry, Transport, TransportExt};
+use std::time::Duration;
+
+use orchmllm::comm::transport::inproc::InProcFactory;
+use orchmllm::comm::transport::mesh::TcpMeshFactory;
+use orchmllm::comm::transport::tcp::TcpLoopbackFactory;
+use orchmllm::comm::transport::{
+    self, peer_dead, registry, Transport, TransportExt, TransportFactory,
+};
 
 /// Run `f` on every rank of a `d`-rank world of the named backend and
 /// collect the per-rank results in rank order (thin wrapper over the
@@ -400,4 +407,91 @@ fn trainer_step_bit_identical_across_transports() {
     // same bytes and the reduction order is fixed.
     assert_eq!(inproc.losses, tcp.losses);
     assert_eq!(inproc.tokens_per_step, tcp.tokens_per_step);
+}
+
+// ---------------------------------------------------------------------------
+// Unified failure semantics: a dead rank surfaces as a typed PeerDead
+// ---------------------------------------------------------------------------
+
+/// Every backend must turn a rank that dies *before* a collective into
+/// a typed `TransportError::PeerDead` on the survivors — within the
+/// backend's timeout, never a hang, never a panic — for every
+/// collective kind. This is the contract the elastic trainer's
+/// recovery path is built on.
+#[test]
+fn dead_rank_surfaces_typed_peer_death_for_every_collective() {
+    // Short timeouts keep detection latency test-sized; semantics are
+    // identical at the production defaults.
+    let factories: Vec<(&str, Box<dyn TransportFactory>)> = vec![
+        (
+            "inproc",
+            Box::new(InProcFactory {
+                watchdog: Some(Duration::from_millis(300)),
+            }),
+        ),
+        (
+            "tcp",
+            Box::new(TcpLoopbackFactory {
+                base_port: 0,
+                timeout: Some(Duration::from_secs(2)),
+            }),
+        ),
+        (
+            "tcp-multiproc",
+            Box::new(TcpMeshFactory {
+                timeout: Some(Duration::from_secs(2)),
+            }),
+        ),
+    ];
+    for (name, factory) in &factories {
+        for kind in ["barrier", "all_to_all", "all_gather", "all_reduce"] {
+            let out = transport::run_world(factory.as_ref(), 3, |t| {
+                if t.rank() == 1 {
+                    // Rank 1 dies before the collective: dropping the
+                    // handle closes sockets / abandons the barrier.
+                    drop(t);
+                    return None;
+                }
+                let err = match kind {
+                    "barrier" => t.barrier().unwrap_err(),
+                    "all_to_all" => {
+                        let sends = (0..3)
+                            .map(|dst| (dst, vec![t.rank() as u8]))
+                            .collect();
+                        t.all_to_all_bytes(sends).unwrap_err()
+                    }
+                    "all_gather" => t
+                        .all_gather_bytes(vec![t.rank() as u8])
+                        .unwrap_err(),
+                    _ => {
+                        let mut x = [1.0f32; 4];
+                        t.all_reduce_sum(&mut x).unwrap_err()
+                    }
+                };
+                Some(peer_dead(&err))
+            })
+            .unwrap_or_else(|e| {
+                panic!("{name}/{kind}: world failed: {e:#}")
+            });
+            for (rank, blamed) in out.into_iter().enumerate() {
+                let Some(blamed) = blamed else {
+                    assert_eq!(rank, 1, "{name}/{kind}");
+                    continue;
+                };
+                // Survivors must hold a typed peer death. The inproc
+                // barrier attributes the exact missing rank; socket
+                // backends may cascade blame onto another survivor
+                // whose streams collapsed first, which recovery treats
+                // as a hint only.
+                assert!(
+                    blamed.is_some(),
+                    "{name}/{kind} rank {rank}: error was not a typed \
+                     peer death"
+                );
+                if *name == "inproc" {
+                    assert_eq!(blamed, Some(1), "{name}/{kind}");
+                }
+            }
+        }
+    }
 }
