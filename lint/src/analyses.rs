@@ -1,0 +1,384 @@
+//! The three orchlint analyses plus pragma validation.
+//!
+//! All analyses run over `FnRec` token spans from `parse.rs`. Findings are
+//! deduplicated per `(function, detail)` and keyed WITHOUT line numbers so
+//! the baseline stays stable across unrelated edits; line numbers ride
+//! along in the report payload only.
+
+use crate::lexer::{Tok, TokKind};
+use crate::parse::FnRec;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// The Transport/Collectives data plane: every DP rank must call these the
+/// same number of times in the same order.
+pub const COLLECTIVES: [&str; 6] = [
+    "all_to_all_bytes",
+    "all_to_all_shards",
+    "all_gather_bytes",
+    "all_reduce_sum",
+    "barrier",
+    "heartbeat",
+];
+
+pub const CLASS_SYMMETRY: &str = "collective-asymmetry";
+pub const CLASS_HOT_PATH: &str = "hot-path-alloc";
+pub const CLASS_ERROR_PROP: &str = "error-propagation";
+const KNOWN_CLASSES: [&str; 3] = [CLASS_SYMMETRY, CLASS_HOT_PATH, CLASS_ERROR_PROP];
+
+/// Idents treated as rank identity when they appear in a branch header.
+const RANK_IDENTS: [&str; 4] = ["rank", "me", "my_rank", "rank_id"];
+
+/// One deduplicated finding. `key` is the stable identity used by the
+/// baseline; `lines` are advisory (first few sites, sorted).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub key: String,
+    pub class: String,
+    pub file: String,
+    pub function: String,
+    pub detail: String,
+    pub lines: Vec<u32>,
+}
+
+fn key_of(class: &str, file: &str, qname: &str, detail: &str) -> String {
+    format!("{class}::{file}::{qname}::{detail}")
+}
+
+/// Accumulates findings with per-key line lists.
+#[derive(Default)]
+pub struct Findings {
+    map: BTreeMap<String, Finding>,
+}
+
+impl Findings {
+    pub fn add(&mut self, class: &str, rec: &FnRec, detail: &str, line: u32) {
+        let key = key_of(class, &rec.file, &rec.qname, detail);
+        let f = self.map.entry(key.clone()).or_insert_with(|| Finding {
+            key,
+            class: class.to_string(),
+            file: rec.file.clone(),
+            function: rec.qname.clone(),
+            detail: detail.to_string(),
+            lines: Vec::new(),
+        });
+        if !f.lines.contains(&line) {
+            f.lines.push(line);
+            f.lines.sort_unstable();
+        }
+    }
+
+    pub fn into_sorted(self) -> Vec<Finding> {
+        self.map.into_values().collect()
+    }
+}
+
+/// Iterate a fn's body tokens, skipping nested-fn holes.
+fn body_tokens<'a>(rec: &'a FnRec, toks: &'a [Tok]) -> Vec<(usize, &'a Tok)> {
+    let (start, end) = rec.body;
+    let mut out = Vec::new();
+    let mut i = start;
+    while i <= end && i < toks.len() {
+        if let Some(&(hs, he)) = rec.holes.iter().find(|&&(hs, _)| hs == i) {
+            debug_assert!(he >= hs);
+            i = he + 1;
+            continue;
+        }
+        out.push((i, &toks[i]));
+        i += 1;
+    }
+    out
+}
+
+/// Call-site names in a fn body: `name(`, `.name(`, `Path::name(`.
+/// Macro invocations (`name!(`) and nested `fn` declarations are excluded.
+pub fn callees(rec: &FnRec, toks: &[Tok]) -> BTreeSet<String> {
+    let body = body_tokens(rec, toks);
+    let mut out = BTreeSet::new();
+    for w in 0..body.len() {
+        let (_, t) = body[w];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let Some(&(_, next)) = body.get(w + 1) else {
+            continue;
+        };
+        if next.text != "(" {
+            continue;
+        }
+        if w > 0 && body[w - 1].1.text == "fn" {
+            continue;
+        }
+        out.insert(t.text.clone());
+    }
+    out
+}
+
+/// Name-based call graph over non-test fns: an edge exists from caller to
+/// every fn whose last-segment name matches a call-site name. Trait-object
+/// and method calls resolve by bare method name — over-approximate by
+/// design (see DESIGN.md §Static Analysis).
+pub struct CallGraph {
+    /// fn index -> indices of possible callees.
+    pub edges: Vec<Vec<usize>>,
+}
+
+impl CallGraph {
+    pub fn build(recs: &[FnRec], toks_by_file: &BTreeMap<String, Vec<Tok>>) -> CallGraph {
+        let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for (i, r) in recs.iter().enumerate() {
+            if !r.is_test {
+                by_name.entry(&r.name).or_default().push(i);
+            }
+        }
+        let mut edges = vec![Vec::new(); recs.len()];
+        for (i, r) in recs.iter().enumerate() {
+            if r.is_test {
+                continue;
+            }
+            let toks = &toks_by_file[&r.file];
+            for name in callees(r, toks) {
+                if let Some(targets) = by_name.get(name.as_str()) {
+                    for &t in targets {
+                        if t != i {
+                            edges[i].push(t);
+                        }
+                    }
+                }
+            }
+        }
+        CallGraph { edges }
+    }
+
+    /// Indices reachable from `seeds` (inclusive).
+    pub fn closure(&self, seeds: &[usize]) -> BTreeSet<usize> {
+        let mut seen: BTreeSet<usize> = seeds.iter().copied().collect();
+        let mut q: VecDeque<usize> = seeds.iter().copied().collect();
+        while let Some(i) = q.pop_front() {
+            for &j in &self.edges[i] {
+                if seen.insert(j) {
+                    q.push_back(j);
+                }
+            }
+        }
+        seen
+    }
+}
+
+/// Analysis 1: collective symmetry.
+///
+/// Flags a collective call when (a) any enclosing `if`/`match`/`while`/`for`
+/// header mentions rank identity, (b) any enclosing header is fallible
+/// (`if let Ok/Err/Some/None`, `.is_ok()` etc.), or (c) a `return`/`bail!`
+/// occurred earlier in the fn inside a conditional — a rank that takes the
+/// early exit skips the collective its peers are blocked in.
+pub fn check_symmetry(rec: &FnRec, toks: &[Tok], out: &mut Findings) {
+    if rec.is_test || rec.allowed(CLASS_SYMMETRY) {
+        return;
+    }
+    let body = body_tokens(rec, toks);
+    // Conditional-context stack: (rank_dep, fallible, brace_depth_at_open).
+    let mut ctx: Vec<(bool, bool)> = Vec::new();
+    let mut brace_owner: Vec<bool> = Vec::new(); // true = brace opened a ctx
+    let mut saw_cond_exit = false;
+    let mut w = 0usize;
+    while w < body.len() {
+        let (_, t) = body[w];
+        if t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "if" | "match" | "while" | "for")
+        {
+            // Header = tokens until `{` at paren/bracket-depth 0. Bare
+            // struct literals are illegal in these headers, so the first
+            // depth-0 `{` is the block opener.
+            let mut depth = 0i32;
+            let mut j = w + 1;
+            let mut rank_dep = false;
+            let mut fallible = false;
+            while j < body.len() {
+                let (_, h) = body[j];
+                match h.text.as_str() {
+                    "(" | "[" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "{" if depth == 0 => break,
+                    _ => {}
+                }
+                if h.kind == TokKind::Ident {
+                    if RANK_IDENTS.contains(&h.text.as_str()) {
+                        rank_dep = true;
+                    }
+                    if matches!(
+                        h.text.as_str(),
+                        "Ok" | "Err" | "Some" | "None" | "is_ok" | "is_err" | "is_some"
+                            | "is_none"
+                    ) {
+                        fallible = true;
+                    }
+                }
+                j += 1;
+            }
+            if j < body.len() {
+                // Consume header and the opening brace.
+                ctx.push((rank_dep, fallible));
+                brace_owner.push(true);
+                w = j + 1;
+                continue;
+            }
+            w += 1;
+            continue;
+        }
+        match t.text.as_str() {
+            "{" => {
+                brace_owner.push(false);
+                w += 1;
+                continue;
+            }
+            "}" => {
+                let owned = brace_owner.pop().unwrap_or(false);
+                let popped = if owned { ctx.pop() } else { None };
+                let nxt1 = body.get(w + 1).map(|&(_, t2)| t2.text.as_str());
+                let nxt2 = body.get(w + 2).map(|&(_, t2)| t2.text.as_str());
+                match popped {
+                    Some(p) if nxt1 == Some("else") && nxt2 != Some("if") => {
+                        // Bare `else {` reuses the popped flags; `else if`
+                        // pushes a fresh context when its own header's `{`
+                        // is consumed on a later iteration.
+                        ctx.push(p);
+                        brace_owner.push(true);
+                        w += 3; // skip `}` `else` `{`
+                    }
+                    _ => w += 1,
+                }
+                continue;
+            }
+            _ => {}
+        }
+        if t.kind == TokKind::Ident {
+            let name = t.text.as_str();
+            let next = body.get(w + 1).map(|&(_, t2)| t2.text.as_str());
+            if (name == "return" || (name == "bail" && next == Some("!"))) && !ctx.is_empty() {
+                saw_cond_exit = true;
+            }
+            if COLLECTIVES.contains(&name) && next == Some("(") {
+                let rank_dep = ctx.iter().any(|&(r, _)| r);
+                let fallible = ctx.iter().any(|&(_, f)| f);
+                if rank_dep {
+                    out.add(CLASS_SYMMETRY, rec, &format!("rank-branch:{name}"), t.line);
+                }
+                if fallible {
+                    out.add(
+                        CLASS_SYMMETRY,
+                        rec,
+                        &format!("fallible-branch:{name}"),
+                        t.line,
+                    );
+                }
+                if saw_cond_exit && !rank_dep && !fallible {
+                    out.add(CLASS_SYMMETRY, rec, &format!("early-exit:{name}"), t.line);
+                }
+            }
+        }
+        w += 1;
+    }
+}
+
+/// Analysis 2: allocating constructs in the hot-path closure.
+pub fn check_hot_path(rec: &FnRec, toks: &[Tok], out: &mut Findings) {
+    if rec.is_test || rec.allowed(CLASS_HOT_PATH) {
+        return;
+    }
+    let body = body_tokens(rec, toks);
+    for w in 0..body.len() {
+        let (_, t) = body[w];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let next = body.get(w + 1).map(|&(_, t2)| t2.text.as_str());
+        let prev = if w > 0 {
+            body[w - 1].1.text.as_str()
+        } else {
+            ""
+        };
+        let prev2 = if w > 1 {
+            body[w - 2].1.text.as_str()
+        } else {
+            ""
+        };
+        let name = t.text.as_str();
+        let construct: Option<String> = match name {
+            "new" if next == Some("(")
+                && prev == "::"
+                && matches!(prev2, "Vec" | "Box" | "String" | "VecDeque" | "HashMap"
+                    | "BTreeMap" | "HashSet" | "BTreeSet") =>
+            {
+                Some(format!("{prev2}::new"))
+            }
+            "clone" if next == Some("(") => {
+                // `Arc::clone` / `Rc::clone` are refcount bumps, not heap
+                // allocations.
+                if prev == "::" && matches!(prev2, "Arc" | "Rc") {
+                    None
+                } else {
+                    Some("clone".to_string())
+                }
+            }
+            "to_vec" | "to_string" | "to_owned" | "collect" | "with_capacity"
+                if next == Some("(") =>
+            {
+                Some(name.to_string())
+            }
+            "vec" | "format" if next == Some("!") => Some(format!("{name}!")),
+            _ => None,
+        };
+        if let Some(c) = construct {
+            out.add(CLASS_HOT_PATH, rec, &c, t.line);
+        }
+    }
+}
+
+/// Analysis 3: panic-family constructs where errors must propagate as
+/// `TransportError` instead.
+pub fn check_error_prop(rec: &FnRec, toks: &[Tok], out: &mut Findings) {
+    if rec.is_test || rec.allowed(CLASS_ERROR_PROP) {
+        return;
+    }
+    let body = body_tokens(rec, toks);
+    for w in 0..body.len() {
+        let (_, t) = body[w];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let next = body.get(w + 1).map(|&(_, t2)| t2.text.as_str());
+        let name = t.text.as_str();
+        let construct: Option<String> = match name {
+            "unwrap" | "expect" if next == Some("(") => Some(name.to_string()),
+            "panic" | "unreachable" | "todo" | "unimplemented" if next == Some("!") => {
+                Some(format!("{name}!"))
+            }
+            _ => None,
+        };
+        if let Some(c) = construct {
+            out.add(CLASS_ERROR_PROP, rec, &c, t.line);
+        }
+    }
+}
+
+/// Pragma validation: every `orchlint: allow(...)` must name a known class
+/// and carry a justification after the closing paren.
+pub fn check_pragmas(rec: &FnRec, out: &mut Findings) {
+    for (class, justified) in &rec.allows {
+        if !KNOWN_CLASSES.contains(&class.as_str()) {
+            out.add(
+                "pragma",
+                rec,
+                &format!("unknown-class:{class}"),
+                rec.line,
+            );
+        } else if !justified {
+            out.add(
+                "pragma",
+                rec,
+                &format!("missing-justification:{class}"),
+                rec.line,
+            );
+        }
+    }
+}

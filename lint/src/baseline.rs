@@ -1,0 +1,121 @@
+//! Baseline ratchet + hot-path manifest I/O.
+//!
+//! Both file formats are parsed with deliberately tiny scanners (no serde
+//! in the offline build environment): the baseline is a JSON object whose
+//! `findings` member is a sorted array of key strings, and the manifest is
+//! a TOML file whose only payload is the quoted strings in its `entries`
+//! array. Keys never contain quotes or backslashes, so no escape handling
+//! is needed beyond rejecting such keys at write time.
+
+use crate::analyses::Finding;
+use std::collections::BTreeSet;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Parse `ci/hot_paths.toml`: every quoted string on a non-comment line is
+/// an entry (`Type::method` or a bare fn name).
+pub fn read_hot_paths(path: &Path) -> io::Result<Vec<String>> {
+    let text = fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.starts_with('#') {
+            continue;
+        }
+        let mut rest = line;
+        while let Some(open) = rest.find('"') {
+            let tail = &rest[open + 1..];
+            let Some(close) = tail.find('"') else { break };
+            let s = &tail[..close];
+            if !s.is_empty() {
+                out.push(s.to_string());
+            }
+            rest = &tail[close + 1..];
+        }
+    }
+    Ok(out)
+}
+
+/// Read the `findings` array of key strings from the baseline JSON.
+pub fn read_baseline(path: &Path) -> io::Result<BTreeSet<String>> {
+    let text = fs::read_to_string(path)?;
+    let Some(pos) = text.find("\"findings\"") else {
+        return Ok(BTreeSet::new());
+    };
+    let tail = &text[pos..];
+    let Some(open) = tail.find('[') else {
+        return Ok(BTreeSet::new());
+    };
+    let mut out = BTreeSet::new();
+    let mut rest = &tail[open + 1..];
+    loop {
+        // Next string or closing bracket, whichever comes first.
+        let close = rest.find(']');
+        let quote = rest.find('"');
+        match (quote, close) {
+            (Some(q), Some(c)) if q < c => {
+                let t = &rest[q + 1..];
+                let Some(end) = t.find('"') else { break };
+                out.insert(t[..end].to_string());
+                rest = &t[end + 1..];
+            }
+            _ => break,
+        }
+    }
+    Ok(out)
+}
+
+const BASELINE_HEADER: &str = r#"{
+  "description": "orchlint ratchet baseline: the exact finding-key set `cargo run -p orchlint -- rust/src` must produce. CI fails on any finding absent from this list AND on any stale entry, so the list can only change deliberately. The intent is monotone shrinkage: fix a finding (or pragma-allowlist it with a justification) and delete its key here.",
+  "rebaseline_procedure": "Run `cargo run -p orchlint -- rust/src --write-baseline` from the repo root and commit the diff. Additions require PR justification per key (they mean a new asymmetric collective, hot-path allocation, or panic path was introduced); deletions are always welcome.",
+"#;
+
+/// Write the baseline file: fixed header + sorted key array.
+pub fn write_baseline(path: &Path, findings: &[Finding]) -> io::Result<()> {
+    let mut s = String::from(BASELINE_HEADER);
+    s.push_str("  \"findings\": [\n");
+    for (i, f) in findings.iter().enumerate() {
+        assert!(
+            !f.key.contains('"') && !f.key.contains('\\'),
+            "finding key needs escaping: {}",
+            f.key
+        );
+        s.push_str("    \"");
+        s.push_str(&f.key);
+        s.push('"');
+        if i + 1 < findings.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    fs::write(path, s)
+}
+
+/// Write the full findings report (keys + advisory line numbers).
+pub fn write_report(path: &Path, root: &str, findings: &[Finding]) -> io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n  \"version\": 1,\n");
+    s.push_str(&format!("  \"root\": \"{root}\",\n"));
+    s.push_str(&format!("  \"total\": {},\n", findings.len()));
+    s.push_str("  \"findings\": [\n");
+    for (i, f) in findings.iter().enumerate() {
+        let lines: Vec<String> = f.lines.iter().map(|l| l.to_string()).collect();
+        s.push_str(&format!(
+            "    {{\"key\": \"{}\", \"class\": \"{}\", \"file\": \"{}\", \"function\": \"{}\", \"detail\": \"{}\", \"lines\": [{}]}}",
+            f.key,
+            f.class,
+            f.file,
+            f.function,
+            f.detail,
+            lines.join(", ")
+        ));
+        if i + 1 < findings.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    fs::write(path, s)
+}

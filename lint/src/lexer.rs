@@ -1,0 +1,291 @@
+//! A minimal Rust lexer, scoped to what the orchlint analyses need.
+//!
+//! Produces a flat token stream (idents, single-char puncts plus `::`,
+//! literals) with line numbers, and a separate list of line comments so
+//! `// orchlint: allow(...)` pragmas survive lexing. Correctly skips
+//! strings (incl. raw/byte strings), char literals vs lifetimes, nested
+//! block comments, and numeric literals (incl. `0..n` range ambiguity).
+//!
+//! This is intentionally NOT a full Rust lexer: multi-char operators other
+//! than `::` are emitted as single-char puncts, and no keyword table exists
+//! (keywords are just idents). The parser and analyses only ever match on
+//! ident text and the puncts `{ } ( ) [ ] < > : :: ; , . # ! ' =`.
+
+/// Token kind. Literals carry no text (analyses never inspect them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Lit,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// A `//` line comment (text excludes the leading slashes).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    let is_ident_start = |c: char| c.is_alphabetic() || c == '_';
+    let is_ident_cont = |c: char| c.is_alphanumeric() || c == '_';
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            comments.push(Comment {
+                line,
+                text: b[start..j].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1i32;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Raw / byte string prefixes: r"…", r#"…"#, b"…", br#"…"#, …
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            if c == 'b' && j < n && b[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            let mut k = j;
+            while k < n && b[k] == '#' {
+                hashes += 1;
+                k += 1;
+            }
+            if k < n && b[k] == '"' {
+                // r"…" | r#…#"…" | b"…" | br"…" — but `r#ident` (raw ident)
+                // has hashes followed by an ident char, not a quote, so it
+                // falls through to the ident path below.
+                {
+                    let lit_line = line;
+                    let mut m = k + 1;
+                    'raw: while m < n {
+                        if b[m] == '\n' {
+                            line += 1;
+                            m += 1;
+                            continue;
+                        }
+                        if b[m] == '"' {
+                            let mut h = 0usize;
+                            while m + 1 + h < n && h < hashes && b[m + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                m += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        // Non-raw byte string b"…" honors escapes.
+                        if hashes == 0 && b[m] == '\\' && m + 1 < n {
+                            m += 2;
+                            continue;
+                        }
+                        m += 1;
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Lit,
+                        text: String::new(),
+                        line: lit_line,
+                    });
+                    i = m;
+                    continue;
+                }
+            }
+            // `r#ident` raw identifier: skip the `r#`, lex the ident below.
+            if c == 'r' && i + 1 < n && b[i + 1] == '#' && i + 2 < n && is_ident_start(b[i + 2]) {
+                i += 2;
+                // fall through to ident handling with b[i] an ident start
+                let start = i;
+                let mut j = i;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: b[start..j].iter().collect(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+        }
+        // Plain string.
+        if c == '"' {
+            let lit_line = line;
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == '\\' && j + 1 < n {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                    continue;
+                }
+                if b[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Lit,
+                text: String::new(),
+                line: lit_line,
+            });
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // '\n', '\'', '\u{..}' …
+                let mut j = i + 2;
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lit,
+                    text: String::new(),
+                    line,
+                });
+                i = j + 1;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                // 'x'
+                toks.push(Tok {
+                    kind: TokKind::Lit,
+                    text: String::new(),
+                    line,
+                });
+                i += 3;
+                continue;
+            }
+            // Lifetime: emit the quote as punct; ident lexes next round.
+            toks.push(Tok {
+                kind: TokKind::Punct,
+                text: "'".to_string(),
+                line,
+            });
+            i += 1;
+            continue;
+        }
+        // Number.
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n {
+                let d = b[j];
+                if d.is_ascii_alphanumeric() || d == '_' {
+                    j += 1;
+                    continue;
+                }
+                // `1.5` yes; `0..n` and `1.max(..)` no.
+                if d == '.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                    j += 1;
+                    continue;
+                }
+                // `1e-3` exponent sign.
+                if (d == '+' || d == '-')
+                    && matches!(b[j - 1], 'e' | 'E')
+                    && j + 1 < n
+                    && b[j + 1].is_ascii_digit()
+                {
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            toks.push(Tok {
+                kind: TokKind::Lit,
+                text: String::new(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Ident.
+        if is_ident_start(c) {
+            let start = i;
+            let mut j = i;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[start..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // `::` as one token (path detection); everything else single char.
+        if c == ':' && i + 1 < n && b[i + 1] == ':' {
+            toks.push(Tok {
+                kind: TokKind::Punct,
+                text: "::".to_string(),
+                line,
+            });
+            i += 2;
+            continue;
+        }
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    (toks, comments)
+}

@@ -1,0 +1,139 @@
+//! orchlint — SPMD-aware static analysis for the orchmllm source tree.
+//!
+//! Three project-specific analyses over an intra-crate, name-resolved call
+//! graph (see DESIGN.md §Static Analysis for definitions and soundness):
+//!
+//! 1. **collective-asymmetry** — calls into the Transport/Collectives data
+//!    plane that are control-dependent on rank identity, sit under a
+//!    fallible branch, or follow a conditional early exit. The classic
+//!    MPI mismatched-collective deadlock source.
+//! 2. **hot-path-alloc** — allocating constructs in the callee closure of
+//!    the `ci/hot_paths.toml` entry points (the PR-6 zero-alloc surfaces);
+//!    the static complement to `rust/tests/plan_allocations.rs`.
+//! 3. **error-propagation** — `unwrap`/`expect`/`panic!`-family constructs
+//!    in `comm/` code and in anything reachable from a collective, where
+//!    failures must surface as `TransportError` instead of a local abort.
+//!
+//! Findings are stable-keyed (`class::file::function::detail`, no line
+//! numbers) and ratcheted against `ci/orchlint_baseline.json`.
+
+pub mod analyses;
+pub mod baseline;
+pub mod lexer;
+pub mod parse;
+
+use analyses::{CallGraph, Finding, Findings, COLLECTIVES};
+use lexer::Tok;
+use parse::FnRec;
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Lexed + parsed source tree.
+pub struct Tree {
+    pub root: PathBuf,
+    pub fns: Vec<FnRec>,
+    pub toks_by_file: BTreeMap<String, Vec<Tok>>,
+}
+
+/// Recursively collect `.rs` files under `root`, sorted by relative path so
+/// analysis order (and therefore output) is deterministic across platforms.
+fn rs_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in fs::read_dir(&dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lex and parse every `.rs` file under `root`.
+pub fn load_tree(root: &Path) -> io::Result<Tree> {
+    let mut fns = Vec::new();
+    let mut toks_by_file = BTreeMap::new();
+    for path in rs_files(root)? {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(&path)?;
+        let (toks, comments) = lexer::lex(&src);
+        parse::parse_file(&rel, &toks, &comments, &mut fns);
+        toks_by_file.insert(rel, toks);
+    }
+    Ok(Tree {
+        root: root.to_path_buf(),
+        fns,
+        toks_by_file,
+    })
+}
+
+/// Run all analyses; `hot_entries` comes from `ci/hot_paths.toml`.
+pub fn analyze(tree: &Tree, hot_entries: &[String]) -> Vec<Finding> {
+    let graph = CallGraph::build(&tree.fns, &tree.toks_by_file);
+    let mut out = Findings::default();
+
+    // Seeds for the hot-path closure: exact qualified match, or bare-name
+    // match for entries without a `::`.
+    let mut hot_seeds = Vec::new();
+    for (i, r) in tree.fns.iter().enumerate() {
+        if r.is_test {
+            continue;
+        }
+        for e in hot_entries {
+            let hit = if e.contains("::") {
+                r.qname == *e
+            } else {
+                r.name == *e
+            };
+            if hit {
+                hot_seeds.push(i);
+            }
+        }
+    }
+    let hot_closure = graph.closure(&hot_seeds);
+
+    // Seeds for the error-propagation closure: the collective
+    // implementations themselves (any fn named like one).
+    let coll_seeds: Vec<usize> = tree
+        .fns
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| !r.is_test && COLLECTIVES.contains(&r.name.as_str()))
+        .map(|(i, _)| i)
+        .collect();
+    let coll_closure = graph.closure(&coll_seeds);
+
+    for (i, r) in tree.fns.iter().enumerate() {
+        if r.is_test {
+            continue;
+        }
+        let toks = &tree.toks_by_file[&r.file];
+        analyses::check_pragmas(r, &mut out);
+        analyses::check_symmetry(r, toks, &mut out);
+        if hot_closure.contains(&i) {
+            analyses::check_hot_path(r, toks, &mut out);
+        }
+        if r.file.contains("comm/") || coll_closure.contains(&i) {
+            analyses::check_error_prop(r, toks, &mut out);
+        }
+    }
+    out.into_sorted()
+}
+
+/// Convenience: load + analyze in one call.
+pub fn run(root: &Path, hot_entries: &[String]) -> io::Result<Vec<Finding>> {
+    let tree = load_tree(root)?;
+    Ok(analyze(&tree, hot_entries))
+}

@@ -1,0 +1,177 @@
+//! orchlint CLI.
+//!
+//! ```text
+//! cargo run -p orchlint -- rust/src                 # gate against ci/orchlint_baseline.json
+//! cargo run -p orchlint -- rust/src --write-baseline  # regenerate the ratchet
+//! cargo run -p orchlint -- rust/src --json report.json
+//! ```
+//!
+//! Exit codes: 0 clean (findings exactly match the baseline), 1 drift
+//! (unbaselined findings and/or stale baseline entries), 2 usage/IO error.
+
+use orchlint::baseline;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+struct Opts {
+    root: PathBuf,
+    hot_paths: PathBuf,
+    baseline: PathBuf,
+    write_baseline: bool,
+    json: Option<PathBuf>,
+}
+
+fn parse_args() -> Result<Opts, String> {
+    let mut root: Option<PathBuf> = None;
+    let mut hot_paths = PathBuf::from("ci/hot_paths.toml");
+    let mut baseline = PathBuf::from("ci/orchlint_baseline.json");
+    let mut write_baseline = false;
+    let mut json = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--hot-paths" => {
+                hot_paths = PathBuf::from(args.next().ok_or("--hot-paths needs a path")?)
+            }
+            "--baseline" => {
+                baseline = PathBuf::from(args.next().ok_or("--baseline needs a path")?)
+            }
+            "--write-baseline" => write_baseline = true,
+            "--json" => json = Some(PathBuf::from(args.next().ok_or("--json needs a path")?)),
+            "--help" | "-h" => {
+                return Err("usage: orchlint <root> [--hot-paths p] [--baseline p] \
+                     [--write-baseline] [--json p]"
+                    .to_string())
+            }
+            _ if root.is_none() && !a.starts_with('-') => root = Some(PathBuf::from(a)),
+            _ => return Err(format!("unknown argument: {a}")),
+        }
+    }
+    Ok(Opts {
+        root: root.ok_or("missing <root> (e.g. rust/src)")?,
+        hot_paths,
+        baseline,
+        write_baseline,
+        json,
+    })
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_args() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("orchlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let hot_entries = if opts.hot_paths.exists() {
+        match baseline::read_hot_paths(&opts.hot_paths) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("orchlint: reading {}: {e}", opts.hot_paths.display());
+                return ExitCode::from(2);
+            }
+        }
+    } else {
+        eprintln!(
+            "orchlint: note: {} not found; hot-path analysis has no entry points",
+            opts.hot_paths.display()
+        );
+        Vec::new()
+    };
+    let findings = match orchlint::run(&opts.root, &hot_entries) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("orchlint: analyzing {}: {e}", opts.root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let mut per_class: std::collections::BTreeMap<&str, usize> = Default::default();
+    for f in &findings {
+        *per_class.entry(f.class.as_str()).or_default() += 1;
+    }
+    let summary: Vec<String> = per_class
+        .iter()
+        .map(|(c, n)| format!("{c}: {n}"))
+        .collect();
+    eprintln!(
+        "orchlint: {} findings ({}) across {}",
+        findings.len(),
+        if summary.is_empty() {
+            "none".to_string()
+        } else {
+            summary.join(", ")
+        },
+        opts.root.display()
+    );
+
+    if let Some(p) = &opts.json {
+        if let Err(e) = baseline::write_report(p, &opts.root.to_string_lossy(), &findings) {
+            eprintln!("orchlint: writing {}: {e}", p.display());
+            return ExitCode::from(2);
+        }
+    }
+    if opts.write_baseline {
+        if let Err(e) = baseline::write_baseline(&opts.baseline, &findings) {
+            eprintln!("orchlint: writing {}: {e}", opts.baseline.display());
+            return ExitCode::from(2);
+        }
+        eprintln!(
+            "orchlint: wrote {} ({} keys)",
+            opts.baseline.display(),
+            findings.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    gate(&opts.baseline, &findings)
+}
+
+/// Compare findings against the ratchet. Both directions are errors: new
+/// findings mean a regression; stale entries mean the baseline must shrink
+/// (delete the fixed keys and commit).
+fn gate(baseline_path: &Path, findings: &[orchlint::analyses::Finding]) -> ExitCode {
+    if !baseline_path.exists() {
+        eprintln!(
+            "orchlint: no baseline at {}; run with --write-baseline to create one",
+            baseline_path.display()
+        );
+        return ExitCode::from(if findings.is_empty() { 0 } else { 1 });
+    }
+    let base = match baseline::read_baseline(baseline_path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("orchlint: reading {}: {e}", baseline_path.display());
+            return ExitCode::from(2);
+        }
+    };
+    let current: BTreeSet<String> = findings.iter().map(|f| f.key.clone()).collect();
+    let new: Vec<&String> = current.difference(&base).collect();
+    let stale: Vec<&String> = base.difference(&current).collect();
+    for k in &new {
+        let lines = findings
+            .iter()
+            .find(|f| &&f.key == k)
+            .map(|f| format!("{:?}", f.lines))
+            .unwrap_or_default();
+        eprintln!("orchlint: NEW finding (not in baseline): {k} at lines {lines}");
+    }
+    for k in &stale {
+        eprintln!(
+            "orchlint: stale baseline entry (finding fixed — delete it from {}): {k}",
+            baseline_path.display()
+        );
+    }
+    if new.is_empty() && stale.is_empty() {
+        eprintln!("orchlint: clean — findings exactly match the baseline");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "orchlint: drift — {} new, {} stale (baseline ratchet only moves down)",
+            new.len(),
+            stale.len()
+        );
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,352 @@
+//! Item-level parse: turn a token stream into function records.
+//!
+//! Tracks module nesting (to drop `#[cfg(test)]` modules and `mod tests`),
+//! `impl`/`trait` blocks (to qualify method names as `Type::method`), and
+//! function bodies as brace-matched token spans. Nested `fn`s become their
+//! own records and are carved out of the parent's span ("holes") so every
+//! token belongs to exactly one function.
+
+use crate::lexer::{Comment, Tok, TokKind};
+use std::collections::BTreeMap;
+
+/// One function (free fn, method, or default trait method) in one file.
+#[derive(Debug)]
+pub struct FnRec {
+    /// Path of the containing file, relative to the scan root, `/`-separated.
+    pub file: String,
+    /// `Type::name` inside an `impl`/`trait` block, else bare `name`.
+    pub qname: String,
+    /// Last segment of `qname`.
+    pub name: String,
+    /// Line of the `fn` keyword.
+    pub line: u32,
+    /// Line of the body's closing brace (pragma containment check).
+    pub end_line: u32,
+    /// True for `#[test]` fns and anything inside a test module.
+    pub is_test: bool,
+    /// Token index range of the body, inclusive of both braces.
+    pub body: (usize, usize),
+    /// Sub-ranges of `body` owned by nested fns; skip when scanning.
+    pub holes: Vec<(usize, usize)>,
+    /// Pragma allow-classes -> justification present?
+    pub allows: BTreeMap<String, bool>,
+}
+
+impl FnRec {
+    pub fn allowed(&self, class: &str) -> bool {
+        self.allows.contains_key(class)
+    }
+}
+
+enum Ctx {
+    Mod { test: bool },
+    Impl { ty: String },
+    Trait { name: String },
+    Fn { rec: usize },
+    Other,
+}
+
+/// Parse one file's tokens into fn records (appended to `out`).
+pub fn parse_file(file: &str, toks: &[Tok], comments: &[Comment], out: &mut Vec<FnRec>) {
+    let first_rec = out.len();
+    let mut stack: Vec<Ctx> = Vec::new();
+    let mut pending_test_attr = false; // #[test] / #[cfg(test)] seen since last item
+    let mut i = 0usize;
+    let n = toks.len();
+
+    let in_test_mod = |stack: &[Ctx]| stack.iter().any(|c| matches!(c, Ctx::Mod { test: true }));
+    let enclosing_ty = |stack: &[Ctx]| -> Option<String> {
+        // A nested fn inside another fn is a free fn, not a method.
+        for c in stack.iter().rev() {
+            match c {
+                Ctx::Fn { .. } => return None,
+                Ctx::Impl { ty } => return Some(ty.clone()),
+                Ctx::Trait { name } => return Some(name.clone()),
+                _ => {}
+            }
+        }
+        None
+    };
+
+    while i < n {
+        let t = &toks[i];
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, "#") => {
+                // Attribute: #[...] or #![...]. Collect idents, flag tests.
+                let mut j = i + 1;
+                if j < n && toks[j].text == "!" {
+                    j += 1;
+                }
+                if j < n && toks[j].text == "[" {
+                    let mut depth = 1i32;
+                    let mut k = j + 1;
+                    let mut idents: Vec<&str> = Vec::new();
+                    while k < n && depth > 0 {
+                        match toks[k].text.as_str() {
+                            "[" => depth += 1,
+                            "]" => depth -= 1,
+                            _ => {
+                                if toks[k].kind == TokKind::Ident {
+                                    idents.push(&toks[k].text);
+                                }
+                            }
+                        }
+                        k += 1;
+                    }
+                    let is_test = idents.first() == Some(&"test")
+                        || (idents.first() == Some(&"cfg") && idents.contains(&"test"));
+                    if is_test {
+                        pending_test_attr = true;
+                    }
+                    i = k;
+                    continue;
+                }
+                i += 1;
+            }
+            (TokKind::Ident, "mod") => {
+                // `mod name;` or `mod name { ... }`
+                let name = if i + 1 < n && toks[i + 1].kind == TokKind::Ident {
+                    toks[i + 1].text.clone()
+                } else {
+                    String::new()
+                };
+                let mut j = i + 1;
+                while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                    j += 1;
+                }
+                if j < n && toks[j].text == "{" {
+                    let test = pending_test_attr || name == "tests" || name == "test";
+                    stack.push(Ctx::Mod { test });
+                    i = j + 1;
+                } else {
+                    i = j + 1;
+                }
+                pending_test_attr = false;
+            }
+            (TokKind::Ident, "impl") => {
+                // impl [<G>] Type [for Type2] [where ...] { ... }
+                let mut j = i + 1;
+                // Skip leading generics.
+                if j < n && toks[j].text == "<" {
+                    let mut angle = 1i32;
+                    j += 1;
+                    while j < n && angle > 0 {
+                        match toks[j].text.as_str() {
+                            "<" => angle += 1,
+                            ">" => angle -= 1,
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                }
+                // Read up to `{`, remembering idents at angle-depth 0 before
+                // and after a top-level `for`.
+                let mut before: Vec<String> = Vec::new();
+                let mut after: Vec<String> = Vec::new();
+                let mut saw_for = false;
+                let mut angle = 0i32;
+                while j < n && !(angle == 0 && toks[j].text == "{") {
+                    let tt = &toks[j];
+                    match tt.text.as_str() {
+                        "<" => angle += 1,
+                        ">" => {
+                            if angle > 0 {
+                                angle -= 1;
+                            }
+                        }
+                        "for" if angle == 0 && tt.kind == TokKind::Ident => saw_for = true,
+                        "where" if angle == 0 && tt.kind == TokKind::Ident => {
+                            // type part is over; skip to `{`
+                            while j < n && toks[j].text != "{" {
+                                j += 1;
+                            }
+                            break;
+                        }
+                        _ => {
+                            if tt.kind == TokKind::Ident && angle == 0 {
+                                if saw_for {
+                                    after.push(tt.text.clone());
+                                } else {
+                                    before.push(tt.text.clone());
+                                }
+                            }
+                        }
+                    }
+                    j += 1;
+                }
+                let ty = if saw_for {
+                    after.last().cloned().unwrap_or_default()
+                } else {
+                    before.last().cloned().unwrap_or_default()
+                };
+                if j < n && toks[j].text == "{" {
+                    stack.push(Ctx::Impl { ty });
+                    i = j + 1;
+                } else {
+                    i = j;
+                }
+                pending_test_attr = false;
+            }
+            (TokKind::Ident, "trait") => {
+                let name = if i + 1 < n && toks[i + 1].kind == TokKind::Ident {
+                    toks[i + 1].text.clone()
+                } else {
+                    String::new()
+                };
+                let mut j = i + 1;
+                while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                    j += 1;
+                }
+                if j < n && toks[j].text == "{" {
+                    stack.push(Ctx::Trait { name });
+                    i = j + 1;
+                } else {
+                    i = j + 1;
+                }
+                pending_test_attr = false;
+            }
+            (TokKind::Ident, "fn") => {
+                // Guard against `fn`-pointer types: require an ident next.
+                if i + 1 >= n || toks[i + 1].kind != TokKind::Ident {
+                    i += 1;
+                    continue;
+                }
+                let name = toks[i + 1].text.clone();
+                let line = t.line;
+                // Skip to `;` (no body) or `{` (body) at bracket-depth 0.
+                // `<`/`>` are ignored here: `->` return arrows and comparison
+                // operators make angle counting unreliable, and generic args
+                // cannot contain `{` or `;` outside a brace-matched block.
+                let mut j = i + 2;
+                let mut depth = 0i32;
+                while j < n {
+                    match toks[j].text.as_str() {
+                        "(" | "[" => depth += 1,
+                        ")" | "]" => depth -= 1,
+                        ";" if depth == 0 => break,
+                        "{" if depth == 0 => break,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if j >= n || toks[j].text == ";" {
+                    // Trait method signature without default body.
+                    pending_test_attr = false;
+                    i = j + 1;
+                    continue;
+                }
+                let qname = match enclosing_ty(&stack) {
+                    Some(ty) if !ty.is_empty() => format!("{ty}::{name}"),
+                    _ => name.clone(),
+                };
+                let is_test = pending_test_attr || in_test_mod(&stack);
+                pending_test_attr = false;
+                out.push(FnRec {
+                    file: file.to_string(),
+                    qname,
+                    name,
+                    line,
+                    end_line: 0,
+                    is_test,
+                    body: (j, j),
+                    holes: Vec::new(),
+                    allows: BTreeMap::new(),
+                });
+                stack.push(Ctx::Fn {
+                    rec: out.len() - 1,
+                });
+                i = j + 1;
+            }
+            (TokKind::Punct, "{") => {
+                stack.push(Ctx::Other);
+                i += 1;
+            }
+            (TokKind::Punct, "}") => {
+                if let Some(ctx) = stack.pop() {
+                    if let Ctx::Fn { rec } = ctx {
+                        out[rec].body.1 = i;
+                        out[rec].end_line = t.line;
+                        // Carve this fn out of the nearest enclosing fn.
+                        for c in stack.iter().rev() {
+                            if let Ctx::Fn { rec: outer } = c {
+                                let span = out[rec].body;
+                                out[*outer].holes.push(span);
+                                break;
+                            }
+                        }
+                    }
+                }
+                i += 1;
+            }
+            _ => {
+                i += 1;
+            }
+        }
+    }
+
+    attach_pragmas(&mut out[first_rec..], comments);
+}
+
+/// Parse `orchlint: allow(class[, class…])[: justification]` comments and
+/// attach them to the containing fn (comment inside a body) or, failing
+/// that, the nearest fn declared at or below the comment's line.
+fn attach_pragmas(recs: &mut [FnRec], comments: &[Comment]) {
+    for c in comments {
+        let text = c.text.trim();
+        let Some(rest) = text.strip_prefix("orchlint:") else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix("allow") else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix('(') else {
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            continue;
+        };
+        let classes: Vec<String> = rest[..close]
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        let tail = rest[close + 1..].trim();
+        let justification = tail.strip_prefix(':').map(|s| s.trim()).unwrap_or(tail);
+        let justified = !justification.is_empty();
+
+        // Containment first, then nearest following declaration.
+        let mut target: Option<usize> = None;
+        for (idx, r) in recs.iter().enumerate() {
+            if r.line <= c.line && c.line <= r.end_line {
+                // Innermost containing fn wins (later recs with smaller
+                // spans are nested or subsequent; pick the tightest).
+                match target {
+                    Some(prev)
+                        if recs[prev].end_line - recs[prev].line
+                            <= r.end_line.saturating_sub(r.line) => {}
+                    _ => target = Some(idx),
+                }
+            }
+        }
+        if target.is_none() {
+            let mut best: Option<usize> = None;
+            for (idx, r) in recs.iter().enumerate() {
+                if r.line >= c.line {
+                    match best {
+                        Some(prev) if recs[prev].line <= r.line => {}
+                        _ => best = Some(idx),
+                    }
+                }
+            }
+            target = best;
+        }
+        if let Some(idx) = target {
+            for class in classes {
+                let e = recs[idx].allows.entry(class).or_insert(false);
+                *e = *e || justified;
+            }
+        }
+    }
+}

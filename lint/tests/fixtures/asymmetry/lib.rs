@@ -1,0 +1,79 @@
+//! Seeded collective-asymmetry violations (golden fixture).
+//!
+//! This file is analyzer input, not compiled code. Each fn below seeds
+//! exactly the finding its name describes; `lint/tests/golden.rs` pins
+//! the full key set.
+
+use anyhow::Result;
+
+pub struct World {
+    rank: usize,
+    d: usize,
+}
+
+impl World {
+    fn barrier(&self) -> Result<()> {
+        Ok(())
+    }
+
+    fn all_gather_bytes(&self, bytes: Vec<u8>) -> Result<Vec<Vec<u8>>> {
+        Ok(vec![bytes])
+    }
+
+    fn all_reduce_sum(&self, _data: &mut [f32]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Violation: the barrier only runs on rank 0 — peers hang.
+pub fn rank_gated(w: &World) -> Result<()> {
+    if w.rank == 0 {
+        w.barrier()?;
+    }
+    Ok(())
+}
+
+/// Violation: the gather sits on the Ok arm of a fallible branch.
+pub fn fallible_arm(w: &World, r: Result<Vec<u8>>) -> Result<()> {
+    if let Ok(bytes) = r {
+        w.all_gather_bytes(bytes)?;
+    }
+    Ok(())
+}
+
+/// Violation: a conditional early return deserts the later reduce.
+pub fn early_exit(w: &World, data: &mut [f32]) -> Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    w.all_reduce_sum(data)?;
+    Ok(())
+}
+
+/// Allowed: pragma with a justification — no finding.
+// orchlint: allow(collective-asymmetry): fixture exercise of a justified allow.
+pub fn allowed_gate(w: &World) -> Result<()> {
+    if w.rank == 1 {
+        w.barrier()?;
+    }
+    Ok(())
+}
+
+/// Pragma without a justification — `pragma` finding, and the allow
+/// still suppresses the symmetry finding underneath.
+// orchlint: allow(collective-asymmetry)
+pub fn unjustified_gate(w: &World) -> Result<()> {
+    if w.rank == 2 {
+        w.barrier()?;
+    }
+    Ok(())
+}
+
+/// Symmetric control flow: every rank takes the same path — no finding.
+pub fn symmetric(w: &World, data: &mut [f32]) -> Result<()> {
+    for _round in 0..w.d {
+        w.barrier()?;
+    }
+    w.all_reduce_sum(data)?;
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Clean fixture: symmetric collectives, no panics in scope, no
+//! allocations in the (empty) hot-path closure. Must produce zero
+//! findings.
+
+use anyhow::Result;
+
+pub struct World {
+    rank: usize,
+    d: usize,
+}
+
+impl World {
+    fn barrier(&self) -> Result<()> {
+        Ok(())
+    }
+
+    fn all_reduce_sum(&self, _data: &mut [f32]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Every rank calls both collectives unconditionally; allocation is
+/// fine because nothing here is in a hot-path closure, and `?` is the
+/// sanctioned error path.
+pub fn train_step(w: &World, data: &mut [f32]) -> Result<Vec<f32>> {
+    w.barrier()?;
+    w.all_reduce_sum(data)?;
+    let out: Vec<f32> = data.to_vec();
+    Ok(out)
+}
+
+/// Rank-dependent work that does NOT contain a collective is fine.
+pub fn local_shard(w: &World, items: &[usize]) -> Vec<usize> {
+    items
+        .iter()
+        .copied()
+        .filter(|i| i % w.d == w.rank)
+        .collect()
+}

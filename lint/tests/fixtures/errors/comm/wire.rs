@@ -1,0 +1,35 @@
+//! Seeded error-propagation violations, `comm/`-path scope (golden
+//! fixture). Everything in a file whose path contains `comm/` is in
+//! scope regardless of reachability.
+
+use anyhow::Result;
+
+/// Violations: unwrap + expect on the decode path.
+pub fn decode_header(bytes: &[u8]) -> (u32, u64) {
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    let round = u64::from_le_bytes(
+        bytes[4..12].try_into().expect("8-byte round"),
+    );
+    (magic, round)
+}
+
+/// Violation: panic! instead of a typed error.
+pub fn check_magic(magic: u32) {
+    if magic != 0x4d4c4c4d {
+        panic!("bad magic {magic:#x}");
+    }
+}
+
+/// Allowed: justified pragma — no finding.
+// orchlint: allow(error-propagation): fixture exercise — infallible by construction.
+pub fn tag_of(byte: u8) -> u8 {
+    [0u8, 1, 2].get(byte as usize % 3).copied().unwrap()
+}
+
+/// Clean: propagates instead of aborting.
+pub fn decode_checked(bytes: &[u8]) -> Result<u8> {
+    bytes
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("empty frame"))
+}

@@ -1,0 +1,35 @@
+//! Reachability scope: `barrier` below is a collective implementation,
+//! so its callee closure is in error-propagation scope even though this
+//! file is not under `comm/`. `detached` is unreachable from any
+//! collective and allocates panics freely without findings.
+
+use anyhow::Result;
+
+pub struct Group {
+    arrived: usize,
+    d: usize,
+}
+
+impl Group {
+    /// A collective implementation: seeds the reachability closure.
+    pub fn barrier(&mut self) -> Result<()> {
+        self.arrived += 1;
+        wait_all(self.arrived, self.d);
+        self.arrived = 0;
+        Ok(())
+    }
+}
+
+/// Reachable from `barrier`. Violations: unwrap + unreachable!.
+fn wait_all(arrived: usize, d: usize) {
+    let remaining: Option<usize> = d.checked_sub(arrived);
+    let r = remaining.unwrap();
+    if r > d {
+        unreachable!("arithmetic underflow already handled");
+    }
+}
+
+/// NOT reachable from a collective and not under `comm/` — no finding.
+pub fn detached(v: Option<usize>) -> usize {
+    v.expect("caller checked")
+}

@@ -1,0 +1,47 @@
+//! Seeded hot-path allocation violations (golden fixture).
+//!
+//! The fixture manifest (`hot_paths.toml` beside this file) names
+//! `Planner::step` as the zero-alloc entry point; `helper` is in its
+//! callee closure, `unrelated` is not.
+
+use std::sync::Arc;
+
+pub struct Planner {
+    scratch: Vec<usize>,
+}
+
+impl Planner {
+    /// Entry point. Violations: collect + vec!.
+    pub fn step(&mut self, lens: &[usize]) -> Vec<usize> {
+        let doubled: Vec<usize> = lens.iter().map(|l| l * 2).collect();
+        let padding = vec![0usize; 4];
+        helper(&doubled);
+        self.scratch.extend_from_slice(&padding);
+        std::mem::take(&mut self.scratch)
+    }
+}
+
+/// In the closure. Violations: Vec::new + to_vec + clone + format!.
+/// Not a violation: Arc::clone (refcount bump, not an allocation).
+fn helper(xs: &[usize]) -> usize {
+    let mut acc: Vec<usize> = Vec::new();
+    acc.extend_from_slice(&xs.to_vec());
+    let shared = Arc::new(acc.clone());
+    let twin = Arc::clone(&shared);
+    let _label = format!("{} items", twin.len());
+    shared.len()
+}
+
+/// Allowed: cold-path setup, pragma with justification — no findings.
+// orchlint: allow(hot-path-alloc): one-time setup, runs before the loop.
+pub fn warmup(n: usize) -> Planner {
+    Planner {
+        scratch: Vec::with_capacity(n),
+    }
+}
+
+/// NOT in the closure — allocations here are fine.
+pub fn unrelated() -> String {
+    let v: Vec<u8> = Vec::new();
+    format!("{} bytes", v.len())
+}

@@ -1,0 +1,94 @@
+//! Golden-fixture suite: each mini-tree under `tests/fixtures/` seeds a
+//! known set of violations, and the analyzer must produce exactly those
+//! finding keys — no more, no fewer. Keys are line-free by design, so
+//! these assertions survive fixture reformatting that doesn't change
+//! structure.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+fn keys(root: &Path, hot_entries: &[String]) -> BTreeSet<String> {
+    orchlint::run(root, hot_entries)
+        .expect("fixture tree loads")
+        .into_iter()
+        .map(|f| f.key)
+        .collect()
+}
+
+fn expect_exact(got: BTreeSet<String>, want: &[&str]) {
+    let want: BTreeSet<String> = want.iter().map(|s| s.to_string()).collect();
+    let missing: Vec<_> = want.difference(&got).collect();
+    let extra: Vec<_> = got.difference(&want).collect();
+    assert!(
+        missing.is_empty() && extra.is_empty(),
+        "finding-key mismatch\n  missing: {missing:#?}\n  extra: {extra:#?}"
+    );
+}
+
+#[test]
+fn asymmetry_fixture_pins_all_three_rules_and_pragma_enforcement() {
+    let got = keys(&fixture("asymmetry"), &[]);
+    expect_exact(
+        got,
+        &[
+            "collective-asymmetry::lib.rs::rank_gated::rank-branch:barrier",
+            "collective-asymmetry::lib.rs::fallible_arm::fallible-branch:all_gather_bytes",
+            "collective-asymmetry::lib.rs::early_exit::early-exit:all_reduce_sum",
+            // `unjustified_gate` is allowlisted (no asymmetry finding) but
+            // the bare pragma itself is flagged; `allowed_gate` is silent.
+            "pragma::lib.rs::unjustified_gate::missing-justification:collective-asymmetry",
+        ],
+    );
+}
+
+#[test]
+fn hotpath_fixture_flags_the_entry_closure_and_nothing_else() {
+    let manifest = fixture("hotpath").join("hot_paths.toml");
+    let entries = orchlint::baseline::read_hot_paths(&manifest).expect("fixture manifest");
+    assert_eq!(entries, vec!["Planner::step".to_string()]);
+    let got = keys(&fixture("hotpath"), &entries);
+    expect_exact(
+        got,
+        &[
+            "hot-path-alloc::lib.rs::Planner::step::collect",
+            "hot-path-alloc::lib.rs::Planner::step::vec!",
+            "hot-path-alloc::lib.rs::helper::Vec::new",
+            "hot-path-alloc::lib.rs::helper::to_vec",
+            "hot-path-alloc::lib.rs::helper::clone",
+            "hot-path-alloc::lib.rs::helper::format!",
+            // Absent by design: Arc::clone in `helper` (refcount bump),
+            // everything in `warmup` (justified pragma) and `unrelated`
+            // (outside the entry closure).
+        ],
+    );
+}
+
+#[test]
+fn errors_fixture_covers_both_scope_rules() {
+    let got = keys(&fixture("errors"), &[]);
+    expect_exact(
+        got,
+        &[
+            // Path scope: any file under comm/ is in scope outright.
+            "error-propagation::comm/wire.rs::decode_header::unwrap",
+            "error-propagation::comm/wire.rs::decode_header::expect",
+            "error-propagation::comm/wire.rs::check_magic::panic!",
+            // Reachability scope: `wait_all` is a callee of the collective
+            // `Group::barrier`; `detached` is neither and stays silent.
+            "error-propagation::engine.rs::wait_all::unwrap",
+            "error-propagation::engine.rs::wait_all::unreachable!",
+        ],
+    );
+}
+
+#[test]
+fn clean_fixture_is_silent() {
+    let got = keys(&fixture("clean"), &[]);
+    assert!(got.is_empty(), "clean fixture produced findings: {got:#?}");
+}

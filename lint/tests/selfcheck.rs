@@ -1,0 +1,32 @@
+//! Self-check: analyzing the real `rust/src` tree with the committed
+//! hot-path manifest must reproduce `ci/orchlint_baseline.json` exactly.
+//! This is the same comparison the CI gate runs, expressed as a test so
+//! `cargo test` catches ratchet drift (new findings OR stale baseline
+//! entries) before the static-analysis job does.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+#[test]
+fn real_tree_matches_committed_baseline() {
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let entries = orchlint::baseline::read_hot_paths(&repo.join("ci/hot_paths.toml"))
+        .expect("ci/hot_paths.toml");
+    let baseline = orchlint::baseline::read_baseline(&repo.join("ci/orchlint_baseline.json"))
+        .expect("ci/orchlint_baseline.json");
+
+    let got: BTreeSet<String> = orchlint::run(&repo.join("rust/src"), &entries)
+        .expect("rust/src loads")
+        .into_iter()
+        .map(|f| f.key)
+        .collect();
+
+    let new: Vec<_> = got.difference(&baseline).collect();
+    let stale: Vec<_> = baseline.difference(&got).collect();
+    assert!(
+        new.is_empty() && stale.is_empty(),
+        "orchlint drift vs ci/orchlint_baseline.json\n  \
+         new findings (fix or pragma-allowlist with justification): {new:#?}\n  \
+         stale baseline entries (delete them — the ratchet only shrinks): {stale:#?}"
+    );
+}

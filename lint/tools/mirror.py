@@ -1,0 +1,826 @@
+#!/usr/bin/env python3
+"""Reference mirror of the orchlint analyzer (lint/src/*.rs), line-for-line.
+
+Why this exists: the orchlint baseline (`ci/orchlint_baseline.json`) must be
+an *exact* snapshot of what the Rust binary reports, and the self-check test
+(`lint/tests/selfcheck.rs`) pins that equality in CI. This mirror lets the
+baseline be regenerated and the golden fixtures validated in environments
+without a Rust toolchain. It is a maintenance aid, not the source of truth:
+if the mirror and the Rust analyzer ever disagree, the Rust analyzer wins
+and this file must be fixed to match.
+
+Usage:
+  python3 lint/tools/mirror.py rust/src [--hot-paths ci/hot_paths.toml]
+      [--write-baseline ci/orchlint_baseline.json] [--check ci/orchlint_baseline.json]
+      [--list]
+"""
+
+import json
+import os
+import sys
+
+IDENT = "ident"
+PUNCT = "punct"
+LIT = "lit"
+
+
+# --- lexer.rs -------------------------------------------------------------
+
+def lex(src):
+    b = list(src)
+    n = len(b)
+    toks = []  # (kind, text, line)
+    comments = []  # (line, text)
+    i = 0
+    line = 1
+
+    def is_ident_start(c):
+        return c.isalpha() or c == "_"
+
+    def is_ident_cont(c):
+        return c.isalnum() or c == "_"
+
+    while i < n:
+        c = b[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c.isspace():
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and b[i + 1] == "/":
+            start = i + 2
+            j = start
+            while j < n and b[j] != "\n":
+                j += 1
+            comments.append((line, "".join(b[start:j])))
+            i = j
+            continue
+        if c == "/" and i + 1 < n and b[i + 1] == "*":
+            depth = 1
+            j = i + 2
+            while j < n and depth > 0:
+                if b[j] == "\n":
+                    line += 1
+                    j += 1
+                elif b[j] == "/" and j + 1 < n and b[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                elif b[j] == "*" and j + 1 < n and b[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            i = j
+            continue
+        if c in ("r", "b"):
+            j = i + 1
+            if c == "b" and j < n and b[j] == "r":
+                j += 1
+            hashes = 0
+            k = j
+            while k < n and b[k] == "#":
+                hashes += 1
+                k += 1
+            if k < n and b[k] == '"':
+                lit_line = line
+                m = k + 1
+                while m < n:
+                    if b[m] == "\n":
+                        line += 1
+                        m += 1
+                        continue
+                    if b[m] == '"':
+                        h = 0
+                        while m + 1 + h < n and h < hashes and b[m + 1 + h] == "#":
+                            h += 1
+                        if h == hashes:
+                            m += 1 + hashes
+                            break
+                    if hashes == 0 and b[m] == "\\" and m + 1 < n:
+                        m += 2
+                        continue
+                    m += 1
+                toks.append((LIT, "", lit_line))
+                i = m
+                continue
+            if (
+                c == "r"
+                and i + 1 < n
+                and b[i + 1] == "#"
+                and i + 2 < n
+                and is_ident_start(b[i + 2])
+            ):
+                i += 2
+                start = i
+                j = i
+                while j < n and is_ident_cont(b[j]):
+                    j += 1
+                toks.append((IDENT, "".join(b[start:j]), line))
+                i = j
+                continue
+        if c == '"':
+            lit_line = line
+            j = i + 1
+            while j < n:
+                if b[j] == "\\" and j + 1 < n:
+                    j += 2
+                    continue
+                if b[j] == "\n":
+                    line += 1
+                    j += 1
+                    continue
+                if b[j] == '"':
+                    j += 1
+                    break
+                j += 1
+            toks.append((LIT, "", lit_line))
+            i = j
+            continue
+        if c == "'":
+            if i + 1 < n and b[i + 1] == "\\":
+                j = i + 2
+                while j < n and b[j] != "'":
+                    j += 1
+                toks.append((LIT, "", line))
+                i = j + 1
+                continue
+            if i + 2 < n and b[i + 2] == "'":
+                toks.append((LIT, "", line))
+                i += 3
+                continue
+            toks.append((PUNCT, "'", line))
+            i += 1
+            continue
+        if c.isdigit() and c in "0123456789":
+            j = i + 1
+            while j < n:
+                d = b[j]
+                if (d.isalnum() and d.isascii()) or d == "_":
+                    j += 1
+                    continue
+                if d == "." and j + 1 < n and b[j + 1].isdigit() and b[j + 1].isascii():
+                    j += 1
+                    continue
+                if (
+                    d in "+-"
+                    and b[j - 1] in "eE"
+                    and j + 1 < n
+                    and b[j + 1].isdigit()
+                    and b[j + 1].isascii()
+                ):
+                    j += 1
+                    continue
+                break
+            toks.append((LIT, "", line))
+            i = j
+            continue
+        if is_ident_start(c):
+            start = i
+            j = i
+            while j < n and is_ident_cont(b[j]):
+                j += 1
+            toks.append((IDENT, "".join(b[start:j]), line))
+            i = j
+            continue
+        if c == ":" and i + 1 < n and b[i + 1] == ":":
+            toks.append((PUNCT, "::", line))
+            i += 2
+            continue
+        toks.append((PUNCT, c, line))
+        i += 1
+    return toks, comments
+
+
+# --- parse.rs -------------------------------------------------------------
+
+class FnRec:
+    def __init__(self, file, qname, name, line):
+        self.file = file
+        self.qname = qname
+        self.name = name
+        self.line = line
+        self.end_line = 0
+        self.is_test = False
+        self.body = (0, 0)
+        self.holes = []
+        self.allows = {}  # class -> justified (bool)
+
+    def allowed(self, cls):
+        return cls in self.allows
+
+
+def parse_file(file, toks, comments, out):
+    first_rec = len(out)
+    stack = []  # ("mod", test) | ("impl", ty) | ("trait", name) | ("fn", rec) | ("other",)
+    pending_test_attr = False
+    i = 0
+    n = len(toks)
+
+    def in_test_mod():
+        return any(c[0] == "mod" and c[1] for c in stack)
+
+    def enclosing_ty():
+        for c in reversed(stack):
+            if c[0] == "fn":
+                return None
+            if c[0] in ("impl", "trait"):
+                return c[1]
+        return None
+
+    while i < n:
+        kind, text, tline = toks[i]
+        if kind == PUNCT and text == "#":
+            j = i + 1
+            if j < n and toks[j][1] == "!":
+                j += 1
+            if j < n and toks[j][1] == "[":
+                depth = 1
+                k = j + 1
+                idents = []
+                while k < n and depth > 0:
+                    tk = toks[k][1]
+                    if tk == "[":
+                        depth += 1
+                    elif tk == "]":
+                        depth -= 1
+                    elif toks[k][0] == IDENT:
+                        idents.append(tk)
+                    k += 1
+                is_test = (len(idents) > 0 and idents[0] == "test") or (
+                    len(idents) > 0 and idents[0] == "cfg" and "test" in idents
+                )
+                if is_test:
+                    pending_test_attr = True
+                i = k
+                continue
+            i += 1
+        elif kind == IDENT and text == "mod":
+            name = toks[i + 1][1] if i + 1 < n and toks[i + 1][0] == IDENT else ""
+            j = i + 1
+            while j < n and toks[j][1] not in ("{", ";"):
+                j += 1
+            if j < n and toks[j][1] == "{":
+                test = pending_test_attr or name in ("tests", "test")
+                stack.append(("mod", test))
+                i = j + 1
+            else:
+                i = j + 1
+            pending_test_attr = False
+        elif kind == IDENT and text == "impl":
+            j = i + 1
+            if j < n and toks[j][1] == "<":
+                angle = 1
+                j += 1
+                while j < n and angle > 0:
+                    tj = toks[j][1]
+                    if tj == "<":
+                        angle += 1
+                    elif tj == ">":
+                        angle -= 1
+                    j += 1
+            before = []
+            after = []
+            saw_for = False
+            angle = 0
+            while j < n and not (angle == 0 and toks[j][1] == "{"):
+                tk, tt, _ = toks[j]
+                if tt == "<":
+                    angle += 1
+                elif tt == ">":
+                    if angle > 0:
+                        angle -= 1
+                elif tt == "for" and angle == 0 and tk == IDENT:
+                    saw_for = True
+                elif tt == "where" and angle == 0 and tk == IDENT:
+                    while j < n and toks[j][1] != "{":
+                        j += 1
+                    break
+                elif tk == IDENT and angle == 0:
+                    if saw_for:
+                        after.append(tt)
+                    else:
+                        before.append(tt)
+                j += 1
+            if saw_for:
+                ty = after[-1] if after else ""
+            else:
+                ty = before[-1] if before else ""
+            if j < n and toks[j][1] == "{":
+                stack.append(("impl", ty))
+                i = j + 1
+            else:
+                i = j
+            pending_test_attr = False
+        elif kind == IDENT and text == "trait":
+            name = toks[i + 1][1] if i + 1 < n and toks[i + 1][0] == IDENT else ""
+            j = i + 1
+            while j < n and toks[j][1] not in ("{", ";"):
+                j += 1
+            if j < n and toks[j][1] == "{":
+                stack.append(("trait", name))
+                i = j + 1
+            else:
+                i = j + 1
+            pending_test_attr = False
+        elif kind == IDENT and text == "fn":
+            if i + 1 >= n or toks[i + 1][0] != IDENT:
+                i += 1
+                continue
+            name = toks[i + 1][1]
+            fline = tline
+            j = i + 2
+            depth = 0
+            while j < n:
+                tj = toks[j][1]
+                if tj in ("(", "["):
+                    depth += 1
+                elif tj in (")", "]"):
+                    depth -= 1
+                elif tj == ";" and depth == 0:
+                    break
+                elif tj == "{" and depth == 0:
+                    break
+                j += 1
+            if j >= n or toks[j][1] == ";":
+                pending_test_attr = False
+                i = j + 1
+                continue
+            ty = enclosing_ty()
+            qname = f"{ty}::{name}" if ty else name
+            rec = FnRec(file, qname, name, fline)
+            rec.is_test = pending_test_attr or in_test_mod()
+            pending_test_attr = False
+            rec.body = (j, j)
+            out.append(rec)
+            stack.append(("fn", len(out) - 1))
+            i = j + 1
+        elif kind == PUNCT and text == "{":
+            stack.append(("other",))
+            i += 1
+        elif kind == PUNCT and text == "}":
+            if stack:
+                ctx = stack.pop()
+                if ctx[0] == "fn":
+                    rec = out[ctx[1]]
+                    rec.body = (rec.body[0], i)
+                    rec.end_line = tline
+                    for c in reversed(stack):
+                        if c[0] == "fn":
+                            out[c[1]].holes.append(rec.body)
+                            break
+            i += 1
+        else:
+            i += 1
+
+    attach_pragmas(out[first_rec:], comments)
+
+
+def attach_pragmas(recs, comments):
+    for cline, ctext in comments:
+        text = ctext.strip()
+        if not text.startswith("orchlint:"):
+            continue
+        rest = text[len("orchlint:"):].lstrip()
+        if not rest.startswith("allow"):
+            continue
+        rest = rest[len("allow"):].lstrip()
+        if not rest.startswith("("):
+            continue
+        rest = rest[1:]
+        close = rest.find(")")
+        if close < 0:
+            continue
+        classes = [s.strip() for s in rest[:close].split(",") if s.strip()]
+        tail = rest[close + 1:].strip()
+        justification = tail[1:].strip() if tail.startswith(":") else tail
+        justified = len(justification) > 0
+
+        target = None
+        for idx, r in enumerate(recs):
+            if r.line <= cline <= r.end_line:
+                if target is not None:
+                    prev = recs[target]
+                    if prev.end_line - prev.line <= max(r.end_line - r.line, 0):
+                        continue
+                target = idx
+        if target is None:
+            best = None
+            for idx, r in enumerate(recs):
+                if r.line >= cline:
+                    if best is not None and recs[best].line <= r.line:
+                        continue
+                    best = idx
+            target = best
+        if target is not None:
+            for cls in classes:
+                prev = recs[target].allows.get(cls, False)
+                recs[target].allows[cls] = prev or justified
+
+
+# --- analyses.rs ----------------------------------------------------------
+
+COLLECTIVES = [
+    "all_to_all_bytes",
+    "all_to_all_shards",
+    "all_gather_bytes",
+    "all_reduce_sum",
+    "barrier",
+    "heartbeat",
+]
+CLASS_SYMMETRY = "collective-asymmetry"
+CLASS_HOT_PATH = "hot-path-alloc"
+CLASS_ERROR_PROP = "error-propagation"
+KNOWN_CLASSES = [CLASS_SYMMETRY, CLASS_HOT_PATH, CLASS_ERROR_PROP]
+RANK_IDENTS = ["rank", "me", "my_rank", "rank_id"]
+
+
+class Findings:
+    def __init__(self):
+        self.map = {}
+
+    def add(self, cls, rec, detail, line):
+        key = f"{cls}::{rec.file}::{rec.qname}::{detail}"
+        f = self.map.setdefault(
+            key,
+            {
+                "key": key,
+                "class": cls,
+                "file": rec.file,
+                "function": rec.qname,
+                "detail": detail,
+                "lines": [],
+            },
+        )
+        if line not in f["lines"]:
+            f["lines"].append(line)
+            f["lines"].sort()
+
+    def into_sorted(self):
+        return [self.map[k] for k in sorted(self.map)]
+
+
+def body_tokens(rec, toks):
+    start, end = rec.body
+    out = []
+    i = start
+    holes = {hs: he for hs, he in rec.holes}
+    while i <= end and i < len(toks):
+        if i in holes:
+            i = holes[i] + 1
+            continue
+        out.append((i, toks[i]))
+        i += 1
+    return out
+
+
+def callees(rec, toks):
+    body = body_tokens(rec, toks)
+    out = set()
+    for w in range(len(body)):
+        _, t = body[w]
+        if t[0] != IDENT:
+            continue
+        if w + 1 >= len(body):
+            continue
+        if body[w + 1][1][1] != "(":
+            continue
+        if w > 0 and body[w - 1][1][1] == "fn":
+            continue
+        out.add(t[1])
+    return out
+
+
+def build_callgraph(recs, toks_by_file):
+    by_name = {}
+    for i, r in enumerate(recs):
+        if not r.is_test:
+            by_name.setdefault(r.name, []).append(i)
+    edges = [[] for _ in recs]
+    for i, r in enumerate(recs):
+        if r.is_test:
+            continue
+        toks = toks_by_file[r.file]
+        for name in callees(r, toks):
+            for t in by_name.get(name, []):
+                if t != i:
+                    edges[i].append(t)
+    return edges
+
+
+def closure(edges, seeds):
+    seen = set(seeds)
+    q = list(seeds)
+    while q:
+        i = q.pop(0)
+        for j in edges[i]:
+            if j not in seen:
+                seen.add(j)
+                q.append(j)
+    return seen
+
+
+def check_symmetry(rec, toks, out):
+    if rec.is_test or rec.allowed(CLASS_SYMMETRY):
+        return
+    body = body_tokens(rec, toks)
+    ctx = []  # (rank_dep, fallible)
+    brace_owner = []
+    saw_cond_exit = False
+    w = 0
+    while w < len(body):
+        _, t = body[w]
+        if t[0] == IDENT and t[1] in ("if", "match", "while", "for"):
+            depth = 0
+            j = w + 1
+            rank_dep = False
+            fallible = False
+            while j < len(body):
+                _, h = body[j]
+                ht = h[1]
+                if ht in ("(", "["):
+                    depth += 1
+                elif ht in (")", "]"):
+                    depth -= 1
+                elif ht == "{" and depth == 0:
+                    break
+                if h[0] == IDENT:
+                    if ht in RANK_IDENTS:
+                        rank_dep = True
+                    if ht in (
+                        "Ok",
+                        "Err",
+                        "Some",
+                        "None",
+                        "is_ok",
+                        "is_err",
+                        "is_some",
+                        "is_none",
+                    ):
+                        fallible = True
+                j += 1
+            if j < len(body):
+                ctx.append((rank_dep, fallible))
+                brace_owner.append(True)
+                w = j + 1
+                continue
+            w += 1
+            continue
+        if t[1] == "{":
+            brace_owner.append(False)
+            w += 1
+            continue
+        if t[1] == "}":
+            if brace_owner:
+                owned = brace_owner.pop()
+                if owned:
+                    popped = ctx.pop() if ctx else None
+                    if w + 1 < len(body) and body[w + 1][1][1] == "else":
+                        if popped is not None:
+                            nxt2 = (
+                                body[w + 2][1][1] if w + 2 < len(body) else None
+                            )
+                            if nxt2 != "if":
+                                ctx.append(popped)
+                                brace_owner.append(True)
+                                w += 3
+                                continue
+            w += 1
+            continue
+        if t[0] == IDENT:
+            name = t[1]
+            nxt = body[w + 1][1][1] if w + 1 < len(body) else None
+            if (name == "return" or (name == "bail" and nxt == "!")) and ctx:
+                saw_cond_exit = True
+            if name in COLLECTIVES and nxt == "(":
+                rank_dep = any(r for r, _ in ctx)
+                fallible = any(f for _, f in ctx)
+                if rank_dep:
+                    out.add(CLASS_SYMMETRY, rec, f"rank-branch:{name}", t[2])
+                if fallible:
+                    out.add(CLASS_SYMMETRY, rec, f"fallible-branch:{name}", t[2])
+                if saw_cond_exit and not rank_dep and not fallible:
+                    out.add(CLASS_SYMMETRY, rec, f"early-exit:{name}", t[2])
+        w += 1
+
+
+ALLOC_NEW_TYPES = (
+    "Vec",
+    "Box",
+    "String",
+    "VecDeque",
+    "HashMap",
+    "BTreeMap",
+    "HashSet",
+    "BTreeSet",
+)
+
+
+def check_hot_path(rec, toks, out):
+    if rec.is_test or rec.allowed(CLASS_HOT_PATH):
+        return
+    body = body_tokens(rec, toks)
+    for w in range(len(body)):
+        _, t = body[w]
+        if t[0] != IDENT:
+            continue
+        nxt = body[w + 1][1][1] if w + 1 < len(body) else None
+        prev = body[w - 1][1][1] if w > 0 else ""
+        prev2 = body[w - 2][1][1] if w > 1 else ""
+        name = t[1]
+        construct = None
+        if name == "new" and nxt == "(" and prev == "::" and prev2 in ALLOC_NEW_TYPES:
+            construct = f"{prev2}::new"
+        elif name == "clone" and nxt == "(":
+            if not (prev == "::" and prev2 in ("Arc", "Rc")):
+                construct = "clone"
+        elif name in ("to_vec", "to_string", "to_owned", "collect", "with_capacity") and nxt == "(":
+            construct = name
+        elif name in ("vec", "format") and nxt == "!":
+            construct = f"{name}!"
+        if construct is not None:
+            out.add(CLASS_HOT_PATH, rec, construct, t[2])
+
+
+def check_error_prop(rec, toks, out):
+    if rec.is_test or rec.allowed(CLASS_ERROR_PROP):
+        return
+    body = body_tokens(rec, toks)
+    for w in range(len(body)):
+        _, t = body[w]
+        if t[0] != IDENT:
+            continue
+        nxt = body[w + 1][1][1] if w + 1 < len(body) else None
+        name = t[1]
+        construct = None
+        if name in ("unwrap", "expect") and nxt == "(":
+            construct = name
+        elif name in ("panic", "unreachable", "todo", "unimplemented") and nxt == "!":
+            construct = f"{name}!"
+        if construct is not None:
+            out.add(CLASS_ERROR_PROP, rec, construct, t[2])
+
+
+def check_pragmas(rec, out):
+    for cls in sorted(rec.allows):
+        justified = rec.allows[cls]
+        if cls not in KNOWN_CLASSES:
+            out.add("pragma", rec, f"unknown-class:{cls}", rec.line)
+        elif not justified:
+            out.add("pragma", rec, f"missing-justification:{cls}", rec.line)
+
+
+# --- lib.rs ---------------------------------------------------------------
+
+def load_tree(root):
+    files = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in filenames:
+            if fn.endswith(".rs"):
+                files.append(os.path.join(dirpath, fn))
+    files.sort()
+    fns = []
+    toks_by_file = {}
+    for path in files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as f:
+            src = f.read()
+        toks, comments = lex(src)
+        parse_file(rel, toks, comments, fns)
+        toks_by_file[rel] = toks
+    return fns, toks_by_file
+
+
+def analyze(fns, toks_by_file, hot_entries):
+    edges = build_callgraph(fns, toks_by_file)
+    out = Findings()
+
+    hot_seeds = []
+    for i, r in enumerate(fns):
+        if r.is_test:
+            continue
+        for e in hot_entries:
+            hit = (r.qname == e) if "::" in e else (r.name == e)
+            if hit:
+                hot_seeds.append(i)
+    hot_closure = closure(edges, hot_seeds)
+
+    coll_seeds = [
+        i for i, r in enumerate(fns) if not r.is_test and r.name in COLLECTIVES
+    ]
+    coll_closure = closure(edges, coll_seeds)
+
+    for i, r in enumerate(fns):
+        if r.is_test:
+            continue
+        toks = toks_by_file[r.file]
+        check_pragmas(r, out)
+        check_symmetry(r, toks, out)
+        if i in hot_closure:
+            check_hot_path(r, toks, out)
+        if "comm/" in r.file or i in coll_closure:
+            check_error_prop(r, toks, out)
+    return out.into_sorted()
+
+
+# --- baseline.rs ----------------------------------------------------------
+
+def read_hot_paths(path):
+    out = []
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line.startswith("#"):
+                continue
+            rest = line
+            while '"' in rest:
+                open_q = rest.find('"')
+                tail = rest[open_q + 1:]
+                close_q = tail.find('"')
+                if close_q < 0:
+                    break
+                s = tail[:close_q]
+                if s:
+                    out.append(s)
+                rest = tail[close_q + 1:]
+    return out
+
+
+BASELINE_HEADER = """{
+  "description": "orchlint ratchet baseline: the exact finding-key set `cargo run -p orchlint -- rust/src` must produce. CI fails on any finding absent from this list AND on any stale entry, so the list can only change deliberately. The intent is monotone shrinkage: fix a finding (or pragma-allowlist it with a justification) and delete its key here.",
+  "rebaseline_procedure": "Run `cargo run -p orchlint -- rust/src --write-baseline` from the repo root and commit the diff. Additions require PR justification per key (they mean a new asymmetric collective, hot-path allocation, or panic path was introduced); deletions are always welcome.",
+"""
+
+
+def write_baseline(path, findings):
+    s = BASELINE_HEADER
+    s += '  "findings": [\n'
+    for i, f in enumerate(findings):
+        assert '"' not in f["key"] and "\\" not in f["key"]
+        s += f'    "{f["key"]}"'
+        s += ",\n" if i + 1 < len(findings) else "\n"
+    s += "  ]\n}\n"
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write(s)
+
+
+def main(argv):
+    root = None
+    hot_paths = "ci/hot_paths.toml"
+    write_to = None
+    check = None
+    list_mode = False
+    it = iter(argv)
+    for a in it:
+        if a == "--hot-paths":
+            hot_paths = next(it)
+        elif a == "--write-baseline":
+            write_to = next(it)
+        elif a == "--check":
+            check = next(it)
+        elif a == "--list":
+            list_mode = True
+        elif root is None and not a.startswith("-"):
+            root = a
+        else:
+            print(f"mirror: unknown arg {a}", file=sys.stderr)
+            return 2
+    if root is None:
+        print(__doc__, file=sys.stderr)
+        return 2
+    hot_entries = read_hot_paths(hot_paths) if os.path.exists(hot_paths) else []
+    fns, toks_by_file = load_tree(root)
+    findings = analyze(fns, toks_by_file, hot_entries)
+    per_class = {}
+    for f in findings:
+        per_class[f["class"]] = per_class.get(f["class"], 0) + 1
+    print(
+        f"mirror: {len(findings)} findings "
+        f"({', '.join(f'{c}: {n}' for c, n in sorted(per_class.items())) or 'none'})",
+        file=sys.stderr,
+    )
+    if list_mode:
+        for f in findings:
+            print(f'{f["key"]}  lines={f["lines"]}')
+    if write_to:
+        write_baseline(write_to, findings)
+        print(f"mirror: wrote {write_to} ({len(findings)} keys)", file=sys.stderr)
+    if check:
+        with open(check, encoding="utf-8") as fh:
+            base = set(json.load(fh)["findings"])
+        cur = {f["key"] for f in findings}
+        new = sorted(cur - base)
+        stale = sorted(base - cur)
+        for k in new:
+            print(f"mirror: NEW finding: {k}", file=sys.stderr)
+        for k in stale:
+            print(f"mirror: stale baseline entry: {k}", file=sys.stderr)
+        if new or stale:
+            return 1
+        print("mirror: clean — findings exactly match the baseline", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

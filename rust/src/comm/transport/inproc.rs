@@ -154,7 +154,7 @@ impl MonitoredBarrier {
             return Ok(());
         }
         let generation = s.generation;
-        let deadline = self.timeout.map(|t| Instant::now() + t);
+        let deadline = self.timeout.map(|t| (Instant::now() + t, t));
         loop {
             match deadline {
                 None => {
@@ -163,7 +163,7 @@ impl MonitoredBarrier {
                         .wait(s)
                         .unwrap_or_else(|p| p.into_inner());
                 }
-                Some(deadline) => {
+                Some((deadline, timeout)) => {
                     let now = Instant::now();
                     if now >= deadline {
                         // Attribution: the first rank with no arrival
@@ -177,7 +177,7 @@ impl MonitoredBarrier {
                              (first missing rank: {})",
                             s.arrived,
                             self.d,
-                            self.timeout.unwrap(),
+                            timeout,
                             dead.map_or("?".to_string(), |r| r.to_string()),
                         );
                         let broken = Broken { why, dead };
@@ -240,6 +240,18 @@ impl<T: Send + Clone> Collectives<T> {
         self.d
     }
 
+    /// Ride through poisoning, same rationale as [`MonitoredBarrier::lock`]:
+    /// a peer that panicked while holding a cell lock never reaches its
+    /// next barrier, so the watchdog breaks the group and every survivor
+    /// errors out — panicking here would cascade the abort instead.
+    fn lock_cells(&self) -> MutexGuard<'_, Vec<Vec<T>>> {
+        self.cells.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn lock_slots(&self) -> MutexGuard<'_, Vec<Option<T>>> {
+        self.slots.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Point-to-point rearrangement: each rank submits (dst, payload)
     /// pairs and receives the (src, payload) pairs addressed to it.
     /// Payloads that stay on-rank take the same path (loopback).
@@ -249,15 +261,17 @@ impl<T: Send + Clone> Collectives<T> {
         sends: Vec<(usize, T)>,
     ) -> Result<Vec<(usize, T)>> {
         {
-            let mut cells = self.cells.lock().unwrap();
+            let mut cells = self.lock_cells();
             for (dst, item) in sends {
-                assert!(dst < self.d, "all_to_all dst {dst} out of range");
+                if dst >= self.d {
+                    bail!("all_to_all dst {dst} out of range (d = {})", self.d);
+                }
                 cells[rank * self.d + dst].push(item);
             }
         }
         self.barrier.wait(rank)?;
         let received = {
-            let mut cells = self.cells.lock().unwrap();
+            let mut cells = self.lock_cells();
             let mut out = Vec::new();
             for src in 0..self.d {
                 for item in cells[src * self.d + rank].drain(..) {
@@ -274,12 +288,12 @@ impl<T: Send + Clone> Collectives<T> {
     /// rank order.
     pub(crate) fn all_gather(&self, rank: usize, item: T) -> Result<Vec<T>> {
         {
-            let mut slots = self.slots.lock().unwrap();
+            let mut slots = self.lock_slots();
             slots[rank] = Some(item);
         }
         self.barrier.wait(rank)?;
         let all: Vec<T> = {
-            let slots = self.slots.lock().unwrap();
+            let slots = self.lock_slots();
             let mut all = Vec::with_capacity(self.d);
             for (src, s) in slots.iter().enumerate() {
                 match s {
@@ -298,7 +312,7 @@ impl<T: Send + Clone> Collectives<T> {
         // its own slot strictly after every rank's read (the second
         // barrier) and redeposits before the next round's read barrier,
         // so no reader ever observes the gap.
-        self.slots.lock().unwrap()[rank] = None;
+        self.lock_slots()[rank] = None;
         Ok(all)
     }
 
@@ -577,7 +591,9 @@ impl ElasticFactory for InProcElastic {
         epochs.entry(epoch).or_default().registered.insert(me);
         self.cv.notify_all();
         loop {
-            let state = epochs.get_mut(&epoch).expect("epoch entry exists");
+            let state = epochs.get_mut(&epoch).ok_or_else(|| {
+                anyhow!("rendezvous epoch {epoch}: state vanished mid-join")
+            })?;
             if state.sealed.is_none() {
                 let complete = expected
                     .iter()
@@ -605,10 +621,12 @@ impl ElasticFactory for InProcElastic {
                     );
                 }
                 let members = members.clone();
-                let t = state
-                    .handles
-                    .remove(&me)
-                    .expect("sealed member takes its handle exactly once");
+                let t = state.handles.remove(&me).ok_or_else(|| {
+                    anyhow!(
+                        "rendezvous epoch {epoch}: member {me} has no \
+                         handle left (double join?)"
+                    )
+                })?;
                 return Ok((members, t));
             }
             let remaining = deadline

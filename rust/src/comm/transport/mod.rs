@@ -144,13 +144,29 @@ fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
+/// Copy a compile-time-sized array out of a slice, as a `Result`.
+///
+/// Every caller passes a slice it just bounds-checked (or a const-range
+/// view of a fixed array), so the error arm is unreachable in practice —
+/// but these conversions sit on the collective decode path, where a
+/// length confusion must propagate as an error to the peer-death
+/// classifier rather than abort the process mid-round.
+pub(crate) fn fixed<const N: usize>(b: &[u8]) -> Result<[u8; N]> {
+    if b.len() != N {
+        bail!("wire: expected {N} bytes, got {}", b.len());
+    }
+    let mut a = [0u8; N];
+    a.copy_from_slice(b);
+    Ok(a)
+}
+
 fn take_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
     let end = *pos + 8;
     let slice = bytes
         .get(*pos..end)
         .ok_or_else(|| anyhow!("wire: truncated u64 at offset {pos}"))?;
     *pos = end;
-    Ok(u64::from_le_bytes(slice.try_into().unwrap()))
+    Ok(u64::from_le_bytes(fixed::<8>(slice)?))
 }
 
 fn take_tag(bytes: &[u8], pos: &mut usize, want: u8) -> Result<()> {
@@ -180,7 +196,12 @@ pub fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
     }
     Ok(bytes
         .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .map(|c| {
+            // chunks_exact(4) yields exactly 4 bytes per chunk.
+            let mut a = [0u8; 4];
+            a.copy_from_slice(c);
+            f32::from_le_bytes(a)
+        })
         .collect())
 }
 
@@ -225,7 +246,12 @@ fn take_i32s(bytes: &[u8], pos: &mut usize) -> Result<Vec<i32>> {
     *pos = end;
     Ok(slice
         .chunks_exact(4)
-        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .map(|c| {
+            // chunks_exact(4) yields exactly 4 bytes per chunk.
+            let mut a = [0u8; 4];
+            a.copy_from_slice(c);
+            i32::from_le_bytes(a)
+        })
         .collect())
 }
 
@@ -471,6 +497,11 @@ pub trait Transport: Send {
     /// reduction order), then all-gathers the reduced chunks. Peak
     /// extra memory is O(n) per rank — independent of `d`, unlike the
     /// all-gather-of-full-buffers strawman's O(d·n).
+    // orchlint: allow(collective-asymmetry): the d == 1 early return and
+    // the shape bails between phases key on world size and on frames the
+    // whole group already exchanged — rank-invariant conditions, so every
+    // rank takes the same exit; a genuine peer failure surfaces as Err
+    // from the underlying collective before any bail here can diverge.
     fn all_reduce_sum(&self, data: &mut [f32]) -> Result<()> {
         let d = self.world_size();
         let rank = self.rank();
@@ -722,6 +753,9 @@ pub mod registry {
 
     /// Resolve or panic with the list of valid names — for internal
     /// callers whose names are compile-time constants.
+    // orchlint: allow(error-propagation): intentional abort API for
+    // compile-time-constant names (a typo here is a build bug, not a
+    // runtime condition); fallible callers use `create` instead.
     pub fn must(name: &str) -> Arc<dyn TransportFactory> {
         create(name).unwrap_or_else(|| {
             panic!("unknown transport '{name}' (registered: {NAMES:?})")

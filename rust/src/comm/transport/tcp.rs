@@ -42,7 +42,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::{Transport, TransportError, TransportFactory};
+use super::{fixed, Transport, TransportError, TransportFactory};
 
 const FRAME_MAGIC: u32 = 0x4f43_4d4c; // "OCML"
 pub(crate) const HANDSHAKE_MAGIC: u32 = 0x4f43_4853; // "OCHS"
@@ -129,10 +129,10 @@ pub(crate) fn read_frame(
             op_name(want_op)
         )
     })?;
-    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    let magic = u32::from_le_bytes(fixed::<4>(&header[0..4])?);
     let op = header[4];
-    let round = u64::from_le_bytes(header[5..13].try_into().unwrap());
-    let count = u64::from_le_bytes(header[13..21].try_into().unwrap());
+    let round = u64::from_le_bytes(fixed::<8>(&header[5..13])?);
+    let count = u64::from_le_bytes(fixed::<8>(&header[13..21])?);
     if magic != FRAME_MAGIC {
         bail!("tcp transport: bad frame magic {magic:#x} (corrupt stream)");
     }
@@ -307,7 +307,10 @@ impl Transport for TcpLoopbackTransport {
                     got.len()
                 );
             }
-            slots[src] = Some(got.pop().unwrap());
+            // Exactly one element after the length check; if it were
+            // somehow absent the slot stays `None` and the missing-
+            // contribution collect below reports it as an error.
+            slots[src] = got.pop();
         }
         slots[self.rank] = Some(bytes);
         slots
@@ -361,7 +364,7 @@ pub(crate) const DIAL_BACKOFF_START: Duration = Duration::from_millis(10);
 /// addresses it just bound, so there is nothing to retry there.
 pub(crate) fn dial_with_retry(addr: SocketAddr) -> Result<TcpStream> {
     let mut delay = DIAL_BACKOFF_START;
-    let mut last: Option<std::io::Error> = None;
+    let mut last: Option<anyhow::Error> = None;
     for attempt in 0..DIAL_ATTEMPTS {
         if attempt > 0 {
             std::thread::sleep(delay);
@@ -369,10 +372,11 @@ pub(crate) fn dial_with_retry(addr: SocketAddr) -> Result<TcpStream> {
         }
         match TcpStream::connect(addr) {
             Ok(stream) => return Ok(stream),
-            Err(e) => last = Some(e),
+            Err(e) => last = Some(anyhow::Error::from(e)),
         }
     }
-    Err(anyhow::Error::from(last.expect("at least one attempt ran"))
+    Err(last
+        .unwrap_or_else(|| anyhow!("no connect attempt ran"))
         .context(format!(
             "dialing {addr} failed after {DIAL_ATTEMPTS} attempts \
              with exponential backoff"
@@ -395,11 +399,11 @@ pub(crate) fn read_hello(stream: &TcpStream) -> Result<usize> {
     let mut hello = [0u8; 8];
     let mut r = stream;
     r.read_exact(&mut hello).context("reading handshake")?;
-    let magic = u32::from_le_bytes(hello[0..4].try_into().unwrap());
+    let magic = u32::from_le_bytes(fixed::<4>(&hello[0..4])?);
     if magic != HANDSHAKE_MAGIC {
         bail!("bad handshake magic {magic:#x}");
     }
-    Ok(u32::from_le_bytes(hello[4..8].try_into().unwrap()) as usize)
+    Ok(u32::from_le_bytes(fixed::<4>(&hello[4..8])?) as usize)
 }
 
 // ---------------------------------------------------------------------------
@@ -530,11 +534,9 @@ impl TransportFactory for TcpLoopbackFactory {
                 (&stream)
                     .read_exact(&mut hello)
                     .context("reading handshake")?;
-                let magic =
-                    u32::from_le_bytes(hello[0..4].try_into().unwrap());
+                let magic = u32::from_le_bytes(fixed::<4>(&hello[0..4])?);
                 let peer =
-                    u32::from_le_bytes(hello[4..8].try_into().unwrap())
-                        as usize;
+                    u32::from_le_bytes(fixed::<4>(&hello[4..8])?) as usize;
                 if magic != HANDSHAKE_MAGIC {
                     bail!("bad handshake magic {magic:#x} on rank {j}");
                 }

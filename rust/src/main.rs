@@ -234,7 +234,13 @@ fn cmd_elastic(args: &Args) {
         eprintln!("invalid elastic configuration: {e:#}");
         std::process::exit(2);
     }
-    let fault = FaultPlan::from_args(args);
+    let fault = match FaultPlan::from_args(args) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("invalid fault plan: {e:#}");
+            std::process::exit(2);
+        }
+    };
     // `tcp-multiproc` runs every member as a real OS process re-spawning
     // this binary's `worker` subcommand; `--in-process` (and every other
     // transport) keeps members as threads of this process.

@@ -147,19 +147,20 @@ impl FaultPlan {
 
     /// CLI flags (`--fault-rank` / `--fault-step` /
     /// `--fault-collective` / `--fault-resign`), falling back to the
-    /// environment when no flag names a rank.
-    pub fn from_args(args: &Args) -> FaultPlan {
-        match args.get("fault-rank") {
+    /// environment when no flag names a rank. A malformed flag is a
+    /// typed error for the CLI layer to report, not a panic.
+    pub fn from_args(args: &Args) -> Result<FaultPlan> {
+        Ok(match args.get("fault-rank") {
             None => FaultPlan::from_env(),
             Some(r) => FaultPlan {
-                rank: Some(r.parse().unwrap_or_else(|_| {
-                    panic!("--fault-rank expects an integer, got '{r}'")
-                })),
+                rank: Some(r.parse().map_err(|_| {
+                    anyhow!("--fault-rank expects an integer, got '{r}'")
+                })?),
                 step: args.usize("fault-step", 0),
                 collective: args.usize("fault-collective", 0),
                 resign: args.flag("fault-resign"),
             },
-        }
+        })
     }
 }
 
@@ -256,6 +257,11 @@ enum StepSignal {
 /// Parameters are returned, not mutated — the caller commits them only
 /// when the step completed, so an interrupted step leaves rank state
 /// untouched for safe re-execution.
+// orchlint: allow(collective-asymmetry): deterministic fault injection —
+// the `die_at` early returns exist precisely to desert the collective
+// schedule on one rank and exercise shrink-the-world recovery; survivors
+// detect the desertion via PeerDead/watchdog, which is the behavior under
+// test.
 fn synthetic_step(
     t: &dyn Transport,
     plan: &StepPlan,
@@ -764,7 +770,13 @@ pub fn worker_main(args: &Args) -> i32 {
         eprintln!("worker {id}: invalid configuration: {e:#}");
         return 2;
     }
-    let fault = FaultPlan::from_args(args);
+    let fault = match FaultPlan::from_args(args) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("worker {id}: {e:#}");
+            return 2;
+        }
+    };
     let elastic = TcpElastic {
         rdzv: FileRendezvous::new(&dir),
         timeout: Some(detect_timeout(5)),
@@ -897,7 +909,7 @@ mod tests {
     fn fault_plan_env_and_args_round_trip() {
         // No flags, no env → no fault.
         let args = Args::parse(Vec::<String>::new());
-        assert_eq!(FaultPlan::from_args(&args), FaultPlan::none());
+        assert_eq!(FaultPlan::from_args(&args).unwrap(), FaultPlan::none());
 
         let args = Args::parse(
             [
@@ -913,7 +925,7 @@ mod tests {
             .iter()
             .map(|s| s.to_string()),
         );
-        let f = FaultPlan::from_args(&args);
+        let f = FaultPlan::from_args(&args).unwrap();
         assert_eq!(
             f,
             FaultPlan::resignation(2, 3).at_collective(1)
