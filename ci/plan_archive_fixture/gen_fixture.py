@@ -1,0 +1,179 @@
+#!/usr/bin/env python3
+"""Regenerate the golden plan-archive fixture.
+
+The fixture is a byte-exact, minimal-but-valid archive (an empty
+session's export) used by `rust/tests/plan_archive.rs` to pin the
+on-disk format: payload headers, the length-prefixed little-endian
+codec, payload sha256s, and the manifest's canonical-JSON self-hash.
+If `cargo test` fails against these files after a codec change, the
+format changed — bump the archive `SCHEMA_VERSION`/`PAYLOAD_VERSION`
+in `rust/src/orchestrator/archive.rs`, then rerun:
+
+    python3 ci/plan_archive_fixture/gen_fixture.py
+
+and commit the regenerated files together with the version bump.
+
+Everything here mirrors rust/src/orchestrator/archive.rs and
+rust/src/util/json.rs; the replication is deliberate — an independent
+writer is exactly what catches accidental format drift.
+"""
+
+import decimal
+import hashlib
+import pathlib
+import struct
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+MAGIC = b"OMLLMAR1"
+PAYLOAD_VERSION = 1
+KIND_CACHES, KIND_PLANS, KIND_PROFILES = 1, 2, 3
+SCHEMA_VERSION = "1.0.0"
+
+# A fixed provenance instant; the manifest must be byte-stable.
+CREATED_UNIX = 1754500000
+# Topology::h100(4)
+TOPOLOGY = dict(
+    instances=4,
+    per_node=8,
+    intra_bw=450.0e9,
+    inter_bw=50.0e9,
+    base_latency=20e-6,
+)
+CACHE_CAPACITY = 32
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def u16(v):
+    return struct.pack("<H", v)
+
+
+def f64(v):
+    return struct.pack("<d", v)
+
+
+def header(kind):
+    return MAGIC + u16(kind) + u16(PAYLOAD_VERSION)
+
+
+def empty_cache():
+    # capacity, clock, entry count
+    return u64(CACHE_CAPACITY) + u64(0) + u64(0)
+
+
+def caches_bin():
+    out = header(KIND_CACHES)
+    for _phase in range(3):
+        out += u64(0)  # empty prev_local assignment
+        out += empty_cache()  # phase-level plan cache
+    out += empty_cache()  # step-level plan cache
+    return out
+
+
+def plans_bin():
+    return header(KIND_PLANS) + u64(0) + u64(0)  # entries, blobs
+
+
+def profiles_bin():
+    return header(KIND_PROFILES) + u64(0) + u64(0) * 3  # steps, 3 phases
+
+
+def topology_fingerprint():
+    raw = (
+        u64(TOPOLOGY["instances"])
+        + u64(TOPOLOGY["per_node"])
+        + f64(TOPOLOGY["intra_bw"])
+        + f64(TOPOLOGY["inter_bw"])
+        + f64(TOPOLOGY["base_latency"])
+    )
+    return hashlib.sha256(raw).hexdigest()
+
+
+def fmt_num(n):
+    # Mirror Json::write: integers in range print without a fraction,
+    # everything else prints shortest-round-trip positional (Rust's f64
+    # Display never uses exponent notation).
+    f = float(n)
+    if f == int(f) and abs(f) < 9.0e15:
+        return str(int(f))
+    return format(decimal.Decimal(repr(f)).normalize(), "f")
+
+
+def pretty(value, depth=0):
+    # Mirror Json::pretty: sorted keys, 1-space indent per level.
+    pad, pad_in = " " * depth, " " * (depth + 1)
+    if value is None:
+        return "null"
+    if isinstance(value, bool):
+        return "true" if value else "false"
+    if isinstance(value, (int, float)):
+        return fmt_num(value)
+    if isinstance(value, str):
+        return '"' + value + '"'  # fixture strings need no escaping
+    if isinstance(value, list):
+        if not value:
+            return "[]"
+        items = ",\n".join(
+            pad_in + pretty(v, depth + 1) for v in value
+        )
+        return "[\n" + items + "\n" + pad + "]"
+    if isinstance(value, dict):
+        if not value:
+            return "{}"
+        items = ",\n".join(
+            pad_in + '"' + k + '": ' + pretty(value[k], depth + 1)
+            for k in sorted(value)
+        )
+        return "{\n" + items + "\n" + pad + "}"
+    raise TypeError(type(value))
+
+
+def main():
+    payloads = [
+        ("caches.bin", caches_bin()),
+        ("plans.bin", plans_bin()),
+        ("profiles.bin", profiles_bin()),
+    ]
+    manifest = {
+        "schema_version": SCHEMA_VERSION,
+        "created_unix": CREATED_UNIX,
+        "generator": "orchmllm plan archive",
+        "git_describe": "fixture",
+        "topology": dict(TOPOLOGY),
+        "topology_fingerprint": topology_fingerprint(),
+        # Not a real config digest: fixture tests exercise decode and
+        # checksum paths, not session fingerprint matching.
+        "config_fingerprint": hashlib.sha256(b"fixture").hexdigest(),
+        "stats": {
+            "steps": 0,
+            "step_cache_hits": 0,
+            "warm_rate": 0,
+            "cache_hit_rate": 0,
+            "mean_plan_ms": 0,
+        },
+        "plan_chain": {"len": 0, "head": None},
+        "payloads": [
+            {
+                "name": name,
+                "bytes": len(data),
+                "sha256": hashlib.sha256(data).hexdigest(),
+            }
+            for name, data in payloads
+        ],
+    }
+    canonical = pretty(manifest)
+    manifest["manifest_sha256"] = hashlib.sha256(
+        canonical.encode()
+    ).hexdigest()
+
+    for name, data in payloads:
+        (HERE / name).write_bytes(data)
+    (HERE / "manifest.json").write_text(pretty(manifest) + "\n")
+    print(f"wrote fixture to {HERE}")
+
+
+if __name__ == "__main__":
+    main()

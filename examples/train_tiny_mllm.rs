@@ -43,6 +43,7 @@ fn main() {
         plan_cache_size: args.usize("plan-cache-size", 32),
         transport: args.get_or("transport", "inproc").to_string(),
         calibrate_comm: args.flag("calibrate-comm"),
+        ..TrainRunConfig::default()
     };
     cfg.validate().expect("invalid train configuration");
     let invariance_steps = args.usize("invariance-steps", 5);

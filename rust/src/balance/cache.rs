@@ -238,6 +238,62 @@ impl<V: Clone> PlanCache<V> {
             stamp: self.clock,
         });
     }
+
+    /// Iterate the cache contents for serialization (archive export):
+    /// `(sketch, exact key, value, LRU stamp)` in storage order. Storage
+    /// order is not recency order — stamps carry the LRU state.
+    pub fn entries(&self) -> impl Iterator<Item = (Sketch, &[u64], &V, u64)> {
+        self.entries
+            .iter()
+            .map(|e| (Sketch(e.sketch), e.key.as_slice(), &e.value, e.stamp))
+    }
+
+    /// Current LRU clock (monotone access counter), for serialization.
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Rebuild a cache from serialized entries (archive load).
+    ///
+    /// The loader's `capacity` may differ from the exporter's: when the
+    /// archive holds more entries than fit, the most recently used
+    /// (highest-stamp) entries win, mirroring what LRU eviction would
+    /// have kept. Hit/miss counters restart at zero — they describe the
+    /// *current* process, not the archived one. The clock resumes at
+    /// max(archived clock, highest stamp) so future stamps stay monotone.
+    pub fn restore(
+        capacity: usize,
+        clock: u64,
+        entries: Vec<(u64, Vec<u64>, V, u64)>,
+    ) -> PlanCache<V> {
+        let mut entries = entries;
+        if capacity == 0 {
+            entries.clear();
+        } else if entries.len() > capacity {
+            entries.sort_by_key(|(_, _, _, stamp)| *stamp);
+            entries.drain(..entries.len() - capacity);
+        }
+        let max_stamp = entries
+            .iter()
+            .map(|(_, _, _, stamp)| *stamp)
+            .max()
+            .unwrap_or(0);
+        PlanCache {
+            entries: entries
+                .into_iter()
+                .map(|(sketch, key, value, stamp)| Entry {
+                    sketch,
+                    key,
+                    value,
+                    stamp,
+                })
+                .collect(),
+            capacity,
+            clock: clock.max(max_stamp),
+            hits: 0,
+            misses: 0,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -313,6 +369,33 @@ mod tests {
         c.insert(Sketch(1), &[1], 11);
         assert_eq!(c.len(), 1);
         assert_eq!(c.lookup(Sketch(1), &[1]), Some(11));
+    }
+
+    #[test]
+    fn restore_roundtrips_contents_and_lru_state() {
+        let mut c: PlanCache<u32> = PlanCache::new(3);
+        c.insert(Sketch(1), &[1], 10);
+        c.insert(Sketch(2), &[2], 20);
+        c.insert(Sketch(3), &[3], 30);
+        assert_eq!(c.lookup(Sketch(1), &[1]), Some(10)); // 1 now freshest
+        let dumped: Vec<(u64, Vec<u64>, u32, u64)> = c
+            .entries()
+            .map(|(s, k, v, t)| (s.0, k.to_vec(), *v, t))
+            .collect();
+        let mut r = PlanCache::restore(3, c.clock(), dumped.clone());
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.hits, 0);
+        assert_eq!(r.lookup(Sketch(2), &[2]), Some(20));
+        // Shrunk capacity keeps the most recently used entries: 3 and
+        // the freshly-touched 1 survive, 2 (stalest) is dropped.
+        let mut small = PlanCache::restore(2, c.clock(), dumped.clone());
+        assert_eq!(small.len(), 2);
+        assert_eq!(small.lookup(Sketch(2), &[2]), None);
+        assert_eq!(small.lookup(Sketch(1), &[1]), Some(10));
+        assert_eq!(small.lookup(Sketch(3), &[3]), Some(30));
+        // Capacity 0 restores a disabled cache.
+        let zero = PlanCache::restore(0, c.clock(), dumped);
+        assert!(zero.is_empty());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! two is what the Node-wise Rearrangement Algorithm (§5.2.2) exploits.
 
 /// Cluster shape and link bandwidths.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Topology {
     /// Total DP instances (d).
     pub instances: usize,

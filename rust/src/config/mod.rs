@@ -140,6 +140,14 @@ pub struct TrainRunConfig {
     /// (`--min-world`): losing ranks below this floor aborts the run
     /// with a clear error instead of continuing under-parallel.
     pub min_world: usize,
+    /// Plan-archive directory to warm-start the planning session from
+    /// (`--archive-in`, elastic runs). A fingerprint mismatch degrades
+    /// to a cold start with a logged reason; it never fails the run.
+    pub archive_in: Option<String>,
+    /// Plan-archive directory the (minimum-id surviving) member exports
+    /// to on clean exit and after a world transition (`--archive-out`,
+    /// elastic runs).
+    pub archive_out: Option<String>,
 }
 
 impl Default for TrainRunConfig {
@@ -159,6 +167,8 @@ impl Default for TrainRunConfig {
             transport: "inproc".into(),
             calibrate_comm: false,
             min_world: 1,
+            archive_in: None,
+            archive_out: None,
         }
     }
 }
@@ -203,6 +213,14 @@ impl TrainRunConfig {
                 .get("min_world")
                 .as_usize()
                 .unwrap_or(d.min_world),
+            archive_in: j
+                .get("archive_in")
+                .as_str()
+                .map(str::to_string),
+            archive_out: j
+                .get("archive_out")
+                .as_str()
+                .map(str::to_string),
         }
     }
 

@@ -10,11 +10,14 @@
 //!                shrink-the-world recovery; `tcp-multiproc` spawns
 //!                real OS processes)
 //!   worker       one elastic member process (spawned by `elastic`)
+//!   archive      inspect / verify / garbage-collect a plan archive
 //!   balancers    list the registered post-balancing algorithms
 //!   transports   list the registered comm backends (+ calibrate α/β)
 //!
 //! Options accept `--key value` or `--key=value`; run with no arguments
 //! for usage.
+
+use std::path::Path;
 
 use orchmllm::balance::{registry, select};
 use orchmllm::comm::calibrate::{calibrate, CalibrationSpec};
@@ -24,11 +27,15 @@ use orchmllm::data::incoherence::IncoherenceReport;
 use orchmllm::data::synth::{DatasetConfig, Generator};
 use orchmllm::model::config::MllmConfig;
 use orchmllm::model::flops::PhaseKind;
-use orchmllm::sim::engine::{simulate_run, simulate_run_named, SystemKind};
+use orchmllm::orchestrator::archive;
+use orchmllm::sim::engine::{
+    simulate_run, simulate_run_archived, SystemKind,
+};
 use orchmllm::sim::report;
 use orchmllm::trainer;
 use orchmllm::trainer::elastic::{self, FaultPlan};
 use orchmllm::util::cli::Args;
+use orchmllm::util::json::Json;
 
 const USAGE: &str = "\
 orchmllm — OrchMLLM reproduction CLI
@@ -39,6 +46,10 @@ USAGE:
                        [--balancer auto|greedy|padded|quadratic|convpad|
                                    kk|ilp|none]
                        [--config file.json]
+                       [--archive DIR]      # warm-start from a plan archive
+                       [--archive-out DIR]  # export the session afterwards
+                       [--archive-baseline ci/archive_baseline.json]
+                                            # gate warm-start hit rate
   orchmllm overall     [--gpus 2560] [--steps 3]       # Fig. 8 + 9
   orchmllm overhead    [--steps 3]                     # Table 2
   orchmllm incoherence [--n 100000] [--seed 7]         # Fig. 3
@@ -51,10 +62,16 @@ USAGE:
   orchmllm elastic     [--workers 4] [--mini-batch 4] [--steps 8]
                        [--lr 0.05] [--seed 0] [--min-world 1]
                        [--transport inproc|tcp-multiproc] [--out f.json]
+                       [--archive-in DIR] [--archive-out DIR]
                        [--fault-rank R --fault-step N
                         [--fault-collective 0|1|2] [--fault-resign]]
                        [--in-process]   # threads instead of processes
   orchmllm worker      --rank R --rdzv-dir DIR …     # spawned by elastic
+  orchmllm archive     inspect DIR                   # manifest summary
+  orchmllm archive     verify  DIR                   # full decode; exit 2 on
+                                                     # corruption/version skew
+  orchmllm archive     gc      DIR [--keep-last 64]
+                       [--max-age-secs N]            # prune the plan log
   orchmllm balancers                                 # registry + auto rules
   orchmllm transports  [--calibrate] [--workers 4]   # comm backends
   orchmllm help
@@ -72,6 +89,7 @@ fn main() {
         Some("worker") => {
             std::process::exit(elastic::worker_main(&args))
         }
+        Some("archive") => cmd_archive(&args),
         Some("balancers") => cmd_balancers(),
         Some("transports") => cmd_transports(&args),
         _ => print!("{USAGE}"),
@@ -104,7 +122,7 @@ fn cmd_sim(args: &Args) {
         }
     }
     let model = MllmConfig::by_name(&cfg.model).expect("unknown model");
-    let r = simulate_run_named(
+    let r = match simulate_run_archived(
         cfg.system,
         &model,
         cfg.gpus,
@@ -112,7 +130,15 @@ fn cmd_sim(args: &Args) {
         cfg.steps,
         cfg.seed,
         cfg.balancer.as_deref(),
-    );
+        args.get("archive").map(Path::new),
+        args.get("archive-out").map(Path::new),
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("sim plan-archive failure: {e}");
+            std::process::exit(1);
+        }
+    };
     println!(
         "{} | {} | {} GPUs | mb {}\n  MFU  {:.1}%\n  TPT  {:.0} tok/s/GPU\n  \
          step {:.3}s (comm {:.1}ms)\n  mem  {:.1} GB{}\n  dispatcher {:.2}ms\n  \
@@ -134,6 +160,60 @@ fn cmd_sim(args: &Args) {
         r.plan_stats.warm_rate * 100.0,
         r.plan_stats.cache_hit_rate * 100.0,
     );
+    if let Some(a) = &r.archive {
+        println!(
+            "  archive: {} | warm-start hit rate {:.1}% | first step \
+             {} | plan id {}{}",
+            match (&a.cold_reason, a.loaded) {
+                (Some(reason), _) => format!("cold start ({reason})"),
+                (None, true) => "warm start".to_string(),
+                (None, false) => "recording".to_string(),
+            },
+            a.warm_start_hit_rate * 100.0,
+            if a.first_step_cache_hit { "replayed" } else { "solved" },
+            a.first_plan_id.as_deref().map(|id| &id[..16]).unwrap_or("-"),
+            if a.exported { " | exported" } else { "" },
+        );
+    }
+    if let Some(path) = args.get("archive-baseline") {
+        let Some(a) = &r.archive else {
+            eprintln!(
+                "--archive-baseline requires --archive (nothing to gate)"
+            );
+            std::process::exit(2);
+        };
+        let floor = read_baseline_floor(path);
+        if a.warm_start_hit_rate < floor {
+            eprintln!(
+                "warm-start hit rate {:.3} below the {path} floor \
+                 {floor:.3} — the archive regressed (see the baseline \
+                 file for the re-baselining procedure)",
+                a.warm_start_hit_rate
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "  baseline: warm-start hit rate {:.3} >= floor {floor:.3} \
+             ({path})",
+            a.warm_start_hit_rate
+        );
+    }
+}
+
+/// The `min_warm_start_hit_rate` floor from `ci/archive_baseline.json`.
+fn read_baseline_floor(path: &str) -> f64 {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("reading {path}: {e}");
+        std::process::exit(2);
+    });
+    let j = Json::parse(&text).unwrap_or_else(|e| {
+        eprintln!("parsing {path}: {e}");
+        std::process::exit(2);
+    });
+    j.get("min_warm_start_hit_rate").as_f64().unwrap_or_else(|| {
+        eprintln!("{path}: missing 'min_warm_start_hit_rate'");
+        std::process::exit(2);
+    })
 }
 
 fn cmd_overall(args: &Args) {
@@ -205,6 +285,11 @@ fn cmd_train(args: &Args) {
             .to_string(),
         calibrate_comm: args.flag("calibrate-comm"),
         min_world: args.usize("min-world", defaults.min_world),
+        // Archive endpoints are an elastic-runtime feature: the fixed
+        // pipeline trainer moves its session onto a background thread
+        // and cannot export it at exit.
+        archive_in: None,
+        archive_out: None,
     };
     if let Err(e) = cfg.validate() {
         eprintln!("invalid train configuration: {e:#}");
@@ -228,6 +313,8 @@ fn cmd_elastic(args: &Args) {
         seed: args.u64("seed", 0),
         min_world: args.usize("min-world", 1),
         transport: args.get_or("transport", "tcp-multiproc").to_string(),
+        archive_in: args.get("archive-in").map(str::to_string),
+        archive_out: args.get("archive-out").map(str::to_string),
         ..TrainRunConfig::default()
     };
     if let Err(e) = cfg.validate() {
@@ -279,6 +366,71 @@ fn cmd_elastic(args: &Args) {
         }
     }
     println!("{}", report.render());
+}
+
+fn cmd_archive(args: &Args) {
+    let verb = args.positional.get(1).map(String::as_str);
+    let Some(dir) = args.positional.get(2) else {
+        eprintln!(
+            "usage: orchmllm archive {{inspect|verify|gc}} DIR \
+             [--keep-last N] [--max-age-secs N]"
+        );
+        std::process::exit(2);
+    };
+    let dir = Path::new(dir);
+    match verb {
+        Some("inspect") => match archive::inspect(dir) {
+            Ok(text) => print!("{text}"),
+            Err(e) => {
+                eprintln!("archive inspect failed: {e}");
+                std::process::exit(2);
+            }
+        },
+        Some("verify") => match archive::verify(dir) {
+            Ok(rep) => println!(
+                "archive OK: {} payloads verified, {} archived step \
+                 plans, plan chain length {} over {} blobs",
+                rep.payloads, rep.cached_plans, rep.chain_len, rep.blobs
+            ),
+            Err(e) => {
+                // Exit 2 is the CI contract: corruption, truncation,
+                // and schema skew are all typed errors, never panics.
+                eprintln!("archive verify failed: {e}");
+                std::process::exit(2);
+            }
+        },
+        Some("gc") => {
+            let keep = Some(args.usize("keep-last", 64));
+            // Age pruning only when asked for; the default is count-only.
+            let max_age = args
+                .get("max-age-secs")
+                .is_some()
+                .then(|| args.u64("max-age-secs", u64::MAX));
+            match archive::gc(dir, keep, max_age) {
+                Ok(g) => println!(
+                    "archive gc: kept {} of {} entries ({} pruned), \
+                     blobs {} -> {}",
+                    g.kept,
+                    g.kept + g.pruned,
+                    g.pruned,
+                    g.blobs_before,
+                    g.blobs_after
+                ),
+                Err(e) => {
+                    eprintln!("archive gc failed: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        _ => {
+            eprintln!(
+                "unknown archive verb {:?}; expected inspect, verify, \
+                 or gc",
+                verb.unwrap_or("<none>")
+            );
+            std::process::exit(2);
+        }
+    }
 }
 
 fn cmd_balancers() {

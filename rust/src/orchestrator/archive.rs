@@ -1,0 +1,1977 @@
+//! Persistent plan archive: planning state that outlives the process.
+//!
+//! Everything a [`crate::orchestrator::session::PlanSession`] learns —
+//! the three phase-level solve caches, the step-level plan cache, the
+//! shape-profile store ([`super::profile`]), and a content-addressed
+//! log of every emitted [`StepPlan`] — serializes to a directory:
+//!
+//! ```text
+//! <archive>/
+//!   manifest.json    versioned, self-hashed provenance + payload sha256s
+//!   caches.bin       phase + step PlanCache contents (LRU state intact)
+//!   plans.bin        causal chain of content-addressed StepPlans
+//!   profiles.bin     Sketch → length-histogram distributions per phase
+//! ```
+//!
+//! A fresh process that loads the archive warm-starts **bit-identically**:
+//! a recurring step hits the restored step cache and replays the
+//! archived plan object itself, so the first warm step's plan hashes to
+//! the same content id the exporting process archived (pinned by a
+//! two-process test). Every plan entry carries a causal `prev` link —
+//! the CCOS-style immutable chain — so any training step is replayable
+//! and auditable after the fact.
+//!
+//! Format rules (see DESIGN.md §Plan Archive):
+//!
+//! * payloads are hand-rolled, length-prefixed, little-endian codecs
+//!   (no crates.io), each with an 8-byte magic + kind + format version;
+//! * `manifest.json` carries a semver `schema_version`; loaders accept
+//!   the same **major** and ignore unknown fields (minor additions are
+//!   compatible by construction);
+//! * `manifest_sha256` is the digest of the manifest's canonical JSON
+//!   (sorted keys, 1-space pretty form) with the `manifest_sha256`
+//!   field itself removed;
+//! * decode never panics: corruption, truncation, and version skew all
+//!   surface as a typed [`ArchiveError`].
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::balance::cache::{PlanCache, SKETCH_BUCKETS};
+use crate::balance::incremental::PlanSource;
+use crate::balance::types::{Assignment, ExampleRef};
+use crate::comm::costmodel::CollectiveCost;
+use crate::comm::topology::Topology;
+use crate::data::synth::{Example, Task};
+use crate::model::flops::PhaseKind;
+use crate::util::json::Json;
+use crate::util::sha256;
+
+use super::dispatcher::{Communicator, DispatchPlan, PhaseHistory};
+use super::global::{EncoderPlan, OrchestratorConfig, StepHistory, StepPlan};
+use super::profile::{ShapeProfile, ShapeProfileStore};
+use super::rearrangement::Rearrangement;
+
+/// Archive schema version (semver). Compat policy: loaders accept the
+/// same major, any minor/patch; unknown manifest fields are ignored.
+pub const SCHEMA_VERSION: &str = "1.0.0";
+const SUPPORTED_MAJOR: u64 = 1;
+
+const MANIFEST: &str = "manifest.json";
+const PAYLOAD_CACHES: &str = "caches.bin";
+const PAYLOAD_PLANS: &str = "plans.bin";
+const PAYLOAD_PROFILES: &str = "profiles.bin";
+
+/// 8-byte payload magic, shared by all binary payloads.
+const MAGIC: [u8; 8] = *b"OMLLMAR1";
+/// Per-payload kind tags (after the magic).
+const KIND_CACHES: u16 = 1;
+const KIND_PLANS: u16 = 2;
+const KIND_PROFILES: u16 = 3;
+/// Binary payload format version (independent of the manifest semver).
+const PAYLOAD_VERSION: u16 = 1;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Typed archive failure. Decode paths return these — never panic — so
+/// a corrupt or future-versioned archive degrades loudly but safely.
+#[derive(Debug)]
+pub enum ArchiveError {
+    /// Filesystem failure reading or writing an archive member.
+    Io { path: PathBuf, err: io::Error },
+    /// A payload ended before its declared contents did.
+    Truncated { section: &'static str },
+    /// Structurally invalid bytes (bad magic, unknown tag, bad JSON…).
+    Malformed { section: &'static str, detail: String },
+    /// Payload or plan-blob bytes do not hash to their recorded digest.
+    ChecksumMismatch {
+        name: String,
+        expected: String,
+        actual: String,
+    },
+    /// Manifest written by an incompatible (different-major) schema.
+    SchemaVersion { found: String, supported: &'static str },
+    /// Manifest references a payload file that is missing on disk.
+    MissingPayload { name: String },
+}
+
+impl fmt::Display for ArchiveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArchiveError::Io { path, err } => {
+                write!(f, "archive io error at {}: {err}", path.display())
+            }
+            ArchiveError::Truncated { section } => {
+                write!(f, "archive payload truncated in {section}")
+            }
+            ArchiveError::Malformed { section, detail } => {
+                write!(f, "malformed archive {section}: {detail}")
+            }
+            ArchiveError::ChecksumMismatch { name, expected, actual } => {
+                write!(
+                    f,
+                    "checksum mismatch for {name}: recorded {expected}, \
+                     bytes hash to {actual}"
+                )
+            }
+            ArchiveError::SchemaVersion { found, supported } => {
+                write!(
+                    f,
+                    "archive schema version {found} is not supported \
+                     (this build reads major {supported})"
+                )
+            }
+            ArchiveError::MissingPayload { name } => {
+                write!(f, "archive payload {name} is missing")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArchiveError {}
+
+fn io_err(path: &Path, err: io::Error) -> ArchiveError {
+    ArchiveError::Io { path: path.to_path_buf(), err }
+}
+
+// ---------------------------------------------------------------------------
+// Wire codec (length-prefixed, little-endian, versioned)
+// ---------------------------------------------------------------------------
+
+/// Byte-stream encoder for archive payloads.
+#[derive(Default)]
+pub(crate) struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc::default()
+    }
+
+    fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    fn put_raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    fn put_bytes(&mut self, bytes: &[u8]) {
+        self.put_u64(bytes.len() as u64);
+        self.put_raw(bytes);
+    }
+}
+
+/// Bounds-checked decoder: every read is fallible, and declared lengths
+/// are validated against the remaining bytes *before* any allocation,
+/// so a corrupt length word cannot OOM or panic.
+pub(crate) struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    section: &'static str,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8], section: &'static str) -> Dec<'a> {
+        Dec { buf, pos: 0, section }
+    }
+
+    fn truncated(&self) -> ArchiveError {
+        ArchiveError::Truncated { section: self.section }
+    }
+
+    fn malformed(&self, detail: String) -> ArchiveError {
+        ArchiveError::Malformed { section: self.section, detail }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ArchiveError> {
+        if self.remaining() < n {
+            return Err(self.truncated());
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn take_u8(&mut self) -> Result<u8, ArchiveError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn take_u16(&mut self) -> Result<u16, ArchiveError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn take_u64(&mut self) -> Result<u64, ArchiveError> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn take_u128(&mut self) -> Result<u128, ArchiveError> {
+        let b = self.take(16)?;
+        let mut a = [0u8; 16];
+        a.copy_from_slice(b);
+        Ok(u128::from_le_bytes(a))
+    }
+
+    fn take_f64(&mut self) -> Result<f64, ArchiveError> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    fn take_usize(&mut self) -> Result<usize, ArchiveError> {
+        let v = self.take_u64()?;
+        usize::try_from(v).map_err(|_| {
+            self.malformed(format!("value {v} overflows usize"))
+        })
+    }
+
+    /// Read an element count whose elements occupy at least `elem_min`
+    /// bytes each; rejects counts the remaining bytes cannot hold.
+    fn take_len(&mut self, elem_min: usize) -> Result<usize, ArchiveError> {
+        let n = self.take_usize()?;
+        if elem_min > 0 && n > self.remaining() / elem_min {
+            return Err(self.truncated());
+        }
+        Ok(n)
+    }
+
+    fn take_bytes(&mut self) -> Result<&'a [u8], ArchiveError> {
+        let n = self.take_len(1)?;
+        self.take(n)
+    }
+
+    fn take_digest(&mut self) -> Result<[u8; 32], ArchiveError> {
+        let b = self.take(32)?;
+        let mut a = [0u8; 32];
+        a.copy_from_slice(b);
+        Ok(a)
+    }
+
+    /// Every payload decoder ends with this: trailing garbage is as
+    /// malformed as missing bytes.
+    fn finish(&self) -> Result<(), ArchiveError> {
+        if self.remaining() != 0 {
+            return Err(self.malformed(format!(
+                "{} trailing bytes after payload contents",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn put_header(e: &mut Enc, kind: u16) {
+    e.put_raw(&MAGIC);
+    e.put_u16(kind);
+    e.put_u16(PAYLOAD_VERSION);
+}
+
+fn check_header(d: &mut Dec<'_>, kind: u16) -> Result<(), ArchiveError> {
+    let magic = d.take(8)?;
+    if magic != MAGIC {
+        return Err(d.malformed("bad payload magic".to_string()));
+    }
+    let got_kind = d.take_u16()?;
+    if got_kind != kind {
+        return Err(d.malformed(format!(
+            "payload kind {got_kind} where {kind} was expected"
+        )));
+    }
+    let version = d.take_u16()?;
+    if version != PAYLOAD_VERSION {
+        return Err(d.malformed(format!(
+            "payload format version {version} (this build reads \
+             {PAYLOAD_VERSION})"
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Plan codecs
+// ---------------------------------------------------------------------------
+
+fn task_code(t: Task) -> u8 {
+    match t {
+        Task::Asr => 0,
+        Task::SpokenQa => 1,
+        Task::Caption => 2,
+        Task::Vqa => 3,
+        Task::TextOnly => 4,
+        Task::AvDialogue => 5,
+    }
+}
+
+fn task_from(d: &Dec<'_>, code: u8) -> Result<Task, ArchiveError> {
+    Ok(match code {
+        0 => Task::Asr,
+        1 => Task::SpokenQa,
+        2 => Task::Caption,
+        3 => Task::Vqa,
+        4 => Task::TextOnly,
+        5 => Task::AvDialogue,
+        _ => return Err(d.malformed(format!("unknown task code {code}"))),
+    })
+}
+
+fn source_code(s: PlanSource) -> u8 {
+    match s {
+        PlanSource::Cold => 0,
+        PlanSource::Warm => 1,
+        PlanSource::Cached => 2,
+    }
+}
+
+fn source_from(d: &Dec<'_>, code: u8) -> Result<PlanSource, ArchiveError> {
+    Ok(match code {
+        0 => PlanSource::Cold,
+        1 => PlanSource::Warm,
+        2 => PlanSource::Cached,
+        _ => {
+            return Err(d.malformed(format!("unknown plan source {code}")))
+        }
+    })
+}
+
+fn put_example(e: &mut Enc, x: &Example) {
+    e.put_usize(x.id);
+    e.put_u8(task_code(x.task));
+    e.put_usize(x.vis_len);
+    e.put_usize(x.aud_len);
+    e.put_usize(x.text_len);
+    e.put_usize(x.vis_tokens);
+    e.put_usize(x.aud_tokens);
+}
+
+fn take_example(d: &mut Dec<'_>) -> Result<Example, ArchiveError> {
+    let id = d.take_usize()?;
+    let code = d.take_u8()?;
+    let task = task_from(d, code)?;
+    Ok(Example {
+        id,
+        task,
+        vis_len: d.take_usize()?,
+        aud_len: d.take_usize()?,
+        text_len: d.take_usize()?,
+        vis_tokens: d.take_usize()?,
+        aud_tokens: d.take_usize()?,
+    })
+}
+
+fn put_usizes(e: &mut Enc, v: &[usize]) {
+    e.put_usize(v.len());
+    for &x in v {
+        e.put_usize(x);
+    }
+}
+
+fn take_usizes(d: &mut Dec<'_>) -> Result<Vec<usize>, ArchiveError> {
+    let n = d.take_len(8)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(d.take_usize()?);
+    }
+    Ok(out)
+}
+
+fn put_assignment(e: &mut Enc, a: &Assignment) {
+    e.put_usize(a.len());
+    for batch in a {
+        e.put_usize(batch.len());
+        for r in batch {
+            e.put_usize(r.id);
+            e.put_usize(r.len);
+        }
+    }
+}
+
+fn take_assignment(d: &mut Dec<'_>) -> Result<Assignment, ArchiveError> {
+    let n = d.take_len(8)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let m = d.take_len(16)?;
+        let mut batch = Vec::with_capacity(m);
+        for _ in 0..m {
+            batch.push(ExampleRef {
+                id: d.take_usize()?,
+                len: d.take_usize()?,
+            });
+        }
+        out.push(batch);
+    }
+    Ok(out)
+}
+
+fn put_rearrangement(e: &mut Enc, r: &Rearrangement) {
+    put_usizes(e, &r.from);
+    put_usizes(e, &r.to);
+}
+
+fn take_rearrangement(d: &mut Dec<'_>) -> Result<Rearrangement, ArchiveError> {
+    Ok(Rearrangement { from: take_usizes(d)?, to: take_usizes(d)? })
+}
+
+fn put_cost(e: &mut Enc, c: &CollectiveCost) {
+    e.put_f64(c.seconds);
+    e.put_f64(c.peak_bytes);
+}
+
+fn take_cost(d: &mut Dec<'_>) -> Result<CollectiveCost, ArchiveError> {
+    Ok(CollectiveCost { seconds: d.take_f64()?, peak_bytes: d.take_f64()? })
+}
+
+fn put_dispatch(e: &mut Enc, p: &DispatchPlan) {
+    put_assignment(e, &p.assignment);
+    put_rearrangement(e, &p.route);
+    put_usizes(e, &p.nodewise_perm);
+    put_cost(e, &p.comm);
+    e.put_f64(p.peak_bytes);
+    e.put_u128(p.compute_nanos);
+    e.put_u8(source_code(p.source));
+    e.put_usize(p.repair_moves);
+}
+
+fn take_dispatch(d: &mut Dec<'_>) -> Result<DispatchPlan, ArchiveError> {
+    let assignment = take_assignment(d)?;
+    let route = take_rearrangement(d)?;
+    let nodewise_perm = take_usizes(d)?;
+    let comm = take_cost(d)?;
+    let peak_bytes = d.take_f64()?;
+    let compute_nanos = d.take_u128()?;
+    let code = d.take_u8()?;
+    let source = source_from(d, code)?;
+    Ok(DispatchPlan {
+        assignment,
+        route,
+        nodewise_perm,
+        comm,
+        peak_bytes,
+        compute_nanos,
+        source,
+        repair_moves: d.take_usize()?,
+    })
+}
+
+fn put_encoder(e: &mut Enc, p: &EncoderPlan) {
+    put_dispatch(e, &p.plan);
+    put_rearrangement(e, &p.out_route);
+    put_cost(e, &p.out_comm);
+    e.put_f64(p.out_inter_node_bytes);
+}
+
+fn take_encoder(d: &mut Dec<'_>) -> Result<EncoderPlan, ArchiveError> {
+    Ok(EncoderPlan {
+        plan: take_dispatch(d)?,
+        out_route: take_rearrangement(d)?,
+        out_comm: take_cost(d)?,
+        out_inter_node_bytes: d.take_f64()?,
+    })
+}
+
+/// Canonical byte serialization of a [`StepPlan`] — the content that
+/// the plan log's sha256 ids address. Deterministic: a bit-identical
+/// plan always encodes to the same bytes.
+pub fn encode_step_plan(p: &StepPlan) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.put_usize(p.d);
+    e.put_usize(p.examples.len());
+    for x in &p.examples {
+        put_example(&mut e, x);
+    }
+    put_usizes(&mut e, &p.home);
+    put_encoder(&mut e, &p.vision);
+    put_encoder(&mut e, &p.audio);
+    put_dispatch(&mut e, &p.llm);
+    e.put_u128(p.compute_nanos);
+    e.buf
+}
+
+fn take_step_plan(d: &mut Dec<'_>) -> Result<StepPlan, ArchiveError> {
+    let dd = d.take_usize()?;
+    let n = d.take_len(8)?;
+    let mut examples = Vec::with_capacity(n);
+    for _ in 0..n {
+        examples.push(take_example(d)?);
+    }
+    Ok(StepPlan {
+        d: dd,
+        examples,
+        home: take_usizes(d)?,
+        vision: take_encoder(d)?,
+        audio: take_encoder(d)?,
+        llm: take_dispatch(d)?,
+        compute_nanos: d.take_u128()?,
+    })
+}
+
+/// Decode a standalone plan blob (as stored in `plans.bin`).
+pub fn decode_step_plan(bytes: &[u8]) -> Result<StepPlan, ArchiveError> {
+    let mut d = Dec::new(bytes, "plan blob");
+    let plan = take_step_plan(&mut d)?;
+    d.finish()?;
+    Ok(plan)
+}
+
+// ---------------------------------------------------------------------------
+// Content-addressed plan log (CCOS-style causal chain)
+// ---------------------------------------------------------------------------
+
+/// One archived plan emission: which step, when, and the causal link to
+/// the plan emitted just before it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanLogEntry {
+    /// Session step number the plan was emitted for.
+    pub step: u64,
+    /// Unix seconds at record time (drives `archive gc` age pruning).
+    pub unix_secs: u64,
+    /// Content id: sha256 of the plan's canonical encoding.
+    pub id: [u8; 32],
+    /// Content id of the previously emitted plan (`None` for the first
+    /// entry of a cold-started chain).
+    pub prev: Option<[u8; 32]>,
+}
+
+/// Append-only log of emitted plans, content-addressed and causally
+/// chained. Blobs are deduplicated by id, so a step-cache hit that
+/// replays an earlier plan costs one entry but zero new blob bytes.
+#[derive(Clone, Debug, Default)]
+pub struct PlanLog {
+    entries: Vec<PlanLogEntry>,
+    blobs: Vec<([u8; 32], Arc<Vec<u8>>)>,
+    head: Option<[u8; 32]>,
+}
+
+impl PlanLog {
+    pub fn new() -> PlanLog {
+        PlanLog::default()
+    }
+
+    /// Record one emitted plan; returns its content id.
+    pub fn record(&mut self, step: u64, plan: &StepPlan) -> [u8; 32] {
+        let bytes = encode_step_plan(plan);
+        let id = sha256::sha256(&bytes);
+        if !self.blobs.iter().any(|(b, _)| *b == id) {
+            self.blobs.push((id, Arc::new(bytes)));
+        }
+        let entry = PlanLogEntry {
+            step,
+            unix_secs: unix_now(),
+            id,
+            prev: self.head,
+        };
+        self.entries.push(entry);
+        self.head = Some(id);
+        id
+    }
+
+    pub fn entries(&self) -> &[PlanLogEntry] {
+        &self.entries
+    }
+
+    pub fn head(&self) -> Option<[u8; 32]> {
+        self.head
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn blob_count(&self) -> usize {
+        self.blobs.len()
+    }
+
+    /// Fetch an archived plan's canonical bytes by content id.
+    pub fn blob(&self, id: &[u8; 32]) -> Option<&[u8]> {
+        self.blobs
+            .iter()
+            .find(|(b, _)| b == id)
+            .map(|(_, bytes)| bytes.as_slice())
+    }
+
+    /// Prune the chain: keep entries that are within the newest
+    /// `keep_last` (when set) *and* no older than `max_age_secs` (when
+    /// set). Orphaned blobs are dropped and `prev` links re-threaded so
+    /// the surviving entries still form one causal chain.
+    pub fn prune(
+        &mut self,
+        keep_last: Option<usize>,
+        max_age_secs: Option<u64>,
+        now_unix: u64,
+    ) -> usize {
+        let cutoff_index =
+            keep_last.map_or(0, |k| self.entries.len().saturating_sub(k));
+        let cutoff_time =
+            max_age_secs.map_or(0, |a| now_unix.saturating_sub(a));
+        let before = self.entries.len();
+        let mut kept = Vec::with_capacity(before - cutoff_index);
+        for (i, e) in self.entries.drain(..).enumerate() {
+            if i >= cutoff_index && e.unix_secs >= cutoff_time {
+                kept.push(e);
+            }
+        }
+        let mut prev = None;
+        for e in &mut kept {
+            e.prev = prev;
+            prev = Some(e.id);
+        }
+        self.head = prev;
+        self.entries = kept;
+        let live: Vec<[u8; 32]> =
+            self.entries.iter().map(|e| e.id).collect();
+        self.blobs.retain(|(id, _)| live.contains(id));
+        before - self.entries.len()
+    }
+}
+
+fn unix_now() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// Fingerprints
+// ---------------------------------------------------------------------------
+
+/// Digest of the exact topology bit patterns: any world change — size,
+/// node shape, calibrated bandwidths — changes the fingerprint, which
+/// is what keeps a shrunk world from silently reusing pre-shrink plans.
+pub fn topology_fingerprint(t: &Topology) -> String {
+    let mut e = Enc::new();
+    e.put_usize(t.instances);
+    e.put_usize(t.per_node);
+    e.put_f64(t.intra_bw);
+    e.put_f64(t.inter_bw);
+    e.put_f64(t.base_latency);
+    sha256::hex(&sha256::sha256(&e.buf))
+}
+
+/// Digest of everything in the orchestrator config that shapes a plan:
+/// balancer names, communicator, composition, and the byte-cost
+/// parameters (exact f64 bit patterns).
+pub fn config_fingerprint(cfg: &OrchestratorConfig) -> String {
+    let comm = match cfg.communicator {
+        Communicator::AllToAll { nodewise } => {
+            format!("all-to-all(nodewise={nodewise})")
+        }
+        Communicator::AllGather => "all-gather".to_string(),
+    };
+    let text = format!(
+        "vision={};audio={};llm={};comm={};composition={};embed={:016x};\
+         vis={:016x};aud={:016x};text={:016x}",
+        cfg.vision_balancer.name(),
+        cfg.audio_balancer.name(),
+        cfg.llm_balancer.name(),
+        comm,
+        cfg.composition,
+        cfg.embed_bytes_per_token.to_bits(),
+        cfg.vis_bytes_per_unit.to_bits(),
+        cfg.aud_bytes_per_unit.to_bits(),
+        cfg.text_bytes_per_token.to_bits(),
+    );
+    sha256::hex(&sha256::sha256(text.as_bytes()))
+}
+
+// ---------------------------------------------------------------------------
+// Payload encode/decode
+// ---------------------------------------------------------------------------
+
+fn put_cache<V>(
+    e: &mut Enc,
+    cache: &PlanCache<V>,
+    mut put_value: impl FnMut(&mut Enc, &V),
+) where
+    V: Clone,
+{
+    e.put_usize(cache.capacity());
+    e.put_u64(cache.clock());
+    e.put_usize(cache.len());
+    for (sketch, key, value, stamp) in cache.entries() {
+        e.put_u64(sketch.0);
+        e.put_usize(key.len());
+        for &w in key {
+            e.put_u64(w);
+        }
+        e.put_u64(stamp);
+        put_value(e, value);
+    }
+}
+
+fn take_cache<'a, V>(
+    d: &mut Dec<'a>,
+    capacity_override: Option<usize>,
+    mut take_value: impl FnMut(&mut Dec<'a>) -> Result<V, ArchiveError>,
+) -> Result<PlanCache<V>, ArchiveError>
+where
+    V: Clone,
+{
+    let capacity = d.take_usize()?;
+    let clock = d.take_u64()?;
+    let n = d.take_len(24)?;
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let sketch = d.take_u64()?;
+        let klen = d.take_len(8)?;
+        let mut key = Vec::with_capacity(klen);
+        for _ in 0..klen {
+            key.push(d.take_u64()?);
+        }
+        let stamp = d.take_u64()?;
+        let value = take_value(d)?;
+        entries.push((sketch, key, value, stamp));
+    }
+    Ok(PlanCache::restore(
+        capacity_override.unwrap_or(capacity),
+        clock,
+        entries,
+    ))
+}
+
+/// Serialize a session's full [`StepHistory`] (three phase histories +
+/// the step cache) into the `caches.bin` payload.
+pub fn encode_caches(history: &StepHistory) -> Vec<u8> {
+    let mut e = Enc::new();
+    put_header(&mut e, KIND_CACHES);
+    for phase in [&history.vision, &history.audio, &history.llm] {
+        put_assignment(&mut e, &phase.prev_local);
+        put_cache(&mut e, &phase.cache, put_assignment);
+    }
+    put_cache(&mut e, &history.step_cache, |e, plan: &Arc<StepPlan>| {
+        let bytes = encode_step_plan(plan);
+        e.put_bytes(&bytes);
+    });
+    e.buf
+}
+
+/// Rebuild a [`StepHistory`] from `caches.bin`. `capacity_override`
+/// installs the *loader's* configured cache capacity (None keeps the
+/// archived capacities — used by `archive verify`).
+pub fn decode_caches(
+    bytes: &[u8],
+    capacity_override: Option<usize>,
+) -> Result<StepHistory, ArchiveError> {
+    let mut d = Dec::new(bytes, "caches.bin");
+    check_header(&mut d, KIND_CACHES)?;
+    // Start from capacity 0 and overwrite every field that matters; the
+    // restored caches carry their own capacities.
+    let mut history = StepHistory::new(0);
+    let phases: [&mut PhaseHistory; 3] =
+        [&mut history.vision, &mut history.audio, &mut history.llm];
+    for phase in phases {
+        phase.prev_local = take_assignment(&mut d)?;
+        phase.cache =
+            take_cache(&mut d, capacity_override, take_assignment)?;
+    }
+    history.step_cache = take_cache(&mut d, capacity_override, |d| {
+        let blob = d.take_bytes()?;
+        decode_step_plan(blob).map(Arc::new)
+    })?;
+    d.finish()?;
+    Ok(history)
+}
+
+/// Serialize the plan log into the `plans.bin` payload.
+pub fn encode_plans(log: &PlanLog) -> Vec<u8> {
+    let mut e = Enc::new();
+    put_header(&mut e, KIND_PLANS);
+    e.put_usize(log.entries.len());
+    for entry in &log.entries {
+        e.put_u64(entry.step);
+        e.put_u64(entry.unix_secs);
+        e.put_raw(&entry.id);
+        match entry.prev {
+            Some(prev) => {
+                e.put_u8(1);
+                e.put_raw(&prev);
+            }
+            None => e.put_u8(0),
+        }
+    }
+    e.put_usize(log.blobs.len());
+    for (id, bytes) in &log.blobs {
+        e.put_raw(id);
+        e.put_bytes(bytes);
+    }
+    e.buf
+}
+
+/// Rebuild the plan log from `plans.bin`, verifying every blob hashes
+/// to its content id (blobs are the audit record — a silent bit-flip
+/// here would defeat the whole point).
+pub fn decode_plans(bytes: &[u8]) -> Result<PlanLog, ArchiveError> {
+    let mut d = Dec::new(bytes, "plans.bin");
+    check_header(&mut d, KIND_PLANS)?;
+    let n = d.take_len(49)?;
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let step = d.take_u64()?;
+        let unix_secs = d.take_u64()?;
+        let id = d.take_digest()?;
+        let prev = match d.take_u8()? {
+            0 => None,
+            1 => Some(d.take_digest()?),
+            x => {
+                return Err(d.malformed(format!("bad prev-link flag {x}")))
+            }
+        };
+        entries.push(PlanLogEntry { step, unix_secs, id, prev });
+    }
+    let m = d.take_len(40)?;
+    let mut blobs = Vec::with_capacity(m);
+    for _ in 0..m {
+        let id = d.take_digest()?;
+        let bytes = d.take_bytes()?;
+        let actual = sha256::sha256(bytes);
+        if actual != id {
+            return Err(ArchiveError::ChecksumMismatch {
+                name: format!("plan blob {}", sha256::hex(&id)),
+                expected: sha256::hex(&id),
+                actual: sha256::hex(&actual),
+            });
+        }
+        blobs.push((id, Arc::new(bytes.to_vec())));
+    }
+    d.finish()?;
+    let head = entries.last().map(|e: &PlanLogEntry| e.id);
+    Ok(PlanLog { entries, blobs, head })
+}
+
+/// Serialize the shape-profile store into the `profiles.bin` payload.
+pub fn encode_profiles(store: &ShapeProfileStore) -> Vec<u8> {
+    let mut e = Enc::new();
+    put_header(&mut e, KIND_PROFILES);
+    e.put_u64(store.steps());
+    for phase in PhaseKind::ALL {
+        let profiles: Vec<_> = store.phase_profiles(phase).collect();
+        e.put_usize(profiles.len());
+        for (sketch, p) in profiles {
+            e.put_u64(sketch.0);
+            e.put_u64(p.count);
+            e.put_u64(p.total_len);
+            e.put_u64(p.min_len);
+            e.put_u64(p.max_len);
+            for &h in &p.hist {
+                e.put_u64(h);
+            }
+        }
+    }
+    e.buf
+}
+
+/// Rebuild the shape-profile store from `profiles.bin`.
+pub fn decode_profiles(
+    bytes: &[u8],
+) -> Result<ShapeProfileStore, ArchiveError> {
+    let mut d = Dec::new(bytes, "profiles.bin");
+    check_header(&mut d, KIND_PROFILES)?;
+    let steps = d.take_u64()?;
+    let mut phases: [Vec<(u64, ShapeProfile)>; 3] = Default::default();
+    for slot in phases.iter_mut() {
+        let n = d.take_len(8 * (5 + SKETCH_BUCKETS))?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            let sketch = d.take_u64()?;
+            let count = d.take_u64()?;
+            let total_len = d.take_u64()?;
+            let min_len = d.take_u64()?;
+            let max_len = d.take_u64()?;
+            let mut hist = [0u64; SKETCH_BUCKETS];
+            for h in hist.iter_mut() {
+                *h = d.take_u64()?;
+            }
+            v.push((
+                sketch,
+                ShapeProfile { count, hist, total_len, min_len, max_len },
+            ));
+        }
+        *slot = v;
+    }
+    d.finish()?;
+    Ok(ShapeProfileStore::restore(steps, phases))
+}
+
+// ---------------------------------------------------------------------------
+// Manifest
+// ---------------------------------------------------------------------------
+
+/// Summary of the exporting session's [`super::session::SessionStats`],
+/// embedded in the manifest as provenance.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StatsSummary {
+    pub steps: u64,
+    pub step_cache_hits: u64,
+    pub warm_rate: f64,
+    pub cache_hit_rate: f64,
+    pub mean_plan_ms: f64,
+}
+
+/// One payload's manifest record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PayloadMeta {
+    pub name: String,
+    pub bytes: u64,
+    pub sha256: String,
+}
+
+/// The parsed `manifest.json`: schema + provenance + payload digests.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub schema_version: String,
+    pub created_unix: u64,
+    pub git_describe: String,
+    pub topology: Topology,
+    pub topology_fingerprint: String,
+    pub config_fingerprint: String,
+    pub stats: StatsSummary,
+    pub plan_chain_len: u64,
+    pub plan_chain_head: Option<String>,
+    pub payloads: Vec<PayloadMeta>,
+    /// Self-hash: sha256 of the canonical JSON with this field removed.
+    pub manifest_sha256: String,
+}
+
+impl Manifest {
+    /// Parsed semver major of `schema_version` (None if unparseable).
+    pub fn major(&self) -> Option<u64> {
+        self.schema_version.split('.').next()?.parse().ok()
+    }
+
+    pub fn payload(&self, name: &str) -> Option<&PayloadMeta> {
+        self.payloads.iter().find(|p| p.name == name)
+    }
+
+    fn to_json_without_hash(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::str(&self.schema_version)),
+            ("created_unix", Json::num(self.created_unix as f64)),
+            ("generator", Json::str("orchmllm plan archive")),
+            ("git_describe", Json::str(&self.git_describe)),
+            (
+                "topology",
+                Json::obj(vec![
+                    (
+                        "instances",
+                        Json::num(self.topology.instances as f64),
+                    ),
+                    ("per_node", Json::num(self.topology.per_node as f64)),
+                    ("intra_bw", Json::num(self.topology.intra_bw)),
+                    ("inter_bw", Json::num(self.topology.inter_bw)),
+                    (
+                        "base_latency",
+                        Json::num(self.topology.base_latency),
+                    ),
+                ]),
+            ),
+            (
+                "topology_fingerprint",
+                Json::str(&self.topology_fingerprint),
+            ),
+            ("config_fingerprint", Json::str(&self.config_fingerprint)),
+            (
+                "stats",
+                Json::obj(vec![
+                    ("steps", Json::num(self.stats.steps as f64)),
+                    (
+                        "step_cache_hits",
+                        Json::num(self.stats.step_cache_hits as f64),
+                    ),
+                    ("warm_rate", Json::num(finite(self.stats.warm_rate))),
+                    (
+                        "cache_hit_rate",
+                        Json::num(finite(self.stats.cache_hit_rate)),
+                    ),
+                    (
+                        "mean_plan_ms",
+                        Json::num(finite(self.stats.mean_plan_ms)),
+                    ),
+                ]),
+            ),
+            (
+                "plan_chain",
+                Json::obj(vec![
+                    ("len", Json::num(self.plan_chain_len as f64)),
+                    (
+                        "head",
+                        match &self.plan_chain_head {
+                            Some(h) => Json::str(h),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            ),
+            (
+                "payloads",
+                Json::arr(self.payloads.iter().map(|p| {
+                    Json::obj(vec![
+                        ("name", Json::str(&p.name)),
+                        ("bytes", Json::num(p.bytes as f64)),
+                        ("sha256", Json::str(&p.sha256)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Serialize to canonical JSON text (sorted keys, 1-space pretty),
+    /// computing the self-hash.
+    pub fn to_text(&mut self) -> String {
+        let canonical = self.to_json_without_hash().pretty();
+        self.manifest_sha256 =
+            sha256::hex(&sha256::sha256(canonical.as_bytes()));
+        let mut j = self.to_json_without_hash();
+        if let Json::Obj(map) = &mut j {
+            map.insert(
+                "manifest_sha256".to_string(),
+                Json::str(&self.manifest_sha256),
+            );
+        }
+        let mut text = j.pretty();
+        text.push('\n');
+        text
+    }
+
+    /// Parse and self-verify a manifest. Unknown fields are ignored
+    /// (minor-version additions stay loadable); a bad self-hash or a
+    /// different major is a typed error.
+    pub fn parse(text: &str) -> Result<Manifest, ArchiveError> {
+        let malformed = |detail: String| ArchiveError::Malformed {
+            section: "manifest.json",
+            detail,
+        };
+        let j = Json::parse(text).map_err(|e| malformed(e.to_string()))?;
+        let schema_version = j
+            .get("schema_version")
+            .as_str()
+            .ok_or_else(|| malformed("missing schema_version".into()))?
+            .to_string();
+        let major: Option<u64> =
+            schema_version.split('.').next().and_then(|m| m.parse().ok());
+        if major != Some(SUPPORTED_MAJOR) {
+            return Err(ArchiveError::SchemaVersion {
+                found: schema_version,
+                supported: "1",
+            });
+        }
+        let recorded = j
+            .get("manifest_sha256")
+            .as_str()
+            .ok_or_else(|| malformed("missing manifest_sha256".into()))?
+            .to_string();
+        // Canonical re-serialization minus the hash field must hash to
+        // the recorded value. BTreeMap-backed objects make the sorted
+        // pretty form deterministic; f64s round-trip via shortest form.
+        let mut without = j.clone();
+        if let Json::Obj(map) = &mut without {
+            map.remove("manifest_sha256");
+        }
+        let actual =
+            sha256::hex(&sha256::sha256(without.pretty().as_bytes()));
+        if actual != recorded {
+            return Err(ArchiveError::ChecksumMismatch {
+                name: "manifest.json".to_string(),
+                expected: recorded,
+                actual,
+            });
+        }
+        let topo = j.get("topology");
+        let need_num = |v: &Json, what: &str| {
+            v.as_f64()
+                .ok_or_else(|| malformed(format!("missing {what}")))
+        };
+        let topology = Topology {
+            instances: need_num(topo.get("instances"), "topology.instances")?
+                as usize,
+            per_node: need_num(topo.get("per_node"), "topology.per_node")?
+                as usize,
+            intra_bw: need_num(topo.get("intra_bw"), "topology.intra_bw")?,
+            inter_bw: need_num(topo.get("inter_bw"), "topology.inter_bw")?,
+            base_latency: need_num(
+                topo.get("base_latency"),
+                "topology.base_latency",
+            )?,
+        };
+        let stats = j.get("stats");
+        let stats = StatsSummary {
+            steps: stats.get("steps").as_f64().unwrap_or(0.0) as u64,
+            step_cache_hits: stats
+                .get("step_cache_hits")
+                .as_f64()
+                .unwrap_or(0.0) as u64,
+            warm_rate: stats.get("warm_rate").as_f64().unwrap_or(0.0),
+            cache_hit_rate: stats
+                .get("cache_hit_rate")
+                .as_f64()
+                .unwrap_or(0.0),
+            mean_plan_ms: stats.get("mean_plan_ms").as_f64().unwrap_or(0.0),
+        };
+        let payloads = j
+            .get("payloads")
+            .as_arr()
+            .ok_or_else(|| malformed("missing payloads".into()))?
+            .iter()
+            .map(|p| {
+                Ok(PayloadMeta {
+                    name: p
+                        .get("name")
+                        .as_str()
+                        .ok_or_else(|| {
+                            malformed("payload missing name".into())
+                        })?
+                        .to_string(),
+                    bytes: p.get("bytes").as_f64().unwrap_or(0.0) as u64,
+                    sha256: p
+                        .get("sha256")
+                        .as_str()
+                        .ok_or_else(|| {
+                            malformed("payload missing sha256".into())
+                        })?
+                        .to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>, ArchiveError>>()?;
+        Ok(Manifest {
+            schema_version,
+            created_unix: j.get("created_unix").as_f64().unwrap_or(0.0)
+                as u64,
+            git_describe: j
+                .get("git_describe")
+                .as_str()
+                .unwrap_or("unknown")
+                .to_string(),
+            topology,
+            topology_fingerprint: j
+                .get("topology_fingerprint")
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            config_fingerprint: j
+                .get("config_fingerprint")
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            stats,
+            plan_chain_len: j
+                .get("plan_chain")
+                .get("len")
+                .as_f64()
+                .unwrap_or(0.0) as u64,
+            plan_chain_head: j
+                .get("plan_chain")
+                .get("head")
+                .as_str()
+                .map(str::to_string),
+            payloads,
+            manifest_sha256: recorded,
+        })
+    }
+}
+
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+// ---------------------------------------------------------------------------
+// Export / open / load
+// ---------------------------------------------------------------------------
+
+/// Borrowed view of everything a session exports.
+pub struct ExportInputs<'a> {
+    pub cfg: &'a OrchestratorConfig,
+    pub topo: &'a Topology,
+    pub history: &'a StepHistory,
+    pub profiles: &'a ShapeProfileStore,
+    pub plan_log: &'a PlanLog,
+    pub stats: StatsSummary,
+}
+
+/// Write a complete archive into `dir` (created if needed, existing
+/// payloads overwritten). Returns the manifest that was written.
+pub fn export(
+    dir: &Path,
+    inputs: &ExportInputs<'_>,
+) -> Result<Manifest, ArchiveError> {
+    fs::create_dir_all(dir).map_err(|e| io_err(dir, e))?;
+    let payload_bytes = [
+        (PAYLOAD_CACHES, encode_caches(inputs.history)),
+        (PAYLOAD_PLANS, encode_plans(inputs.plan_log)),
+        (PAYLOAD_PROFILES, encode_profiles(inputs.profiles)),
+    ];
+    let mut payloads = Vec::with_capacity(payload_bytes.len());
+    for (name, bytes) in &payload_bytes {
+        let path = dir.join(name);
+        fs::write(&path, bytes).map_err(|e| io_err(&path, e))?;
+        payloads.push(PayloadMeta {
+            name: name.to_string(),
+            bytes: bytes.len() as u64,
+            sha256: sha256::hex(&sha256::sha256(bytes)),
+        });
+    }
+    let mut manifest = Manifest {
+        schema_version: SCHEMA_VERSION.to_string(),
+        created_unix: unix_now(),
+        git_describe: git_describe(),
+        topology: *inputs.topo,
+        topology_fingerprint: topology_fingerprint(inputs.topo),
+        config_fingerprint: config_fingerprint(inputs.cfg),
+        stats: inputs.stats,
+        plan_chain_len: inputs.plan_log.len() as u64,
+        plan_chain_head: inputs
+            .plan_log
+            .head()
+            .map(|h| sha256::hex(&h)),
+        payloads,
+        manifest_sha256: String::new(),
+    };
+    let text = manifest.to_text();
+    let path = dir.join(MANIFEST);
+    fs::write(&path, text).map_err(|e| io_err(&path, e))?;
+    Ok(manifest)
+}
+
+/// An opened archive: manifest parsed and self-verified, payloads not
+/// yet read. Fingerprint checks are cheap at this stage.
+pub struct Archive {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+/// Fully decoded archive contents.
+pub struct LoadedState {
+    pub history: StepHistory,
+    pub profiles: ShapeProfileStore,
+    pub plan_log: PlanLog,
+}
+
+impl Archive {
+    /// Open an archive directory. `Ok(None)` when no manifest exists
+    /// there (callers degrade to cold start); schema/self-hash problems
+    /// are typed errors.
+    pub fn open(dir: &Path) -> Result<Option<Archive>, ArchiveError> {
+        let path = dir.join(MANIFEST);
+        let text = match fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => {
+                return Ok(None)
+            }
+            Err(e) => return Err(io_err(&path, e)),
+        };
+        let manifest = Manifest::parse(&text)?;
+        Ok(Some(Archive { dir: dir.to_path_buf(), manifest }))
+    }
+
+    /// Read and checksum-verify one payload's raw bytes.
+    fn payload_bytes(&self, name: &str) -> Result<Vec<u8>, ArchiveError> {
+        let meta = self.manifest.payload(name).ok_or_else(|| {
+            ArchiveError::MissingPayload { name: name.to_string() }
+        })?;
+        let path = self.dir.join(name);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => {
+                return Err(ArchiveError::MissingPayload {
+                    name: name.to_string(),
+                })
+            }
+            Err(e) => return Err(io_err(&path, e)),
+        };
+        let actual = sha256::hex(&sha256::sha256(&bytes));
+        if actual != meta.sha256 {
+            return Err(ArchiveError::ChecksumMismatch {
+                name: name.to_string(),
+                expected: meta.sha256.clone(),
+                actual,
+            });
+        }
+        Ok(bytes)
+    }
+
+    /// Decode the full archive state. `capacity_override` installs the
+    /// loader's plan-cache capacity (None keeps archived capacities).
+    pub fn load_state(
+        &self,
+        capacity_override: Option<usize>,
+    ) -> Result<LoadedState, ArchiveError> {
+        let history = decode_caches(
+            &self.payload_bytes(PAYLOAD_CACHES)?,
+            capacity_override,
+        )?;
+        let plan_log = decode_plans(&self.payload_bytes(PAYLOAD_PLANS)?)?;
+        let profiles =
+            decode_profiles(&self.payload_bytes(PAYLOAD_PROFILES)?)?;
+        Ok(LoadedState { history, profiles, plan_log })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Warm-start outcome
+// ---------------------------------------------------------------------------
+
+/// What `PlanSession::with_archive` found.
+#[derive(Clone, Debug)]
+pub enum WarmStart {
+    /// Archive loaded: caches, profiles, and plan chain installed.
+    Warm {
+        /// Step-cache entries restored.
+        cached_plans: usize,
+        /// Phase-cache entries restored (all three phases).
+        cached_solves: usize,
+        /// Plan-chain length carried forward.
+        chain_len: usize,
+        /// Shape-profile entries restored.
+        profile_entries: usize,
+    },
+    /// No usable archive: reason says why (missing, wrong world, wrong
+    /// config). Never an error — cold start is always safe.
+    Cold { reason: String },
+}
+
+impl WarmStart {
+    pub fn is_warm(&self) -> bool {
+        matches!(self, WarmStart::Warm { .. })
+    }
+
+    /// Human-readable one-liner for logs and reports.
+    pub fn describe(&self) -> String {
+        match self {
+            WarmStart::Warm {
+                cached_plans,
+                cached_solves,
+                chain_len,
+                profile_entries,
+            } => format!(
+                "warm start: {cached_plans} step plans, {cached_solves} \
+                 phase solves, {profile_entries} shape profiles, chain \
+                 len {chain_len}"
+            ),
+            WarmStart::Cold { reason } => format!("cold start: {reason}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Verify / inspect / gc
+// ---------------------------------------------------------------------------
+
+/// Result of a full integrity check.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub payloads: usize,
+    pub cached_plans: usize,
+    pub chain_len: usize,
+    pub blobs: usize,
+}
+
+/// Full integrity check: manifest self-hash + schema, payload sha256s,
+/// complete decode of every payload, blob content ids, and the causal
+/// chain's link structure. Any failure is a typed [`ArchiveError`].
+pub fn verify(dir: &Path) -> Result<VerifyReport, ArchiveError> {
+    let archive = Archive::open(dir)?.ok_or_else(|| {
+        ArchiveError::MissingPayload { name: MANIFEST.to_string() }
+    })?;
+    let state = archive.load_state(None)?;
+    let entries = state.plan_log.entries();
+    let mut prev: Option<[u8; 32]> = None;
+    for (i, e) in entries.iter().enumerate() {
+        if i > 0 && e.prev != prev {
+            return Err(ArchiveError::Malformed {
+                section: "plans.bin",
+                detail: format!(
+                    "causal chain broken at entry {i} (step {})",
+                    e.step
+                ),
+            });
+        }
+        if state.plan_log.blob(&e.id).is_none() {
+            return Err(ArchiveError::Malformed {
+                section: "plans.bin",
+                detail: format!(
+                    "entry {i} references missing blob {}",
+                    sha256::hex(&e.id)
+                ),
+            });
+        }
+        prev = Some(e.id);
+    }
+    if archive.manifest.plan_chain_len != entries.len() as u64 {
+        return Err(ArchiveError::Malformed {
+            section: "manifest.json",
+            detail: format!(
+                "manifest says chain len {}, plans.bin holds {}",
+                archive.manifest.plan_chain_len,
+                entries.len()
+            ),
+        });
+    }
+    Ok(VerifyReport {
+        payloads: archive.manifest.payloads.len(),
+        cached_plans: state.history.step_cache.len(),
+        chain_len: entries.len(),
+        blobs: state.plan_log.blob_count(),
+    })
+}
+
+/// Human-readable archive summary (the `archive inspect` output).
+pub fn inspect(dir: &Path) -> Result<String, ArchiveError> {
+    let archive = Archive::open(dir)?.ok_or_else(|| {
+        ArchiveError::MissingPayload { name: MANIFEST.to_string() }
+    })?;
+    let m = &archive.manifest;
+    let mut out = String::new();
+    out.push_str(&format!("plan archive at {}\n", dir.display()));
+    out.push_str(&format!(
+        "  schema {} · created {} · git {}\n",
+        m.schema_version, m.created_unix, m.git_describe
+    ));
+    out.push_str(&format!(
+        "  topology d={} per_node={} (fingerprint {})\n",
+        m.topology.instances,
+        m.topology.per_node,
+        &m.topology_fingerprint[..16.min(m.topology_fingerprint.len())]
+    ));
+    out.push_str(&format!(
+        "  config fingerprint {}\n",
+        &m.config_fingerprint[..16.min(m.config_fingerprint.len())]
+    ));
+    out.push_str(&format!(
+        "  session: {} steps, {} step-cache hits, warm rate {:.3}, \
+         cache hit rate {:.3}\n",
+        m.stats.steps,
+        m.stats.step_cache_hits,
+        m.stats.warm_rate,
+        m.stats.cache_hit_rate
+    ));
+    out.push_str(&format!(
+        "  plan chain: {} entries, head {}\n",
+        m.plan_chain_len,
+        m.plan_chain_head
+            .as_deref()
+            .map(|h| &h[..16.min(h.len())])
+            .unwrap_or("-")
+    ));
+    for p in &m.payloads {
+        out.push_str(&format!(
+            "  payload {:<13} {:>8} bytes  sha256 {}\n",
+            p.name,
+            p.bytes,
+            &p.sha256[..16.min(p.sha256.len())]
+        ));
+    }
+    Ok(out)
+}
+
+/// Result of a gc pass.
+#[derive(Clone, Debug)]
+pub struct GcReport {
+    pub kept: usize,
+    pub pruned: usize,
+    pub blobs_before: usize,
+    pub blobs_after: usize,
+}
+
+/// Prune the plan chain by count and/or age, rewrite `plans.bin`, and
+/// re-seal the manifest. Caches and profiles are untouched.
+pub fn gc(
+    dir: &Path,
+    keep_last: Option<usize>,
+    max_age_secs: Option<u64>,
+) -> Result<GcReport, ArchiveError> {
+    let archive = Archive::open(dir)?.ok_or_else(|| {
+        ArchiveError::MissingPayload { name: MANIFEST.to_string() }
+    })?;
+    let mut log = decode_plans(&archive.payload_bytes(PAYLOAD_PLANS)?)?;
+    let blobs_before = log.blob_count();
+    let pruned = log.prune(keep_last, max_age_secs, unix_now());
+    let bytes = encode_plans(&log);
+    let path = dir.join(PAYLOAD_PLANS);
+    fs::write(&path, &bytes).map_err(|e| io_err(&path, e))?;
+    let mut manifest = archive.manifest;
+    if let Some(meta) =
+        manifest.payloads.iter_mut().find(|p| p.name == PAYLOAD_PLANS)
+    {
+        meta.bytes = bytes.len() as u64;
+        meta.sha256 = sha256::hex(&sha256::sha256(&bytes));
+    }
+    manifest.plan_chain_len = log.len() as u64;
+    manifest.plan_chain_head = log.head().map(|h| sha256::hex(&h));
+    let text = manifest.to_text();
+    let mpath = dir.join(MANIFEST);
+    fs::write(&mpath, text).map_err(|e| io_err(&mpath, e))?;
+    Ok(GcReport {
+        kept: log.len(),
+        pruned,
+        blobs_before,
+        blobs_after: log.blob_count(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::cache::Sketch;
+
+    fn dispatch(seed: usize) -> DispatchPlan {
+        DispatchPlan {
+            assignment: vec![
+                vec![ExampleRef { id: seed, len: 5 + seed }],
+                vec![ExampleRef { id: seed + 1, len: 9 }],
+            ],
+            route: Rearrangement { from: vec![0, 1], to: vec![1, 0] },
+            nodewise_perm: vec![0, 1],
+            comm: CollectiveCost { seconds: 0.25, peak_bytes: 1e6 },
+            peak_bytes: 2e6,
+            compute_nanos: 12_345 + seed as u128,
+            source: PlanSource::Warm,
+            repair_moves: seed % 3,
+        }
+    }
+
+    fn encoder(seed: usize) -> EncoderPlan {
+        EncoderPlan {
+            plan: dispatch(seed),
+            out_route: Rearrangement { from: vec![1, 0], to: vec![0, 1] },
+            out_comm: CollectiveCost { seconds: 0.5, peak_bytes: 3e5 },
+            out_inter_node_bytes: 4.5e7,
+        }
+    }
+
+    fn step_plan() -> StepPlan {
+        StepPlan {
+            d: 2,
+            examples: vec![
+                Example {
+                    id: 0,
+                    task: Task::Vqa,
+                    vis_len: 16,
+                    aud_len: 0,
+                    text_len: 40,
+                    vis_tokens: 8,
+                    aud_tokens: 0,
+                },
+                Example {
+                    id: 1,
+                    task: Task::Asr,
+                    vis_len: 0,
+                    aud_len: 100,
+                    text_len: 20,
+                    vis_tokens: 0,
+                    aud_tokens: 25,
+                },
+            ],
+            home: vec![0, 1],
+            vision: encoder(0),
+            audio: encoder(7),
+            llm: dispatch(3),
+            compute_nanos: 999_999,
+        }
+    }
+
+    #[test]
+    fn step_plan_roundtrips_bit_identically() {
+        let plan = step_plan();
+        let bytes = encode_step_plan(&plan);
+        let back = decode_step_plan(&bytes).unwrap();
+        assert_eq!(encode_step_plan(&back), bytes);
+        assert_eq!(back.d, plan.d);
+        assert_eq!(back.examples, plan.examples);
+        assert_eq!(back.home, plan.home);
+        assert_eq!(back.llm.assignment, plan.llm.assignment);
+        assert_eq!(back.compute_nanos, plan.compute_nanos);
+    }
+
+    #[test]
+    fn truncated_plan_is_a_typed_error_not_a_panic() {
+        let bytes = encode_step_plan(&step_plan());
+        for cut in [0, 1, 7, bytes.len() / 2, bytes.len() - 1] {
+            match decode_step_plan(&bytes[..cut]) {
+                Err(ArchiveError::Truncated { .. }) => {}
+                other => panic!("cut at {cut}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_malformed() {
+        let mut bytes = encode_step_plan(&step_plan());
+        bytes.extend_from_slice(&[0xde, 0xad]);
+        assert!(matches!(
+            decode_step_plan(&bytes),
+            Err(ArchiveError::Malformed { .. })
+        ));
+    }
+
+    #[test]
+    fn corrupt_length_word_cannot_allocate_unbounded() {
+        // Flip a length prefix to u64::MAX: take_len must reject it
+        // before any Vec::with_capacity sees it.
+        let mut bytes = encode_step_plan(&step_plan());
+        bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_step_plan(&bytes).is_err());
+    }
+
+    #[test]
+    fn plan_log_chains_and_dedupes() {
+        let mut log = PlanLog::new();
+        let plan = step_plan();
+        let id1 = log.record(1, &plan);
+        let id2 = log.record(2, &plan); // identical plan → same id
+        assert_eq!(id1, id2);
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.blob_count(), 1, "identical plans share one blob");
+        assert_eq!(log.entries()[0].prev, None);
+        assert_eq!(log.entries()[1].prev, Some(id1));
+        assert_eq!(log.head(), Some(id2));
+        let mut other = plan.clone();
+        other.compute_nanos += 1;
+        let id3 = log.record(3, &other);
+        assert_ne!(id3, id1);
+        assert_eq!(log.blob_count(), 2);
+    }
+
+    #[test]
+    fn plans_payload_roundtrips_and_verifies_blob_ids() {
+        let mut log = PlanLog::new();
+        log.record(1, &step_plan());
+        let bytes = encode_plans(&log);
+        let back = decode_plans(&bytes).unwrap();
+        assert_eq!(back.entries(), log.entries());
+        assert_eq!(back.head(), log.head());
+        // Flip one byte inside the blob region: content id must catch it.
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xff;
+        assert!(matches!(
+            decode_plans(&bad),
+            Err(ArchiveError::ChecksumMismatch { .. })
+                | Err(ArchiveError::Truncated { .. })
+                | Err(ArchiveError::Malformed { .. })
+        ));
+    }
+
+    #[test]
+    fn plan_log_prune_rethreads_the_chain() {
+        let mut log = PlanLog::new();
+        for step in 1..=5u64 {
+            let mut p = step_plan();
+            p.compute_nanos = step as u128;
+            log.record(step, &p);
+        }
+        assert_eq!(log.blob_count(), 5);
+        let pruned = log.prune(Some(2), None, unix_now());
+        assert_eq!(pruned, 3);
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.blob_count(), 2, "orphan blobs dropped");
+        assert_eq!(log.entries()[0].prev, None, "chain re-threaded");
+        assert_eq!(
+            log.entries()[1].prev,
+            Some(log.entries()[0].id)
+        );
+        assert_eq!(log.head(), Some(log.entries()[1].id));
+    }
+
+    #[test]
+    fn caches_payload_roundtrips_history() {
+        let mut h = StepHistory::new(4);
+        h.llm.prev_local = vec![vec![ExampleRef { id: 0, len: 3 }]];
+        h.llm.cache.insert(
+            Sketch(42),
+            &[1, 2, 3],
+            vec![vec![ExampleRef { id: 9, len: 8 }]],
+        );
+        h.step_cache
+            .insert(Sketch(7), &[4, 5], Arc::new(step_plan()));
+        let bytes = encode_caches(&h);
+        let mut back = decode_caches(&bytes, None).unwrap();
+        assert_eq!(back.llm.prev_local, h.llm.prev_local);
+        assert_eq!(back.llm.cache.len(), 1);
+        assert_eq!(
+            back.llm.cache.lookup(Sketch(42), &[1, 2, 3]),
+            Some(vec![vec![ExampleRef { id: 9, len: 8 }]])
+        );
+        let got = back.step_cache.lookup(Sketch(7), &[4, 5]).unwrap();
+        assert_eq!(
+            encode_step_plan(&got),
+            encode_step_plan(&step_plan()),
+            "restored step plan is bit-identical"
+        );
+        // Capacity override respects the loader's config.
+        let small = decode_caches(&bytes, Some(0)).unwrap();
+        assert!(small.step_cache.is_empty());
+    }
+
+    #[test]
+    fn profiles_payload_roundtrips() {
+        let mut store = ShapeProfileStore::new();
+        store.observe_step(&step_plan().examples, 2);
+        store.observe_step(&step_plan().examples, 2);
+        let bytes = encode_profiles(&store);
+        let back = decode_profiles(&bytes).unwrap();
+        assert_eq!(back, store);
+    }
+
+    #[test]
+    fn payload_header_is_checked() {
+        let h = StepHistory::new(2);
+        let mut bytes = encode_caches(&h);
+        // Wrong magic.
+        bytes[0] ^= 0xff;
+        assert!(matches!(
+            decode_caches(&bytes, None),
+            Err(ArchiveError::Malformed { .. })
+        ));
+        // Wrong kind: a profiles payload fed to the caches decoder.
+        let p = encode_profiles(&ShapeProfileStore::new());
+        assert!(matches!(
+            decode_caches(&p, None),
+            Err(ArchiveError::Malformed { .. })
+        ));
+    }
+
+    #[test]
+    fn fingerprints_react_to_any_field() {
+        let t = Topology::h100(8);
+        let base = topology_fingerprint(&t);
+        assert_eq!(base, topology_fingerprint(&t), "deterministic");
+        let mut t2 = t;
+        t2.instances = 7;
+        assert_ne!(base, topology_fingerprint(&t2));
+        let mut t3 = t;
+        t3.inter_bw += 1.0;
+        assert_ne!(base, topology_fingerprint(&t3));
+
+        let cfg = OrchestratorConfig::orchmllm(7168.0);
+        let cbase = config_fingerprint(&cfg);
+        assert_eq!(cbase, config_fingerprint(&cfg));
+        let mut cfg2 = cfg.clone();
+        cfg2.composition = !cfg2.composition;
+        assert_ne!(cbase, config_fingerprint(&cfg2));
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_self_verifies() {
+        let mut m = Manifest {
+            schema_version: SCHEMA_VERSION.to_string(),
+            created_unix: 1_700_000_000,
+            git_describe: "abc123-dirty".to_string(),
+            topology: Topology::h100(16),
+            topology_fingerprint: topology_fingerprint(&Topology::h100(16)),
+            config_fingerprint: "deadbeef".to_string(),
+            stats: StatsSummary {
+                steps: 10,
+                step_cache_hits: 9,
+                warm_rate: 0.9,
+                cache_hit_rate: 0.45,
+                mean_plan_ms: 1.25,
+            },
+            plan_chain_len: 10,
+            plan_chain_head: Some("aa".repeat(32)),
+            payloads: vec![PayloadMeta {
+                name: "caches.bin".to_string(),
+                bytes: 128,
+                sha256: "bb".repeat(32),
+            }],
+            manifest_sha256: String::new(),
+        };
+        let text = m.to_text();
+        let back = Manifest::parse(&text).unwrap();
+        assert_eq!(back.schema_version, m.schema_version);
+        assert_eq!(back.topology, m.topology);
+        assert_eq!(back.stats, m.stats);
+        assert_eq!(back.plan_chain_head, m.plan_chain_head);
+        assert_eq!(back.manifest_sha256, m.manifest_sha256);
+    }
+
+    #[test]
+    fn manifest_tamper_is_a_checksum_error() {
+        let mut m = Manifest {
+            schema_version: SCHEMA_VERSION.to_string(),
+            created_unix: 1,
+            git_describe: "x".to_string(),
+            topology: Topology::h100(4),
+            topology_fingerprint: "t".to_string(),
+            config_fingerprint: "c".to_string(),
+            stats: StatsSummary::default(),
+            plan_chain_len: 0,
+            plan_chain_head: None,
+            payloads: vec![],
+            manifest_sha256: String::new(),
+        };
+        let text = m.to_text();
+        let tampered = text.replace("\"created_unix\": 1", "\"created_unix\": 2");
+        assert_ne!(text, tampered, "test premise");
+        assert!(matches!(
+            Manifest::parse(&tampered),
+            Err(ArchiveError::ChecksumMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn future_major_schema_is_a_typed_error() {
+        let mut m = Manifest {
+            schema_version: "2.0.0".to_string(),
+            created_unix: 1,
+            git_describe: "x".to_string(),
+            topology: Topology::h100(4),
+            topology_fingerprint: "t".to_string(),
+            config_fingerprint: "c".to_string(),
+            stats: StatsSummary::default(),
+            plan_chain_len: 0,
+            plan_chain_head: None,
+            payloads: vec![],
+            manifest_sha256: String::new(),
+        };
+        let text = m.to_text();
+        match Manifest::parse(&text) {
+            Err(ArchiveError::SchemaVersion { found, .. }) => {
+                assert_eq!(found, "2.0.0")
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn future_minor_schema_still_loads() {
+        // Same major, newer minor: must parse (unknown fields ignored
+        // by construction; the minor bump alone is not a rejection).
+        let mut m = Manifest {
+            schema_version: "1.9.0".to_string(),
+            created_unix: 1,
+            git_describe: "x".to_string(),
+            topology: Topology::h100(4),
+            topology_fingerprint: "t".to_string(),
+            config_fingerprint: "c".to_string(),
+            stats: StatsSummary::default(),
+            plan_chain_len: 0,
+            plan_chain_head: None,
+            payloads: vec![],
+            manifest_sha256: String::new(),
+        };
+        let text = m.to_text();
+        assert!(Manifest::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn export_verify_gc_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join(format!(
+            "orchmllm-archive-test-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        let cfg = OrchestratorConfig::orchmllm(7168.0);
+        let topo = Topology::h100(2);
+        let mut history = StepHistory::new(8);
+        history
+            .step_cache
+            .insert(Sketch(1), &[1], Arc::new(step_plan()));
+        let mut profiles = ShapeProfileStore::new();
+        profiles.observe_step(&step_plan().examples, 2);
+        let mut log = PlanLog::new();
+        for step in 1..=4 {
+            let mut p = step_plan();
+            p.compute_nanos = step as u128;
+            log.record(step, &p);
+        }
+        let inputs = ExportInputs {
+            cfg: &cfg,
+            topo: &topo,
+            history: &history,
+            profiles: &profiles,
+            plan_log: &log,
+            stats: StatsSummary {
+                steps: 4,
+                step_cache_hits: 3,
+                warm_rate: 0.75,
+                cache_hit_rate: 0.5,
+                mean_plan_ms: 0.1,
+            },
+        };
+        let manifest = export(&dir, &inputs).unwrap();
+        assert_eq!(manifest.plan_chain_len, 4);
+
+        let report = verify(&dir).unwrap();
+        assert_eq!(report.payloads, 3);
+        assert_eq!(report.chain_len, 4);
+        assert_eq!(report.cached_plans, 1);
+
+        let opened = Archive::open(&dir).unwrap().unwrap();
+        let state = opened.load_state(Some(8)).unwrap();
+        assert_eq!(state.plan_log.len(), 4);
+        assert_eq!(state.profiles, profiles);
+        assert_eq!(state.history.step_cache.len(), 1);
+
+        // gc down to the last 2 entries, then verify again.
+        let gc_report = gc(&dir, Some(2), None).unwrap();
+        assert_eq!(gc_report.kept, 2);
+        assert_eq!(gc_report.pruned, 2);
+        let report = verify(&dir).unwrap();
+        assert_eq!(report.chain_len, 2);
+
+        // Corrupt a payload byte: verify must fail with a checksum error.
+        let path = dir.join(PAYLOAD_CACHES);
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            verify(&dir),
+            Err(ArchiveError::ChecksumMismatch { .. })
+        ));
+
+        // Missing archive opens as None.
+        let _ = fs::remove_dir_all(&dir);
+        assert!(Archive::open(&dir).unwrap().is_none());
+    }
+}

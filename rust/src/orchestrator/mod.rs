@@ -18,14 +18,27 @@
 //!   [`session::PlanReport`]s;
 //! * [`pipeline`] — the deep-buffered [`pipeline::StepPipeline`] that
 //!   drives a session on a background thread, planning step *t+1*
-//!   while step *t* executes (the §6 overlap on the execution path).
+//!   while step *t* executes (the §6 overlap on the execution path);
+//! * [`archive`] — the persistent plan archive: versioned, checksummed
+//!   serialization of a session's caches, shape profiles, and a
+//!   content-addressed causal log of emitted plans, so a fresh process
+//!   warm-starts bit-identically from a prior run;
+//! * [`profile`] — the shape-profile store archived alongside the
+//!   caches: observed [`crate::balance::cache::Sketch`] →
+//!   length-histogram distributions per phase.
 
+pub mod archive;
 pub mod dispatcher;
 pub mod global;
 pub mod pipeline;
+pub mod profile;
 pub mod rearrangement;
 pub mod session;
 
+pub use archive::{
+    Archive, ArchiveError, ExportInputs, Manifest, PlanLog, StatsSummary,
+    WarmStart,
+};
 pub use dispatcher::{
     Communicator, DispatchOptions, Dispatcher, DispatchPlan, PhaseHistory,
 };

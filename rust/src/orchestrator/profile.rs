@@ -1,0 +1,294 @@
+//! Shape-profile store: observed `Sketch` → length-histogram
+//! distributions per phase.
+//!
+//! The plan caches answer "have I seen *exactly* this batch before?";
+//! the profile store answers the softer question "what does this job's
+//! shape distribution look like?" — which sketches recur, how often,
+//! and what length histogram each one carries. Profiles ride along in
+//! the plan archive (orchestrator/archive.rs), so a warm-started
+//! process inherits not just cached plans but a durable picture of the
+//! workload that produced them: auto-selection heuristics, capacity
+//! tuning, and post-hoc audits can all read it without replaying the
+//! run.
+//!
+//! Observation is **opt-in** (sessions record only when archiving is
+//! enabled): the steady-state planning path is gated at zero heap
+//! allocations per warm step (rust/tests/plan_allocations.rs), and
+//! first-sighting a sketch inserts into a `Vec`.
+
+use crate::balance::cache::{Sketch, SKETCH_BUCKETS};
+use crate::data::synth::Example;
+use crate::model::flops::PhaseKind;
+
+/// Aggregated shape statistics for one recurring sketch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapeProfile {
+    /// Steps on which this sketch was observed.
+    pub count: u64,
+    /// log₂ length histogram, same bucketing as [`Sketch`]
+    /// ([`SKETCH_BUCKETS`] buckets), summed over observations.
+    pub hist: [u64; SKETCH_BUCKETS],
+    /// Sum of all observed lengths (for mean length).
+    pub total_len: u64,
+    /// Shortest length ever observed under this sketch.
+    pub min_len: u64,
+    /// Longest length ever observed under this sketch.
+    pub max_len: u64,
+}
+
+impl ShapeProfile {
+    fn new() -> ShapeProfile {
+        ShapeProfile {
+            count: 0,
+            hist: [0; SKETCH_BUCKETS],
+            total_len: 0,
+            min_len: u64::MAX,
+            max_len: 0,
+        }
+    }
+
+    fn observe(&mut self, lens: impl Iterator<Item = usize>) {
+        self.count += 1;
+        for l in lens {
+            self.hist[bucket(l)] += 1;
+            self.total_len += l as u64;
+            self.min_len = self.min_len.min(l as u64);
+            self.max_len = self.max_len.max(l as u64);
+        }
+    }
+
+    /// Total sequences across all observations.
+    pub fn sequences(&self) -> u64 {
+        self.hist.iter().sum()
+    }
+
+    /// Mean observed length (0.0 before any observation).
+    pub fn mean_len(&self) -> f64 {
+        let n = self.sequences();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_len as f64 / n as f64
+        }
+    }
+}
+
+/// Same bucketing rule as `balance::cache::bucket` (private there):
+/// bucket 0 for zero lengths, floor(log2) + 1 otherwise, last bucket
+/// absorbs over-range. A unit test pins the agreement via `Sketch`.
+#[inline]
+fn bucket(l: usize) -> usize {
+    ((usize::BITS - l.leading_zeros()) as usize).min(SKETCH_BUCKETS - 1)
+}
+
+/// Per-phase map of observed sketches to their shape profiles.
+///
+/// Backed by small sorted-insertion `Vec`s — a training job recurs over
+/// a handful of shapes (that is the premise of the plan cache), so the
+/// store stays tiny and scan-friendly.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShapeProfileStore {
+    /// Indexed by phase: 0 = vision, 1 = audio, 2 = llm (the
+    /// [`PhaseKind`] order used throughout the orchestrator).
+    phases: [Vec<(u64, ShapeProfile)>; 3],
+    /// Steps observed (each step touches all three phases).
+    steps: u64,
+}
+
+impl ShapeProfileStore {
+    pub fn new() -> ShapeProfileStore {
+        ShapeProfileStore::default()
+    }
+
+    /// Record one planned step: derive each phase's active lengths from
+    /// the plan's examples (the same derivation the planner sketches
+    /// with) and fold them into that phase's profile.
+    pub fn observe_step(&mut self, examples: &[Example], d: usize) {
+        self.steps += 1;
+        self.observe_phase(
+            PhaseKind::Vision,
+            examples.iter().map(|e| e.vis_len),
+            d,
+        );
+        self.observe_phase(
+            PhaseKind::Audio,
+            examples.iter().map(|e| e.aud_len),
+            d,
+        );
+        self.observe_phase(
+            PhaseKind::Llm,
+            examples.iter().map(|e| e.llm_len()),
+            d,
+        );
+    }
+
+    /// Fold one phase's length stream into its sketch-keyed profile.
+    pub fn observe_phase(
+        &mut self,
+        phase: PhaseKind,
+        lens: impl Iterator<Item = usize> + Clone,
+        d: usize,
+    ) {
+        let sketch = Sketch::of_iter(lens.clone(), d);
+        let v = &mut self.phases[phase_index(phase)];
+        let profile = match v.iter_mut().find(|(s, _)| *s == sketch.0) {
+            Some((_, p)) => p,
+            None => {
+                v.push((sketch.0, ShapeProfile::new()));
+                &mut v.last_mut().expect("just pushed").1
+            }
+        };
+        profile.observe(lens);
+    }
+
+    /// Steps observed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Distinct sketches observed for a phase.
+    pub fn distinct(&self, phase: PhaseKind) -> usize {
+        self.phases[phase_index(phase)].len()
+    }
+
+    /// Iterate one phase's `(sketch, profile)` pairs in observation
+    /// order (serialization + reporting).
+    pub fn phase_profiles(
+        &self,
+        phase: PhaseKind,
+    ) -> impl Iterator<Item = (Sketch, &ShapeProfile)> {
+        self.phases[phase_index(phase)]
+            .iter()
+            .map(|(s, p)| (Sketch(*s), p))
+    }
+
+    /// Total profile entries across phases.
+    pub fn len(&self) -> usize {
+        self.phases.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rebuild from serialized parts (archive load).
+    pub fn restore(
+        steps: u64,
+        phases: [Vec<(u64, ShapeProfile)>; 3],
+    ) -> ShapeProfileStore {
+        ShapeProfileStore { phases, steps }
+    }
+
+    /// Merge another store into this one (a rejoined world folding a
+    /// peer's archive into its own observations).
+    pub fn merge(&mut self, other: &ShapeProfileStore) {
+        self.steps += other.steps;
+        for (mine, theirs) in self.phases.iter_mut().zip(other.phases.iter()) {
+            for (sketch, profile) in theirs {
+                match mine.iter_mut().find(|(s, _)| s == sketch) {
+                    Some((_, p)) => {
+                        p.count += profile.count;
+                        p.total_len += profile.total_len;
+                        p.min_len = p.min_len.min(profile.min_len);
+                        p.max_len = p.max_len.max(profile.max_len);
+                        for (a, b) in p.hist.iter_mut().zip(profile.hist.iter())
+                        {
+                            *a += b;
+                        }
+                    }
+                    None => mine.push((*sketch, profile.clone())),
+                }
+            }
+        }
+    }
+}
+
+/// Stable phase indexing for the store (and its archive payload).
+pub fn phase_index(phase: PhaseKind) -> usize {
+    match phase {
+        PhaseKind::Vision => 0,
+        PhaseKind::Audio => 1,
+        PhaseKind::Llm => 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Task;
+
+    fn ex(id: usize, vis: usize, aud: usize, text: usize) -> Example {
+        Example {
+            id,
+            task: Task::AvDialogue,
+            vis_len: vis,
+            aud_len: aud,
+            text_len: text,
+            vis_tokens: vis / 2,
+            aud_tokens: aud / 2,
+        }
+    }
+
+    #[test]
+    fn bucket_agrees_with_sketch_bucketing() {
+        // Same lengths → same sketch means the private bucket fn in
+        // cache.rs and ours agree; probe the boundary values.
+        for l in [0usize, 1, 2, 3, 4, 65_535, 65_536, 1 << 20] {
+            let a = Sketch::of(&[l], 1);
+            let b = Sketch::of_iter(std::iter::once(l), 1);
+            assert_eq!(a, b);
+            assert!(bucket(l) < SKETCH_BUCKETS);
+        }
+    }
+
+    #[test]
+    fn recurring_shapes_aggregate_under_one_sketch() {
+        let mut store = ShapeProfileStore::new();
+        let batch = vec![ex(0, 8, 4, 100), ex(1, 16, 0, 50)];
+        store.observe_step(&batch, 2);
+        store.observe_step(&batch, 2);
+        assert_eq!(store.steps(), 2);
+        assert_eq!(store.distinct(PhaseKind::Llm), 1);
+        let (_, p) = store.phase_profiles(PhaseKind::Llm).next().unwrap();
+        assert_eq!(p.count, 2);
+        assert_eq!(p.sequences(), 4);
+        let llm0 = (100 + 8 / 2 + 4 / 2) as u64;
+        let llm1 = (50 + 16 / 2) as u64;
+        assert_eq!(p.total_len, 2 * (llm0 + llm1));
+        assert_eq!(p.min_len, llm1.min(llm0));
+        assert_eq!(p.max_len, llm1.max(llm0));
+    }
+
+    #[test]
+    fn different_shapes_get_distinct_profiles() {
+        let mut store = ShapeProfileStore::new();
+        store.observe_step(&[ex(0, 8, 4, 100)], 1);
+        store.observe_step(&[ex(0, 8, 4, 100), ex(1, 8, 4, 100)], 1);
+        assert_eq!(store.distinct(PhaseKind::Vision), 2);
+    }
+
+    #[test]
+    fn merge_folds_counts() {
+        let mut a = ShapeProfileStore::new();
+        let mut b = ShapeProfileStore::new();
+        let batch = vec![ex(0, 8, 4, 100)];
+        a.observe_step(&batch, 1);
+        b.observe_step(&batch, 1);
+        b.observe_step(&[ex(0, 32, 4, 100)], 1);
+        a.merge(&b);
+        assert_eq!(a.steps(), 3);
+        assert_eq!(a.distinct(PhaseKind::Vision), 2);
+        let (_, p) = a.phase_profiles(PhaseKind::Vision).next().unwrap();
+        assert_eq!(p.count, 2, "shared sketch merges counts");
+    }
+
+    #[test]
+    fn mean_len_is_sane() {
+        let p = ShapeProfile::new();
+        assert_eq!(p.mean_len(), 0.0);
+        let mut store = ShapeProfileStore::new();
+        store.observe_step(&[ex(0, 10, 10, 10)], 1);
+        let (_, p) = store.phase_profiles(PhaseKind::Audio).next().unwrap();
+        assert_eq!(p.mean_len(), 10.0);
+    }
+}

@@ -38,6 +38,7 @@
 //! (`rust/tests/session_parity.rs`) pins each strategy bit-identical to
 //! the legacy `plan_step_*` path it replaced.
 
+use std::path::Path;
 use std::time::Instant;
 
 use crate::balance::incremental::{PlanSource, REPAIR_TOLERANCE};
@@ -47,11 +48,16 @@ use crate::util::stats::Summary;
 
 use std::sync::Arc;
 
+use super::archive::{
+    self, Archive, ArchiveError, ExportInputs, Manifest, PlanLog,
+    StatsSummary, WarmStart,
+};
 use super::global::{
     materialize, Orchestrator, OrchestratorConfig, StepHistory,
     StepOutcome, StepPlan, StepScratch,
 };
 use super::pipeline::PipelineConfig;
+use super::profile::ShapeProfileStore;
 
 /// How the from-scratch phase solves execute.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -318,6 +324,15 @@ pub struct PlanSession {
     history: StepHistory,
     last: Option<PlanReport>,
     stats: SessionStats,
+    /// Shape-profile store, populated only while `archive_log` is on.
+    profiles: ShapeProfileStore,
+    /// Content-addressed causal log of emitted plans, populated only
+    /// while `archive_log` is on.
+    plan_log: PlanLog,
+    /// Opt-in archive recording. Off by default: the steady-state
+    /// planning path is gated at zero heap allocations per warm step
+    /// (rust/tests/plan_allocations.rs), and recording allocates.
+    archive_log: bool,
 }
 
 impl PlanSession {
@@ -338,7 +353,90 @@ impl PlanSession {
             history: StepHistory::new(pipeline.plan_cache_size.min(65_536)),
             last: None,
             stats: SessionStats::default(),
+            profiles: ShapeProfileStore::new(),
+            plan_log: PlanLog::new(),
+            archive_log: false,
         }
+    }
+
+    /// Construct a session and warm-start it from a plan archive at
+    /// `dir` (written by [`PlanSession::export_archive`]).
+    ///
+    /// The load is guarded: a missing archive, a topology-fingerprint
+    /// mismatch (elastic shrink/grow since the export), or a
+    /// config-fingerprint mismatch all degrade to a **cold start with a
+    /// logged reason** — an archived plan is never reused against a
+    /// world it was not planned for. Archive corruption and schema-major
+    /// skew are typed [`ArchiveError`]s, not silent cold starts.
+    ///
+    /// On a warm start the restored step cache replays recurring steps
+    /// **bit-identically**: a hit hands back the archived [`StepPlan`]
+    /// object itself (provenance: `step_cache_hit` in the
+    /// [`PlanReport`]).
+    pub fn with_archive(
+        cfg: OrchestratorConfig,
+        pipeline: PipelineConfig,
+        topo: Topology,
+        dir: &Path,
+    ) -> Result<(PlanSession, WarmStart), ArchiveError> {
+        let mut session = PlanSession::new(cfg, pipeline, topo);
+        let archive = match Archive::open(dir)? {
+            Some(a) => a,
+            None => {
+                let start = WarmStart::Cold {
+                    reason: format!(
+                        "no archive at {}",
+                        dir.display()
+                    ),
+                };
+                eprintln!("[archive] {}", start.describe());
+                return Ok((session, start));
+            }
+        };
+        let want_topo = archive::topology_fingerprint(&session.topo);
+        let want_cfg = archive::config_fingerprint(session.config());
+        let m = &archive.manifest;
+        if m.topology_fingerprint != want_topo {
+            let start = WarmStart::Cold {
+                reason: format!(
+                    "topology fingerprint mismatch (archive {} for d={}, \
+                     this world {} for d={})",
+                    &m.topology_fingerprint[..16.min(m.topology_fingerprint.len())],
+                    m.topology.instances,
+                    &want_topo[..16],
+                    session.topo.instances,
+                ),
+            };
+            eprintln!("[archive] {}", start.describe());
+            return Ok((session, start));
+        }
+        if m.config_fingerprint != want_cfg {
+            let start = WarmStart::Cold {
+                reason: format!(
+                    "orchestrator config fingerprint mismatch (archive \
+                     {}, this session {})",
+                    &m.config_fingerprint[..16.min(m.config_fingerprint.len())],
+                    &want_cfg[..16],
+                ),
+            };
+            eprintln!("[archive] {}", start.describe());
+            return Ok((session, start));
+        }
+        let state = archive
+            .load_state(Some(pipeline.plan_cache_size.min(65_536)))?;
+        let cached_solves = state.history.vision.cache.len()
+            + state.history.audio.cache.len()
+            + state.history.llm.cache.len();
+        let start = WarmStart::Warm {
+            cached_plans: state.history.step_cache.len(),
+            cached_solves,
+            chain_len: state.plan_log.len(),
+            profile_entries: state.profiles.len(),
+        };
+        session.history = state.history;
+        session.profiles = state.profiles;
+        session.plan_log = state.plan_log;
+        Ok((session, start))
     }
 
     /// [`PlanSession::new`] with the default [`PipelineConfig`].
@@ -452,6 +550,13 @@ impl PlanSession {
             tolerance: opts.tolerance,
             plan_nanos: t0.elapsed().as_nanos(),
         };
+        if self.archive_log {
+            // Opt-in by design: recording allocates (profile entries,
+            // plan-log blobs), and default sessions are pinned to zero
+            // allocations per warm step.
+            self.profiles.observe_step(&plan.examples, plan.d);
+            self.plan_log.record(report.step, &plan);
+        }
         self.stats.record(&report);
         self.last = Some(report);
         plan
@@ -480,12 +585,72 @@ impl PlanSession {
         self.history.cache_hit_rate()
     }
 
+    /// Turn archive recording on or off (off by default). While on,
+    /// every planned step feeds the shape-profile store and appends to
+    /// the content-addressed plan log exported by
+    /// [`PlanSession::export_archive`].
+    pub fn set_archive_log(&mut self, on: bool) {
+        self.archive_log = on;
+    }
+
+    /// Whether archive recording is currently on.
+    pub fn archive_log(&self) -> bool {
+        self.archive_log
+    }
+
+    /// The session's shape-profile store (empty unless archive
+    /// recording is on or an archive was loaded).
+    pub fn profiles(&self) -> &ShapeProfileStore {
+        &self.profiles
+    }
+
+    /// The session's plan log (empty unless archive recording is on or
+    /// an archive was loaded).
+    pub fn plan_log(&self) -> &PlanLog {
+        &self.plan_log
+    }
+
+    /// Snapshot of the session's cumulative stats in the manifest's
+    /// provenance form.
+    pub fn stats_summary(&self) -> StatsSummary {
+        StatsSummary {
+            steps: self.stats.steps(),
+            step_cache_hits: self.stats.step_cache_hits(),
+            warm_rate: self.stats.warm_rate(),
+            cache_hit_rate: self.stats.cache_hit_rate(),
+            mean_plan_ms: self.stats.mean_plan_ms(),
+        }
+    }
+
+    /// Export the session's full planning state — phase + step caches,
+    /// shape profiles, and the causal plan log — as a versioned,
+    /// checksummed archive at `dir`. A fresh process can warm-start
+    /// from it via [`PlanSession::with_archive`].
+    pub fn export_archive(
+        &self,
+        dir: &Path,
+    ) -> Result<Manifest, ArchiveError> {
+        archive::export(
+            dir,
+            &ExportInputs {
+                cfg: self.config(),
+                topo: &self.topo,
+                history: &self.history,
+                profiles: &self.profiles,
+                plan_log: &self.plan_log,
+                stats: self.stats_summary(),
+            },
+        )
+    }
+
     /// Re-target the session at a new topology (elastic shrink/grow):
     /// swap the topology and drop the per-topology planning state —
     /// history, plan caches, and scratch are keyed to the old world
     /// size and must not warm-start across a resize. Cumulative
     /// provenance ([`PlanSession::stats`]) keeps counting across the
-    /// transition.
+    /// transition, and so do the archive shape profiles and the causal
+    /// plan log — an export after a resize carries the *new* world's
+    /// topology fingerprint over the whole recorded chain.
     pub fn resize(&mut self, topo: Topology) {
         self.topo = topo;
         self.scratch = StepScratch::default();

@@ -14,6 +14,8 @@
 //! phase activations (padded batching pays for padding) + communicator
 //! staging buffers. OOM ends the run (Fig. 10/12 behaviour).
 
+use std::path::Path;
+
 use crate::balance::balancer::registry;
 use crate::balance::types::ExampleRef;
 use crate::comm::costmodel::allreduce_cost;
@@ -21,9 +23,11 @@ use crate::comm::topology::Topology;
 use crate::data::synth::{DatasetConfig, Example, Generator};
 use crate::model::config::MllmConfig;
 use crate::model::flops::{PhaseKind, SubmoduleCost};
+use crate::orchestrator::archive::{encode_step_plan, ArchiveError, WarmStart};
 use crate::orchestrator::global::{OrchestratorConfig, StepPlan};
 use crate::orchestrator::pipeline::PipelineConfig;
 use crate::orchestrator::session::{PlanOptions, PlanSession};
+use crate::util::sha256;
 use crate::util::stats::Summary;
 
 // Plan-time telemetry now lives with the session that produces it;
@@ -285,6 +289,31 @@ pub fn simulate_step_modes(
     }
 }
 
+/// What the plan archive did for one simulated run (present only when
+/// the run was asked to load and/or export an archive).
+#[derive(Clone, Debug)]
+pub struct ArchiveRunInfo {
+    /// An archive was found, fingerprint-matched, and installed.
+    pub loaded: bool,
+    /// Why the load degraded to a cold start (`None` when `loaded`).
+    pub cold_reason: Option<String>,
+    /// Fraction of the run's steps replayed whole from the step-level
+    /// plan cache — the warm-start hit rate the CI `plan-archive` job
+    /// gates on. A same-seed re-run over a loaded archive replays every
+    /// step; a cold run replays none (random batches don't recur
+    /// within a run).
+    pub warm_start_hit_rate: f64,
+    /// Whether the *first* step replayed from the (restored) cache —
+    /// the bit-identity provenance signal.
+    pub first_step_cache_hit: bool,
+    /// Content id (sha256 of the canonical encoding) of the first
+    /// step's plan; equal across processes when the first step replays
+    /// the archived plan.
+    pub first_plan_id: Option<String>,
+    /// An archive was exported at the end of the run.
+    pub exported: bool,
+}
+
 /// Aggregate of a simulated multi-step run.
 #[derive(Clone, Debug)]
 pub struct RunSummary {
@@ -311,6 +340,9 @@ pub struct RunSummary {
     /// Per-dispatcher max-over-instances inter-node bytes (Eq. 5 metric)
     /// for the input rearrangements (Fig.-13), per modality.
     pub inter_node_mb: [f64; 3],
+    /// Plan-archive activity for this run (`None` unless the run was
+    /// given an archive endpoint via [`simulate_run_archived`]).
+    pub archive: Option<ArchiveRunInfo>,
 }
 
 /// Run `steps` simulated iterations of a system on a model+cluster.
@@ -336,6 +368,32 @@ pub fn simulate_run_named(
     seed: u64,
     balancer: Option<&str>,
 ) -> RunSummary {
+    simulate_run_archived(
+        system, model, gpus, mini_batch, steps, seed, balancer, None, None,
+    )
+    .expect("simulation without archive endpoints is infallible")
+}
+
+/// Like [`simulate_run_named`], with plan-archive endpoints: install a
+/// prior run's archive into the session before the first step
+/// (`archive_in`) and/or export this run's caches, shape profiles, and
+/// plan log after the last (`archive_out`). Archive activity lands in
+/// [`RunSummary::archive`]. The only error paths are archive
+/// I/O/decode failures; with both endpoints `None` the call cannot
+/// fail. Megatron runs have no orchestrator session, so archive
+/// endpoints are ignored for them.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_run_archived(
+    system: SystemKind,
+    model: &MllmConfig,
+    gpus: usize,
+    mini_batch: usize,
+    steps: usize,
+    seed: u64,
+    balancer: Option<&str>,
+    archive_in: Option<&Path>,
+    archive_out: Option<&Path>,
+) -> Result<RunSummary, ArchiveError> {
     let topo = Topology::h100(gpus);
     let gpu = GpuSpec::h100();
     let data_cfg = DatasetConfig {
@@ -346,9 +404,9 @@ pub fn simulate_run_named(
     };
 
     if system == SystemKind::Megatron {
-        return megatron::simulate_megatron(
+        return Ok(megatron::simulate_megatron(
             model, gpus, mini_batch, steps, seed, &data_cfg,
-        );
+        ));
     }
 
     let mut cfg = system
@@ -364,8 +422,25 @@ pub fn simulate_run_named(
     // The simulator's planning stream is one session: it owns the
     // scratch, histories, and plan caches the loop used to thread by
     // hand, and its stats become the run's plan-time telemetry.
-    let mut session =
-        PlanSession::new(cfg.clone(), PipelineConfig::default(), topo);
+    let mut warm: Option<WarmStart> = None;
+    let mut session = match archive_in {
+        Some(dir) => {
+            let (s, w) = PlanSession::with_archive(
+                cfg.clone(),
+                PipelineConfig::default(),
+                topo,
+                dir,
+            )?;
+            warm = Some(w);
+            s
+        }
+        None => {
+            PlanSession::new(cfg.clone(), PipelineConfig::default(), topo)
+        }
+    };
+    if archive_out.is_some() {
+        session.set_archive_log(true);
+    }
     let mut generator = Generator::new(data_cfg, seed);
 
     let mut mfu = Summary::new();
@@ -377,11 +452,24 @@ pub fn simulate_run_named(
     let mut overlap = Summary::new();
     let mut inter = [Summary::new(), Summary::new(), Summary::new()];
     let mut oom = false;
+    let mut first_step_cache_hit = false;
+    let mut first_plan_id: Option<String> = None;
 
-    for _ in 0..steps {
+    for step in 0..steps {
         let minibatches: Vec<Vec<Example>> =
             (0..gpus).map(|_| generator.batch(mini_batch)).collect();
-        let plan = session.plan(&minibatches, PlanOptions::auto());
+        // `plan_shared`, not `plan`: a step-cache replay hands back the
+        // archived `Arc` unmodified, so hashing it below reproduces the
+        // archived content id bit for bit (`plan` would materialize
+        // per-call provenance into the copy and perturb the hash).
+        let plan = session.plan_shared(&minibatches, PlanOptions::auto());
+        if step == 0 && (archive_in.is_some() || archive_out.is_some()) {
+            let r = session.report().expect("plan_shared records a report");
+            first_step_cache_hit = r.step_cache_hit;
+            first_plan_id = Some(sha256::hex(&sha256::sha256(
+                &encode_step_plan(&plan),
+            )));
+        }
         let sim = simulate_step_modes(
             model,
             &topo,
@@ -434,7 +522,34 @@ pub fn simulate_run_named(
         oom |= sim.oom;
     }
 
-    RunSummary {
+    let mut exported = false;
+    if let Some(dir) = archive_out {
+        session.export_archive(dir)?;
+        exported = true;
+    }
+    let archive = if archive_in.is_some() || archive_out.is_some() {
+        let (loaded, cold_reason) = match &warm {
+            Some(WarmStart::Warm { .. }) => (true, None),
+            Some(WarmStart::Cold { reason }) => (false, Some(reason.clone())),
+            None => (false, None),
+        };
+        Some(ArchiveRunInfo {
+            loaded,
+            cold_reason,
+            warm_start_hit_rate: if steps == 0 {
+                0.0
+            } else {
+                session.stats().step_cache_hits() as f64 / steps as f64
+            },
+            first_step_cache_hit,
+            first_plan_id,
+            exported,
+        })
+    } else {
+        None
+    };
+
+    Ok(RunSummary {
         system,
         model_name: model.name,
         gpus,
@@ -453,7 +568,8 @@ pub fn simulate_run_named(
         plan_overlapped_pct: overlap.mean(),
         plan_stats: session.plan_time_stats(),
         inter_node_mb: [inter[0].mean(), inter[1].mean(), inter[2].mean()],
-    }
+        archive,
+    })
 }
 
 #[cfg(test)]

@@ -196,6 +196,7 @@ pub fn simulate_megatron(
         plan_overlapped_pct: 100.0,
         plan_stats: crate::sim::engine::PlanTimeStats::default(),
         inter_node_mb: [0.0; 3],
+        archive: None,
     }
 }
 

@@ -13,7 +13,7 @@ pub mod megatron;
 pub mod report;
 
 pub use engine::{
-    simulate_run, simulate_run_named, simulate_step, RunSummary, StepSim,
-    SystemKind,
+    simulate_run, simulate_run_archived, simulate_run_named, simulate_step,
+    ArchiveRunInfo, RunSummary, StepSim, SystemKind,
 };
 pub use gpu::GpuSpec;

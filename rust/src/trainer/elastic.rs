@@ -54,10 +54,12 @@ use crate::comm::transport::{
 };
 use crate::config::TrainRunConfig;
 use crate::data::synth::{DatasetConfig, Example, Generator};
+use crate::orchestrator::archive;
 use crate::orchestrator::global::StepPlan;
 use crate::orchestrator::session::{PlanOptions, PlanSession};
 use crate::util::cli::Args;
 use crate::util::json::Json;
+use crate::util::sha256;
 
 use super::{orchestrator_config, worker_topology_with_floor, TrainReport};
 
@@ -444,11 +446,35 @@ pub fn run_member(
         .with_context(|| format!("member {id} joining epoch 0"))?;
     let mut transport = Some(t);
     let embed_bytes = (PARAM_COUNT * 4) as f64;
-    let mut session = PlanSession::new(
-        orchestrator_config(cfg, embed_bytes)?,
-        cfg.pipeline_config(),
-        worker_topology_with_floor(members.len(), cfg.min_world)?,
-    );
+    let orch_cfg = orchestrator_config(cfg, embed_bytes)?;
+    let topo =
+        worker_topology_with_floor(members.len(), cfg.min_world)?;
+    let mut archive_warm: Option<bool> = None;
+    let mut session = match &cfg.archive_in {
+        Some(dir) => {
+            // A fingerprint mismatch (different world, different
+            // orchestrator config) degrades to a cold start inside
+            // `with_archive`; only corruption or schema skew errors.
+            let (s, warm) = PlanSession::with_archive(
+                orch_cfg,
+                cfg.pipeline_config(),
+                topo,
+                Path::new(dir),
+            )
+            .with_context(|| {
+                format!("member {id} loading plan archive {dir}")
+            })?;
+            archive_warm = Some(warm.is_warm());
+            s
+        }
+        None => PlanSession::new(orch_cfg, cfg.pipeline_config(), topo),
+    };
+    if cfg.archive_out.is_some() {
+        session.set_archive_log(true);
+    }
+    let archive_on =
+        cfg.archive_in.is_some() || cfg.archive_out.is_some();
+    let mut first_plan: Option<(bool, String)> = None;
     let mut params = init_params();
     let mut losses: Vec<f64> = Vec::new();
     let mut transitions: Vec<WorldTransition> = Vec::new();
@@ -481,6 +507,11 @@ pub fn run_member(
                 &mut session,
                 &mut transitions,
             )?;
+            // Satellite invariant: an export after shrink-the-world
+            // carries the *shrunk* world's topology fingerprint, so a
+            // later `with_archive` on the old world degrades to a cold
+            // start instead of reusing wrong-world plans.
+            maybe_export_archive(cfg, &session, id, &members)?;
             continue;
         }
         let die_at = (fault.rank == Some(id) && fault.step == step)
@@ -494,8 +525,20 @@ pub fn run_member(
             members.len(),
         );
         let t0 = Instant::now();
-        let plan = session.plan(&minibatches, PlanOptions::auto());
+        // `plan_shared`, not `plan`: a step-cache replay returns the
+        // archived `Arc` untouched, so the content hash below matches
+        // the archived plan id bit for bit.
+        let plan = session.plan_shared(&minibatches, PlanOptions::auto());
         plan_nanos += t0.elapsed().as_nanos();
+        if archive_on && first_plan.is_none() {
+            let r = session.report().expect("plan records a report");
+            first_plan = Some((
+                r.step_cache_hit,
+                sha256::hex(&sha256::sha256(&archive::encode_step_plan(
+                    &plan,
+                ))),
+            ));
+        }
         let t = transport.as_deref().expect("transport is live");
         match synthetic_step(t, &plan, &params, cfg.lr, die_at) {
             Ok(StepSignal::Done { loss_g, tokens_g, comm_s, params: p }) => {
@@ -530,14 +573,23 @@ pub fn run_member(
                     &mut session,
                     &mut transitions,
                 )?;
+                maybe_export_archive(cfg, &session, id, &members)?;
                 // Re-execute the interrupted step at the shrunk world;
                 // no rank applied its update, so this is safe.
             }
         }
     }
 
+    // Clean exit: the surviving minimum-id member seals the session
+    // into the archive (caches, profiles, plan log, final topology).
+    maybe_export_archive(cfg, &session, id, &members)?;
+
     let steps = losses.len().max(1);
     let stats = session.stats();
+    let (first_step_cache_hit, first_plan_id) = match first_plan {
+        Some((hit, plan_id)) => (hit, Some(plan_id)),
+        None => (false, None),
+    };
     Ok(Some(TrainReport {
         losses,
         tokens_per_step: tokens_sum / steps as f64,
@@ -550,7 +602,33 @@ pub fn run_member(
         steps: cfg.steps,
         transport: cfg.transport.clone(),
         transitions,
+        archive_warm,
+        first_step_cache_hit,
+        first_plan_id,
     }))
+}
+
+/// Export the session's plan archive to `cfg.archive_out`, but only
+/// from the minimum-id surviving member — one writer per directory,
+/// and every survivor's session is bit-identical anyway (SPMD).
+fn maybe_export_archive(
+    cfg: &TrainRunConfig,
+    session: &PlanSession,
+    id: usize,
+    members: &[usize],
+) -> Result<()> {
+    let Some(dir) = &cfg.archive_out else {
+        return Ok(());
+    };
+    if members.iter().min() != Some(&id) {
+        return Ok(());
+    }
+    session
+        .export_archive(Path::new(dir))
+        .map(|_manifest| ())
+        .with_context(|| {
+            format!("member {id} exporting plan archive to {dir}")
+        })
 }
 
 // ---------------------------------------------------------------------------
@@ -682,6 +760,12 @@ pub fn run_multiproc(
             .arg(cfg.seed.to_string())
             .arg("--min-world")
             .arg(cfg.min_world.to_string());
+        if let Some(dir) = &cfg.archive_in {
+            cmd.arg("--archive-in").arg(dir);
+        }
+        if let Some(dir) = &cfg.archive_out {
+            cmd.arg("--archive-out").arg(dir);
+        }
         if let Some(rank) = fault.rank {
             cmd.arg("--fault-rank")
                 .arg(rank.to_string())
@@ -764,6 +848,8 @@ pub fn worker_main(args: &Args) -> i32 {
         seed: args.u64("seed", 0),
         min_world: args.usize("min-world", 1),
         transport: "tcp-multiproc".into(),
+        archive_in: args.get("archive-in").map(str::to_string),
+        archive_out: args.get("archive-out").map(str::to_string),
         ..TrainRunConfig::default()
     };
     if let Err(e) = cfg.validate() {
@@ -861,6 +947,24 @@ pub fn report_to_json(r: &TrainReport) -> Json {
             "transitions",
             Json::arr(r.transitions.iter().map(transition_to_json)),
         ),
+        (
+            "archive_warm",
+            match r.archive_warm {
+                Some(b) => Json::Bool(b),
+                None => Json::Null,
+            },
+        ),
+        (
+            "first_step_cache_hit",
+            Json::Bool(r.first_step_cache_hit),
+        ),
+        (
+            "first_plan_id",
+            match &r.first_plan_id {
+                Some(plan_id) => Json::str(plan_id),
+                None => Json::Null,
+            },
+        ),
     ])
 }
 
@@ -898,6 +1002,15 @@ pub fn report_from_json(j: &Json) -> Result<TrainReport> {
             .iter()
             .map(transition_from_json)
             .collect::<Result<Vec<_>>>()?,
+        archive_warm: j.get("archive_warm").as_bool(),
+        first_step_cache_hit: j
+            .get("first_step_cache_hit")
+            .as_bool()
+            .unwrap_or(false),
+        first_plan_id: j
+            .get("first_plan_id")
+            .as_str()
+            .map(str::to_string),
     })
 }
 
@@ -972,6 +1085,9 @@ mod tests {
                 to: 3,
                 dead: vec![2],
             }],
+            archive_warm: Some(true),
+            first_step_cache_hit: true,
+            first_plan_id: Some("ab12".repeat(16)),
         };
         let text = report_to_json(&r).pretty();
         let back =
@@ -979,5 +1095,8 @@ mod tests {
         assert_eq!(back.losses, r.losses); // bit-exact f64 round trip
         assert_eq!(back.transitions, r.transitions);
         assert_eq!(back.workers, 4);
+        assert_eq!(back.archive_warm, Some(true));
+        assert!(back.first_step_cache_hit);
+        assert_eq!(back.first_plan_id, r.first_plan_id);
     }
 }

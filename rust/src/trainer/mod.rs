@@ -58,6 +58,18 @@ pub struct TrainReport {
     /// World-size transitions an elastic run survived (empty for the
     /// fixed-world trainer).
     pub transitions: Vec<elastic::WorldTransition>,
+    /// Whether an `--archive-in` load actually warm-started the
+    /// session (`None` when no archive was requested, `Some(false)`
+    /// when the load degraded to a cold start).
+    pub archive_warm: Option<bool>,
+    /// Whether the first planned step replayed whole from the
+    /// (possibly archive-restored) step cache.
+    pub first_step_cache_hit: bool,
+    /// Content id (sha256 of the canonical encoding) of the first
+    /// step's plan — equal across processes when the first step
+    /// replays the archived plan bit-identically. `None` when no
+    /// archive endpoint was requested.
+    pub first_plan_id: Option<String>,
 }
 
 impl TrainReport {
@@ -316,6 +328,11 @@ pub fn run_collect(cfg: &TrainRunConfig) -> Result<TrainReport> {
         steps,
         transport: cfg.transport.clone(),
         transitions: Vec::new(),
+        // The fixed-world pipeline trainer moves its session onto a
+        // background thread; archive endpoints are elastic-only.
+        archive_warm: None,
+        first_step_cache_hit: false,
+        first_plan_id: None,
     })
 }
 

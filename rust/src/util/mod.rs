@@ -1,11 +1,14 @@
 //! From-scratch substrates the crate needs in a no-network environment:
 //! a seedable PRNG, a JSON parser/writer (configs + artifact manifests),
 //! a tiny CLI argument parser, a criterion-style micro-bench harness, a
-//! property-testing runner, and summary statistics.
+//! property-testing runner, summary statistics, and a SHA-256
+//! implementation (content addressing + payload checksums for the plan
+//! archive).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sha256;
 pub mod stats;

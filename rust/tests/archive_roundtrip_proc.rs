@@ -1,0 +1,126 @@
+//! Two-process plan-archive round trip over `tcp-multiproc`: a real
+//! elastic run exports an archive, a second OS process loads it and
+//! must replay the first step bit-identically (pinned by the plan's
+//! content id crossing the process boundary through the archive). Also
+//! pins the `orchmllm archive verify` CLI contract: exit 0 on a clean
+//! archive, exit 2 on a corrupted payload.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use orchmllm::util::json::Json;
+
+fn bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_orchmllm"))
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "orchmllm-archive-proc-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn run_elastic(archive_flag: &str, archive_dir: &Path, out: &Path) {
+    let status = Command::new(bin())
+        .args([
+            "elastic",
+            "--workers",
+            "2",
+            "--mini-batch",
+            "3",
+            "--steps",
+            "4",
+            "--seed",
+            "11",
+            "--min-world",
+            "1",
+            "--transport",
+            "tcp-multiproc",
+            archive_flag,
+        ])
+        .arg(archive_dir)
+        .arg("--out")
+        .arg(out)
+        .status()
+        .expect("spawn orchmllm elastic");
+    assert!(status.success(), "elastic run failed: {status}");
+}
+
+fn read_report(path: &Path) -> Json {
+    let text = fs::read_to_string(path).expect("report file");
+    Json::parse(&text).expect("report parses")
+}
+
+#[test]
+fn two_process_round_trip_replays_bit_identically() {
+    let root = scratch("roundtrip");
+    let archive_dir = root.join("archive");
+    let r1 = root.join("r1.json");
+    let r2 = root.join("r2.json");
+
+    // Process tree 1: record and export.
+    run_elastic("--archive-out", &archive_dir, &r1);
+    let first = read_report(&r1);
+    assert_eq!(first.get("archive_warm").as_bool(), None);
+    let exported_id = first
+        .get("first_plan_id")
+        .as_str()
+        .expect("recording run logs its first plan id")
+        .to_string();
+
+    // Process tree 2: a fresh process loads the archive and must
+    // warm-start — same configuration, so the first step replays the
+    // archived plan, hashing to the same content id.
+    run_elastic("--archive-in", &archive_dir, &r2);
+    let second = read_report(&r2);
+    assert_eq!(second.get("archive_warm").as_bool(), Some(true));
+    assert_eq!(
+        second.get("first_step_cache_hit").as_bool(),
+        Some(true),
+        "first step must replay from the restored cache"
+    );
+    assert_eq!(
+        second.get("first_plan_id").as_str(),
+        Some(exported_id.as_str()),
+        "plan content id must survive the process boundary"
+    );
+    // SPMD determinism: the warm run's loss trajectory bit-matches.
+    assert_eq!(
+        second.get("losses").pretty(),
+        first.get("losses").pretty()
+    );
+
+    // CLI contract: a clean archive verifies with exit 0.
+    let out = Command::new(bin())
+        .args(["archive", "verify"])
+        .arg(&archive_dir)
+        .output()
+        .expect("spawn archive verify");
+    assert!(out.status.success(), "verify must pass: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("archive OK"), "got: {stdout}");
+
+    // ...and a flipped payload byte makes it exit 2.
+    let payload = archive_dir.join("caches.bin");
+    let mut bytes = fs::read(&payload).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    fs::write(&payload, &bytes).unwrap();
+    let out = Command::new(bin())
+        .args(["archive", "verify"])
+        .arg(&archive_dir)
+        .output()
+        .expect("spawn archive verify (corrupted)");
+    assert_eq!(
+        out.status.code(),
+        Some(2),
+        "corruption is the documented exit-2 path: {out:?}"
+    );
+
+    let _ = fs::remove_dir_all(&root);
+}

@@ -1,0 +1,350 @@
+//! Persistent plan archive, end to end in-process: bit-identical
+//! warm starts via the simulator and the elastic trainer, golden
+//! fixture format pinning, decode-never-panics corruption handling,
+//! and the elastic × archive world-fingerprint invariants.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use orchmllm::comm::topology::Topology;
+use orchmllm::config::TrainRunConfig;
+use orchmllm::model::config::MllmConfig;
+use orchmllm::orchestrator::archive::{self, Archive, ArchiveError};
+use orchmllm::orchestrator::global::OrchestratorConfig;
+use orchmllm::orchestrator::pipeline::PipelineConfig;
+use orchmllm::orchestrator::session::PlanSession;
+use orchmllm::orchestrator::WarmStart;
+use orchmllm::sim::engine::{simulate_run_archived, SystemKind};
+use orchmllm::trainer::elastic::{run_elastic_collect, FaultPlan};
+
+/// Unique scratch directory per test (parallel test threads must not
+/// share archive directories).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "orchmllm-plan-archive-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../ci/plan_archive_fixture")
+}
+
+fn copy_fixture(tag: &str) -> PathBuf {
+    let dst = scratch(tag);
+    fs::create_dir_all(&dst).unwrap();
+    for name in
+        ["manifest.json", "caches.bin", "plans.bin", "profiles.bin"]
+    {
+        fs::copy(fixture_dir().join(name), dst.join(name)).unwrap();
+    }
+    dst
+}
+
+// ---------------------------------------------------------------------------
+// Warm start via the simulator
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sim_warm_start_replays_every_step_bit_identically() {
+    let dir = scratch("sim-roundtrip");
+    let model = MllmConfig::mllm_10b();
+    let run = |archive_in: Option<&Path>, archive_out: Option<&Path>| {
+        simulate_run_archived(
+            SystemKind::OrchMllm,
+            &model,
+            8,
+            6,
+            4,
+            42,
+            None,
+            archive_in,
+            archive_out,
+        )
+        .expect("sim with archive endpoints")
+    };
+
+    // Run A: cold, records and exports.
+    let a = run(None, Some(&dir));
+    let ainfo = a.archive.expect("archive info present");
+    assert!(!ainfo.loaded);
+    assert!(ainfo.exported);
+    assert!(!ainfo.first_step_cache_hit, "run A's first step is cold");
+    let exported_id = ainfo.first_plan_id.expect("plan id recorded");
+
+    // Run B: fresh session, same configuration and seed — every step
+    // must replay whole from the restored step cache, and the first
+    // step's plan must be the archived plan, bit for bit.
+    let b = run(Some(&dir), None);
+    let binfo = b.archive.expect("archive info present");
+    assert!(binfo.loaded, "fingerprints match: warm start expected");
+    assert_eq!(binfo.cold_reason, None);
+    assert!(binfo.first_step_cache_hit, "first step must replay");
+    assert_eq!(
+        binfo.first_plan_id.as_deref(),
+        Some(exported_id.as_str()),
+        "replayed plan must hash to the archived content id"
+    );
+    assert_eq!(
+        binfo.warm_start_hit_rate, 1.0,
+        "a same-seed re-run replays every step"
+    );
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sim_archive_gc_prunes_and_reseals() {
+    let dir = scratch("sim-gc");
+    let model = MllmConfig::mllm_10b();
+    simulate_run_archived(
+        SystemKind::OrchMllm,
+        &model,
+        8,
+        6,
+        4,
+        7,
+        None,
+        None,
+        Some(&dir),
+    )
+    .expect("sim export");
+    let before = archive::verify(&dir).expect("fresh export verifies");
+    assert_eq!(before.chain_len, 4, "one chain entry per planned step");
+
+    let gc = archive::gc(&dir, Some(2), None).expect("gc");
+    assert_eq!(gc.kept, 2);
+    assert_eq!(gc.pruned, 2);
+
+    // The rewritten plans.bin and patched manifest still verify.
+    let after = archive::verify(&dir).expect("gc keeps archive valid");
+    assert_eq!(after.chain_len, 2);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Golden fixture: format pinning
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_fixture_opens_and_fully_decodes() {
+    let archive = Archive::open(&fixture_dir())
+        .expect("fixture manifest parses and self-verifies")
+        .expect("fixture manifest exists");
+    assert_eq!(archive.manifest.schema_version, "1.0.0");
+    assert_eq!(archive.manifest.topology.instances, 4);
+    assert_eq!(archive.manifest.payloads.len(), 3);
+
+    let state = archive
+        .load_state(None)
+        .expect("fixture payloads decode with archived capacities");
+    assert_eq!(state.history.step_cache.len(), 0);
+    assert_eq!(state.history.step_cache.capacity(), 32);
+    assert!(state.plan_log.is_empty());
+    assert!(state.profiles.is_empty());
+
+    let report = archive::verify(&fixture_dir())
+        .expect("fixture passes the full integrity check");
+    assert_eq!(report.payloads, 3);
+    assert_eq!(report.chain_len, 0);
+}
+
+#[test]
+fn truncated_payload_prefixes_never_panic() {
+    // Every proper prefix of a valid payload must produce a typed
+    // error — a truncation can cut anywhere.
+    let bytes = fs::read(fixture_dir().join("caches.bin")).unwrap();
+    for cut in 0..bytes.len() {
+        let err = archive::decode_caches(&bytes[..cut], None)
+            .expect_err("prefix decode must fail");
+        assert!(
+            matches!(
+                err,
+                ArchiveError::Truncated { .. }
+                    | ArchiveError::Malformed { .. }
+            ),
+            "cut at {cut}: unexpected error {err}"
+        );
+    }
+}
+
+#[test]
+fn flipped_payload_byte_is_a_checksum_mismatch() {
+    let dir = copy_fixture("flip");
+    let path = dir.join("caches.bin");
+    let mut bytes = fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    fs::write(&path, &bytes).unwrap();
+
+    let archive = Archive::open(&dir).unwrap().unwrap();
+    let err = archive.load_state(None).expect_err("flip must fail");
+    assert!(
+        matches!(err, ArchiveError::ChecksumMismatch { .. }),
+        "unexpected error {err}"
+    );
+    assert!(archive::verify(&dir).is_err());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn future_schema_version_is_a_typed_error() {
+    let dir = copy_fixture("schema");
+    let path = dir.join("manifest.json");
+    let text = fs::read_to_string(&path).unwrap();
+    fs::write(&path, text.replace("1.0.0", "2.0.0")).unwrap();
+
+    let err = Archive::open(&dir).expect_err("major skew must fail");
+    match err {
+        ArchiveError::SchemaVersion { found, .. } => {
+            assert_eq!(found, "2.0.0")
+        }
+        other => panic!("unexpected error {other}"),
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn same_major_manifest_loads() {
+    // Compat policy: same-major archives load (unknown minor additions
+    // are ignored by the JSON walk); only a major bump is a hard stop.
+    let archive =
+        Archive::open(&fixture_dir()).unwrap().expect("fixture");
+    assert_eq!(archive.manifest.major(), Some(1));
+}
+
+// ---------------------------------------------------------------------------
+// Elastic × archive
+// ---------------------------------------------------------------------------
+
+fn elastic_cfg(workers: usize, steps: usize) -> TrainRunConfig {
+    TrainRunConfig {
+        workers,
+        mini_batch: 3,
+        steps,
+        lr: 0.05,
+        seed: 9,
+        min_world: 2,
+        transport: "inproc".into(),
+        ..TrainRunConfig::default()
+    }
+}
+
+#[test]
+fn elastic_warm_start_round_trips_the_first_plan() {
+    let dir = scratch("elastic-warm");
+    let mut cfg = elastic_cfg(4, 5);
+    cfg.archive_out = Some(dir.to_string_lossy().into_owned());
+    let first = run_elastic_collect(&cfg, FaultPlan::none())
+        .expect("recording run");
+    assert_eq!(first.archive_warm, None, "no archive was loaded");
+    assert!(!first.first_step_cache_hit);
+    let exported_id = first.first_plan_id.clone().expect("id recorded");
+
+    let mut cfg2 = elastic_cfg(4, 5);
+    cfg2.archive_in = Some(dir.to_string_lossy().into_owned());
+    let second = run_elastic_collect(&cfg2, FaultPlan::none())
+        .expect("warm run");
+    assert_eq!(second.archive_warm, Some(true));
+    assert!(
+        second.first_step_cache_hit,
+        "first step must replay from the archived cache"
+    );
+    assert_eq!(
+        second.first_plan_id,
+        Some(exported_id),
+        "bit-identical replay across sessions"
+    );
+    // Plans are SPMD-deterministic, so the warm run's losses bit-match
+    // the recording run's.
+    assert_eq!(second.losses, first.losses);
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shrunk_world_export_carries_the_new_topology() {
+    let dir = scratch("elastic-shrink");
+    let mut cfg = elastic_cfg(4, 6);
+    cfg.archive_out = Some(dir.to_string_lossy().into_owned());
+    // Rank 2 resigns before step 3: the world shrinks 4 -> 3 and the
+    // surviving minimum-id member re-exports after the transition and
+    // again at clean exit.
+    let report =
+        run_elastic_collect(&cfg, FaultPlan::resignation(2, 3))
+            .expect("shrinking run");
+    assert_eq!(report.transitions.len(), 1);
+
+    let archive = Archive::open(&dir).unwrap().expect("export exists");
+    assert_eq!(
+        archive.manifest.topology.instances, 3,
+        "the exported fingerprint must describe the shrunk world"
+    );
+
+    // Loading that archive into a launch-world (4-member) run degrades
+    // to a cold start — wrong-world plans are never reused.
+    let mut cfg2 = elastic_cfg(4, 5);
+    cfg2.archive_in = Some(dir.to_string_lossy().into_owned());
+    let cold = run_elastic_collect(&cfg2, FaultPlan::none())
+        .expect("mismatched-world run still succeeds");
+    assert_eq!(
+        cold.archive_warm,
+        Some(false),
+        "topology mismatch must degrade to cold start"
+    );
+    assert!(!cold.first_step_cache_hit);
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mismatched_world_cold_start_reports_a_reason() {
+    let dir = scratch("session-mismatch");
+    let cfg = OrchestratorConfig::orchmllm(7168.0);
+    let session = PlanSession::new(
+        cfg.clone(),
+        PipelineConfig::default(),
+        Topology::h100(8),
+    );
+    session.export_archive(&dir).expect("export empty session");
+
+    let (_session, warm) = PlanSession::with_archive(
+        cfg,
+        PipelineConfig::default(),
+        Topology::h100(16),
+        &dir,
+    )
+    .expect("mismatch is a degrade, not an error");
+    match warm {
+        WarmStart::Cold { reason } => assert!(
+            reason.contains("topology fingerprint mismatch"),
+            "reason must name the mismatch: {reason}"
+        ),
+        WarmStart::Warm { .. } => {
+            panic!("wrong-world archive must not warm-start")
+        }
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_archive_directory_is_a_cold_start() {
+    let dir = scratch("absent");
+    let cfg = OrchestratorConfig::orchmllm(7168.0);
+    let (_session, warm) = PlanSession::with_archive(
+        cfg,
+        PipelineConfig::default(),
+        Topology::h100(8),
+        &dir,
+    )
+    .expect("missing archive is not an error");
+    match warm {
+        WarmStart::Cold { reason } => {
+            assert!(reason.contains("no archive"), "{reason}")
+        }
+        WarmStart::Warm { .. } => panic!("nothing to warm-start from"),
+    }
+}
