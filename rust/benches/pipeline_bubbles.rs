@@ -1,0 +1,101 @@
+//! Bubble-occupancy sweep: the co-scheduler vs the unscheduled 1F1B
+//! baseline across pp ∈ {2,4,8} × microbatches ∈ {4,8,16} × the four
+//! modality-incoherence profiles (cells with microbatches < pp are
+//! skipped — no full steady state, and the CLI rejects the shape).
+//!
+//! Every cell must *strictly* improve bubble occupancy over the
+//! baseline (whose occupancy is identically 0) and strictly shrink the
+//! projected step. The sweep emits `BENCH_pipeline_bubbles.json`, and
+//! `--baseline ci/bubble_baseline.json` additionally gates every cell
+//! against its committed minimum occupancy-improvement floor.
+//!
+//! Run: `cargo bench --bench pipeline_bubbles`
+//!   `-- --smoke`            the small CI grid (what the baseline gates)
+//!   `-- --baseline <path>`  fail on regressions vs the checked-in file
+
+use orchmllm::sim::pipeline::run_bubble_sweep;
+use orchmllm::util::cli::Args;
+use orchmllm::util::json::Json;
+
+/// `cargo bench` runs with CWD at the package root (`rust/`), while
+/// developers run from the workspace root — accept both.
+fn read_either(path: &str) -> Option<String> {
+    std::fs::read_to_string(path)
+        .or_else(|_| std::fs::read_to_string(format!("../{path}")))
+        .ok()
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+
+    let t0 = std::time::Instant::now();
+    let sweep = run_bubble_sweep(smoke);
+    eprintln!(
+        "  swept {} cells in {:.1}s",
+        sweep.cells.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    println!(
+        "{:<28}{:>9}{:>10}{:>11}{:>9}",
+        "cell", "bubble%", "analytic%", "occupancy%", "speedup"
+    );
+    for c in &sweep.cells {
+        println!(
+            "{:<28}{:>9.2}{:>10.2}{:>11.2}{:>9.3}",
+            c.key,
+            c.bubble_fraction * 100.0,
+            c.analytic_bubble_fraction * 100.0,
+            c.occupancy * 100.0,
+            c.speedup
+        );
+    }
+
+    // The tentpole's acceptance invariant, baseline file or not: every
+    // swept cell strictly improves on the unscheduled pipeline.
+    for c in &sweep.cells {
+        assert!(
+            c.improvement > 0.0,
+            "cell {}: no occupancy improvement over the unscheduled \
+             baseline",
+            c.key
+        );
+        assert!(
+            c.cosched_step_secs < c.baseline_step_secs,
+            "cell {}: projected step did not shrink ({} !< {})",
+            c.key,
+            c.cosched_step_secs,
+            c.baseline_step_secs
+        );
+    }
+    println!(
+        "\nall {} cells strictly improve occupancy and step time",
+        sweep.cells.len()
+    );
+
+    // ---- JSON emission (tracked across PRs, uploaded by CI) ------------
+    let out = sweep.to_json();
+    let path = "BENCH_pipeline_bubbles.json";
+    std::fs::write(path, out.pretty()).expect("write bench json");
+    println!("wrote {path}");
+
+    // ---- baseline gate -------------------------------------------------
+    if let Some(baseline_path) = args.get("baseline") {
+        let text = read_either(baseline_path).unwrap_or_else(|| {
+            panic!("baseline '{baseline_path}' not found")
+        });
+        let baseline = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("{baseline_path}: {e}"));
+        let regressions = sweep.check_baseline(&baseline);
+        println!("\nbaseline gate ({baseline_path}):");
+        assert!(
+            regressions.is_empty(),
+            "bubble-occupancy regressions:\n  {}",
+            regressions.join("\n  ")
+        );
+        println!(
+            "  PASS: every cell cleared its occupancy-improvement floor"
+        );
+    }
+}

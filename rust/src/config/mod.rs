@@ -30,7 +30,21 @@ pub struct SimRunConfig {
     /// Registry balancer name overriding every phase (None = the
     /// system's tailored per-phase selection).
     pub balancer: Option<String>,
+    /// Accelerator to price against (`--gpu`), a
+    /// [`GpuSpec::NAMES`](crate::sim::GpuSpec::NAMES) entry.
+    pub gpu: String,
+    /// Bubble co-scheduling: model the LLM phase as a 1F1B pipeline
+    /// with this many stages (`--pp-stages`) and pack encoder work into
+    /// its bubbles. `None` = the flat (no-PP) pricing model.
+    pub pp_stages: Option<usize>,
+    /// Microbatches in flight per pipeline (`--microbatches`); only
+    /// meaningful with `pp_stages`. `None` = the default of 8.
+    pub microbatches: Option<usize>,
 }
+
+/// Microbatch count `--pp-stages` implies when `--microbatches` is
+/// left unset.
+pub const DEFAULT_MICROBATCHES: usize = 8;
 
 impl Default for SimRunConfig {
     fn default() -> Self {
@@ -42,6 +56,9 @@ impl Default for SimRunConfig {
             steps: 5,
             seed: 42,
             balancer: None,
+            gpu: "h100".into(),
+            pp_stages: None,
+            microbatches: None,
         }
     }
 }
@@ -69,6 +86,9 @@ impl SimRunConfig {
             steps: j.get("steps").as_usize().unwrap_or(d.steps),
             seed: j.get("seed").as_i64().unwrap_or(d.seed as i64) as u64,
             balancer: j.get("balancer").as_str().map(str::to_string),
+            gpu: j.get("gpu").as_str().unwrap_or(&d.gpu).to_string(),
+            pp_stages: j.get("pp_stages").as_usize(),
+            microbatches: j.get("microbatches").as_usize(),
         })
     }
 
@@ -98,6 +118,21 @@ impl SimRunConfig {
                     None => Json::Null,
                 },
             ),
+            ("gpu", Json::str(&self.gpu)),
+            (
+                "pp_stages",
+                match self.pp_stages {
+                    Some(p) => Json::num(p as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "microbatches",
+                match self.microbatches {
+                    Some(m) => Json::num(m as f64),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -106,6 +141,54 @@ impl SimRunConfig {
         let j = Json::parse(&text)
             .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
         Self::from_json(&j)
+    }
+
+    /// Validate user-supplied knobs (GPU name, pipeline shape) with a
+    /// printable error — the same contract as
+    /// [`TrainRunConfig::validate`].
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if crate::sim::GpuSpec::by_name(&self.gpu).is_none() {
+            anyhow::bail!(
+                "unknown gpu '{}' (available: {:?})",
+                self.gpu,
+                crate::sim::GpuSpec::NAMES
+            );
+        }
+        match (self.pp_stages, self.microbatches) {
+            (Some(pp), m) => {
+                crate::sim::pipeline::PipelineParallelConfig::uniform(
+                    pp,
+                    m.unwrap_or(DEFAULT_MICROBATCHES),
+                )
+                .validate()
+                .map_err(|e| anyhow::anyhow!(e))?;
+            }
+            (None, Some(_)) => {
+                anyhow::bail!(
+                    "--microbatches requires --pp-stages (the flat \
+                     pricing model has no microbatch schedule)"
+                );
+            }
+            (None, None) => {}
+        }
+        Ok(())
+    }
+
+    /// The pipeline configuration this run requests, priced against
+    /// `model` on `gpu` — `None` unless `pp_stages` was set.
+    pub fn pipeline(
+        &self,
+        model: &crate::model::config::MllmConfig,
+        gpu: &crate::sim::GpuSpec,
+    ) -> Option<crate::sim::pipeline::PipelineParallelConfig> {
+        self.pp_stages.map(|pp| {
+            crate::sim::pipeline::PipelineParallelConfig::from_model(
+                model,
+                gpu,
+                pp,
+                self.microbatches.unwrap_or(DEFAULT_MICROBATCHES),
+            )
+        })
     }
 }
 
@@ -284,6 +367,9 @@ mod tests {
             steps: 10,
             seed: 7,
             balancer: Some("kk".into()),
+            gpu: "a100".into(),
+            pp_stages: Some(4),
+            microbatches: Some(16),
         };
         let j = c.to_json();
         let back = SimRunConfig::from_json(&j).unwrap();
@@ -297,6 +383,75 @@ mod tests {
         assert_eq!(c.gpus, 64);
         assert_eq!(c.model, "mllm-10b");
         assert_eq!(c.system, SystemKind::OrchMllm);
+        assert_eq!(c.gpu, "h100");
+        assert_eq!(c.pp_stages, None);
+        assert_eq!(c.microbatches, None);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn sim_config_validates_gpu_and_pipeline_shape() {
+        let ok = SimRunConfig {
+            gpu: "a100".into(),
+            pp_stages: Some(4),
+            microbatches: Some(8),
+            ..SimRunConfig::default()
+        };
+        assert!(ok.validate().is_ok());
+        // --pp-stages alone implies the default microbatch count.
+        let implied = SimRunConfig {
+            pp_stages: Some(2),
+            ..SimRunConfig::default()
+        };
+        assert!(implied.validate().is_ok());
+
+        let bad_gpu = SimRunConfig {
+            gpu: "tpu-v5".into(),
+            ..SimRunConfig::default()
+        };
+        let err = bad_gpu.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown gpu"), "{err}");
+        assert!(err.contains("h100"), "{err}");
+
+        let zero_pp = SimRunConfig {
+            pp_stages: Some(0),
+            ..SimRunConfig::default()
+        };
+        let err = zero_pp.validate().unwrap_err().to_string();
+        assert!(err.contains("--pp-stages"), "{err}");
+
+        let too_few_micro = SimRunConfig {
+            pp_stages: Some(8),
+            microbatches: Some(4),
+            ..SimRunConfig::default()
+        };
+        let err = too_few_micro.validate().unwrap_err().to_string();
+        assert!(err.contains("--microbatches"), "{err}");
+
+        let orphan_micro = SimRunConfig {
+            microbatches: Some(16),
+            ..SimRunConfig::default()
+        };
+        let err = orphan_micro.validate().unwrap_err().to_string();
+        assert!(err.contains("requires --pp-stages"), "{err}");
+    }
+
+    #[test]
+    fn sim_config_builds_a_priced_pipeline() {
+        use crate::model::config::MllmConfig;
+        use crate::sim::GpuSpec;
+        let model = MllmConfig::mllm_10b();
+        let gpu = GpuSpec::h100();
+        let none = SimRunConfig::default();
+        assert!(none.pipeline(&model, &gpu).is_none());
+        let c = SimRunConfig {
+            pp_stages: Some(4),
+            ..SimRunConfig::default()
+        };
+        let p = c.pipeline(&model, &gpu).unwrap();
+        assert_eq!(p.pp_stages, 4);
+        assert_eq!(p.microbatches, DEFAULT_MICROBATCHES);
+        assert!(p.validate().is_ok());
     }
 
     #[test]

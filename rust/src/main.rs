@@ -17,7 +17,7 @@
 //! Options accept `--key value` or `--key=value`; run with no arguments
 //! for usage.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use orchmllm::balance::{registry, select};
 use orchmllm::comm::calibrate::{calibrate, CalibrationSpec};
@@ -29,8 +29,9 @@ use orchmllm::model::config::MllmConfig;
 use orchmllm::model::flops::PhaseKind;
 use orchmllm::orchestrator::archive;
 use orchmllm::sim::engine::{
-    simulate_run, simulate_run_archived, SystemKind,
+    simulate_run, simulate_run_opts, SimOptions, SystemKind,
 };
+use orchmllm::sim::GpuSpec;
 use orchmllm::sim::report;
 use orchmllm::trainer;
 use orchmllm::trainer::elastic::{self, FaultPlan};
@@ -45,6 +46,13 @@ USAGE:
                        [--mini-batch 60] [--steps 5] [--seed 42]
                        [--balancer auto|greedy|padded|quadratic|convpad|
                                    kk|ilp|none]
+                       [--gpu h100|a100]    # accelerator to price against
+                       [--pp-stages N]      # model the LLM as an N-stage
+                                            # 1F1B pipeline and co-schedule
+                                            # encoder work into its bubbles
+                       [--microbatches M]   # microbatches in flight
+                                            # (default 8; requires
+                                            # --pp-stages, M >= N)
                        [--config file.json]
                        [--archive DIR]      # warm-start from a plan archive
                        [--archive-out DIR]  # export the session afterwards
@@ -109,6 +117,13 @@ fn cmd_sim(args: &Args) {
             steps: args.usize("steps", 5),
             seed: args.u64("seed", 42),
             balancer: args.get("balancer").map(str::to_string),
+            gpu: args.get_or("gpu", "h100").to_string(),
+            pp_stages: args
+                .get("pp-stages")
+                .map(|_| args.usize("pp-stages", 0)),
+            microbatches: args
+                .get("microbatches")
+                .map(|_| args.usize("microbatches", 0)),
         }
     };
     if let Some(name) = &cfg.balancer {
@@ -121,17 +136,28 @@ fn cmd_sim(args: &Args) {
             std::process::exit(2);
         }
     }
+    // GPU name and pipeline shape (--pp-stages/--microbatches bounds).
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid sim configuration: {e:#}");
+        std::process::exit(2);
+    }
     let model = MllmConfig::by_name(&cfg.model).expect("unknown model");
-    let r = match simulate_run_archived(
+    let gpu = GpuSpec::by_name(&cfg.gpu).expect("validated above");
+    let opts = SimOptions {
+        balancer: cfg.balancer.clone(),
+        archive_in: args.get("archive").map(PathBuf::from),
+        archive_out: args.get("archive-out").map(PathBuf::from),
+        gpu,
+        pipeline: cfg.pipeline(&model, &gpu),
+    };
+    let r = match simulate_run_opts(
         cfg.system,
         &model,
         cfg.gpus,
         cfg.mini_batch,
         cfg.steps,
         cfg.seed,
-        cfg.balancer.as_deref(),
-        args.get("archive").map(Path::new),
-        args.get("archive-out").map(Path::new),
+        &opts,
     ) {
         Ok(r) => r,
         Err(e) => {
@@ -160,6 +186,9 @@ fn cmd_sim(args: &Args) {
         r.plan_stats.warm_rate * 100.0,
         r.plan_stats.cache_hit_rate * 100.0,
     );
+    if let Some(c) = &r.cosched {
+        print!("{}", report::render_cosched(c));
+    }
     if let Some(a) = &r.archive {
         println!(
             "  archive: {} | warm-start hit rate {:.1}% | first step \
@@ -479,7 +508,10 @@ fn cmd_balancers() {
         }
     }
     println!(
-        "\nselect with `--balancer <name|auto>` on `sim` and `train`."
+        "\nselect with `--balancer <name|auto>` on `sim` and `train`.\n\
+         `sim` also takes `--gpu h100|a100` and `--pp-stages N \
+         [--microbatches M]` to co-schedule the balanced encoder phases \
+         into the LLM pipeline's 1F1B bubbles."
     );
 }
 

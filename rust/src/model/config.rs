@@ -41,6 +41,13 @@ impl SubmoduleConfig {
         };
         self.layers as f64 * (attn + mlp)
     }
+
+    /// Whether this submodule exists at all. Two-modality models (e.g.
+    /// text+image-only) zero out a submodule's shape; cost/trait
+    /// derivations must check this before dividing by α.
+    pub fn is_present(&self) -> bool {
+        self.layers > 0 && self.hidden > 0
+    }
 }
 
 /// A full MLLM (Table 1 row) plus preprocessing parameters.
@@ -150,8 +157,14 @@ impl MllmConfig {
             // A conv front-end is the only thing forcing padding in the
             // Table-1 architectures (paper §8 "Input preprocessing").
             padded: sub.conv_frontend,
-            beta_len_over_alpha: cost.beta_flops * max_len as f64
-                / cost.alpha_flops,
+            // Absent submodule (two-modality model): α = 0 would make
+            // this NaN and poison auto-selection comparisons; an absent
+            // phase has no attention share.
+            beta_len_over_alpha: if sub.is_present() {
+                cost.beta_flops * max_len as f64 / cost.alpha_flops
+            } else {
+                0.0
+            },
         }
     }
 }
@@ -191,6 +204,43 @@ mod tests {
     fn max_patches_scale_with_resolution() {
         assert_eq!(MllmConfig::mllm_10b().max_patches(), 32 * 32);
         assert_eq!(MllmConfig::mllm_84b().max_patches(), 64 * 64);
+    }
+
+    /// A text+image-only model: audio zeroed out entirely.
+    fn two_modality() -> MllmConfig {
+        MllmConfig {
+            audio: SubmoduleConfig {
+                layers: 0,
+                hidden: 0,
+                ffn_hidden: 0,
+                style: BlockStyle::Encoder,
+                conv_frontend: false,
+            },
+            ..MllmConfig::mllm_10b()
+        }
+    }
+
+    #[test]
+    fn two_modality_traits_are_finite() {
+        use crate::model::flops::PhaseKind;
+        let m = two_modality();
+        assert!(!m.audio.is_present());
+        assert!(m.vision.is_present() && m.llm.is_present());
+        // Regression: α = 0 used to make β·L/α NaN, which poisons every
+        // auto-selection comparison downstream.
+        for phase in PhaseKind::ALL {
+            let t = m.phase_traits(phase);
+            assert!(
+                t.beta_len_over_alpha.is_finite(),
+                "{phase:?}: β·L/α = {}",
+                t.beta_len_over_alpha
+            );
+        }
+        assert_eq!(
+            m.phase_traits(PhaseKind::Audio).beta_len_over_alpha,
+            0.0
+        );
+        assert!(m.total_params() > 0.0);
     }
 
     #[test]

@@ -44,6 +44,7 @@ use std::time::Instant;
 use crate::balance::incremental::{PlanSource, REPAIR_TOLERANCE};
 use crate::comm::topology::Topology;
 use crate::data::synth::Example;
+use crate::sim::pipeline::{CoschedReport, PipelineParallelConfig};
 use crate::util::stats::Summary;
 
 use std::sync::Arc;
@@ -97,6 +98,13 @@ pub struct PlanOptions {
     /// Consult/populate the sketch-keyed plan caches (per-phase solves
     /// and the full-step plan). Off: warm-starting still applies.
     pub cache: bool,
+    /// Opt-in pipeline-parallel co-scheduling: when set, every plan
+    /// call runs the bubble packer over the planned step and attaches a
+    /// [`CoschedReport`] to the [`PlanReport`]. Off by default — the
+    /// packer allocates, and default sessions are pinned to zero heap
+    /// allocations per warm step (rust/tests/plan_allocations.rs).
+    /// `Copy` is preserved: the config is a fixed-size value type.
+    pub pipeline: Option<PipelineParallelConfig>,
 }
 
 impl Default for PlanOptions {
@@ -105,6 +113,7 @@ impl Default for PlanOptions {
             mode: PlanMode::Auto,
             tolerance: REPAIR_TOLERANCE,
             cache: true,
+            pipeline: None,
         }
     }
 }
@@ -147,6 +156,16 @@ impl PlanOptions {
         self.cache = cache;
         self
     }
+
+    /// Attach pipeline-parallel co-scheduling: every plan's
+    /// [`PlanReport`] will carry a [`CoschedReport`] packing the step's
+    /// encoder phases into the LLM 1F1B bubbles described by `cfg`.
+    /// Validate user-supplied configs with
+    /// [`PipelineParallelConfig::validate`] first.
+    pub fn pipeline(mut self, cfg: PipelineParallelConfig) -> Self {
+        self.pipeline = Some(cfg);
+        self
+    }
 }
 
 /// What [`PlanMode`] resolved to for one `plan` call.
@@ -179,6 +198,9 @@ pub struct PlanReport {
     pub tolerance: f64,
     /// Wall-clock time of the `plan` call (overlappable work).
     pub plan_nanos: u128,
+    /// Bubble co-scheduling outcome — present iff the call's
+    /// [`PlanOptions::pipeline`] was set.
+    pub cosched: Option<CoschedReport>,
 }
 
 impl PlanReport {
@@ -541,6 +563,12 @@ impl PlanSession {
             opts.tolerance,
             opts.cache,
         );
+        // Opt-in like archive recording: the packer allocates, and the
+        // default (pipeline: None) path stays on the zero-alloc gate.
+        let cosched = opts
+            .pipeline
+            .as_ref()
+            .map(|cfg| crate::sim::pipeline::coschedule(&plan, cfg).summarize());
         let report = PlanReport {
             step: self.stats.steps + 1,
             mode,
@@ -549,6 +577,7 @@ impl PlanSession {
             step_cache_hit: outcome.step_cache_hit,
             tolerance: opts.tolerance,
             plan_nanos: t0.elapsed().as_nanos(),
+            cosched,
         };
         if self.archive_log {
             // Opt-in by design: recording allocates (profile entries,

@@ -37,6 +37,7 @@ pub use crate::orchestrator::session::PlanTimeStats;
 
 use super::gpu::GpuSpec;
 use super::megatron;
+use super::pipeline::{CoschedReport, PipelineParallelConfig};
 
 /// Which system configuration a simulated run models (the bars of the
 /// paper's figures).
@@ -149,13 +150,49 @@ pub fn system_padded(system: SystemKind) -> [bool; 3] {
     }
 }
 
-/// Per-phase analytic costs for a model.
-pub fn phase_costs(model: &MllmConfig) -> [SubmoduleCost; 3] {
+/// Per-phase analytic costs for a model, `None` for a submodule the
+/// config does not carry. Two-modality models (e.g. text+image-only,
+/// audio zeroed out) are valid here — use this in any code path that
+/// must handle them; a zero-shaped submodule would otherwise flow
+/// `α = 0` cost models into the balancers and NaN traits into
+/// auto-selection.
+pub fn phase_costs_opt(model: &MllmConfig) -> [Option<SubmoduleCost>; 3] {
     [
-        SubmoduleCost::from_config(&model.vision, 588.0 * 2.0),
-        SubmoduleCost::from_config(&model.audio, 128.0 * 2.0),
-        SubmoduleCost::from_config(&model.llm, 16.0),
+        model
+            .vision
+            .is_present()
+            .then(|| SubmoduleCost::from_config(&model.vision, 588.0 * 2.0)),
+        model
+            .audio
+            .is_present()
+            .then(|| SubmoduleCost::from_config(&model.audio, 128.0 * 2.0)),
+        model
+            .llm
+            .is_present()
+            .then(|| SubmoduleCost::from_config(&model.llm, 16.0)),
     ]
+}
+
+/// Per-phase analytic costs for a model.
+///
+/// **Invariant (asserted):** all three submodules must be present.
+/// Every Table-1 configuration satisfies this; the simulator's pricing
+/// paths assume it. For two-modality models use [`phase_costs_opt`],
+/// which represents an absent submodule as `None` instead of silently
+/// producing zero-α garbage.
+pub fn phase_costs(model: &MllmConfig) -> [SubmoduleCost; 3] {
+    let costs = phase_costs_opt(model);
+    for (phase, c) in PhaseKind::ALL.iter().zip(&costs) {
+        assert!(
+            c.is_some(),
+            "phase_costs requires all three submodules, but model '{}' \
+             has no {:?} submodule — use phase_costs_opt for \
+             two-modality models",
+            model.name,
+            phase
+        );
+    }
+    costs.map(|c| c.expect("checked above"))
 }
 
 /// One simulated step's result.
@@ -343,6 +380,11 @@ pub struct RunSummary {
     /// Plan-archive activity for this run (`None` unless the run was
     /// given an archive endpoint via [`simulate_run_archived`]).
     pub archive: Option<ArchiveRunInfo>,
+    /// Bubble co-scheduling summary for the run's final step (`None`
+    /// unless [`SimOptions::pipeline`] was set). The final step is the
+    /// steady-state representative: every step of a run reuses the same
+    /// pipeline shape, only the sampled batch varies.
+    pub cosched: Option<CoschedReport>,
 }
 
 /// Run `steps` simulated iterations of a system on a model+cluster.
@@ -394,8 +436,68 @@ pub fn simulate_run_archived(
     archive_in: Option<&Path>,
     archive_out: Option<&Path>,
 ) -> Result<RunSummary, ArchiveError> {
+    simulate_run_opts(
+        system,
+        model,
+        gpus,
+        mini_batch,
+        steps,
+        seed,
+        &SimOptions {
+            balancer: balancer.map(str::to_string),
+            ..SimOptions::default()
+        },
+    )
+}
+
+/// Everything a simulated run can be configured with beyond the core
+/// shape — the CLI's `--balancer`/`--gpu`/`--pp-stages`/`--archive*`
+/// surface in one place, so new knobs stop growing the argument list.
+#[derive(Clone, Debug)]
+pub struct SimOptions {
+    /// Registry balancer name overriding every phase (`None` = the
+    /// system's own configuration).
+    pub balancer: Option<String>,
+    /// Warm-start the session from this archive directory.
+    pub archive_in: Option<std::path::PathBuf>,
+    /// Export the session's archive here after the last step.
+    pub archive_out: Option<std::path::PathBuf>,
+    /// The accelerator to price against.
+    pub gpu: GpuSpec,
+    /// Bubble co-scheduling: when set, every planned step packs its
+    /// encoder phases into the LLM pipeline's 1F1B bubbles and the
+    /// summary carries a [`CoschedReport`].
+    pub pipeline: Option<PipelineParallelConfig>,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            balancer: None,
+            archive_in: None,
+            archive_out: None,
+            gpu: GpuSpec::h100(),
+            pipeline: None,
+        }
+    }
+}
+
+/// The fully-optioned simulated run every `simulate_run*` wrapper
+/// resolves to.
+pub fn simulate_run_opts(
+    system: SystemKind,
+    model: &MllmConfig,
+    gpus: usize,
+    mini_batch: usize,
+    steps: usize,
+    seed: u64,
+    opts: &SimOptions,
+) -> Result<RunSummary, ArchiveError> {
+    let balancer = opts.balancer.as_deref();
+    let archive_in = opts.archive_in.as_deref();
+    let archive_out = opts.archive_out.as_deref();
     let topo = Topology::h100(gpus);
-    let gpu = GpuSpec::h100();
+    let gpu = opts.gpu;
     let data_cfg = DatasetConfig {
         vis_downsample: model.vis_downsample,
         aud_downsample: model.aud_downsample,
@@ -405,7 +507,7 @@ pub fn simulate_run_archived(
 
     if system == SystemKind::Megatron {
         return Ok(megatron::simulate_megatron(
-            model, gpus, mini_batch, steps, seed, &data_cfg,
+            model, &gpu, gpus, mini_batch, steps, seed, &data_cfg,
         ));
     }
 
@@ -454,7 +556,12 @@ pub fn simulate_run_archived(
     let mut oom = false;
     let mut first_step_cache_hit = false;
     let mut first_plan_id: Option<String> = None;
+    let mut cosched: Option<CoschedReport> = None;
 
+    let plan_opts = match opts.pipeline {
+        Some(cfg) => PlanOptions::auto().pipeline(cfg),
+        None => PlanOptions::auto(),
+    };
     for step in 0..steps {
         let minibatches: Vec<Vec<Example>> =
             (0..gpus).map(|_| generator.batch(mini_batch)).collect();
@@ -462,7 +569,12 @@ pub fn simulate_run_archived(
         // archived `Arc` unmodified, so hashing it below reproduces the
         // archived content id bit for bit (`plan` would materialize
         // per-call provenance into the copy and perturb the hash).
-        let plan = session.plan_shared(&minibatches, PlanOptions::auto());
+        let plan = session.plan_shared(&minibatches, plan_opts);
+        if opts.pipeline.is_some() {
+            // Keep the latest step's report: the run's steady-state
+            // representative (see `RunSummary::cosched`).
+            cosched = session.report().and_then(|r| r.cosched.clone());
+        }
         if step == 0 && (archive_in.is_some() || archive_out.is_some()) {
             let r = session.report().expect("plan_shared records a report");
             first_step_cache_hit = r.step_cache_hit;
@@ -569,6 +681,7 @@ pub fn simulate_run_archived(
         plan_stats: session.plan_time_stats(),
         inter_node_mb: [inter[0].mean(), inter[1].mean(), inter[2].mean()],
         archive,
+        cosched,
     })
 }
 
@@ -700,6 +813,38 @@ mod tests {
             kk.mfu,
             none.mfu
         );
+    }
+
+    /// Text+image-only config (two-modality regression shape).
+    fn text_image_only() -> MllmConfig {
+        use crate::model::config::{BlockStyle, SubmoduleConfig};
+        MllmConfig {
+            audio: SubmoduleConfig {
+                layers: 0,
+                hidden: 0,
+                ffn_hidden: 0,
+                style: BlockStyle::Encoder,
+                conv_frontend: false,
+            },
+            ..MllmConfig::mllm_10b()
+        }
+    }
+
+    #[test]
+    fn phase_costs_opt_marks_absent_submodules() {
+        let [vis, aud, llm] = phase_costs_opt(&text_image_only());
+        assert!(vis.is_some() && llm.is_some());
+        assert!(aud.is_none(), "absent audio must not price as α = 0");
+        // All Table-1 models carry all three.
+        for m in MllmConfig::all() {
+            assert!(phase_costs_opt(&m).iter().all(Option::is_some));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "use phase_costs_opt")]
+    fn phase_costs_rejects_two_modality_models() {
+        let _ = phase_costs(&text_image_only());
     }
 
     #[test]

@@ -31,6 +31,34 @@ impl GpuSpec {
             usable_mem_frac: 0.94,
         }
     }
+
+    /// NVIDIA A100 80GB SXM: the previous-generation part, ~1/3 the
+    /// dense bf16 peak at the same memory capacity. Mature kernels
+    /// reach a slightly higher fraction of the (lower) peak, and the
+    /// fixed per-step overhead weighs a little heavier against slower
+    /// compute.
+    pub fn a100() -> GpuSpec {
+        GpuSpec {
+            peak_flops: 312e12,
+            mem_bytes: 80e9,
+            kernel_eff: 0.55,
+            step_overhead: 15e-3,
+            usable_mem_frac: 0.94,
+        }
+    }
+
+    /// Resolve a `--gpu` CLI name. `None` for unknown parts — callers
+    /// render [`GpuSpec::NAMES`] in their error.
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "h100" => Some(Self::h100()),
+            "a100" => Some(Self::a100()),
+            _ => None,
+        }
+    }
+
+    /// The selectable part names, for help text and error messages.
+    pub const NAMES: [&'static str; 2] = ["h100", "a100"];
 }
 
 #[cfg(test)]
@@ -43,5 +71,27 @@ mod tests {
         assert!(g.peak_flops > 5e14);
         assert_eq!(g.mem_bytes, 80e9);
         assert!(g.kernel_eff > 0.3 && g.kernel_eff < 0.7);
+    }
+
+    #[test]
+    fn a100_is_a_slower_part_with_equal_memory() {
+        let a = GpuSpec::a100();
+        let h = GpuSpec::h100();
+        assert!(a.peak_flops < h.peak_flops / 2.0);
+        assert_eq!(a.mem_bytes, h.mem_bytes);
+        assert!(a.kernel_eff > 0.3 && a.kernel_eff < 0.7);
+    }
+
+    #[test]
+    fn by_name_resolves_every_listed_part() {
+        for name in GpuSpec::NAMES {
+            assert!(GpuSpec::by_name(name).is_some(), "{name}");
+        }
+        assert!(GpuSpec::by_name("H100").is_some(), "case-insensitive");
+        assert!(GpuSpec::by_name("tpu-v5").is_none());
+        assert!(
+            GpuSpec::by_name("a100").unwrap().peak_flops
+                < GpuSpec::by_name("h100").unwrap().peak_flops
+        );
     }
 }

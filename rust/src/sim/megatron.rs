@@ -83,15 +83,16 @@ fn stage_balance(model: &MllmConfig, pp: usize, batch: &[Example]) -> f64 {
 }
 
 /// Simulate a Megatron-LM run with the paper's PP/TP settings.
+#[allow(clippy::too_many_arguments)]
 pub fn simulate_megatron(
     model: &MllmConfig,
+    gpu: &GpuSpec,
     gpus: usize,
     mini_batch: usize,
     steps: usize,
     seed: u64,
     data_cfg: &DatasetConfig,
 ) -> RunSummary {
-    let gpu = GpuSpec::h100();
     let topo = Topology::h100(gpus);
     let pp = paper_pp(model);
     let tp = PAPER_TP;
@@ -197,6 +198,7 @@ pub fn simulate_megatron(
         plan_stats: crate::sim::engine::PlanTimeStats::default(),
         inter_node_mb: [0.0; 3],
         archive: None,
+        cosched: None,
     }
 }
 
@@ -225,6 +227,7 @@ mod tests {
         let model = MllmConfig::mllm_10b();
         let r = simulate_megatron(
             &model,
+            &GpuSpec::h100(),
             64,
             32,
             3,
@@ -232,5 +235,63 @@ mod tests {
             &DatasetConfig::default(),
         );
         assert!(r.mfu > 0.02 && r.mfu < 0.25, "mfu {}", r.mfu);
+    }
+
+    /// Pinned Fig.-8-shaped scenario on a heavy-tail data profile: the
+    /// Megatron baseline's step time must exceed the orchestrated
+    /// system's at the same global batch (64 GPUs × 8 examples each).
+    /// All-av-dialogue data is the longest-tailed mixture the generator
+    /// produces — per-microbatch padding and encoder/LLM stage imbalance
+    /// hurt the baseline most there.
+    #[test]
+    fn heavy_tail_megatron_step_exceeds_orchestrated() {
+        use crate::data::synth::TaskMix;
+        use crate::orchestrator::global::OrchestratorConfig;
+        use crate::orchestrator::pipeline::PipelineConfig;
+        use crate::orchestrator::session::{PlanOptions, PlanSession};
+        use crate::sim::engine::simulate_step;
+
+        let model = MllmConfig::mllm_10b();
+        let gpu = GpuSpec::h100();
+        let (gpus, mb, steps, seed) = (64usize, 8usize, 3usize, 9u64);
+        let data_cfg = DatasetConfig {
+            mix: TaskMix {
+                asr: 0.0,
+                spoken_qa: 0.0,
+                caption: 0.0,
+                vqa: 0.0,
+                text_only: 0.0,
+                av_dialogue: 1.0,
+            },
+            ..DatasetConfig::default()
+        };
+
+        let mega = simulate_megatron(
+            &model, &gpu, gpus, mb, steps, seed, &data_cfg,
+        );
+
+        // The orchestrated side plans the *same* heavy-tail stream:
+        // same data config, same seed, same global batch per step.
+        let topo = Topology::h100(gpus);
+        let cfg =
+            OrchestratorConfig::orchmllm(model.llm.hidden as f64 * 2.0);
+        let mut session =
+            PlanSession::new(cfg, PipelineConfig::default(), topo);
+        let mut generator = Generator::new(data_cfg, seed);
+        let mut orch_step = 0.0f64;
+        for _ in 0..steps {
+            let minibatches: Vec<Vec<Example>> =
+                (0..gpus).map(|_| generator.batch(mb)).collect();
+            let plan = session.plan(&minibatches, PlanOptions::auto());
+            let sim = simulate_step(&model, &topo, &gpu, &plan);
+            orch_step += sim.step_secs / steps as f64;
+        }
+
+        assert!(
+            mega.step_secs > orch_step,
+            "megatron {} s/step !> orchestrated {} s/step",
+            mega.step_secs,
+            orch_step
+        );
     }
 }

@@ -10,10 +10,15 @@
 pub mod engine;
 pub mod gpu;
 pub mod megatron;
+pub mod pipeline;
 pub mod report;
 
 pub use engine::{
-    simulate_run, simulate_run_archived, simulate_run_named, simulate_step,
-    ArchiveRunInfo, RunSummary, StepSim, SystemKind,
+    simulate_run, simulate_run_archived, simulate_run_named,
+    simulate_run_opts, simulate_step, ArchiveRunInfo, RunSummary,
+    SimOptions, StepSim, SystemKind,
 };
 pub use gpu::GpuSpec;
+pub use pipeline::{
+    coschedule, CoschedPlan, CoschedReport, PipelineParallelConfig,
+};

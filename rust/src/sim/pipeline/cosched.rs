@@ -1,0 +1,848 @@
+//! Bubble-aware encoder co-scheduling over a planned step.
+//!
+//! Per DP rank, the step's serialized shape is
+//!
+//! ```text
+//!   baseline:  Π  | vision+audio encoders | LLM 1F1B pipeline
+//!   cosched:   Π  | residual encoder work | LLM 1F1B pipeline
+//!                       (the rest runs inside the pipeline's bubbles)
+//! ```
+//!
+//! The co-scheduler prices each rank's encoder-phase workload with the
+//! same per-unit α costs the balancers use (carried in
+//! [`PipelineParallelConfig`]), splits it into `m` per-microbatch
+//! chunks, and greedily packs them earliest-deadline-first into the
+//! rank's 1F1B idle intervals. The validity invariant: **no encoder
+//! chunk may overlap its consumer's first LLM microbatch** — a chunk
+//! feeding microbatch `k` must finish before `F(stage 0, k)` starts.
+//! Chunks are divisible (an encoder microbatch is itself a batch of
+//! independent sequences), so packing fills interval prefixes exactly.
+//!
+//! Deadline-infeasible remainders stay in the step's serial prologue —
+//! but the bubble capacity they could not use may host *lookahead*
+//! chunks: the next step's encoder work, which has no deadline in this
+//! step's pipeline. In steady state consecutive steps are symmetric,
+//! so lookahead seconds packed here reduce the modelled prologue
+//! one-for-one (total packed work never exceeds one step's encoder
+//! seconds). The Π rearrangement cost is a collective all ranks run
+//! before the first microbatch; it is never packable and is charged to
+//! the prologue of both the baseline and the co-scheduled shape.
+
+use crate::model::flops::PhaseKind;
+use crate::orchestrator::global::StepPlan;
+
+use super::schedule::build_1f1b;
+use super::timeline::PipelineTimeline;
+use super::{PipelineParallelConfig, MAX_PP_STAGES};
+
+/// Forward share of a fwd+bwd op pair: `1 / (1 + bwd_mult)` with the
+/// cost models' universal `bwd_mult = 2.0`
+/// (see [`crate::model::flops::SubmoduleCost`]).
+const FWD_FRACTION: f64 = 1.0 / 3.0;
+
+/// Ignore placements below this size (seconds) to stop the splitting
+/// packer from shaving unbounded slivers.
+const MIN_FRAGMENT_SECS: f64 = 1e-9;
+
+/// One piece of encoder work placed into a bubble.
+#[derive(Clone, Copy, Debug)]
+pub struct Placement {
+    pub stage: usize,
+    pub start: f64,
+    pub end: f64,
+    pub phase: PhaseKind,
+    /// Consumer microbatch for this step's chunks; `None` for
+    /// lookahead work (next step's encoders, no deadline here).
+    pub micro: Option<usize>,
+}
+
+/// One rank's co-scheduling outcome.
+#[derive(Clone, Debug)]
+pub struct RankCosched {
+    pub rank: usize,
+    pub placements: Vec<Placement>,
+    /// Total idle seconds across stages (the bubble budget).
+    pub bubble_secs: f64,
+    /// Encoder seconds placed into bubbles (deadline + lookahead).
+    pub filled_secs: f64,
+    /// This rank's packable encoder seconds (vision + audio compute).
+    pub enc_secs: f64,
+    /// Π rearrangement seconds — prologue-only, never packable.
+    pub pi_secs: f64,
+    /// Encoder seconds left in the steady-state prologue.
+    pub residual_secs: f64,
+    /// LLM 1F1B pipeline span for this rank.
+    pub pipe_secs: f64,
+    /// Per-stage busy seconds before co-scheduling.
+    pub stage_busy: Vec<f64>,
+    /// Per-stage packed encoder seconds.
+    pub stage_filled: Vec<f64>,
+}
+
+impl RankCosched {
+    /// Serialized step span without co-scheduling.
+    pub fn baseline_step_secs(&self) -> f64 {
+        self.pi_secs + self.enc_secs + self.pipe_secs
+    }
+
+    /// Step span with encoder work folded into the bubbles.
+    pub fn cosched_step_secs(&self) -> f64 {
+        self.pi_secs + self.residual_secs + self.pipe_secs
+    }
+}
+
+/// The co-scheduled step: per-rank placements plus the config that
+/// produced them.
+#[derive(Clone, Debug)]
+pub struct CoschedPlan {
+    pub cfg: PipelineParallelConfig,
+    pub ranks: Vec<RankCosched>,
+}
+
+/// The summary the session attaches to a
+/// [`PlanReport`](crate::orchestrator::session::PlanReport) and the sim
+/// report renders. Rank-mean fractions, straggler (max-over-ranks)
+/// step spans — DP collectives synchronize ranks, so the slowest rank
+/// sets the step.
+#[derive(Clone, Debug)]
+pub struct CoschedReport {
+    pub pp_stages: usize,
+    pub microbatches: usize,
+    /// Unscheduled bubble fraction (rank mean).
+    pub bubble_fraction: f64,
+    /// The closed-form `(p-1)/(m+p-1)` uniform-stage reference.
+    pub analytic_bubble_fraction: f64,
+    /// Fraction of bubble time filled with encoder work (rank mean).
+    /// The unscheduled baseline's occupancy is identically 0.
+    pub occupancy: f64,
+    /// Bubble fraction left after co-scheduling (rank mean).
+    pub bubble_fraction_after: f64,
+    /// Encoder seconds packed / left serial (rank mean).
+    pub packed_secs: f64,
+    pub residual_secs: f64,
+    /// Straggler step spans before/after.
+    pub baseline_step_secs: f64,
+    pub cosched_step_secs: f64,
+    /// Per-stage busy fraction before/after (rank mean), `pp_stages`
+    /// entries.
+    pub stage_occupancy_before: Vec<f64>,
+    pub stage_occupancy_after: Vec<f64>,
+}
+
+impl CoschedReport {
+    /// Projected step-time reduction, seconds.
+    pub fn step_delta_secs(&self) -> f64 {
+        self.baseline_step_secs - self.cosched_step_secs
+    }
+
+    /// Projected speedup factor (>= 1 whenever anything packed).
+    pub fn speedup(&self) -> f64 {
+        if self.cosched_step_secs <= 0.0 {
+            1.0
+        } else {
+            self.baseline_step_secs / self.cosched_step_secs
+        }
+    }
+}
+
+/// Per-rank totals of a phase's assignment metadata lengths.
+fn rank_units(plan: &StepPlan, phase: PhaseKind, d: usize) -> Vec<f64> {
+    let mut units = vec![0.0f64; d];
+    for (i, batch) in plan.assignment(phase).iter().enumerate() {
+        units[i] = batch.iter().map(|e| e.len as f64).sum();
+    }
+    units
+}
+
+/// A bubble slot with a fill cursor: `fill..interval.end` is still
+/// free.
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    stage: usize,
+    start: f64,
+    end: f64,
+    fill: f64,
+}
+
+/// Greedily pack one rank's encoder chunks into its pipeline bubbles.
+fn pack_rank(
+    rank: usize,
+    tl: &PipelineTimeline,
+    vis_secs: f64,
+    aud_secs: f64,
+    pi_secs: f64,
+) -> RankCosched {
+    let p = tl.pp_stages;
+    let m = tl.microbatches;
+    let enc_secs = vis_secs + aud_secs;
+
+    // Bubble slots in start order across all stages.
+    let mut slots: Vec<Slot> = Vec::new();
+    for (s, st) in tl.stages.iter().enumerate() {
+        for iv in &st.idle {
+            slots.push(Slot {
+                stage: s,
+                start: iv.start,
+                end: iv.end,
+                fill: iv.start,
+            });
+        }
+    }
+    slots.sort_by(|a, b| {
+        a.start.partial_cmp(&b.start).unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    // m per-microbatch chunks per present phase, EDF by construction:
+    // F(0, k) starts are monotone in k, so micro-major order is
+    // deadline order. A deadline-infeasible remainder retries with no
+    // deadline as lookahead (next step's work).
+    let mut placements: Vec<Placement> = Vec::new();
+    let mut stage_filled = vec![0.0f64; p];
+    let mut lookahead_pool = 0.0f64;
+    let place = |slots: &mut [Slot],
+                 stage_filled: &mut [f64],
+                 placements: &mut Vec<Placement>,
+                 mut remaining: f64,
+                 deadline: f64,
+                 phase: PhaseKind,
+                 micro: Option<usize>|
+     -> f64 {
+        for slot in slots.iter_mut() {
+            if remaining <= MIN_FRAGMENT_SECS {
+                break;
+            }
+            let cap = slot.end.min(deadline) - slot.fill;
+            if cap <= MIN_FRAGMENT_SECS {
+                continue;
+            }
+            let take = remaining.min(cap);
+            placements.push(Placement {
+                stage: slot.stage,
+                start: slot.fill,
+                end: slot.fill + take,
+                phase,
+                micro,
+            });
+            stage_filled[slot.stage] += take;
+            slot.fill += take;
+            remaining -= take;
+        }
+        remaining
+    };
+
+    for k in 0..m {
+        let deadline = tl.first_llm_start(k);
+        for (phase, total) in
+            [(PhaseKind::Vision, vis_secs), (PhaseKind::Audio, aud_secs)]
+        {
+            if total <= 0.0 {
+                continue;
+            }
+            let left = place(
+                &mut slots,
+                &mut stage_filled,
+                &mut placements,
+                total / m as f64,
+                deadline,
+                phase,
+                Some(k),
+            );
+            lookahead_pool += left;
+        }
+    }
+    // Lookahead: what missed its deadline re-enters as next-step work
+    // with no deadline in this pipeline. Vision/audio identity no
+    // longer matters for the accounting; tag it Vision for rendering.
+    // Whatever fits nowhere at all stays in `enc - filled` (the
+    // residual prologue) below.
+    if lookahead_pool > MIN_FRAGMENT_SECS {
+        let _ = place(
+            &mut slots,
+            &mut stage_filled,
+            &mut placements,
+            lookahead_pool,
+            f64::INFINITY,
+            PhaseKind::Vision,
+            None,
+        );
+    }
+
+    let filled_secs: f64 = stage_filled.iter().sum();
+    RankCosched {
+        rank,
+        placements,
+        bubble_secs: tl.total_idle_secs(),
+        filled_secs,
+        enc_secs,
+        pi_secs,
+        residual_secs: (enc_secs - filled_secs).max(0.0),
+        pipe_secs: tl.makespan,
+        stage_busy: (0..p).map(|s| tl.stages[s].busy_secs()).collect(),
+        stage_filled,
+    }
+}
+
+/// Re-derive a rank's timeline and verify the packing invariants:
+/// every placement sits inside an idle interval of its stage, no two
+/// placements on a stage overlap, and every deadline chunk ends before
+/// its consumer's first LLM microbatch starts.
+pub fn check_rank(
+    tl: &PipelineTimeline,
+    rc: &RankCosched,
+) -> Result<(), String> {
+    const EPS: f64 = 1e-9;
+    let mut by_stage: Vec<Vec<&Placement>> =
+        vec![Vec::new(); tl.pp_stages];
+    for pl in &rc.placements {
+        if pl.stage >= tl.pp_stages {
+            return Err(format!("placement on nonexistent stage {}", pl.stage));
+        }
+        let inside = tl.stages[pl.stage]
+            .idle
+            .iter()
+            .any(|iv| pl.start >= iv.start - EPS && pl.end <= iv.end + EPS);
+        if !inside {
+            return Err(format!(
+                "rank {} placement [{:.6}, {:.6}) not inside an idle \
+                 interval of stage {}",
+                rc.rank, pl.start, pl.end, pl.stage
+            ));
+        }
+        if let Some(k) = pl.micro {
+            let deadline = tl.first_llm_start(k);
+            if pl.end > deadline + EPS {
+                return Err(format!(
+                    "rank {} chunk for microbatch {k} ends at {:.6} after \
+                     its consumer's first LLM microbatch starts at {:.6}",
+                    rc.rank, pl.end, deadline
+                ));
+            }
+        }
+        by_stage[pl.stage].push(pl);
+    }
+    for (s, mut pls) in by_stage.into_iter().enumerate() {
+        pls.sort_by(|a, b| {
+            a.start.partial_cmp(&b.start).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for w in pls.windows(2) {
+            if w[0].end > w[1].start + EPS {
+                return Err(format!(
+                    "rank {} stage {s}: overlapping placements",
+                    rc.rank
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Build one rank's 1F1B timeline from its LLM token load under `cfg`.
+fn rank_timeline(
+    cfg: &PipelineParallelConfig,
+    llm_tokens: f64,
+) -> Option<PipelineTimeline> {
+    let llm_secs = llm_tokens * cfg.llm_secs_per_token;
+    if llm_secs <= 0.0 {
+        return None;
+    }
+    let p = cfg.pp_stages;
+    let m = cfg.microbatches;
+    let shares = cfg.stage_shares();
+    let mut fwd = [0.0f64; MAX_PP_STAGES];
+    let mut bwd = [0.0f64; MAX_PP_STAGES];
+    for s in 0..p {
+        let stage_secs = llm_secs * shares[s] / m as f64;
+        fwd[s] = stage_secs * FWD_FRACTION;
+        bwd[s] = stage_secs * (1.0 - FWD_FRACTION);
+    }
+    Some(build_1f1b(p, m, &fwd[..p], &bwd[..p]))
+}
+
+/// Co-schedule a planned step's encoder phases into its LLM pipeline
+/// bubbles. Panics only on internal invariant violations (the packing
+/// is re-checked against the timeline it was built from); validate the
+/// config with [`PipelineParallelConfig::validate`] before calling.
+pub fn coschedule(
+    plan: &StepPlan,
+    cfg: &PipelineParallelConfig,
+) -> CoschedPlan {
+    let d = plan.d;
+    let vis = rank_units(plan, PhaseKind::Vision, d);
+    let aud = rank_units(plan, PhaseKind::Audio, d);
+    let llm = rank_units(plan, PhaseKind::Llm, d);
+    // The composed Π output rearrangements are collectives every rank
+    // joins before the first LLM microbatch can assemble its
+    // interleaved sequences — prologue on every rank.
+    let pi_secs =
+        plan.vision.out_comm.seconds + plan.audio.out_comm.seconds;
+
+    let mut ranks = Vec::with_capacity(d);
+    for i in 0..d {
+        let tl = match rank_timeline(cfg, llm[i]) {
+            Some(tl) => tl,
+            None => continue, // no LLM load, no pipeline to fill
+        };
+        let rc = pack_rank(
+            i,
+            &tl,
+            vis[i] * cfg.vis_secs_per_unit,
+            aud[i] * cfg.aud_secs_per_unit,
+            pi_secs,
+        );
+        if let Err(e) = check_rank(&tl, &rc) {
+            panic!("co-scheduler produced an invalid packing: {e}");
+        }
+        ranks.push(rc);
+    }
+    CoschedPlan { cfg: *cfg, ranks }
+}
+
+impl CoschedPlan {
+    /// Aggregate the per-rank outcomes into the report the session
+    /// attaches and the renderers print.
+    pub fn summarize(&self) -> CoschedReport {
+        let p = self.cfg.pp_stages;
+        let m = self.cfg.microbatches;
+        let n = self.ranks.len().max(1) as f64;
+        let mut bubble = 0.0;
+        let mut bubble_after = 0.0;
+        let mut occupancy = 0.0;
+        let mut packed = 0.0;
+        let mut residual = 0.0;
+        let mut base_step = 0.0f64;
+        let mut cos_step = 0.0f64;
+        let mut before = vec![0.0f64; p];
+        let mut after = vec![0.0f64; p];
+        for rc in &self.ranks {
+            let span = rc.pipe_secs.max(f64::MIN_POSITIVE);
+            let stage_time = p as f64 * span;
+            bubble += rc.bubble_secs / stage_time;
+            bubble_after += (rc.bubble_secs - rc.filled_secs) / stage_time;
+            occupancy += if rc.bubble_secs > 0.0 {
+                rc.filled_secs / rc.bubble_secs
+            } else {
+                0.0
+            };
+            packed += rc.filled_secs;
+            residual += rc.residual_secs;
+            base_step = base_step.max(rc.baseline_step_secs());
+            cos_step = cos_step.max(rc.cosched_step_secs());
+            for s in 0..p {
+                before[s] += rc.stage_busy[s] / span;
+                after[s] += (rc.stage_busy[s] + rc.stage_filled[s]) / span;
+            }
+        }
+        for s in 0..p {
+            before[s] /= n;
+            after[s] /= n;
+        }
+        CoschedReport {
+            pp_stages: p,
+            microbatches: m,
+            bubble_fraction: bubble / n,
+            analytic_bubble_fraction: super::analytic_bubble_ratio(p, m),
+            occupancy: occupancy / n,
+            bubble_fraction_after: bubble_after / n,
+            packed_secs: packed / n,
+            residual_secs: residual / n,
+            baseline_step_secs: base_step,
+            cosched_step_secs: cos_step,
+            stage_occupancy_before: before,
+            stage_occupancy_after: after,
+        }
+    }
+}
+
+/// One swept configuration's outcome in the bubble bench.
+#[derive(Clone, Debug)]
+pub struct BubbleCell {
+    /// Stable gate key: `pp{p}_m{m}_{profile}`.
+    pub key: String,
+    pub pp_stages: usize,
+    pub microbatches: usize,
+    pub profile: &'static str,
+    pub bubble_fraction: f64,
+    pub analytic_bubble_fraction: f64,
+    pub occupancy: f64,
+    /// Occupancy gain over the unscheduled baseline. The baseline never
+    /// places encoder work inside bubbles, so its occupancy is
+    /// identically 0 and the improvement equals the occupancy — kept as
+    /// its own field so the gate's meaning survives a future baseline
+    /// that pre-fills bubbles.
+    pub improvement: f64,
+    pub baseline_step_secs: f64,
+    pub cosched_step_secs: f64,
+    pub speedup: f64,
+}
+
+/// The full sweep: pp ∈ {2,4,8} × microbatches ∈ {4,8,16} × the four
+/// incoherence profiles from [`crate::balance::gaps`]. Cells with
+/// `microbatches < pp_stages` are skipped — the CLI validation rejects
+/// that shape (no full 1F1B steady state), so the gate does not cover
+/// it either.
+#[derive(Clone, Debug)]
+pub struct BubbleSweep {
+    pub smoke: bool,
+    pub cells: Vec<BubbleCell>,
+}
+
+pub const SWEEP_PP: [usize; 3] = [2, 4, 8];
+pub const SWEEP_MICROBATCHES: [usize; 3] = [4, 8, 16];
+
+/// Run the bubble-occupancy sweep. Each cell plans a step over
+/// profile-shaped examples through a [`PlanSession`] with
+/// `.pipeline(...)` set — the same wiring `orchmllm sim` uses — and
+/// reads the attached [`CoschedReport`].
+///
+/// [`PlanSession`]: crate::orchestrator::session::PlanSession
+pub fn run_bubble_sweep(smoke: bool) -> BubbleSweep {
+    use crate::balance::gaps::PROFILES;
+    use crate::comm::topology::Topology;
+    use crate::data::synth::{Example, Task};
+    use crate::model::config::MllmConfig;
+    use crate::orchestrator::global::OrchestratorConfig;
+    use crate::orchestrator::session::{PlanOptions, PlanSession};
+    use crate::sim::gpu::GpuSpec;
+    use crate::util::rng::Pcg64;
+
+    let model = MllmConfig::mllm_10b();
+    let gpu = GpuSpec::h100();
+    let (d, mb) = if smoke { (4, 8) } else { (8, 24) };
+    let mut root = Pcg64::new(0xB0BB1E);
+    let mut cells = Vec::new();
+    for (pi, pp) in SWEEP_PP.iter().copied().enumerate() {
+        for (mi, m) in SWEEP_MICROBATCHES.iter().copied().enumerate() {
+            if m < pp {
+                continue; // rejected by PipelineParallelConfig::validate
+            }
+            for (fi, profile) in PROFILES.iter().enumerate() {
+                let cfg =
+                    PipelineParallelConfig::from_model(&model, &gpu, pp, m);
+                let mut rng =
+                    root.fork(((pi * 100 + mi * 10 + fi) as u64) + 1);
+                let minibatches: Vec<Vec<Example>> = (0..d)
+                    .map(|rank| {
+                        let vis = profile.lengths(&mut rng, mb);
+                        let aud = profile.lengths(&mut rng, mb);
+                        (0..mb)
+                            .map(|j| {
+                                let text = rng.range(64, 256);
+                                Example {
+                                    id: rank * mb + j,
+                                    task: Task::AvDialogue,
+                                    vis_len: vis[j],
+                                    aud_len: aud[j],
+                                    text_len: text,
+                                    vis_tokens: vis[j]
+                                        / model.vis_downsample.max(1),
+                                    aud_tokens: aud[j]
+                                        / model.aud_downsample.max(1),
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let mut session = PlanSession::with_defaults(
+                    OrchestratorConfig::orchmllm(
+                        model.llm.hidden as f64 * 2.0,
+                    ),
+                    Topology::h100(d),
+                );
+                let _plan = session.plan_shared(
+                    &minibatches,
+                    PlanOptions::auto().pipeline(cfg),
+                );
+                let report = session
+                    .report()
+                    .and_then(|r| r.cosched.clone())
+                    .expect(".pipeline(...) attaches a CoschedReport");
+                cells.push(BubbleCell {
+                    key: format!("pp{pp}_m{m}_{}", profile.name),
+                    pp_stages: pp,
+                    microbatches: m,
+                    profile: profile.name,
+                    bubble_fraction: report.bubble_fraction,
+                    analytic_bubble_fraction: report
+                        .analytic_bubble_fraction,
+                    occupancy: report.occupancy,
+                    improvement: report.occupancy,
+                    baseline_step_secs: report.baseline_step_secs,
+                    cosched_step_secs: report.cosched_step_secs,
+                    speedup: report.speedup(),
+                });
+            }
+        }
+    }
+    BubbleSweep { smoke, cells }
+}
+
+impl BubbleSweep {
+    /// The `BENCH_pipeline_bubbles.json` payload.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("bench", Json::str("pipeline_bubbles")),
+            ("smoke", Json::Bool(self.smoke)),
+            (
+                "cells",
+                Json::arr(self.cells.iter().map(|c| {
+                    Json::obj(vec![
+                        ("key", Json::str(&c.key)),
+                        ("pp_stages", Json::num(c.pp_stages as f64)),
+                        ("microbatches", Json::num(c.microbatches as f64)),
+                        ("profile", Json::str(c.profile)),
+                        ("bubble_fraction", Json::num(c.bubble_fraction)),
+                        (
+                            "analytic_bubble_fraction",
+                            Json::num(c.analytic_bubble_fraction),
+                        ),
+                        ("occupancy", Json::num(c.occupancy)),
+                        ("improvement", Json::num(c.improvement)),
+                        (
+                            "baseline_step_secs",
+                            Json::num(c.baseline_step_secs),
+                        ),
+                        (
+                            "cosched_step_secs",
+                            Json::num(c.cosched_step_secs),
+                        ),
+                        ("speedup", Json::num(c.speedup)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Gate the sweep against `ci/bubble_baseline.json`: every cell
+    /// must clear its committed minimum occupancy-improvement floor
+    /// (minus `slack`), and every cell must have a floor. Returns the
+    /// regression messages (empty = pass).
+    pub fn check_baseline(
+        &self,
+        baseline: &crate::util::json::Json,
+    ) -> Vec<String> {
+        let slack = baseline.get("slack").as_f64().unwrap_or(0.0);
+        let floors = baseline.get("min_occupancy_improvement");
+        let mut regressions = Vec::new();
+        for c in &self.cells {
+            match floors.get(&c.key).as_f64() {
+                None => regressions.push(format!(
+                    "cell {} has no floor in the baseline — add one \
+                     (see the _doc re-baselining procedure)",
+                    c.key
+                )),
+                Some(floor) => {
+                    if c.improvement + slack < floor {
+                        regressions.push(format!(
+                            "cell {}: occupancy improvement {:.4} fell \
+                             below floor {:.4} (slack {:.3})",
+                            c.key, c.improvement, floor, slack
+                        ));
+                    }
+                }
+            }
+        }
+        regressions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::topology::Topology;
+    use crate::data::synth::{DatasetConfig, Generator};
+    use crate::model::config::MllmConfig;
+    use crate::orchestrator::global::OrchestratorConfig;
+    use crate::orchestrator::session::{PlanOptions, PlanSession};
+    use crate::sim::gpu::GpuSpec;
+
+    fn planned(d: usize, mb: usize) -> StepPlan {
+        let model = MllmConfig::mllm_10b();
+        let cfg = OrchestratorConfig::orchmllm(model.llm.hidden as f64 * 2.0);
+        let mut session =
+            PlanSession::with_defaults(cfg, Topology::h100(d));
+        let mut generator = Generator::new(DatasetConfig::default(), 7);
+        let minibatches: Vec<_> =
+            (0..d).map(|_| generator.batch(mb)).collect();
+        session.plan(&minibatches, PlanOptions::auto())
+    }
+
+    fn cfg(pp: usize, m: usize) -> PipelineParallelConfig {
+        PipelineParallelConfig::from_model(
+            &MllmConfig::mllm_10b(),
+            &GpuSpec::h100(),
+            pp,
+            m,
+        )
+    }
+
+    #[test]
+    fn coschedule_fills_bubbles_and_shrinks_the_step() {
+        let plan = planned(4, 16);
+        let report = coschedule(&plan, &cfg(4, 8)).summarize();
+        assert!(report.bubble_fraction > 0.0);
+        assert!(report.occupancy > 0.0, "nothing packed");
+        assert!(report.occupancy <= 1.0 + 1e-9);
+        assert!(report.bubble_fraction_after < report.bubble_fraction);
+        assert!(
+            report.cosched_step_secs < report.baseline_step_secs,
+            "cosched {} !< baseline {}",
+            report.cosched_step_secs,
+            report.baseline_step_secs
+        );
+        assert!(report.step_delta_secs() > 0.0);
+        assert!(report.speedup() > 1.0);
+    }
+
+    #[test]
+    fn packing_conserves_encoder_work() {
+        let plan = planned(4, 16);
+        let cp = coschedule(&plan, &cfg(2, 4));
+        for rc in &cp.ranks {
+            assert!(
+                rc.filled_secs <= rc.enc_secs + 1e-9,
+                "packed {} > available {}",
+                rc.filled_secs,
+                rc.enc_secs
+            );
+            assert!(
+                (rc.residual_secs - (rc.enc_secs - rc.filled_secs)).abs()
+                    < 1e-9
+            );
+            let placed: f64 =
+                rc.placements.iter().map(|p| p.end - p.start).sum();
+            assert!((placed - rc.filled_secs).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn stage_occupancy_rises_everywhere_it_packed() {
+        let plan = planned(4, 16);
+        let report = coschedule(&plan, &cfg(4, 8)).summarize();
+        assert_eq!(report.stage_occupancy_before.len(), 4);
+        for s in 0..4 {
+            assert!(
+                report.stage_occupancy_after[s]
+                    >= report.stage_occupancy_before[s] - 1e-12
+            );
+            assert!(report.stage_occupancy_after[s] <= 1.0 + 1e-9);
+        }
+        // Late stages have warmup bubbles with early deadlines — the
+        // packer must have found some of them.
+        let gained: f64 = (0..4)
+            .map(|s| {
+                report.stage_occupancy_after[s]
+                    - report.stage_occupancy_before[s]
+            })
+            .sum();
+        assert!(gained > 0.0);
+    }
+
+    #[test]
+    fn deadline_invariant_holds_under_check_rank() {
+        // Rebuild a rank's timeline independently and re-verify the
+        // emitted placements against it.
+        let plan = planned(2, 12);
+        let c = cfg(4, 8);
+        let cp = coschedule(&plan, &c);
+        let llm = rank_units(&plan, PhaseKind::Llm, plan.d);
+        for rc in &cp.ranks {
+            let tl = rank_timeline(&c, llm[rc.rank]).unwrap();
+            check_rank(&tl, rc).unwrap();
+            // Deadline chunks exist and none dangles past its consumer.
+            assert!(rc.placements.iter().any(|p| p.micro.is_some()));
+        }
+    }
+
+    #[test]
+    fn smoke_sweep_strictly_improves_every_cell() {
+        // The acceptance criterion in test form: the unscheduled
+        // baseline's bubble occupancy is 0 on every cell, and the
+        // co-scheduled occupancy must be strictly positive everywhere.
+        let sweep = run_bubble_sweep(true);
+        // pp {2,4,8} × m {4,8,16} minus the invalid (8,4) cell, × 4
+        // profiles.
+        assert_eq!(sweep.cells.len(), 8 * 4);
+        for c in &sweep.cells {
+            assert!(c.improvement > 0.0, "cell {} did not improve", c.key);
+            assert!(c.occupancy <= 1.0 + 1e-9, "cell {}", c.key);
+            assert!(
+                c.cosched_step_secs < c.baseline_step_secs,
+                "cell {}: step did not shrink",
+                c.key
+            );
+            assert!(c.bubble_fraction > 0.0, "cell {}", c.key);
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let a = run_bubble_sweep(true);
+        let b = run_bubble_sweep(true);
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.occupancy, y.occupancy);
+            assert_eq!(x.baseline_step_secs, y.baseline_step_secs);
+        }
+    }
+
+    #[test]
+    fn baseline_gate_flags_missing_and_regressed_cells() {
+        use crate::util::json::Json;
+        let sweep = BubbleSweep {
+            smoke: true,
+            cells: vec![BubbleCell {
+                key: "pp2_m4_heavy-tail".into(),
+                pp_stages: 2,
+                microbatches: 4,
+                profile: "heavy-tail",
+                bubble_fraction: 0.2,
+                analytic_bubble_fraction: 0.2,
+                occupancy: 0.5,
+                improvement: 0.5,
+                baseline_step_secs: 1.0,
+                cosched_step_secs: 0.9,
+                speedup: 1.1,
+            }],
+        };
+        // Floor above the measured improvement: regression.
+        let bad = Json::parse(
+            r#"{"slack": 0.0,
+                "min_occupancy_improvement": {"pp2_m4_heavy-tail": 0.9}}"#,
+        )
+        .unwrap();
+        let r = sweep.check_baseline(&bad);
+        assert_eq!(r.len(), 1);
+        assert!(r[0].contains("fell below floor"), "{}", r[0]);
+        // Missing cell: also a regression (gate must stay exhaustive).
+        let missing = Json::parse(
+            r#"{"slack": 0.0, "min_occupancy_improvement": {}}"#,
+        )
+        .unwrap();
+        let r = sweep.check_baseline(&missing);
+        assert_eq!(r.len(), 1);
+        assert!(r[0].contains("no floor"), "{}", r[0]);
+        // Clearable floor: pass.
+        let ok = Json::parse(
+            r#"{"slack": 0.02,
+                "min_occupancy_improvement": {"pp2_m4_heavy-tail": 0.4}}"#,
+        )
+        .unwrap();
+        assert!(sweep.check_baseline(&ok).is_empty());
+    }
+
+    #[test]
+    fn zero_encoder_work_packs_nothing() {
+        let plan = planned(2, 8);
+        let mut c = cfg(2, 4);
+        c.vis_secs_per_unit = 0.0;
+        c.aud_secs_per_unit = 0.0;
+        let report = coschedule(&plan, &c).summarize();
+        assert_eq!(report.occupancy, 0.0);
+        assert_eq!(report.packed_secs, 0.0);
+        assert!(
+            (report.baseline_step_secs - report.cosched_step_secs).abs()
+                < 1e-12
+        );
+    }
+}

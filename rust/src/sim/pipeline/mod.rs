@@ -1,0 +1,219 @@
+//! Pipeline-parallel stage timelines and bubble-aware co-scheduling.
+//!
+//! OrchMLLM's Eq.-2 balancing treats each DP rank as a flat device, but
+//! the paper's real deployments run the LLM trunk pipeline-parallel,
+//! where 1F1B warmup/cooldown bubbles are the dominant idle time.
+//! Optimus and DIP (PAPERS.md) both show the next multiplier comes from
+//! filling those bubbles with encoder work. This subsystem adds that
+//! axis to the simulator:
+//!
+//! * [`schedule`] — the 1F1B schedule as an explicit per-stage event
+//!   timeline (warmup, steady state, cooldown), built by a
+//!   dependency-respecting event sweep;
+//! * [`timeline`] — exact bubble accounting over the resulting
+//!   per-stage busy/idle intervals, cross-checked against the classic
+//!   closed form `(p-1)/(m+p-1)` for uniform stages;
+//! * [`cosched`] — a greedy bubble packer that places a [`StepPlan`]'s
+//!   encoder-phase work (priced by the same α/β cost models the
+//!   balancers use) into LLM-stage idle intervals without violating
+//!   consumer dependencies.
+//!
+//! See DESIGN.md §Pipeline Co-Scheduling for the model's scope (no
+//! interleaved virtual stages, no TP interaction) and the invariants.
+//!
+//! [`StepPlan`]: crate::orchestrator::global::StepPlan
+
+pub mod cosched;
+pub mod schedule;
+pub mod timeline;
+
+pub use cosched::{coschedule, run_bubble_sweep, BubbleSweep, CoschedPlan, CoschedReport};
+pub use schedule::build_1f1b;
+pub use timeline::{analytic_bubble_ratio, Interval, PipelineTimeline, StageTimeline};
+
+use crate::model::config::MllmConfig;
+use crate::model::flops::PhaseKind;
+use crate::sim::engine::phase_costs_opt;
+use crate::sim::gpu::GpuSpec;
+
+/// Hard cap on modelled pipeline depth. Large enough for the paper's
+/// deepest configuration (PP = 10 on the 84B model) with headroom;
+/// fixed-size so [`PipelineParallelConfig`] stays `Copy` and can ride
+/// inside [`PlanOptions`](crate::orchestrator::session::PlanOptions)
+/// without breaking the zero-alloc warm-plan gate.
+pub const MAX_PP_STAGES: usize = 16;
+
+/// Pipeline-parallel shape plus the derived per-unit costs the
+/// co-scheduler prices with. Built from a model + GPU via
+/// [`PipelineParallelConfig::from_model`]; every constructor output
+/// should be checked with [`PipelineParallelConfig::validate`] when the
+/// values come from user input.
+///
+/// Not to be confused with
+/// [`PipelineConfig`](crate::orchestrator::pipeline::PipelineConfig),
+/// which configures the *lookahead step pipeline* (planner double
+/// buffering), an orthogonal concept.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PipelineParallelConfig {
+    /// Number of pipeline stages `p` (1..=[`MAX_PP_STAGES`]).
+    pub pp_stages: usize,
+    /// Microbatches in flight per step `m` (>= `pp_stages`, the 1F1B
+    /// requirement for a full steady state).
+    pub microbatches: usize,
+    /// Relative per-stage cost weights; entries past `pp_stages` are
+    /// ignored. Uniform weights model an evenly layer-split trunk;
+    /// skewed weights model embedding/head asymmetry.
+    pub stage_costs: [f64; MAX_PP_STAGES],
+    /// Seconds of LLM forward+backward compute per token on one DP
+    /// rank's *whole trunk* (before the per-stage split). Derived from
+    /// the α term of the LLM cost model; the β (attention) term is
+    /// deliberately dropped — it is sub-1% of α at Table-1 scales and
+    /// keeping the config `Copy`-cheap matters more than that last
+    /// percent (see DESIGN.md §Pipeline Co-Scheduling).
+    pub llm_secs_per_token: f64,
+    /// Seconds of encoder forward+backward compute per vision metadata
+    /// unit (patch). Zero when the modality is absent.
+    pub vis_secs_per_unit: f64,
+    /// Seconds of encoder forward+backward compute per audio metadata
+    /// unit (frame). Zero when the modality is absent.
+    pub aud_secs_per_unit: f64,
+}
+
+impl PipelineParallelConfig {
+    /// Uniform-stage config with unit per-token costs — the shape the
+    /// analytic bubble cross-check runs on, and a usable default for
+    /// timeline-only experiments.
+    pub fn uniform(pp_stages: usize, microbatches: usize) -> Self {
+        PipelineParallelConfig {
+            pp_stages,
+            microbatches,
+            stage_costs: [1.0; MAX_PP_STAGES],
+            llm_secs_per_token: 1e-6,
+            vis_secs_per_unit: 1e-6,
+            aud_secs_per_unit: 1e-6,
+        }
+    }
+
+    /// Derive the per-unit costs from a model's analytic phase costs on
+    /// a given GPU: `α·(1+bwd_mult) / (peak·kernel_eff)` seconds per
+    /// unit, i.e. the same pricing [`simulate_step_modes`] applies to a
+    /// whole phase, taken per token. Stage weights are uniform (layers
+    /// split evenly). Modalities the model does not configure price at
+    /// zero.
+    ///
+    /// [`simulate_step_modes`]: crate::sim::engine::simulate_step_modes
+    pub fn from_model(
+        model: &MllmConfig,
+        gpu: &GpuSpec,
+        pp_stages: usize,
+        microbatches: usize,
+    ) -> Self {
+        let costs = phase_costs_opt(model);
+        let per_unit = |p: PhaseKind| -> f64 {
+            match costs[p as usize] {
+                Some(c) => {
+                    c.alpha_flops * (1.0 + c.bwd_mult)
+                        / (gpu.peak_flops * gpu.kernel_eff)
+                }
+                None => 0.0,
+            }
+        };
+        PipelineParallelConfig {
+            pp_stages,
+            microbatches,
+            stage_costs: [1.0; MAX_PP_STAGES],
+            llm_secs_per_token: per_unit(PhaseKind::Llm),
+            vis_secs_per_unit: per_unit(PhaseKind::Vision),
+            aud_secs_per_unit: per_unit(PhaseKind::Audio),
+        }
+    }
+
+    /// Reject shapes the 1F1B model cannot represent, with CLI-grade
+    /// messages (mirrors `PipelineConfig::validate` /
+    /// `TrainRunConfig::validate`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pp_stages < 1 || self.pp_stages > MAX_PP_STAGES {
+            return Err(format!(
+                "--pp-stages must be in 1..={MAX_PP_STAGES}, got {}",
+                self.pp_stages
+            ));
+        }
+        if self.microbatches < self.pp_stages {
+            return Err(format!(
+                "--microbatches must be >= --pp-stages ({}), got {} \
+                 (1F1B needs at least one microbatch per stage in flight)",
+                self.pp_stages, self.microbatches
+            ));
+        }
+        for (s, w) in self.stage_costs[..self.pp_stages].iter().enumerate() {
+            if !w.is_finite() || *w <= 0.0 {
+                return Err(format!(
+                    "stage cost weight {s} must be finite and > 0, got {w}"
+                ));
+            }
+        }
+        if self.llm_secs_per_token <= 0.0
+            || !self.llm_secs_per_token.is_finite()
+        {
+            return Err(format!(
+                "llm_secs_per_token must be finite and > 0, got {}",
+                self.llm_secs_per_token
+            ));
+        }
+        Ok(())
+    }
+
+    /// Per-stage share of the trunk cost: `stage_costs` normalized over
+    /// the first `pp_stages` entries.
+    pub fn stage_shares(&self) -> [f64; MAX_PP_STAGES] {
+        let total: f64 = self.stage_costs[..self.pp_stages].iter().sum();
+        let mut shares = [0.0; MAX_PP_STAGES];
+        for s in 0..self.pp_stages {
+            shares[s] = self.stage_costs[s] / total;
+        }
+        shares
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        assert!(PipelineParallelConfig::uniform(2, 8).validate().is_ok());
+        let e = PipelineParallelConfig::uniform(0, 8).validate().unwrap_err();
+        assert!(e.contains("--pp-stages"), "{e}");
+        let e = PipelineParallelConfig::uniform(17, 32)
+            .validate()
+            .unwrap_err();
+        assert!(e.contains("1..=16"), "{e}");
+        let e = PipelineParallelConfig::uniform(8, 4).validate().unwrap_err();
+        assert!(e.contains("--microbatches"), "{e}");
+        let mut bad = PipelineParallelConfig::uniform(2, 8);
+        bad.stage_costs[1] = 0.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn from_model_prices_all_three_phases() {
+        let model = MllmConfig::mllm_10b();
+        let gpu = GpuSpec::h100();
+        let cfg = PipelineParallelConfig::from_model(&model, &gpu, 4, 8);
+        assert!(cfg.validate().is_ok());
+        assert!(cfg.llm_secs_per_token > 0.0);
+        assert!(cfg.vis_secs_per_unit > 0.0);
+        assert!(cfg.aud_secs_per_unit > 0.0);
+        // The trunk dominates the per-token cost.
+        assert!(cfg.llm_secs_per_token > cfg.vis_secs_per_unit);
+        let shares = cfg.stage_shares();
+        assert!((shares[..4].iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn config_is_copy_and_comparable() {
+        let a = PipelineParallelConfig::uniform(2, 8);
+        let b = a; // Copy
+        assert_eq!(a, b);
+    }
+}

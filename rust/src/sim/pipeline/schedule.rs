@@ -1,0 +1,206 @@
+//! The 1F1B pipeline schedule as a dependency-respecting event sweep.
+//!
+//! Stage `s` of `p` (0-indexed) runs the canonical 1F1B op order:
+//! `w_s = min(p-1-s, m)` warmup forwards, then `m - w_s` one-forward-
+//! one-backward pairs, then `w_s` cooldown backwards. Cross-stage
+//! dependencies: `F(s, k)` waits on `F(s-1, k)`; `B(s, k)` waits on
+//! `B(s+1, k)` (and on the same stage's own `F(s, k)`, which the op
+//! order already guarantees). Event times come from a fixpoint sweep —
+//! each stage executes its sequence in order, an op starting at
+//! `max(stage free time, dependency finish time)` — which is exact for
+//! any per-stage cost vector, not just uniform stages.
+//!
+//! Not modelled (documented in DESIGN.md §Pipeline Co-Scheduling):
+//! interleaved virtual stages (Megatron's `v>1` schedule), activation
+//! send/recv latency between stages (folded into stage cost), and
+//! TP-induced per-layer collectives.
+
+use super::timeline::{Interval, PipelineTimeline, StageTimeline};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum OpKind {
+    Fwd,
+    Bwd,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Op {
+    kind: OpKind,
+    micro: usize,
+}
+
+/// The canonical 1F1B op sequence for one stage.
+fn stage_ops(p: usize, m: usize, s: usize) -> Vec<Op> {
+    let warm = (p - 1 - s).min(m);
+    let mut ops = Vec::with_capacity(2 * m);
+    for k in 0..warm {
+        ops.push(Op { kind: OpKind::Fwd, micro: k });
+    }
+    for k in 0..(m - warm) {
+        ops.push(Op { kind: OpKind::Fwd, micro: warm + k });
+        ops.push(Op { kind: OpKind::Bwd, micro: k });
+    }
+    for k in (m - warm)..m {
+        ops.push(Op { kind: OpKind::Bwd, micro: k });
+    }
+    ops
+}
+
+/// Build the exact 1F1B event timeline for `p` stages × `m`
+/// microbatches with per-stage forward/backward costs (seconds per
+/// microbatch). Panics on shape errors — validate a user-supplied
+/// [`PipelineParallelConfig`](super::PipelineParallelConfig) first.
+pub fn build_1f1b(
+    p: usize,
+    m: usize,
+    fwd_cost: &[f64],
+    bwd_cost: &[f64],
+) -> PipelineTimeline {
+    assert!(p >= 1 && m >= 1, "need at least one stage and microbatch");
+    assert!(
+        fwd_cost.len() >= p && bwd_cost.len() >= p,
+        "cost vectors shorter than stage count"
+    );
+
+    const PENDING: f64 = -1.0;
+    let seqs: Vec<Vec<Op>> = (0..p).map(|s| stage_ops(p, m, s)).collect();
+    let mut fwd_start = vec![vec![PENDING; m]; p];
+    let mut fwd_end = vec![vec![PENDING; m]; p];
+    let mut bwd_end = vec![vec![PENDING; m]; p];
+    let mut busy: Vec<Vec<Interval>> = vec![Vec::with_capacity(2 * m); p];
+    let mut ptr = vec![0usize; p];
+    let mut stage_free = vec![0.0f64; p];
+    let mut done = 0usize;
+    let total = 2 * m * p;
+
+    while done < total {
+        let mut progressed = false;
+        for s in 0..p {
+            while ptr[s] < seqs[s].len() {
+                let op = seqs[s][ptr[s]];
+                let dep_end = match op.kind {
+                    OpKind::Fwd if s == 0 => 0.0,
+                    OpKind::Fwd => fwd_end[s - 1][op.micro],
+                    // The same-stage F(s,k) precedes B(s,k) in the op
+                    // order, so the last stage's backward has no
+                    // cross-stage dependency left.
+                    OpKind::Bwd if s == p - 1 => 0.0,
+                    OpKind::Bwd => bwd_end[s + 1][op.micro],
+                };
+                if dep_end == PENDING {
+                    break; // dependency not scheduled yet
+                }
+                let cost = match op.kind {
+                    OpKind::Fwd => fwd_cost[s],
+                    OpKind::Bwd => bwd_cost[s],
+                };
+                let start = stage_free[s].max(dep_end);
+                let end = start + cost;
+                match op.kind {
+                    OpKind::Fwd => {
+                        fwd_start[s][op.micro] = start;
+                        fwd_end[s][op.micro] = end;
+                    }
+                    OpKind::Bwd => bwd_end[s][op.micro] = end,
+                }
+                // Merge back-to-back ops into one busy interval.
+                match busy[s].last_mut() {
+                    Some(last) if (last.end - start).abs() < 1e-12 => {
+                        last.end = end;
+                    }
+                    _ => busy[s].push(Interval { start, end }),
+                }
+                stage_free[s] = end;
+                ptr[s] += 1;
+                done += 1;
+                progressed = true;
+            }
+        }
+        assert!(progressed, "1F1B event sweep deadlocked (internal bug)");
+    }
+
+    let makespan = stage_free.iter().cloned().fold(0.0, f64::max);
+    let mut tl = PipelineTimeline {
+        pp_stages: p,
+        microbatches: m,
+        makespan,
+        stages: busy
+            .into_iter()
+            .map(|b| StageTimeline { busy: b, idle: Vec::new() })
+            .collect(),
+        fwd_start,
+    };
+    tl.fill_idle();
+    tl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_sequences_have_1f1b_shape() {
+        let p = 4;
+        let m = 8;
+        for s in 0..p {
+            let ops = stage_ops(p, m, s);
+            assert_eq!(ops.len(), 2 * m);
+            let warm = p - 1 - s;
+            // Warmup prefix is all forwards.
+            assert!(ops[..warm].iter().all(|o| o.kind == OpKind::Fwd));
+            // Every F(k) precedes its B(k).
+            for k in 0..m {
+                let fi = ops
+                    .iter()
+                    .position(|o| o.kind == OpKind::Fwd && o.micro == k)
+                    .unwrap();
+                let bi = ops
+                    .iter()
+                    .position(|o| o.kind == OpKind::Bwd && o.micro == k)
+                    .unwrap();
+                assert!(fi < bi, "stage {s} micro {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_makespan_matches_closed_form() {
+        // (m + p - 1) full (f+b) slots for uniform stages.
+        for (p, m) in [(2usize, 4usize), (4, 8), (8, 16)] {
+            let f = vec![1.0; p];
+            let b = vec![1.0; p];
+            let tl = build_1f1b(p, m, &f, &b);
+            let want = (m + p - 1) as f64 * 2.0;
+            assert!(
+                (tl.makespan - want).abs() < 1e-9,
+                "p={p} m={m}: {} vs {want}",
+                tl.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn dependencies_are_respected() {
+        let p = 4;
+        let m = 6;
+        let f = [1.0, 2.0, 0.5, 1.5];
+        let b = [2.0, 4.0, 1.0, 3.0];
+        let tl = build_1f1b(p, m, &f, &b);
+        for s in 1..p {
+            for k in 0..m {
+                // F(s,k) starts at or after F(s-1,k) ends.
+                assert!(
+                    tl.fwd_start[s][k]
+                        >= tl.fwd_start[s - 1][k] + f[s - 1] - 1e-12,
+                    "stage {s} micro {k}"
+                );
+            }
+        }
+        // Stage 0's first forward starts the pipeline.
+        assert_eq!(tl.fwd_start[0][0], 0.0);
+        // Deadlines are monotone in the microbatch index.
+        for k in 1..m {
+            assert!(tl.first_llm_start(k) >= tl.first_llm_start(k - 1));
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Per-stage busy/idle interval accounting for a pipeline schedule.
+//!
+//! The timeline is exact: every forward/backward op lands as a closed
+//! interval on its stage, busy intervals are merged, and idle time is
+//! the complement within `[0, makespan]` — including the pre-warmup
+//! ramp on late stages and the post-cooldown drain on early ones. For
+//! uniform stages this reproduces the classic 1F1B bubble ratio
+//! `(p-1)/(m+p-1)` to float precision (pinned test below); for skewed
+//! stages it generalizes where the closed form does not.
+
+/// A half-open time interval `[start, end)` in seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Interval {
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Interval {
+    pub fn len(&self) -> f64 {
+        (self.end - self.start).max(0.0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() <= 0.0
+    }
+}
+
+/// One stage's schedule as merged busy intervals plus their idle
+/// complement within the pipeline's `[0, makespan]` window.
+#[derive(Clone, Debug, Default)]
+pub struct StageTimeline {
+    pub busy: Vec<Interval>,
+    pub idle: Vec<Interval>,
+}
+
+impl StageTimeline {
+    pub fn busy_secs(&self) -> f64 {
+        self.busy.iter().map(Interval::len).sum()
+    }
+
+    pub fn idle_secs(&self) -> f64 {
+        self.idle.iter().map(Interval::len).sum()
+    }
+}
+
+/// The full per-stage event timeline of one pipeline step.
+#[derive(Clone, Debug)]
+pub struct PipelineTimeline {
+    pub pp_stages: usize,
+    pub microbatches: usize,
+    /// End of the last backward on stage 0 — the step's pipeline span.
+    pub makespan: f64,
+    pub stages: Vec<StageTimeline>,
+    /// `fwd_start[s][k]`: when stage `s` begins the forward of
+    /// microbatch `k`. `fwd_start[0][k]` is the co-scheduler's deadline
+    /// for encoder chunks feeding microbatch `k`.
+    pub fwd_start: Vec<Vec<f64>>,
+}
+
+impl PipelineTimeline {
+    /// Total idle seconds across all stages within `[0, makespan]`.
+    pub fn total_idle_secs(&self) -> f64 {
+        self.stages.iter().map(StageTimeline::idle_secs).sum()
+    }
+
+    /// Bubble fraction: total idle over total stage-time
+    /// (`p · makespan`). Equals `(p-1)/(m+p-1)` for uniform stages.
+    pub fn bubble_fraction(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.total_idle_secs() / (self.pp_stages as f64 * self.makespan)
+    }
+
+    /// Per-stage busy fraction of the makespan.
+    pub fn stage_busy_fraction(&self, stage: usize) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.stages[stage].busy_secs() / self.makespan
+    }
+
+    /// Deadline for work that must complete before microbatch `k`
+    /// enters the pipeline: the start of `F(stage 0, k)`.
+    pub fn first_llm_start(&self, micro: usize) -> f64 {
+        self.fwd_start[0][micro]
+    }
+
+    /// Rebuild each stage's idle list as the complement of its merged
+    /// busy list within `[0, makespan]`. Called once by the builder.
+    pub(super) fn fill_idle(&mut self) {
+        let makespan = self.makespan;
+        for st in &mut self.stages {
+            st.idle.clear();
+            let mut cursor = 0.0;
+            for b in &st.busy {
+                if b.start > cursor {
+                    st.idle.push(Interval { start: cursor, end: b.start });
+                }
+                cursor = cursor.max(b.end);
+            }
+            if makespan > cursor {
+                st.idle.push(Interval { start: cursor, end: makespan });
+            }
+        }
+    }
+}
+
+/// The classic 1F1B bubble ratio for `p` uniform stages and `m`
+/// microbatches: `(p-1)/(m+p-1)`.
+pub fn analytic_bubble_ratio(pp_stages: usize, microbatches: usize) -> f64 {
+    (pp_stages as f64 - 1.0)
+        / (microbatches as f64 + pp_stages as f64 - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::schedule::build_1f1b;
+    use super::*;
+
+    /// The acceptance-criteria cross-check: the event-driven simulator
+    /// must reproduce the closed-form uniform-stage bubble ratio to
+    /// float tolerance across the whole swept grid.
+    #[test]
+    fn uniform_stages_reproduce_analytic_bubble_ratio() {
+        for p in [2usize, 4, 8] {
+            for m in [4usize, 8, 16, 32] {
+                if m < p {
+                    continue;
+                }
+                let f = vec![1.0e-3; p];
+                let b = vec![2.0e-3; p]; // bwd = 2x fwd, the usual shape
+                let tl = build_1f1b(p, m, &f, &b);
+                let want = analytic_bubble_ratio(p, m);
+                let got = tl.bubble_fraction();
+                assert!(
+                    (got - want).abs() < 1e-9,
+                    "p={p} m={m}: simulated {got} vs analytic {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_stage_has_no_bubble() {
+        let tl = build_1f1b(1, 8, &[1.0], &[2.0]);
+        assert!(tl.bubble_fraction().abs() < 1e-12);
+        assert!((tl.makespan - 8.0 * 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_complements_busy_exactly() {
+        let tl = build_1f1b(4, 8, &[1.0, 1.5, 0.5, 1.0], &[2.0, 3.0, 1.0, 2.0]);
+        for s in 0..4 {
+            let st = &tl.stages[s];
+            let covered = st.busy_secs() + st.idle_secs();
+            assert!(
+                (covered - tl.makespan).abs() < 1e-9,
+                "stage {s}: busy+idle {covered} vs makespan {}",
+                tl.makespan
+            );
+            // Intervals are disjoint and sorted.
+            let mut all: Vec<Interval> = st.busy.clone();
+            all.extend(st.idle.iter().copied());
+            all.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            for w in all.windows(2) {
+                assert!(w[0].end <= w[1].start + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_stages_bubble_exceeds_uniform() {
+        // A slow middle stage starves its neighbours: the bubble
+        // fraction must exceed the uniform closed form.
+        let tl = build_1f1b(4, 8, &[1.0, 3.0, 1.0, 1.0], &[2.0, 6.0, 2.0, 2.0]);
+        assert!(tl.bubble_fraction() > analytic_bubble_ratio(4, 8));
+    }
+}

@@ -217,6 +217,56 @@ pub fn render_calibration(cal: &Calibration, analytic: &Topology) -> String {
     out
 }
 
+/// Render a bubble co-scheduling summary (the `sim --pp-stages` rows):
+/// simulated vs analytic bubble fraction, how much of the bubble the
+/// encoder packing reclaimed, per-stage occupancy before → after, and
+/// the projected step-time change.
+pub fn render_cosched(r: &crate::sim::pipeline::CoschedReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== bubble co-scheduling (pp = {}, microbatches = {}) ==\n",
+        r.pp_stages, r.microbatches
+    ));
+    out.push_str(&format!(
+        "{:<26}{:>8.2}%  (analytic (p-1)/(m+p-1): {:.2}%)\n",
+        "bubble fraction",
+        r.bubble_fraction * 100.0,
+        r.analytic_bubble_fraction * 100.0
+    ));
+    out.push_str(&format!(
+        "{:<26}{:>8.2}%  (residual bubble: {:.2}%)\n",
+        "bubble occupancy",
+        r.occupancy * 100.0,
+        r.bubble_fraction_after * 100.0
+    ));
+    out.push_str(&format!(
+        "{:<26}{:>8.2} s packed, {:.2} s left in the prologue\n",
+        "encoder work",
+        r.packed_secs,
+        r.residual_secs
+    ));
+    out.push_str(&format!("{:<26}", "stage occupancy"));
+    for s in 0..r.pp_stages {
+        out.push_str(&format!(
+            "  s{}: {:.0}%->{:.0}%",
+            s,
+            r.stage_occupancy_before[s] * 100.0,
+            r.stage_occupancy_after[s] * 100.0
+        ));
+    }
+    out.push('\n');
+    out.push_str(&format!(
+        "{:<26}{:>8.3} s -> {:.3} s  ({:+.2}% step time, {:.3}x)\n",
+        "projected step",
+        r.baseline_step_secs,
+        r.cosched_step_secs,
+        -100.0 * r.step_delta_secs()
+            / r.baseline_step_secs.max(f64::MIN_POSITIVE),
+        r.speedup()
+    ));
+    out
+}
+
 /// Render the world-size transitions an elastic run survived (appended
 /// to the loss curve by `TrainReport::render`).
 pub fn render_transitions(
@@ -252,6 +302,32 @@ mod tests {
         assert!(s2.contains("Cache hit"));
         let s3 = render_mfu_memory(&[vec![a], vec![b]]);
         assert!(s3.contains("mem GB"));
+    }
+
+    #[test]
+    fn renders_cosched_summary() {
+        use crate::sim::pipeline::CoschedReport;
+        let r = CoschedReport {
+            pp_stages: 2,
+            microbatches: 8,
+            bubble_fraction: 0.1111,
+            analytic_bubble_fraction: 0.1111,
+            occupancy: 0.5,
+            bubble_fraction_after: 0.0556,
+            packed_secs: 0.010,
+            residual_secs: 0.002,
+            baseline_step_secs: 0.250,
+            cosched_step_secs: 0.242,
+            stage_occupancy_before: vec![0.89, 0.89],
+            stage_occupancy_after: vec![0.94, 0.94],
+        };
+        let s = render_cosched(&r);
+        assert!(s.contains("pp = 2, microbatches = 8"), "{s}");
+        assert!(s.contains("11.11%"), "{s}");
+        assert!(s.contains("(p-1)/(m+p-1)"), "{s}");
+        assert!(s.contains("s0: 89%->94%"), "{s}");
+        assert!(s.contains("projected step"), "{s}");
+        assert!(s.contains("1.033x"), "{s}");
     }
 
     #[test]
